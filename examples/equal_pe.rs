@@ -1,0 +1,56 @@
+//! Figure 6: aspect-ratio study at equal PE counts (the SCALE-SIM
+//! configuration space of Samajdar et al.), for PE budgets 4096, 16384 and
+//! 65536 — plus the SCALE-SIM-style baseline for context.
+//!
+//! Run: `cargo run --release --example equal_pe`
+
+use camuy::baseline::scalesim_metrics;
+use camuy::config::ArrayConfig;
+use camuy::nets;
+use camuy::report::figures::{fig6_equal_pe, write_fig6, FigureContext};
+use camuy::sweep::grid::equal_pe_factorizations;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = FigureContext::paper();
+    let out = Path::new("results/equal_pe");
+
+    let budgets = [4096usize, 16384, 65536];
+    let data: Vec<_> = budgets
+        .iter()
+        .map(|&b| fig6_equal_pe(b, 8, &ctx))
+        .collect();
+    write_fig6(&data, out)?;
+
+    for d in &data {
+        println!("PE budget {} — avg normalized E across the nine models:", d.pe_budget);
+        for (i, &(h, w)) in d.shapes.iter().enumerate() {
+            let bar_len = (d.average[i] * 50.0).round() as usize;
+            println!(
+                "  {h:>5} x {w:<5} {:<52} {:.4}",
+                "#".repeat(bar_len.max(1)),
+                d.average[i]
+            );
+        }
+        println!();
+    }
+
+    // SCALE-SIM baseline context: cycles for ResNet-152 across the 16384
+    // space (their never-stalling weight-stationary model).
+    println!("SCALE-SIM-style baseline, ResNet-152 cycles @16384 PEs:");
+    let net = nets::build("resnet152").unwrap();
+    for (h, w) in equal_pe_factorizations(16384, 8) {
+        let cfg = ArrayConfig::new(h, w);
+        let cycles: u64 = net
+            .layers
+            .iter()
+            .map(|l| {
+                let (g, groups) = l.gemm();
+                scalesim_metrics(g, &cfg).cycles * groups as u64
+            })
+            .sum();
+        println!("  {h:>5} x {w:<5} {cycles:>15} cycles");
+    }
+    println!("\noutputs written to {}", out.display());
+    Ok(())
+}

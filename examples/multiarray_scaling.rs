@@ -1,0 +1,60 @@
+//! Multi-array scaling study (the paper's §6 future work, implemented):
+//! how do banks of 1..16 small arrays trade latency against data-movement
+//! energy, and which workloads actually parallelize?
+//!
+//! Run: `cargo run --release --example multiarray_scaling`
+
+use camuy::config::{ArrayConfig, EnergyWeights};
+use camuy::model::multi::{network_metrics_multi, MultiArrayConfig};
+use camuy::nets;
+use camuy::util::human_count;
+
+fn main() -> anyhow::Result<()> {
+    let w = EnergyWeights::paper();
+    let base_cfg = ArrayConfig::new(64, 64);
+    println!(
+        "bank scaling on {base_cfg} (speedup = makespan vs 1 array; ΔE = Eq.1 energy overhead)\n"
+    );
+
+    for name in ["resnet152", "resnext152", "mobilenetv3l", "capsnet", "bertbase-s128"] {
+        let net = nets::build(name).unwrap();
+        let base = network_metrics_multi(&net, &MultiArrayConfig::new(1, base_cfg.clone()));
+        println!(
+            "{:<16} 1x: {:>10} cycles, E {:.3e}",
+            name,
+            human_count(base.makespan_cycles),
+            base.energy(&w)
+        );
+        for arrays in [2usize, 4, 8, 16] {
+            let cfg = MultiArrayConfig::new(arrays, base_cfg.clone());
+            let m = network_metrics_multi(&net, &cfg);
+            let speedup = base.makespan_cycles as f64 / m.makespan_cycles as f64;
+            let de = 100.0 * (m.energy(&w) / base.energy(&w) - 1.0);
+            let eff = 100.0 * speedup / arrays as f64;
+            println!(
+                "  {arrays:>2} arrays: {speedup:>5.2}x speedup ({eff:>5.1}% parallel efficiency), \
+                 ΔE {de:+.1}%, bank util {:.3}",
+                m.utilization(&cfg)
+            );
+        }
+        println!();
+    }
+
+    // The headline comparison: 16 arrays of 64x64 vs one 256x256 TPU — the
+    // same PE count, radically different efficiency on modern nets.
+    println!("same 65536 PEs, two organizations (MobileNetV3-Large):");
+    let net = nets::build("mobilenetv3l").unwrap();
+    let bank = network_metrics_multi(&net, &MultiArrayConfig::new(16, base_cfg));
+    let tpu = net.metrics(&ArrayConfig::tpu_v1());
+    println!(
+        "  16 x 64x64 bank : {:>10} cycles, E {:.3e}",
+        human_count(bank.makespan_cycles),
+        bank.energy(&w)
+    );
+    println!(
+        "  1 x 256x256 TPU : {:>10} cycles, E {:.3e}",
+        human_count(tpu.cycles),
+        tpu.energy(&w)
+    );
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Quickstart: the 60-second tour of CAMUY.
+//!
+//! 1. Create an emulator instance for an array configuration.
+//! 2. Functionally emulate a small GEMM (real numbers + movement counters).
+//! 3. Run a full ResNet-152 inference through the analytic coordinator.
+//! 4. If `make artifacts` has run, execute the same GEMM through the
+//!    AOT-compiled JAX/Pallas artifact on PJRT and cross-check.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use camuy::arch::{EmulationMode, Emulator};
+use camuy::config::{ArrayConfig, EnergyWeights};
+use camuy::coordinator::Coordinator;
+use camuy::nets;
+use camuy::report::kv_block;
+use camuy::runtime::{default_artifact_dir, Manifest, PjrtRuntime};
+use camuy::tensor::Matrix;
+use camuy::util::human_count;
+use camuy::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. an emulator instance, TPUv1-flavoured but 32x32 ---
+    let cfg = ArrayConfig::new(32, 32);
+    println!("array config: {cfg}\n");
+
+    // --- 2. functional emulation of one GEMM ---
+    let mut rng = Rng::new(42);
+    let a = Matrix::random_small_int(48, 96, &mut rng);
+    let w = Matrix::random_small_int(96, 64, &mut rng);
+    let emu = Emulator::new(cfg.clone()).map_err(anyhow::Error::msg)?;
+    let res = emu.run_gemm(&a, &w, EmulationMode::Wavefront);
+    assert_eq!(res.output, a.matmul(&w), "emulator numerics are exact");
+    println!(
+        "{}",
+        kv_block(
+            "GEMM 48x96x64 on the functional emulator",
+            &[
+                ("cycles", human_count(res.metrics.cycles)),
+                ("passes", human_count(res.metrics.passes)),
+                ("MACs", human_count(res.metrics.macs)),
+                ("utilization", format!("{:.3}", res.metrics.utilization(cfg.pe_count()))),
+                ("M_UB", human_count(res.metrics.movements.m_ub())),
+                ("M_INTER_PE", human_count(res.metrics.movements.m_inter_pe())),
+                ("M_AA", human_count(res.metrics.movements.m_aa())),
+                (
+                    "energy E (Eq.1)",
+                    format!("{:.4e}", res.metrics.energy(&EnergyWeights::paper()))
+                ),
+                ("numerics", "exact vs reference matmul".to_string()),
+            ]
+        )
+    );
+
+    // --- 3. a full network on the analytic coordinator ---
+    let net = nets::build("resnet152").unwrap();
+    let coord = Coordinator::new(cfg.clone()).map_err(anyhow::Error::msg)?;
+    let run = coord.run_inference(&net);
+    println!(
+        "{}",
+        kv_block(
+            "ResNet-152 inference (analytic model)",
+            &[
+                ("layers", run.timeline.len().to_string()),
+                ("cycles", human_count(run.total.cycles)),
+                ("utilization", format!("{:.4}", run.utilization())),
+                (
+                    "energy E (Eq.1)",
+                    format!("{:.4e}", run.energy(&EnergyWeights::paper()))
+                ),
+                ("UB bandwidth (B/cy)", format!("{:.1}", run.bandwidth.ub_total())),
+            ]
+        )
+    );
+
+    // --- 4. the compiled JAX/Pallas artifact, if present ---
+    match Manifest::load(&default_artifact_dir()) {
+        Err(_) => println!("(artifacts not built — run `make artifacts` for the PJRT leg)"),
+        Ok(manifest) => {
+            let entry = manifest.find("gemm_quickstart").expect("manifest entry");
+            let rt = PjrtRuntime::cpu()?;
+            let exe = rt.load(&entry.name, &entry.file)?;
+            let a = Matrix::random_small_int(128, 128, &mut rng);
+            let w = Matrix::random_small_int(128, 128, &mut rng);
+            let got = exe.run_gemm(&a, &w)?;
+            let diff = got.max_abs_diff(&a.matmul(&w));
+            println!(
+                "PJRT artifact 'gemm_quickstart' on {}: max |diff| vs reference = {diff:.2e}",
+                rt.platform()
+            );
+            assert!(diff < 1e-3);
+        }
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

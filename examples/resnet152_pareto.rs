@@ -1,0 +1,62 @@
+//! The paper's Section 4.1 case study: ResNet-152 over the 961-point
+//! (height, width) grid — Figure 2 heatmaps and Figure 3 Pareto sets
+//! (NSGA-II, validated against the exhaustive frontier).
+//!
+//! Run: `cargo run --release --example resnet152_pareto [-- --smoke]`
+
+use camuy::pareto::nsga2::Nsga2Params;
+use camuy::report::figures::{fig2_heatmaps, fig3_pareto, write_fig2, write_fig3, FigureContext};
+use camuy::report::pareto_table;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ctx = if smoke {
+        FigureContext::smoke()
+    } else {
+        FigureContext::paper()
+    };
+    let out = Path::new("results/resnet152");
+
+    // Figure 2.
+    let fig2 = fig2_heatmaps("resnet152", &ctx);
+    write_fig2(&fig2, out)?;
+    println!("{}", fig2.energy.ascii());
+    println!("{}", fig2.utilization.ascii());
+    let (h, w, e) = fig2.energy.min_cell();
+    println!("lowest data movement cost: E = {e:.4e} at (height {h}, width {w})\n");
+
+    // Figure 3.
+    let params = Nsga2Params::default();
+    let fig3 = fig3_pareto("resnet152", &ctx, &params);
+    write_fig3(&fig3, out)?;
+    println!(
+        "{}",
+        pareto_table(
+            "Pareto set: data movement cost vs cycles (NSGA-II, blue dots of Fig. 3)",
+            &["energy", "cycles"],
+            &fig3.energy_front
+        )
+    );
+    println!(
+        "{}",
+        pareto_table(
+            "Pareto set: (1 - utilization) vs cycles",
+            &["1-util", "cycles"],
+            &fig3.utilization_front
+        )
+    );
+    println!(
+        "NSGA-II recovered {}/{} exhaustive-front points (energy objective)",
+        fig3.energy_front
+            .iter()
+            .filter(|s| fig3
+                .exhaustive_energy_front
+                .iter()
+                .any(|e| e.height == s.height && e.width == s.width))
+            .count(),
+        fig3.exhaustive_energy_front.len()
+    );
+    println!("outputs written to {}", out.display());
+    Ok(())
+}

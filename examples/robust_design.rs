@@ -1,0 +1,63 @@
+//! Section 5 of the paper: the robust configuration search — Figure 4
+//! (per-model heatmap minima) and Figure 5 (Pareto over the averaged
+//! min-max-normalized data movement cost and cycle count of all nine
+//! models).
+//!
+//! Run: `cargo run --release --example robust_design [-- --smoke]`
+
+use camuy::pareto::nsga2::Nsga2Params;
+use camuy::report::figures::{fig4_heatmaps, fig5_robust, write_fig4, write_fig5, FigureContext};
+use camuy::report::pareto_table;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ctx = if smoke {
+        FigureContext::smoke()
+    } else {
+        FigureContext::paper()
+    };
+    let out = Path::new("results/robust");
+
+    // Figure 4: where does each model want the array to be?
+    let fig4 = fig4_heatmaps(&ctx);
+    write_fig4(&fig4, out)?;
+    println!("per-model optima (Figure 4):");
+    println!("{:<18} {:>8} {:>8} {:>14}", "model", "height", "width", "min E");
+    for d in &fig4 {
+        let (h, w, e) = d.energy.min_cell();
+        println!("{:<18} {:>8} {:>8} {:>14.4e}", d.network, h, w, e);
+    }
+    println!();
+
+    // Figure 5: the robustness Pareto.
+    let fig5 = fig5_robust(&ctx, &Nsga2Params::default());
+    write_fig5(&fig5, out)?;
+    println!(
+        "{}",
+        pareto_table(
+            "Figure 5 — robust Pareto (avg normalized E vs avg normalized cycles)",
+            &["avg_norm_E", "avg_norm_cyc"],
+            &fig5.front
+        )
+    );
+
+    // The paper's reading of the figure: the knee configurations.
+    let knee: Vec<_> = fig5
+        .front
+        .iter()
+        .filter(|s| s.objectives[0] < 0.25 && s.objectives[1] < 0.25)
+        .collect();
+    println!("knee (both objectives < 0.25):");
+    for s in &knee {
+        let ratio = s.width as f64 / s.height as f64;
+        println!(
+            "  ({:>3}, {:>3})  width/height = {ratio:.2}{}",
+            s.height,
+            s.width,
+            if ratio < 1.0 { "  <- height > width" } else { "" }
+        );
+    }
+    println!("outputs written to {}", out.display());
+    Ok(())
+}

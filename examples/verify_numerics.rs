@@ -1,0 +1,133 @@
+//! END-TO-END DRIVER: proves all three layers of the stack compose on a
+//! real small workload.
+//!
+//!   Layer 1 (Pallas weight-stationary matmul kernel)
+//!     -> lowered inside Layer 2 (JAX conv-as-GEMM graphs)
+//!     -> exported once as HLO text (`make artifacts`)
+//!     -> loaded, compiled and executed here by the Layer 3 Rust
+//!        coordinator through PJRT,
+//! while the functional emulator runs the *same* operands and the
+//! analytic model prices them — three independent numeric/metric paths
+//! that must agree.
+//!
+//! Workload: every artifact in the manifest — real layer shapes from
+//! ResNet-152 and MobileNetV3 — plus a batched request loop over the
+//! quickstart GEMM reporting latency/throughput. Results are recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example verify_numerics`
+
+use camuy::config::{ArrayConfig, EnergyWeights};
+use camuy::coordinator::verify::verify_gemm_artifact;
+use camuy::runtime::{default_artifact_dir, Manifest, PjrtRuntime};
+use camuy::tensor::Matrix;
+use camuy::util::human_count;
+use camuy::util::prng::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let rt = PjrtRuntime::cpu()?;
+    println!(
+        "PJRT platform: {}; {} artifacts in {}\n",
+        rt.platform(),
+        manifest.artifacts.len(),
+        dir.display()
+    );
+
+    // --- three-way verification on every GEMM artifact ---
+    let cfg = ArrayConfig::new(32, 32);
+    println!("three-way verification (reference = emulator = PJRT):");
+    let mut all_pass = true;
+    for entry in manifest.artifacts.iter().filter(|a| a.kind == "gemm") {
+        let report = verify_gemm_artifact(&rt, entry, &cfg, 2026)?;
+        println!("  {report}");
+        all_pass &= report.pass;
+    }
+    anyhow::ensure!(all_pass, "verification failed");
+
+    // --- non-GEMM artifacts: compile + execute smoke with shape checks ---
+    println!("\ncompiling + executing composite artifacts:");
+    let mut rng = Rng::new(7);
+    for entry in manifest.artifacts.iter().filter(|a| a.kind != "gemm") {
+        let exe = rt.load(&entry.name, &entry.file)?;
+        let buffers: Vec<Vec<f32>> = entry
+            .inputs
+            .iter()
+            .map(|shape| {
+                let len: usize = shape.iter().product();
+                (0..len)
+                    .map(|_| (rng.range_usize(0, 8) as i32 - 4) as f32)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<(Vec<i64>, &[f32])> = entry
+            .inputs
+            .iter()
+            .zip(&buffers)
+            .map(|(shape, data)| {
+                (
+                    shape.iter().map(|&d| d as i64).collect::<Vec<i64>>(),
+                    data.as_slice(),
+                )
+            })
+            .collect();
+        let arg_refs: Vec<(&[i64], &[f32])> =
+            refs.iter().map(|(s, d)| (s.as_slice(), *d)).collect();
+        let t0 = Instant::now();
+        let out = exe.run_raw(&arg_refs)?;
+        println!(
+            "  {:<22} ({:<10}) -> {} outputs in {:.2?}",
+            entry.name,
+            entry.kind,
+            human_count(out.len() as u64),
+            t0.elapsed()
+        );
+        anyhow::ensure!(out.iter().all(|v| v.is_finite()), "non-finite output");
+    }
+
+    // --- batched request loop: latency/throughput on the served GEMM ---
+    println!("\nbatched request loop (gemm_quickstart, 64 requests):");
+    let entry = manifest.find("gemm_quickstart").unwrap();
+    let exe = rt.load(&entry.name, &entry.file)?;
+    let mut latencies = Vec::new();
+    let mut checked = 0usize;
+    let t_all = Instant::now();
+    for i in 0..64 {
+        let a = Matrix::random_small_int(128, 128, &mut rng);
+        let w = Matrix::random_small_int(128, 128, &mut rng);
+        let t0 = Instant::now();
+        let out = exe.run_gemm(&a, &w)?;
+        latencies.push(t0.elapsed().as_secs_f64());
+        if i % 8 == 0 {
+            // Spot-check numerics on every 8th request.
+            anyhow::ensure!(out.max_abs_diff(&a.matmul(&w)) < 1e-3);
+            checked += 1;
+        }
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    let summary = camuy::util::stats::Summary::of(&latencies).unwrap();
+    println!(
+        "  p50 {:.3} ms, p95 {:.3} ms, throughput {:.1} req/s ({} spot-checked)",
+        summary.median * 1e3,
+        summary.p95 * 1e3,
+        64.0 / total,
+        checked
+    );
+
+    // --- emulator metrics for the same served workload ---
+    let m = camuy::model::gemm::ws_metrics(
+        camuy::model::schedule::GemmShape::new(128, 128, 128),
+        &cfg,
+    );
+    println!(
+        "  emulated on {cfg}: {} cycles/request, E = {:.3e}, utilization {:.3}",
+        human_count(m.cycles),
+        m.energy(&EnergyWeights::paper()),
+        m.utilization(cfg.pe_count())
+    );
+
+    println!("\nE2E verification PASSED — all three layers compose.");
+    Ok(())
+}

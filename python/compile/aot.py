@@ -1,0 +1,164 @@
+"""AOT export: lower the Layer-2 computations to HLO *text* and write a
+manifest the Rust runtime consumes.
+
+HLO text — NOT `lowered.compile()` output or serialized HloModuleProto —
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entries():
+    """The artifact catalogue.
+
+    Each entry: (name, jitted fn, example args, input specs). Shapes are
+    real layer operands from the zoo:
+      * gemm_quickstart  — 128x128x128 (the quickstart example)
+      * resnet152_s4_reduce — ResNet-152 stage-4 bottleneck 1x1 reduce
+                              at 7x7: M=49, K=2048, N=512
+      * mobilenet_pw     — MobileNetV3-L final pointwise: M=49, K=960, N=160
+      * conv3x3_56_64    — a 3x3/s1/p1 conv on 56x56x64 (ResNet stage 1)
+      * bottleneck_56_256 — full bottleneck block forward on 56x56x256
+      * fc_head          — VGG-style 2-layer MLP head 512->128->10
+    """
+    e = []
+
+    def add(name, fn, specs, kind, dims):
+        e.append(
+            {
+                "name": name,
+                "fn": fn,
+                "specs": specs,
+                "kind": kind,
+                "dims": dims,
+            }
+        )
+
+    add(
+        "gemm_quickstart",
+        lambda a, w: (model.gemm(a, w),),
+        [f32(128, 128), f32(128, 128)],
+        "gemm",
+        {"m": 128, "k": 128, "n": 128},
+    )
+    add(
+        "resnet152_s4_reduce",
+        lambda a, w: (model.gemm(a, w),),
+        [f32(49, 2048), f32(2048, 512)],
+        "gemm",
+        {"m": 49, "k": 2048, "n": 512},
+    )
+    add(
+        "mobilenet_pw",
+        lambda a, w: (model.gemm(a, w),),
+        [f32(49, 960), f32(960, 160)],
+        "gemm",
+        {"m": 49, "k": 960, "n": 160},
+    )
+    add(
+        "conv3x3_56_64",
+        lambda x, w: (model.conv2d(x, w, 1, 1),),
+        [f32(1, 56, 56, 64), f32(3, 3, 64, 64)],
+        "conv",
+        {"n": 1, "h": 56, "w": 56, "c_in": 64, "c_out": 64, "kernel": 3, "stride": 1, "pad": 1},
+    )
+    add(
+        "bottleneck_56_256",
+        lambda x, wr, ws, we: (model.bottleneck_block(x, wr, ws, we),),
+        [
+            f32(1, 14, 14, 256),
+            f32(1, 1, 256, 64),
+            f32(3, 3, 64, 64),
+            f32(1, 1, 64, 256),
+        ],
+        "bottleneck",
+        {"n": 1, "h": 14, "w": 14, "c": 256, "c_mid": 64},
+    )
+    add(
+        "attention_heads",
+        # Per-head attention-style grouped GEMM (BERT-Base geometry,
+        # 4 heads of the 12 to keep the artifact small): serialized groups
+        # exactly like the emulator runs group convolutions.
+        lambda a, w: (model.grouped_gemm(a, w, 4),),
+        [f32(128, 4 * 64), f32(4, 64, 128)],
+        "grouped-gemm",
+        {"m": 128, "k_g": 64, "n_g": 128, "groups": 4},
+    )
+    add(
+        "fc_head",
+        lambda x, w1, w2: (model.mlp(x, w1, w2),),
+        [f32(4, 512), f32(512, 128), f32(128, 10)],
+        "mlp",
+        {"batch": 4, "d_in": 512, "d_hidden": 128, "d_out": 10},
+    )
+    return e
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for entry in entries():
+        lowered = jax.jit(entry["fn"]).lower(*entry["specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{entry['name']}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": entry["name"],
+                "file": fname,
+                "kind": entry["kind"],
+                "dims": entry["dims"],
+                "inputs": [list(s.shape) for s in entry["specs"]],
+                "hlo_bytes": len(text),
+            }
+        )
+        print(f"wrote {path} ({len(text)} bytes)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", help="(compat) ignored single-file path", default=None)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    export_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

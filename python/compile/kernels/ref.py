@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels and the conv lowering.
+
+Everything here is deliberately the *obvious* implementation; pytest
+asserts the kernels and the AOT-exported computations match these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, w):
+    """Plain f32 matmul."""
+    return jnp.matmul(a.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def grouped_matmul_ref(a, w, groups: int):
+    """a: (M, G*Kg), w: (G, Kg, Ng) -> (M, G*Ng)."""
+    m, k_total = a.shape
+    g, kg, ng = w.shape
+    assert g == groups and k_total == groups * kg
+    outs = [
+        matmul_ref(a[:, i * kg : (i + 1) * kg], w[i]) for i in range(groups)
+    ]
+    return jnp.concatenate(outs, axis=1)
+
+
+def im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """NHWC input -> (N*OH*OW, KH*KW*C) patch matrix (the conv->GEMM
+    lowering the emulator's layer model assumes)."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            cols.append(patch.reshape(n * oh * ow, c))
+    # Patch layout: kh*kw channel blocks, matching w.reshape(-1, c_out).
+    return jnp.concatenate(cols, axis=1), (n, oh, ow)
+
+
+def conv2d_ref(x, w, stride: int, pad: int):
+    """Conv reference via im2col + plain matmul: x NHWC,
+    w (KH, KW, C_in, C_out) -> NHWC."""
+    cols, (n, oh, ow) = im2col(x, w.shape[0], w.shape[1], stride, pad)
+    wmat = w.reshape(-1, w.shape[3])
+    out = matmul_ref(cols, wmat)
+    return out.reshape(n, oh, ow, w.shape[3])

@@ -1,0 +1,97 @@
+"""Layer 1: the weight-stationary tiled matmul Pallas kernel.
+
+This is the compute hot-spot of the stack, written to mirror the schedule
+of the emulated systolic array (DESIGN.md §2 Hardware-Adaptation):
+
+* the grid iterates (M-blocks, N-blocks, K-blocks) exactly like the
+  emulator's (chunk, col-tile, row-tile) loops;
+* the weight block's BlockSpec index map ignores the M axis — the tile is
+  "stationary" in VMEM while activation blocks stream past it;
+* the K grid axis accumulates partial sums into the output block, playing
+  the role of the accumulator array.
+
+Pallas runs under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that both the
+pytest oracle checks and the Rust runtime can compile (see
+/opt/xla-example/README.md). Real-TPU performance is estimated analytically
+in DESIGN.md §8 from the BlockSpec geometry.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, w_ref, o_ref):
+    """One (bm x bk) x (bk x bn) MAC tile; accumulates over the K grid axis."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # The MXU-shaped inner product. preferred_element_type keeps the
+    # accumulation in f32 even for narrow inputs (the accumulator-array
+    # analogue of out_bits=32).
+    o_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _block(dim: int, requested: int) -> int:
+    """Clamp a block size to the dimension (tiny operands in tests)."""
+    return min(dim, requested)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def ws_matmul(a: jax.Array, w: jax.Array, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """``a @ w`` via the weight-stationary Pallas kernel.
+
+    a: (M, K), w: (K, N) -> (M, N) in f32. Dimensions need not divide the
+    block sizes; Pallas masks the ragged edges.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+
+    # Pad ragged edges up to block multiples (zeros are MAC-neutral); the
+    # result is sliced back. On a real TPU this is the usual tile-alignment
+    # padding; under interpret=True it also avoids NaN-filled OOB blocks.
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    a_p = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    w_p = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            # Activations: new M-block per i, new K-block per kk; the N axis
+            # is ignored (re-streamed per col-tile, like the emulator's UB
+            # activation re-reads).
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # Weights: *stationary* across the M axis — index map ignores i.
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, w_p)
+    return out[:m, :n]
+
+
+def ws_matmul_grouped(a: jax.Array, w: jax.Array, groups: int, **kw):
+    """Grouped GEMM: a (M, G*Kg) x w (G, Kg, Ng) -> (M, G*Ng), serialized
+    per group exactly like the emulator runs group convolutions."""
+    m, k_total = a.shape
+    g, kg, ng = w.shape
+    assert g == groups and k_total == groups * kg
+    outs = [
+        ws_matmul(a[:, i * kg : (i + 1) * kg], w[i], **kw) for i in range(groups)
+    ]
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,55 @@
+"""Layer 2: the JAX compute graph — conv-as-GEMM forward passes built on
+the Layer-1 Pallas kernel. These are the computations `aot.py` lowers to
+HLO text for the Rust runtime; Python never runs at request time.
+
+The paper integrates its emulator into TensorFlow via custom operators;
+here the ML-framework compute path is JAX → XLA → PJRT, and the Rust
+coordinator runs the *same* GEMMs both through these compiled artifacts
+(numerics) and through the emulator (metrics), cross-checking the two.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.ref import im2col
+from compile.kernels.ws_matmul import ws_matmul, ws_matmul_grouped
+
+
+def gemm(a, w):
+    """The plain GEMM entry point (Layer-1 kernel pass-through)."""
+    return ws_matmul(a, w)
+
+
+def grouped_gemm(a, w, groups: int):
+    """Serialized grouped GEMM (group convolutions, attention heads)."""
+    return ws_matmul_grouped(a, w, groups)
+
+
+def conv2d(x, w, stride: int = 1, pad: int = 0):
+    """Convolution lowered exactly like the emulator's layer model:
+    im2col patches (M = N*OH*OW rows, K = KH*KW*C_in) through the
+    weight-stationary matmul kernel. x: NHWC, w: (KH, KW, C_in, C_out).
+    """
+    cols, (n, oh, ow) = im2col(x, w.shape[0], w.shape[1], stride, pad)
+    wmat = w.reshape(-1, w.shape[3])
+    out = ws_matmul(cols, wmat)
+    return out.reshape(n, oh, ow, w.shape[3])
+
+
+def bottleneck_block(x, w_reduce, w_spatial, w_expand):
+    """A ResNet bottleneck forward (1x1 reduce -> 3x3 -> 1x1 expand, ReLU
+    between, residual add): the end-to-end workload of the verify example.
+    x: NHWC; w_reduce: (1,1,C,Cr); w_spatial: (3,3,Cr,Cr);
+    w_expand: (1,1,Cr,C).
+    """
+    y = jax.nn.relu(conv2d(x, w_reduce, 1, 0))
+    y = jax.nn.relu(conv2d(y, w_spatial, 1, 1))
+    y = conv2d(y, w_expand, 1, 0)
+    return jax.nn.relu(y + x)
+
+
+def mlp(x, w1, w2):
+    """A 2-layer MLP head (the FC tail of the classic CNNs)."""
+    return ws_matmul(jax.nn.relu(ws_matmul(x, w1)), w2)

@@ -1,0 +1,103 @@
+"""Layer-1 correctness: the Pallas weight-stationary matmul against the
+pure-jnp oracle, swept over shapes (hypothesis) and block configurations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import grouped_matmul_ref, matmul_ref
+from compile.kernels.ws_matmul import ws_matmul, ws_matmul_grouped
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 8),
+        (128, 128, 128),
+        (5, 7, 3),       # nothing divides anything
+        (1, 2048, 512),  # FC-like
+        (200, 27, 64),   # conv-stem-like
+    ],
+)
+def test_matches_reference_shapes(m, k, n):
+    rng = np.random.default_rng(0)
+    a, w = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(ws_matmul(a, w), matmul_ref(a, w), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (128, 128, 128), (7, 5, 3)])
+def test_block_shapes_do_not_change_results(bm, bn, bk):
+    rng = np.random.default_rng(1)
+    a, w = rand(rng, 33, 29, ), rand(rng, 29, 17)
+    got = ws_matmul(a, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, matmul_ref(a, w), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.sampled_from([4, 8, 16, 64]),
+    bn=st.sampled_from([4, 8, 16, 64]),
+    bk=st.sampled_from([4, 8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(m, k, n, bm, bn, bk, seed):
+    rng = np.random.default_rng(seed)
+    a, w = rand(rng, m, k), rand(rng, k, n)
+    got = ws_matmul(a, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, matmul_ref(a, w), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+def test_input_dtypes_accumulate_in_f32(dtype):
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(-4, 5, (16, 24)), dtype=dtype)
+    w = jnp.asarray(rng.integers(-4, 5, (24, 8)), dtype=dtype)
+    got = ws_matmul(a, w)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, matmul_ref(a, w), rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_matches_reference():
+    rng = np.random.default_rng(3)
+    groups, m, kg, ng = 4, 10, 6, 5
+    a = rand(rng, m, groups * kg)
+    w = rand(rng, groups, kg, ng)
+    got = ws_matmul_grouped(a, w, groups)
+    np.testing.assert_allclose(
+        got, grouped_matmul_ref(a, w, groups), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_jit_cache_reuse():
+    # Same static blocks -> one compilation; just a smoke check it runs
+    # under jit twice without retracing errors.
+    rng = np.random.default_rng(4)
+    a, w = rand(rng, 32, 32), rand(rng, 32, 32)
+    first = ws_matmul(a, w)
+    second = ws_matmul(a * 2, w)
+    np.testing.assert_allclose(second, 2 * first, rtol=1e-5, atol=1e-6)
+
+
+def test_weight_stationarity_of_blockspec():
+    # The weight BlockSpec must ignore the M grid axis: growing M must not
+    # change which weight block any (j, kk) iteration reads. We verify
+    # behaviourally: results for a tall A equal row-blocks computed
+    # independently.
+    rng = np.random.default_rng(5)
+    a, w = rand(rng, 64, 16), rand(rng, 16, 12)
+    whole = ws_matmul(a, w, bm=16, bn=8, bk=8)
+    parts = jnp.concatenate(
+        [ws_matmul(a[i : i + 16], w, bm=16, bn=8, bk=8) for i in range(0, 64, 16)]
+    )
+    np.testing.assert_allclose(whole, parts, rtol=1e-6, atol=1e-6)

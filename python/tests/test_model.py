@@ -1,0 +1,96 @@
+"""Layer-2 correctness: conv-as-GEMM forward passes against jax.lax
+convolutions, and the composite blocks against their obvious references.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import conv2d_ref, matmul_ref
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def lax_conv(x, w, stride, pad):
+    """Ground truth via XLA's native convolution (NHWC / HWIO)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+@pytest.mark.parametrize(
+    "h,c_in,c_out,k,stride,pad",
+    [
+        (8, 4, 8, 3, 1, 1),
+        (8, 4, 8, 3, 2, 1),
+        (9, 3, 5, 3, 2, 0),
+        (7, 8, 8, 1, 1, 0),
+        (12, 2, 4, 5, 1, 2),
+    ],
+)
+def test_conv2d_matches_lax(h, c_in, c_out, k, stride, pad):
+    rng = np.random.default_rng(0)
+    x = rand(rng, 1, h, h, c_in)
+    w = rand(rng, k, k, c_in, c_out)
+    got = model.conv2d(x, w, stride, pad)
+    want = lax_conv(x, w, stride, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_matches_im2col_ref():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 2, 10, 10, 3)
+    w = rand(rng, 3, 3, 3, 6)
+    np.testing.assert_allclose(
+        model.conv2d(x, w, 1, 1), conv2d_ref(x, w, 1, 1), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(4, 14),
+    c_in=st.integers(1, 8),
+    c_out=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_hypothesis(h, c_in, c_out, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 1, h, h, c_in)
+    w = rand(rng, 3, 3, c_in, c_out)
+    got = model.conv2d(x, w, stride, 1)
+    want = lax_conv(x, w, stride, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bottleneck_block_shape_and_residual():
+    rng = np.random.default_rng(2)
+    c, cm = 16, 4
+    x = rand(rng, 1, 7, 7, c)
+    wr = rand(rng, 1, 1, c, cm)
+    ws = rand(rng, 3, 3, cm, cm)
+    we = rand(rng, 1, 1, cm, c)
+    y = model.bottleneck_block(x, wr, ws, we)
+    assert y.shape == x.shape
+    # Zero weights -> pure residual passthrough (ReLU(x + 0) with x>=0).
+    z = model.bottleneck_block(
+        jnp.abs(x), jnp.zeros_like(wr), jnp.zeros_like(ws), jnp.zeros_like(we)
+    )
+    np.testing.assert_allclose(z, jnp.abs(x), rtol=1e-6, atol=1e-6)
+
+
+def test_mlp_matches_reference():
+    rng = np.random.default_rng(3)
+    x, w1, w2 = rand(rng, 4, 32), rand(rng, 32, 16), rand(rng, 16, 10)
+    got = model.mlp(x, w1, w2)
+    want = matmul_ref(jax.nn.relu(matmul_ref(x, w1)), w2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

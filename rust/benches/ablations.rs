@@ -1,0 +1,123 @@
+//! Ablation benches for the design choices DESIGN.md §3.1 calls out:
+//!
+//! * accumulator capacity (the width-penalty mechanism) — E vs C_acc;
+//! * dataflow: weight-stationary vs output-stationary (paper §6 future
+//!   work) on CNNs and transformers;
+//! * energy model: paper Eq. 1 weights vs Dally-et-al. 14 nm re-weighting
+//!   — does the tall-narrow recommendation survive technology scaling?
+//! * double buffering: CAMUY vs the SCALE-SIM-style exposed-load baseline.
+
+use camuy::baseline::scalesim_metrics;
+use camuy::config::{ArrayConfig, Dataflow, EnergyWeights};
+use camuy::nets;
+use camuy::sweep::grid::DimGrid;
+use camuy::sweep::runner::{sweep_network, Workload};
+use camuy::util::bench::{bench, BenchOpts};
+
+fn main() {
+    println!("== ablation: accumulator capacity (ResNet-152, 64x64) ==");
+    let net = nets::build("resnet152").unwrap();
+    let wl = Workload::of(&net);
+    for acc in [256usize, 1024, 4096, 16384, 1 << 20] {
+        let cfg = ArrayConfig::new(64, 64).with_acc_capacity(acc);
+        let m = wl.eval(&cfg);
+        println!(
+            "   C_acc {:>8}: E {:.4e}, UB weight reads {:.3e}, cycles {:.3e}",
+            acc,
+            m.energy(&EnergyWeights::paper()),
+            m.movements.ub_weight_reads as f64,
+            m.cycles as f64
+        );
+    }
+
+    println!("\n== ablation: dataflow (ws vs os) ==");
+    for name in ["resnet152", "mobilenetv3l", "bertbase-s128"] {
+        let net = nets::build(name).unwrap();
+        let wl = Workload::of(&net);
+        let ws = wl.eval(&ArrayConfig::new(64, 64));
+        let os = wl.eval(&ArrayConfig::new(64, 64).with_dataflow(Dataflow::OutputStationary));
+        println!(
+            "   {:<14} E(ws) {:.3e}  E(os) {:.3e}  cycles(ws) {:.3e}  cycles(os) {:.3e}",
+            name,
+            ws.energy(&EnergyWeights::paper()),
+            os.energy(&EnergyWeights::paper()),
+            ws.cycles as f64,
+            os.cycles as f64
+        );
+    }
+
+    println!("\n== ablation: technology scaling of Equation 1 ==");
+    // Does the optimal (height, width) move under 14nm weights?
+    let grid = DimGrid::paper();
+    let cfgs = grid.configs(&ArrayConfig::new(1, 1));
+    for (label, w) in [
+        ("paper", EnergyWeights::paper()),
+        ("dally14nm", EnergyWeights::dally_14nm()),
+    ] {
+        let sweep = sweep_network(&net, &cfgs, &w, camuy::sweep::runner::default_threads());
+        let best = sweep.argmin(|p| p.energy);
+        println!(
+            "   {:<10} best (h, w) = ({:>3}, {:>3}), E {:.4e}",
+            label, best.height, best.width, best.energy
+        );
+    }
+
+    println!("\n== ablation: cycle model vs SCALE-SIM-style baseline ==");
+    // The two models differ in three places: CAMUY hides weight loads
+    // (double buffering) but pays full-height drains and accumulator
+    // chunking; SCALE-SIM exposes every load but assumes an infinite
+    // accumulator. Separate the effects by also running CAMUY with an
+    // effectively infinite accumulator.
+    for (label, acc) in [("acc=4096", 4096usize), ("acc=inf", 1 << 30)] {
+        let cfg = ArrayConfig::new(128, 128).with_acc_capacity(acc);
+        let camuy_total: u64 = net.layers.iter().map(|l| l.metrics(&cfg).cycles).sum();
+        let scalesim_total: u64 = net
+            .layers
+            .iter()
+            .map(|l| {
+                let (g, groups) = l.gemm();
+                scalesim_metrics(g, &cfg).cycles * groups as u64
+            })
+            .sum();
+        println!(
+            "   ResNet-152 @128x128 {label}: CAMUY {camuy_total} vs SCALE-SIM-style \
+             {scalesim_total} cycles (ratio {:.2})",
+            camuy_total as f64 / scalesim_total as f64
+        );
+    }
+
+    println!("\n== ablation: multi-array scaling (paper §6 future work) ==");
+    for name in ["resnet152", "resnext152", "mobilenetv3l"] {
+        let n = nets::build(name).unwrap();
+        let base = camuy::model::multi::network_metrics_multi(
+            &n,
+            &camuy::model::multi::MultiArrayConfig::new(1, ArrayConfig::new(64, 64)),
+        );
+        print!("   {name:<14}");
+        for arrays in [2usize, 4, 8] {
+            let m = camuy::model::multi::network_metrics_multi(
+                &n,
+                &camuy::model::multi::MultiArrayConfig::new(arrays, ArrayConfig::new(64, 64)),
+            );
+            print!(
+                "  {arrays}x: {:.2}x speedup {:+.1}% E",
+                base.makespan_cycles as f64 / m.makespan_cycles as f64,
+                100.0
+                    * (m.energy(&EnergyWeights::paper()) / base.energy(&EnergyWeights::paper())
+                        - 1.0)
+            );
+        }
+        println!();
+    }
+
+    println!("\n== ablation timing ==");
+    bench("ablation/acc_capacity_sweep", &BenchOpts::default(), || {
+        [256usize, 1024, 4096, 16384]
+            .iter()
+            .map(|&acc| {
+                wl.eval(&ArrayConfig::new(64, 64).with_acc_capacity(acc))
+                    .cycles
+            })
+            .sum::<u64>()
+    });
+}

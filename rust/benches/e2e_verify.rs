@@ -1,0 +1,56 @@
+//! Bench E2E: artifact compile + execute latency through the PJRT runtime
+//! (the served-request hot path), plus the functional emulator's event
+//! throughput on the same workload. Skips gracefully when artifacts are
+//! absent.
+
+use camuy::arch::{EmulationMode, Emulator};
+use camuy::config::ArrayConfig;
+use camuy::runtime::{default_artifact_dir, Manifest, PjrtRuntime};
+use camuy::tensor::Matrix;
+use camuy::util::bench::{bench, throughput, BenchOpts};
+use camuy::util::prng::Rng;
+
+fn main() {
+    println!("== E2E: PJRT request path + functional emulator ==");
+    let Ok(manifest) = Manifest::load(&default_artifact_dir()) else {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+
+    // Compile latency (cold-start cost per artifact).
+    let entry = manifest.find("gemm_quickstart").unwrap().clone();
+    bench("e2e/compile_gemm_quickstart", &BenchOpts::default(), || {
+        rt.load(&entry.name, &entry.file).unwrap()
+    });
+
+    // Request latency on the compiled executable.
+    let exe = rt.load(&entry.name, &entry.file).unwrap();
+    let mut rng = Rng::new(1);
+    let a = Matrix::random_small_int(128, 128, &mut rng);
+    let w = Matrix::random_small_int(128, 128, &mut rng);
+    let r = bench(
+        "e2e/request_gemm_128 (pjrt)",
+        &BenchOpts {
+            warmup_iters: 5,
+            measure_iters: 50,
+        },
+        || exe.run_gemm(&a, &w).unwrap(),
+    );
+    println!("   -> {:.0} req/s", throughput(&r, 1));
+
+    // Functional emulator on the same GEMM: MAC-event throughput.
+    let emu = Emulator::new(ArrayConfig::new(32, 32)).unwrap();
+    let r = bench("e2e/emulator_gemm_128 (wavefront)", &BenchOpts::default(), || {
+        emu.run_gemm(&a, &w, EmulationMode::Wavefront)
+    });
+    let macs = 128u64 * 128 * 128;
+    println!("   -> {:.2e} MAC-events/s", throughput(&r, macs));
+
+    let r = bench(
+        "e2e/emulator_gemm_128 (cycle-accurate)",
+        &BenchOpts::slow(),
+        || emu.run_gemm(&a, &w, EmulationMode::CycleAccurate),
+    );
+    println!("   -> {:.2e} MAC-events/s", throughput(&r, macs));
+}

@@ -1,0 +1,34 @@
+//! Bench FIG2: regenerate the ResNet-152 data-movement & utilization
+//! heatmaps (961 configurations) and report sweep throughput.
+
+use camuy::report::figures::{fig2_heatmaps, FigureContext};
+use camuy::util::bench::{bench, throughput, BenchOpts};
+
+fn main() {
+    let ctx = FigureContext::paper();
+    println!("== FIG2: ResNet-152 heatmaps over {} configs ==", ctx.grid.len());
+    let r = bench("fig2/resnet152_961cfg", &BenchOpts::default(), || {
+        fig2_heatmaps("resnet152", &ctx)
+    });
+    println!(
+        "   -> {:.0} configs/s",
+        throughput(&r, ctx.grid.len() as u64)
+    );
+
+    // Single-thread reference (the parallel-speedup datum for §Perf).
+    let mut ctx1 = ctx.clone();
+    ctx1.threads = 1;
+    let r1 = bench("fig2/resnet152_961cfg_1thread", &BenchOpts::default(), || {
+        fig2_heatmaps("resnet152", &ctx1)
+    });
+    println!(
+        "   -> parallel speedup {:.2}x on {} threads",
+        r1.seconds.mean / r.seconds.mean,
+        ctx.threads
+    );
+
+    // The data itself, for the record.
+    let data = fig2_heatmaps("resnet152", &ctx);
+    let (h, w, e) = data.energy.min_cell();
+    println!("   min E = {e:.4e} at ({h}, {w})");
+}

@@ -1,0 +1,37 @@
+//! Bench FIG3: NSGA-II Pareto extraction for ResNet-152 (both objective
+//! pairs), including the underlying sweep, vs. the exhaustive front.
+
+use camuy::pareto::nsga2::Nsga2Params;
+use camuy::report::figures::{fig3_pareto, FigureContext};
+use camuy::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let ctx = FigureContext::paper();
+    let params = Nsga2Params::default();
+    println!(
+        "== FIG3: ResNet-152 Pareto (NSGA-II pop={} gen={}) ==",
+        params.population, params.generations
+    );
+    bench("fig3/nsga2_both_objectives", &BenchOpts::default(), || {
+        fig3_pareto("resnet152", &ctx, &params)
+    });
+
+    let data = fig3_pareto("resnet152", &ctx, &params);
+    println!(
+        "   energy front: NSGA-II {} pts / exhaustive {} pts",
+        data.energy_front.len(),
+        data.exhaustive_energy_front.len()
+    );
+    println!(
+        "   utilization front: NSGA-II {} pts / exhaustive {} pts",
+        data.utilization_front.len(),
+        data.exhaustive_utilization_front.len()
+    );
+    // Paper-style annotation dump of the energy front.
+    for s in data.energy_front.iter().take(8) {
+        println!(
+            "   ({:>3}, {:>3})  E {:.4e}  cycles {:.4e}",
+            s.height, s.width, s.objectives[0], s.objectives[1]
+        );
+    }
+}

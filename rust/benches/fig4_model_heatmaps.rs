@@ -1,0 +1,22 @@
+//! Bench FIG4: data-movement heatmaps for all nine paper models over the
+//! full 961-configuration grid — the paper's headline "fast exploration"
+//! workload (9 x 961 network sweeps).
+
+use camuy::report::figures::{fig4_heatmaps, FigureContext};
+use camuy::util::bench::{bench, throughput, BenchOpts};
+
+fn main() {
+    let ctx = FigureContext::paper();
+    let total = 9 * ctx.grid.len() as u64;
+    println!("== FIG4: 9 models x {} configs ==", ctx.grid.len());
+    let r = bench("fig4/nine_models_961cfg", &BenchOpts::default(), || {
+        fig4_heatmaps(&ctx)
+    });
+    println!("   -> {:.0} (model,config) evaluations/s", throughput(&r, total));
+
+    let data = fig4_heatmaps(&ctx);
+    for d in &data {
+        let (h, w, e) = d.energy.min_cell();
+        println!("   {:<16} min E {e:.3e} at ({h:>3}, {w:>3})", d.network);
+    }
+}

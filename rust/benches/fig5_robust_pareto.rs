@@ -1,0 +1,28 @@
+//! Bench FIG5: the robustness analysis — nine full-grid sweeps,
+//! per-model normalization, cross-model averaging, NSGA-II + exhaustive
+//! Pareto extraction.
+
+use camuy::pareto::nsga2::Nsga2Params;
+use camuy::report::figures::{fig5_robust, FigureContext};
+use camuy::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let ctx = FigureContext::paper();
+    println!("== FIG5: robust Pareto across the nine paper models ==");
+    bench("fig5/robust_pareto_full", &BenchOpts::default(), || {
+        fig5_robust(&ctx, &Nsga2Params::default())
+    });
+
+    let data = fig5_robust(&ctx, &Nsga2Params::default());
+    println!("   front size: {} (exhaustive {})", data.front.len(), data.exhaustive_front.len());
+    let tall = data
+        .front
+        .iter()
+        .filter(|s| s.height > s.width)
+        .count();
+    println!(
+        "   height > width on {}/{} front points (the paper's tall-narrow finding)",
+        tall,
+        data.front.len()
+    );
+}

@@ -1,0 +1,44 @@
+//! Bench FIG6: equal-PE-count aspect-ratio study for 4096 / 16384 / 65536
+//! PEs across the nine models, plus the SCALE-SIM baseline comparison.
+
+use camuy::baseline::scalesim_metrics;
+use camuy::config::ArrayConfig;
+use camuy::nets;
+use camuy::report::figures::{fig6_equal_pe, FigureContext};
+use camuy::sweep::grid::equal_pe_factorizations;
+use camuy::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let ctx = FigureContext::paper();
+    println!("== FIG6: equal-PE aspect ratios ==");
+    bench("fig6/three_budgets_nine_models", &BenchOpts::default(), || {
+        [4096usize, 16384, 65536]
+            .iter()
+            .map(|&b| fig6_equal_pe(b, 8, &ctx))
+            .collect::<Vec<_>>()
+    });
+
+    let d = fig6_equal_pe(16384, 8, &ctx);
+    println!("   PE budget 16384, avg normalized E:");
+    for (i, &(h, w)) in d.shapes.iter().enumerate() {
+        println!("   {h:>5} x {w:<5} {:.4}", d.average[i]);
+    }
+
+    // Baseline comparison for the same space.
+    bench("fig6/scalesim_baseline_resnet152", &BenchOpts::default(), || {
+        let net = nets::build("resnet152").unwrap();
+        equal_pe_factorizations(16384, 8)
+            .into_iter()
+            .map(|(h, w)| {
+                let cfg = ArrayConfig::new(h, w);
+                net.layers
+                    .iter()
+                    .map(|l| {
+                        let (g, groups) = l.gemm();
+                        scalesim_metrics(g, &cfg).cycles * groups as u64
+                    })
+                    .sum::<u64>()
+            })
+            .collect::<Vec<_>>()
+    });
+}

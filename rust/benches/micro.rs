@@ -1,0 +1,70 @@
+//! Micro-benchmarks of the hot paths the §Perf pass optimizes:
+//! closed-form analytic metrics vs the pass-iterating reference, workload
+//! deduplication, network-level evaluation, and NSGA-II machinery.
+
+use camuy::config::{ArrayConfig, EnergyWeights};
+use camuy::model::gemm::{ws_metrics, ws_metrics_ref};
+use camuy::model::schedule::GemmShape;
+use camuy::nets;
+use camuy::pareto::dominance::{fast_non_dominated_sort, pareto_front_indices};
+use camuy::sweep::runner::Workload;
+use camuy::util::bench::{bench, throughput, BenchOpts};
+use camuy::util::prng::Rng;
+
+fn main() {
+    println!("== micro: analytic model ==");
+    // A late-ResNet bottleneck GEMM on a mid grid point.
+    let g = GemmShape::new(196, 1152, 256);
+    let cfg = ArrayConfig::new(96, 48);
+    let opts = BenchOpts {
+        warmup_iters: 100,
+        measure_iters: 1000,
+    };
+    let fast = bench("micro/ws_metrics_closed_form", &opts, || ws_metrics(g, &cfg));
+    let slow = bench(
+        "micro/ws_metrics_pass_iter_ref",
+        &BenchOpts::default(),
+        || ws_metrics_ref(g, &cfg),
+    );
+    println!(
+        "   -> closed form is {:.0}x faster than pass iteration",
+        slow.seconds.mean / fast.seconds.mean
+    );
+
+    println!("\n== micro: network evaluation ==");
+    let net = nets::build("densenet201").unwrap();
+    bench("micro/workload_dedup_densenet201", &BenchOpts::default(), || {
+        Workload::of(&net)
+    });
+    let wl = Workload::of(&net);
+    let r = bench("micro/densenet201_one_config", &opts, || wl.eval(&cfg));
+    println!(
+        "   -> {:.0} network-evals/s single thread",
+        throughput(&r, 1)
+    );
+    // Without dedup (per-layer evaluation) for the §Perf comparison.
+    let r2 = bench("micro/densenet201_one_config_nodedup", &BenchOpts::default(), || {
+        net.metrics(&cfg)
+    });
+    println!(
+        "   -> dedup speedup {:.1}x",
+        r2.seconds.mean / r.seconds.mean
+    );
+
+    println!("\n== micro: pareto machinery ==");
+    let mut rng = Rng::new(3);
+    let points: Vec<Vec<f64>> = (0..961)
+        .map(|_| vec![rng.next_f64(), rng.next_f64()])
+        .collect();
+    bench("micro/exhaustive_front_961", &BenchOpts::default(), || {
+        pareto_front_indices(&points)
+    });
+    bench("micro/fast_nds_961", &BenchOpts::default(), || {
+        fast_non_dominated_sort(&points)
+    });
+
+    println!("\n== micro: energy model ==");
+    let m = ws_metrics(g, &cfg);
+    let w = EnergyWeights::paper();
+    bench("micro/eq1_energy", &opts, || m.energy(&w));
+}

@@ -1,0 +1,134 @@
+//! The Accumulator Array: buffers partial sums produced by the bottom PE
+//! row across row-tile passes, and drains finished chunks back to the
+//! Unified Buffer. Capacity is a single shared budget of entries
+//! (DESIGN.md §3.1) — the knob whose interaction with array width drives
+//! the paper's tall-narrow recommendation.
+
+/// Accumulator state for one (col-tile, M-chunk) window.
+#[derive(Debug)]
+pub struct AccumulatorArray {
+    capacity: usize,
+    /// Current window geometry.
+    rows: usize,
+    cols: usize,
+    buf: Vec<f32>,
+    pub writes: u64,
+    pub reads: u64,
+}
+
+impl AccumulatorArray {
+    pub fn new(capacity: usize) -> AccumulatorArray {
+        assert!(capacity > 0);
+        AccumulatorArray {
+            capacity,
+            rows: 0,
+            cols: 0,
+            buf: Vec::new(),
+            writes: 0,
+            reads: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Row budget for an active tile width, `max(1, capacity / n_t)`.
+    pub fn row_budget(&self, n_t: usize) -> usize {
+        (self.capacity / n_t).max(1)
+    }
+
+    /// Open a fresh accumulation window of `rows x cols` zeroed entries.
+    /// Panics if the window exceeds capacity (the control unit must chunk),
+    /// except for the degenerate 1-row window that a too-small capacity
+    /// still has to admit.
+    pub fn open(&mut self, rows: usize, cols: usize) {
+        assert!(
+            rows * cols <= self.capacity || rows == 1,
+            "accumulator window {rows}x{cols} exceeds capacity {}",
+            self.capacity
+        );
+        self.rows = rows;
+        self.cols = cols;
+        self.buf.clear();
+        self.buf.resize(rows * cols, 0.0);
+    }
+
+    /// Accumulate one partial sum arriving from the array's bottom row.
+    #[inline]
+    pub fn accumulate(&mut self, row: usize, col: usize, psum: f32) {
+        debug_assert!(row < self.rows && col < self.cols);
+        self.writes += 1;
+        self.buf[row * self.cols + col] += psum;
+    }
+
+    /// Drain the window; calls `sink(row, col, value)` for each entry.
+    pub fn drain(&mut self, mut sink: impl FnMut(usize, usize, f32)) {
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                self.reads += 1;
+                sink(r, c, self.buf[r * self.cols + c]);
+            }
+        }
+        self.rows = 0;
+        self.cols = 0;
+        self.buf.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_passes() {
+        let mut aa = AccumulatorArray::new(16);
+        aa.open(2, 2);
+        aa.accumulate(0, 0, 1.0);
+        aa.accumulate(0, 0, 2.5);
+        aa.accumulate(1, 1, -1.0);
+        let mut out = vec![];
+        aa.drain(|r, c, v| out.push((r, c, v)));
+        assert_eq!(out, vec![(0, 0, 3.5), (0, 1, 0.0), (1, 0, 0.0), (1, 1, -1.0)]);
+        assert_eq!(aa.writes, 3);
+        assert_eq!(aa.reads, 4);
+    }
+
+    #[test]
+    fn row_budget_math() {
+        let aa = AccumulatorArray::new(4096);
+        assert_eq!(aa.row_budget(256), 16);
+        assert_eq!(aa.row_budget(16), 256);
+        assert_eq!(aa.row_budget(8192), 1); // clamp
+    }
+
+    #[test]
+    fn reopen_zeroes() {
+        let mut aa = AccumulatorArray::new(8);
+        aa.open(1, 2);
+        aa.accumulate(0, 0, 5.0);
+        aa.drain(|_, _, _| {});
+        aa.open(1, 2);
+        let mut vals = vec![];
+        aa.drain(|_, _, v| vals.push(v));
+        assert_eq!(vals, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds capacity")]
+    fn oversized_window_panics() {
+        let mut aa = AccumulatorArray::new(4);
+        aa.open(2, 4);
+    }
+
+    #[test]
+    fn degenerate_single_row_allowed() {
+        // Capacity smaller than the active width still admits 1-row windows.
+        let mut aa = AccumulatorArray::new(2);
+        aa.open(1, 8);
+        aa.accumulate(0, 7, 1.0);
+        let mut n = 0;
+        aa.drain(|_, _, _| n += 1);
+        assert_eq!(n, 8);
+    }
+}

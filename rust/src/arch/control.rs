@@ -1,0 +1,323 @@
+//! The Main Control Unit: drives the full weight-stationary pipeline —
+//! Weight Fetcher, Systolic Data Setup, PE array, Accumulator Array,
+//! Unified Buffer — over the tile schedule shared with the analytic model,
+//! and assembles the final [`Metrics`].
+//!
+//! Timing follows the double-buffered recurrence of DESIGN.md §3: the
+//! fetcher starts loading pass p's tile when pass p-1 begins computing, so
+//! `start(p) = max(end(p-1), start(p-1) + load(p))` and the first pass
+//! exposes its whole load.
+
+use crate::arch::accumulator::AccumulatorArray;
+use crate::arch::array::SystolicArray;
+use crate::arch::fifo::SystolicDataSetup;
+use crate::arch::unified_buffer::UnifiedBuffer;
+use crate::arch::weight_fetcher::WeightFetcher;
+use crate::config::{ArrayConfig, Dataflow};
+use crate::metrics::{Metrics, MovementCounters};
+use crate::model::schedule::{GemmShape, WsSchedule};
+use crate::tensor::Matrix;
+
+/// Which array engine streams the passes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmulationMode {
+    /// Fast wavefront-ordered event emulation (default).
+    Wavefront,
+    /// Literal cycle-stepped grid emulation (validation; O(cycles · PEs)).
+    CycleAccurate,
+}
+
+/// Result of functionally emulating one GEMM.
+#[derive(Debug)]
+pub struct EmulationResult {
+    pub output: Matrix,
+    pub metrics: Metrics,
+    /// Peak SDS FIFO staging depth observed (FIFO sizing signal).
+    pub max_fifo_depth: usize,
+}
+
+/// The emulator instance the wrapper library creates per configuration
+/// (paper §3: "dynamically creates emulator instances of certain
+/// configurations").
+#[derive(Debug, Clone)]
+pub struct Emulator {
+    cfg: ArrayConfig,
+}
+
+impl Emulator {
+    pub fn new(cfg: ArrayConfig) -> Result<Emulator, String> {
+        cfg.validate()?;
+        if cfg.dataflow != Dataflow::WeightStationary {
+            return Err(format!(
+                "functional emulation implements weight-stationary only (got {}); \
+                 the output-stationary variant is analytic-only",
+                cfg.dataflow
+            ));
+        }
+        Ok(Emulator { cfg })
+    }
+
+    pub fn config(&self) -> &ArrayConfig {
+        &self.cfg
+    }
+
+    /// Emulate `C = A * W` and return the computed output plus metrics.
+    pub fn run_gemm(&self, a: &Matrix, w: &Matrix, mode: EmulationMode) -> EmulationResult {
+        assert_eq!(a.cols, w.rows, "GEMM inner dimensions");
+        let gemm = GemmShape::new(a.rows, a.cols, w.cols);
+        let sched = WsSchedule::new(gemm, &self.cfg);
+
+        let mut ub = UnifiedBuffer::new(a.clone(), w.clone());
+        let mut array = SystolicArray::new(self.cfg.height, self.cfg.width);
+        let mut aa = AccumulatorArray::new(self.cfg.acc_capacity);
+        let mut fetcher = WeightFetcher::new();
+
+        let mut cycles: u64 = 0;
+        let mut stall: u64 = 0;
+        let mut passes: u64 = 0;
+        let mut prev_compute: Option<u64> = None;
+        let mut max_fifo_depth = 0usize;
+
+        let mut current_window: Option<(usize, usize)> = None; // (rows, cols)
+
+        for p in sched.passes() {
+            // --- weight pipeline timing ---
+            let tile = fetcher.fetch_tile(
+                &mut ub,
+                p.i,
+                p.j,
+                self.cfg.height,
+                self.cfg.width,
+                p.k_t,
+                p.n_t,
+            );
+            let load = WeightFetcher::load_cycles(&tile);
+            match prev_compute {
+                None => cycles += load, // first load fully exposed
+                Some(d_prev) => {
+                    let s = load.saturating_sub(d_prev);
+                    cycles += s;
+                    stall += s;
+                }
+            }
+            array.load_shadow_tile(&tile);
+            array.activate_tile(p.k_t, p.n_t);
+
+            // --- open the accumulator window at the first row-tile ---
+            if p.i == 0 {
+                debug_assert!(current_window.is_none(), "window left open");
+                aa.open(p.mc, p.n_t);
+                current_window = Some((p.mc, p.n_t));
+            }
+
+            // --- stage activations (UB reads through the SDS) ---
+            let mut sds = SystolicDataSetup::new(self.cfg.height);
+            let mut act_rows: Vec<Vec<f32>> = Vec::with_capacity(p.mc);
+            for r in 0..p.mc {
+                let row: Vec<f32> = (0..p.k_t)
+                    .map(|d| ub.read_act(p.row_start + r, p.i * self.cfg.height + d))
+                    .collect();
+                if mode == EmulationMode::CycleAccurate {
+                    sds.stage_row(r as u64, &row);
+                }
+                act_rows.push(row);
+            }
+            max_fifo_depth = max_fifo_depth.max(sds.max_depth());
+
+            // --- stream ---
+            // Pass duration is Mc + h + n_t - 2 (full-height drain); the
+            // cycle engine steps the active region (Mc + k_t + n_t - 2)
+            // and the remaining (h - k_t) descent cycles are pass-through.
+            let d = match mode {
+                EmulationMode::Wavefront => {
+                    array.stream_pass_wavefront(&act_rows, &mut aa);
+                    p.compute_cycles()
+                }
+                EmulationMode::CycleAccurate => {
+                    let stepped = array.stream_pass_cycle(&mut sds, p.mc, &mut aa);
+                    assert!(sds.is_empty(), "SDS drained");
+                    assert_eq!(stepped, (p.mc + p.k_t + p.n_t - 2) as u64);
+                    stepped + (self.cfg.height - p.k_t) as u64
+                }
+            };
+            cycles += d;
+            prev_compute = Some(d);
+            passes += 1;
+
+            // --- drain the finished chunk ---
+            if p.writeback_after {
+                let (_rows, _cols) = current_window.take().expect("window open");
+                let base_row = p.row_start;
+                let base_col = p.j * self.cfg.width;
+                aa.drain(|r, c, v| ub.write_out(base_row + r, base_col + c, v));
+            }
+        }
+        debug_assert!(current_window.is_none());
+
+        let movements = MovementCounters {
+            ub_act_reads: ub.act_reads,
+            ub_weight_reads: ub.weight_reads,
+            ub_out_writes: ub.out_writes,
+            inter_pe_act: array.counters.inter_act,
+            inter_pe_psum: array.counters.inter_psum,
+            inter_pe_weight: array.counters.inter_weight,
+            intra_pe: array.counters.intra,
+            aa_writes: aa.writes,
+            aa_reads: aa.reads,
+        };
+        let metrics = Metrics {
+            cycles,
+            stall_cycles: stall,
+            macs: array.counters.macs,
+            passes,
+            movements,
+        };
+        EmulationResult {
+            output: ub.into_output(),
+            metrics,
+            max_fifo_depth,
+        }
+    }
+
+    /// Emulate a grouped layer: `groups` independent GEMMs with
+    /// block-diagonal weights. `a` is `M x (groups * K_g)`, `w` is a vec of
+    /// per-group `K_g x N_g` matrices; output is `M x (groups * N_g)`.
+    pub fn run_grouped(
+        &self,
+        a: &Matrix,
+        w_groups: &[Matrix],
+        mode: EmulationMode,
+    ) -> EmulationResult {
+        assert!(!w_groups.is_empty());
+        let groups = w_groups.len();
+        let k_g = w_groups[0].rows;
+        let n_g = w_groups[0].cols;
+        assert!(w_groups.iter().all(|w| w.rows == k_g && w.cols == n_g));
+        assert_eq!(a.cols, groups * k_g);
+
+        let mut out = Matrix::zeros(a.rows, groups * n_g);
+        let mut metrics = Metrics::default();
+        let mut max_fifo = 0usize;
+        for (g, w) in w_groups.iter().enumerate() {
+            let a_g = Matrix::from_fn(a.rows, k_g, |r, c| a[(r, g * k_g + c)]);
+            let res = self.run_gemm(&a_g, w, mode);
+            for r in 0..a.rows {
+                for c in 0..n_g {
+                    out[(r, g * n_g + c)] = res.output[(r, c)];
+                }
+            }
+            metrics += res.metrics;
+            max_fifo = max_fifo.max(res.max_fifo_depth);
+        }
+        EmulationResult {
+            output: out,
+            metrics,
+            max_fifo_depth: max_fifo,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gemm::{ws_metrics, ws_metrics_ref};
+    use crate::util::prng::Rng;
+
+    fn cfg(h: usize, w: usize, acc: usize) -> ArrayConfig {
+        ArrayConfig::new(h, w).with_acc_capacity(acc)
+    }
+
+    #[test]
+    fn rejects_output_stationary() {
+        let c = cfg(4, 4, 64).with_dataflow(Dataflow::OutputStationary);
+        assert!(Emulator::new(c).is_err());
+    }
+
+    #[test]
+    fn numerics_match_reference_matmul() {
+        let mut rng = Rng::new(99);
+        let emu = Emulator::new(cfg(4, 3, 16)).unwrap();
+        let a = Matrix::random_small_int(7, 10, &mut rng);
+        let w = Matrix::random_small_int(10, 8, &mut rng);
+        let res = emu.run_gemm(&a, &w, EmulationMode::Wavefront);
+        assert_eq!(res.output, a.matmul(&w));
+    }
+
+    #[test]
+    fn both_modes_identical() {
+        let mut rng = Rng::new(5);
+        let emu = Emulator::new(cfg(3, 5, 8)).unwrap();
+        let a = Matrix::random_small_int(6, 7, &mut rng);
+        let w = Matrix::random_small_int(7, 9, &mut rng);
+        let wf = emu.run_gemm(&a, &w, EmulationMode::Wavefront);
+        let ca = emu.run_gemm(&a, &w, EmulationMode::CycleAccurate);
+        assert_eq!(wf.output, ca.output);
+        assert_eq!(wf.metrics, ca.metrics);
+    }
+
+    #[test]
+    fn emulator_matches_analytic_model_exactly() {
+        let mut rng = Rng::new(17);
+        for _ in 0..40 {
+            let m = rng.range_usize(1, 12);
+            let k = rng.range_usize(1, 12);
+            let n = rng.range_usize(1, 12);
+            let h = rng.range_usize(1, 6);
+            let w = rng.range_usize(1, 6);
+            let acc = rng.range_usize(1, 24);
+            let c = cfg(h, w, acc);
+            let emu = Emulator::new(c.clone()).unwrap();
+            let a = Matrix::random_small_int(m, k, &mut rng);
+            let wm = Matrix::random_small_int(k, n, &mut rng);
+            let res = emu.run_gemm(&a, &wm, EmulationMode::Wavefront);
+            let gemm = GemmShape::new(m, k, n);
+            assert_eq!(
+                res.metrics,
+                ws_metrics(gemm, &c),
+                "closed form mismatch M{m} K{k} N{n} h{h} w{w} acc{acc}"
+            );
+            assert_eq!(res.metrics, ws_metrics_ref(gemm, &c));
+        }
+    }
+
+    #[test]
+    fn grouped_layer_block_diagonal() {
+        let mut rng = Rng::new(23);
+        let emu = Emulator::new(cfg(4, 4, 32)).unwrap();
+        let groups = 3;
+        let (m, k_g, n_g) = (5, 4, 2);
+        let a = Matrix::random_small_int(m, groups * k_g, &mut rng);
+        let ws: Vec<Matrix> = (0..groups)
+            .map(|_| Matrix::random_small_int(k_g, n_g, &mut rng))
+            .collect();
+        let res = emu.run_grouped(&a, &ws, EmulationMode::Wavefront);
+        // Reference: per-group matmul.
+        for g in 0..groups {
+            let a_g = Matrix::from_fn(m, k_g, |r, c| a[(r, g * k_g + c)]);
+            let expect = a_g.matmul(&ws[g]);
+            for r in 0..m {
+                for c in 0..n_g {
+                    assert_eq!(res.output[(r, g * n_g + c)], expect[(r, c)]);
+                }
+            }
+        }
+        // Metrics are the serialized sum: equal to groups x one GEMM.
+        let one = ws_metrics(GemmShape::new(m, k_g, n_g), emu.config());
+        let mut expect = Metrics::default();
+        for _ in 0..groups {
+            expect += one;
+        }
+        assert_eq!(res.metrics, expect);
+    }
+
+    #[test]
+    fn fifo_depth_reported_in_cycle_mode() {
+        let emu = Emulator::new(cfg(4, 2, 64)).unwrap();
+        let mut rng = Rng::new(31);
+        let a = Matrix::random_small_int(6, 4, &mut rng);
+        let w = Matrix::random_small_int(4, 2, &mut rng);
+        let res = emu.run_gemm(&a, &w, EmulationMode::CycleAccurate);
+        // Rows staged ahead of consumption force nonzero staging depth.
+        assert!(res.max_fifo_depth > 0);
+    }
+}

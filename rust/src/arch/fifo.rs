@@ -1,0 +1,113 @@
+//! The Systolic Data Setup unit: per-row input FIFOs that skew activation
+//! rows so the wavefront requirement of the array holds (element d of a row
+//! enters PE row d exactly d cycles after element 0 enters row 0).
+//!
+//! In the functional emulator the skew is what determines pass timing; the
+//! FIFO model here verifies the waveform property itself and is exercised
+//! by the array's streaming loop.
+
+/// One skewing FIFO bank for an array of `height` rows.
+#[derive(Debug)]
+pub struct SystolicDataSetup {
+    height: usize,
+    /// fifos[d] holds (enter_cycle, value) pairs not yet consumed.
+    fifos: Vec<std::collections::VecDeque<(u64, f32)>>,
+    pub pushes: u64,
+    pub pops: u64,
+}
+
+impl SystolicDataSetup {
+    pub fn new(height: usize) -> SystolicDataSetup {
+        SystolicDataSetup {
+            height,
+            fifos: (0..height).map(|_| std::collections::VecDeque::new()).collect(),
+            pushes: 0,
+            pops: 0,
+        }
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    /// Stage a full activation row (length `k_t <= height`) that begins
+    /// entering the array at `base_cycle`: element d is scheduled for
+    /// `base_cycle + d` — the diagonal waveform.
+    pub fn stage_row(&mut self, base_cycle: u64, row: &[f32]) {
+        assert!(row.len() <= self.height, "row longer than array height");
+        for (d, &v) in row.iter().enumerate() {
+            self.fifos[d].push_back((base_cycle + d as u64, v));
+            self.pushes += 1;
+        }
+    }
+
+    /// Pop the value entering PE row `d` at `cycle`, if its time has come.
+    pub fn pop_if_due(&mut self, d: usize, cycle: u64) -> Option<f32> {
+        if let Some(&(due, v)) = self.fifos[d].front() {
+            if due == cycle {
+                self.fifos[d].pop_front();
+                self.pops += 1;
+                return Some(v);
+            }
+            assert!(due > cycle, "FIFO {d} missed its slot: due {due}, now {cycle}");
+        }
+        None
+    }
+
+    /// Maximum staged depth across FIFOs (for FIFO sizing reports).
+    pub fn max_depth(&self) -> usize {
+        self.fifos.iter().map(|f| f.len()).max().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fifos.iter().all(|f| f.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waveform_skew() {
+        let mut sds = SystolicDataSetup::new(4);
+        sds.stage_row(10, &[1.0, 2.0, 3.0]);
+        // Element d due at 10 + d.
+        assert_eq!(sds.pop_if_due(0, 10), Some(1.0));
+        assert_eq!(sds.pop_if_due(1, 10), None);
+        assert_eq!(sds.pop_if_due(1, 11), Some(2.0));
+        assert_eq!(sds.pop_if_due(2, 12), Some(3.0));
+        assert!(sds.is_empty());
+        assert_eq!(sds.pushes, 3);
+        assert_eq!(sds.pops, 3);
+    }
+
+    #[test]
+    fn consecutive_rows_pipeline() {
+        let mut sds = SystolicDataSetup::new(2);
+        sds.stage_row(0, &[1.0, 2.0]);
+        sds.stage_row(1, &[3.0, 4.0]);
+        // Row 0 of the array sees 1.0 then 3.0 on consecutive cycles.
+        assert_eq!(sds.pop_if_due(0, 0), Some(1.0));
+        assert_eq!(sds.pop_if_due(0, 1), Some(3.0));
+        // Row 1 sees 2.0 at t=1 and 4.0 at t=2.
+        assert_eq!(sds.pop_if_due(1, 1), Some(2.0));
+        assert_eq!(sds.pop_if_due(1, 2), Some(4.0));
+        assert_eq!(sds.max_depth(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "missed its slot")]
+    fn missed_slot_is_a_bug() {
+        let mut sds = SystolicDataSetup::new(1);
+        sds.stage_row(5, &[1.0]);
+        let _ = sds.pop_if_due(0, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "longer than array height")]
+    fn oversized_row_rejected() {
+        let mut sds = SystolicDataSetup::new(2);
+        sds.stage_row(0, &[1.0, 2.0, 3.0]);
+    }
+}

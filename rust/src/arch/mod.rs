@@ -1,0 +1,18 @@
+//! The functional, cycle-level emulator of the CAMUY processor (Fig. 1 of
+//! the paper): PE array, Systolic Data Setup FIFOs, Weight Fetcher,
+//! Accumulator Array, Unified Buffer, Main Control Unit.
+//!
+//! It computes real GEMMs (validating numerics against plain matmul and
+//! the AOT-compiled XLA artifacts) while counting every buffer and
+//! register access; the analytic model in `crate::model` must agree with
+//! it counter-for-counter, cycle-for-cycle (property-tested).
+
+pub mod accumulator;
+pub mod array;
+pub mod control;
+pub mod fifo;
+pub mod pe;
+pub mod unified_buffer;
+pub mod weight_fetcher;
+
+pub use control::{EmulationMode, EmulationResult, Emulator};

@@ -1,0 +1,106 @@
+//! A single processing element: the 4-register arrangement of the paper
+//! (a variant of Kung/Mead-Conway): two weight registers for double
+//! buffering, one activation register, one partial-sum register.
+//!
+//! The hot emulation loop in `array.rs` operates on struct-of-arrays for
+//! speed; this module is the authoritative register-level semantics that
+//! the array code mirrors, and it is unit-tested on its own.
+
+/// Register file of one PE.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Pe {
+    /// Active weight register (read by the MAC).
+    pub weight: f32,
+    /// Shadow weight register (written by loads; swapped at pass start).
+    pub weight_shadow: f32,
+    /// Activation register (written from the left neighbour / FIFO).
+    pub act: f32,
+    /// Partial-sum register (written from the upper neighbour, then MAC).
+    pub psum: f32,
+}
+
+/// Register access counts of one PE operation, so the array can account
+/// intra-PE movement exactly as DESIGN.md §3 defines it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeAccessCounts {
+    pub intra_reads: u32,
+    pub intra_writes: u32,
+}
+
+impl Pe {
+    /// Latch a new shadow weight (during a tile load). 1 intra write.
+    pub fn load_shadow(&mut self, w: f32) -> PeAccessCounts {
+        self.weight_shadow = w;
+        PeAccessCounts {
+            intra_reads: 0,
+            intra_writes: 1,
+        }
+    }
+
+    /// Swap shadow into active at pass start. 1 intra write (the active
+    /// register is rewritten; the shadow read is free in a flip-flop swap).
+    pub fn activate_weight(&mut self) -> PeAccessCounts {
+        self.weight = self.weight_shadow;
+        PeAccessCounts {
+            intra_reads: 0,
+            intra_writes: 1,
+        }
+    }
+
+    /// One MAC step: latch the incoming activation, read the weight,
+    /// combine with the incoming partial sum, latch the result.
+    ///
+    /// Access accounting (5 per MAC): act write + act read + weight read +
+    /// psum read(in) + psum write. The *inter*-PE hops (reading the left
+    /// neighbour's act register / the upper neighbour's psum register) are
+    /// counted by the array, which knows the topology.
+    pub fn mac(&mut self, act_in: f32, psum_in: f32) -> (f32, PeAccessCounts) {
+        self.act = act_in; // act reg write
+        let a = self.act; // act reg read
+        let w = self.weight; // weight reg read
+        self.psum = psum_in + w * a; // psum read (in) + psum write
+        (
+            self.psum,
+            PeAccessCounts {
+                intra_reads: 3,
+                intra_writes: 2,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_computes_and_counts() {
+        let mut pe = Pe::default();
+        pe.load_shadow(3.0);
+        pe.activate_weight();
+        let (out, counts) = pe.mac(2.0, 10.0);
+        assert_eq!(out, 16.0);
+        assert_eq!(counts.intra_reads + counts.intra_writes, 5);
+    }
+
+    #[test]
+    fn double_buffering_isolates_active_weight() {
+        let mut pe = Pe::default();
+        pe.load_shadow(1.0);
+        pe.activate_weight();
+        // Loading the next tile must not disturb the active weight.
+        pe.load_shadow(99.0);
+        let (out, _) = pe.mac(1.0, 0.0);
+        assert_eq!(out, 1.0);
+        pe.activate_weight();
+        let (out, _) = pe.mac(1.0, 0.0);
+        assert_eq!(out, 99.0);
+    }
+
+    #[test]
+    fn load_and_swap_cost_one_write_each() {
+        let mut pe = Pe::default();
+        assert_eq!(pe.load_shadow(5.0).intra_writes, 1);
+        assert_eq!(pe.activate_weight().intra_writes, 1);
+    }
+}

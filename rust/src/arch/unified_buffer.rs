@@ -1,0 +1,96 @@
+//! The Unified Buffer: the single on-chip memory holding weights, input
+//! activations and output activations (the paper's departure from TPUv1,
+//! which kept weights off-chip). All traffic through it is counted.
+
+use crate::tensor::Matrix;
+
+/// Counted storage for one GEMM's operands.
+#[derive(Debug)]
+pub struct UnifiedBuffer {
+    a: Matrix, // activations  M x K
+    w: Matrix, // weights      K x N
+    c: Matrix, // outputs      M x N
+    pub act_reads: u64,
+    pub weight_reads: u64,
+    pub out_writes: u64,
+}
+
+impl UnifiedBuffer {
+    pub fn new(a: Matrix, w: Matrix) -> UnifiedBuffer {
+        let c = Matrix::zeros(a.rows, w.cols);
+        UnifiedBuffer {
+            a,
+            w,
+            c,
+            act_reads: 0,
+            weight_reads: 0,
+            out_writes: 0,
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.a.rows, self.a.cols, self.w.cols)
+    }
+
+    /// Read one activation (SDS fetch).
+    #[inline]
+    pub fn read_act(&mut self, row: usize, k: usize) -> f32 {
+        self.act_reads += 1;
+        self.a[(row, k)]
+    }
+
+    /// Read one weight (Weight Fetcher fetch).
+    #[inline]
+    pub fn read_weight(&mut self, k: usize, n: usize) -> f32 {
+        self.weight_reads += 1;
+        self.w[(k, n)]
+    }
+
+    /// Write one final output activation.
+    #[inline]
+    pub fn write_out(&mut self, row: usize, n: usize, v: f32) {
+        self.out_writes += 1;
+        self.c[(row, n)] = v;
+    }
+
+    /// Finished output matrix (consumes the buffer).
+    pub fn into_output(self) -> Matrix {
+        self.c
+    }
+
+    /// Bytes resident: operands + outputs at the configured widths. Used
+    /// for UB sizing reports.
+    pub fn footprint_bytes(&self, act_bits: u32, weight_bits: u32, out_bits: u32) -> u64 {
+        let a = (self.a.rows * self.a.cols) as u64 * act_bits as u64;
+        let w = (self.w.rows * self.w.cols) as u64 * weight_bits as u64;
+        let c = (self.c.rows * self.c.cols) as u64 * out_bits as u64;
+        (a + w + c) / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_every_access() {
+        let a = Matrix::from_fn(2, 3, |r, c| (r + c) as f32);
+        let w = Matrix::from_fn(3, 2, |r, c| (r * c) as f32);
+        let mut ub = UnifiedBuffer::new(a, w);
+        assert_eq!(ub.dims(), (2, 3, 2));
+        let v = ub.read_act(1, 2);
+        assert_eq!(v, 3.0);
+        ub.read_weight(2, 1);
+        ub.write_out(0, 0, 7.0);
+        assert_eq!((ub.act_reads, ub.weight_reads, ub.out_writes), (1, 1, 1));
+        let c = ub.into_output();
+        assert_eq!(c[(0, 0)], 7.0);
+    }
+
+    #[test]
+    fn footprint_bytes_uses_bitwidths() {
+        let ub = UnifiedBuffer::new(Matrix::zeros(4, 4), Matrix::zeros(4, 4));
+        // 16 acts * 8b + 16 weights * 8b + 16 outs * 32b = 16+16+64 bytes.
+        assert_eq!(ub.footprint_bytes(8, 8, 32), 96);
+    }
+}

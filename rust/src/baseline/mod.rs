@@ -1,0 +1,6 @@
+//! Baseline cost models CAMUY is compared against (SCALE-SIM-style
+//! never-stalling weight-stationary array).
+
+pub mod scalesim;
+
+pub use scalesim::scalesim_metrics;

@@ -1,0 +1,130 @@
+//! A SCALE-SIM-style analytic comparator (Samajdar et al. 2018): a
+//! never-stalling weight-stationary array with *serialized* (not double
+//! buffered) weight loads and an unconstrained accumulator. The paper
+//! compares its Figure 6 aspect-ratio findings against SCALE-SIM's
+//! weight-stationary investigation; this module provides that reference
+//! point and doubles as the ablation baseline for CAMUY's double buffering
+//! and accumulator-capacity modeling.
+
+use crate::config::ArrayConfig;
+use crate::metrics::{Metrics, MovementCounters};
+use crate::model::schedule::GemmShape;
+use crate::util::ceil_div;
+
+/// SCALE-SIM-like weight-stationary cycles and traffic for one GEMM.
+///
+/// Per (row-tile, col-tile) fold: load k_t cycles (exposed — no double
+/// buffering), then stream M rows through the skewed array:
+/// `k_t + M + n_t - 2` cycles. SRAM traffic counts each operand word once
+/// per fold touch (no accumulator-capacity amplification).
+pub fn scalesim_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
+    if gemm.is_empty() {
+        return Metrics::default();
+    }
+    let (big_m, big_k, big_n) = (gemm.m as u64, gemm.k as u64, gemm.n as u64);
+    let h = cfg.height as u64;
+    let w = cfg.width as u64;
+    let tr = ceil_div(gemm.k, cfg.height) as u64;
+    let tc = ceil_div(gemm.n, cfg.width) as u64;
+    let k_tail = big_k - (tr - 1) * h;
+    let n_tail = big_n - (tc - 1) * w;
+
+    let mut cycles = 0u64;
+    let mut exposed_loads = 0u64;
+    let mut mv = MovementCounters::default();
+    for &(kt, kc) in &[(h, tr - 1), (k_tail, 1)] {
+        for &(nt, nc) in &[(w, tc - 1), (n_tail, 1)] {
+            let folds = kc * nc;
+            if folds == 0 {
+                continue;
+            }
+            // Exposed load + skewed stream, per fold.
+            exposed_loads += folds * kt;
+            cycles += folds * (kt + big_m + kt + nt - 2);
+            mv.ub_act_reads += folds * big_m * kt;
+            mv.ub_weight_reads += folds * kt * nt;
+            mv.inter_pe_act += folds * big_m * kt * (nt - 1);
+            mv.inter_pe_psum += folds * big_m * nt * (kt - 1);
+            mv.inter_pe_weight += folds * nt * kt * (kt - 1) / 2;
+            mv.intra_pe += folds * (5 * big_m * kt * nt + 2 * kt * nt);
+            mv.aa_writes += folds * big_m * nt;
+        }
+    }
+    mv.aa_reads = big_m * big_n;
+    mv.ub_out_writes = big_m * big_n;
+
+    Metrics {
+        cycles,
+        // Every load is exposed (no double buffering) — reported as stall.
+        stall_cycles: exposed_loads,
+        macs: gemm.macs(),
+        passes: tr * tc,
+        movements: mv,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gemm::ws_metrics;
+
+    fn cfg(h: usize, w: usize) -> ArrayConfig {
+        ArrayConfig::new(h, w)
+    }
+
+    #[test]
+    fn single_fold_by_hand() {
+        let g = GemmShape::new(10, 4, 4);
+        let m = scalesim_metrics(g, &cfg(4, 4));
+        // load 4 + (4 + 10 + 4 - 2) = 20 cycles.
+        assert_eq!(m.cycles, 20);
+        assert_eq!(m.passes, 1);
+        assert_eq!(m.movements.ub_weight_reads, 16);
+    }
+
+    #[test]
+    fn never_rereads_weights() {
+        // Unlike CAMUY with a small accumulator, SCALE-SIM touches each
+        // weight exactly once regardless of M.
+        let g = GemmShape::new(100_000, 64, 64);
+        let m = scalesim_metrics(g, &cfg(16, 16));
+        assert_eq!(m.movements.ub_weight_reads, 64 * 64);
+    }
+
+    #[test]
+    fn camuy_double_buffering_beats_serial_loads() {
+        // With a roomy accumulator the two models move the same data, but
+        // CAMUY hides loads behind compute: strictly fewer cycles whenever
+        // there is more than one fold.
+        let g = GemmShape::new(256, 64, 64);
+        let c = cfg(16, 16).with_acc_capacity(1 << 30);
+        let camuy = ws_metrics(g, &c);
+        let scale = scalesim_metrics(g, &c);
+        assert!(camuy.cycles < scale.cycles);
+        assert_eq!(
+            camuy.movements.ub_weight_reads,
+            scale.movements.ub_weight_reads
+        );
+    }
+
+    #[test]
+    fn empty_gemm_zero() {
+        assert_eq!(
+            scalesim_metrics(GemmShape::new(0, 4, 4), &cfg(4, 4)),
+            Metrics::default()
+        );
+    }
+
+    #[test]
+    fn aspect_ratio_u_shape() {
+        // At a fixed PE budget, extreme ratios pay fold overheads: cycles
+        // at 4x1024 and 1024x4 both exceed the 64x64 square for a big
+        // square GEMM (Samajdar et al.'s finding).
+        let g = GemmShape::new(512, 512, 512);
+        let sq = scalesim_metrics(g, &cfg(64, 64)).cycles;
+        let tall = scalesim_metrics(g, &cfg(1024, 4)).cycles;
+        let flat = scalesim_metrics(g, &cfg(4, 1024)).cycles;
+        assert!(tall > sq, "tall {tall} vs sq {sq}");
+        assert!(flat > sq, "flat {flat} vs sq {sq}");
+    }
+}

@@ -1,0 +1,153 @@
+//! A small argument parser (the offline environment has no clap):
+//! positional subcommand + `--flag` / `--key value` options, with typed
+//! accessors and unknown-option rejection.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Declared option/flag schema for validation.
+#[derive(Debug, Clone, Default)]
+pub struct Schema {
+    /// Options that take a value.
+    pub options: &'static [&'static str],
+    /// Boolean flags.
+    pub flags: &'static [&'static str],
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare word is the subcommand, the rest are
+    /// `--opt value`, `--flag`, or positionals.
+    pub fn parse(argv: &[String], schema: &Schema) -> Result<Args, ArgError> {
+        let mut out = Args {
+            command: None,
+            options: BTreeMap::new(),
+            flags: Vec::new(),
+            positionals: Vec::new(),
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if schema.flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if schema.options.contains(&name) {
+                    i += 1;
+                    let val = argv
+                        .get(i)
+                        .ok_or_else(|| ArgError(format!("--{name} needs a value")))?;
+                    out.options.entry(name.to_string()).or_default().push(val.clone());
+                } else {
+                    return Err(ArgError(format!("unknown option --{name}")));
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok.clone());
+            } else {
+                out.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| ArgError(format!("--{name} expects an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn opt_list(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema {
+            options: &["net", "height", "out"],
+            flags: &["json", "smoke"],
+        }
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args, ArgError> {
+        let v: Vec<String> = toks.iter().map(|s| s.to_string()).collect();
+        Args::parse(&v, &schema())
+    }
+
+    #[test]
+    fn full_parse() {
+        let a = parse(&["sweep", "--net", "resnet152", "--json", "--height", "64"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("sweep"));
+        assert_eq!(a.opt("net"), Some("resnet152"));
+        assert!(a.flag("json"));
+        assert_eq!(a.opt_usize("height", 0).unwrap(), 64);
+        assert_eq!(a.opt_usize("width", 7).unwrap(), 7); // default
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let a = parse(&["x", "--net", "a", "--net", "b"]).unwrap();
+        assert_eq!(a.opt_list("net"), vec!["a", "b"]);
+        assert_eq!(a.opt("net"), Some("b")); // last wins for scalar access
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["x", "--bogus"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["x", "--net"]).is_err());
+    }
+
+    #[test]
+    fn bad_integer_rejected() {
+        let a = parse(&["x", "--height", "lots"]).unwrap();
+        assert!(a.opt_usize("height", 1).is_err());
+    }
+
+    #[test]
+    fn positionals_after_command() {
+        let a = parse(&["emulate", "alexnet", "vgg16"]).unwrap();
+        assert_eq!(a.positionals(), &["alexnet".to_string(), "vgg16".to_string()]);
+    }
+}

@@ -1,0 +1,462 @@
+//! The `camuy` command-line interface.
+//!
+//! ```text
+//! camuy zoo                         list networks (params, MACs, shapes)
+//! camuy emulate --net resnet152 --height 128 --width 64 [--per-layer] [--json]
+//! camuy sweep   --net resnet152 [--grid paper|smoke] [--out DIR]   (Fig 2)
+//! camuy pareto  --net resnet152 [--out DIR]                        (Fig 3)
+//! camuy heatmaps [--out DIR]                                       (Fig 4)
+//! camuy robust  [--out DIR]                                        (Fig 5)
+//! camuy equal-pe [--budget N]... [--out DIR]                       (Fig 6)
+//! camuy figures --out DIR          regenerate every paper figure
+//! camuy verify  [--artifacts DIR]  three-way artifact verification
+//! ```
+
+pub mod args;
+
+use crate::config::{ArrayConfig, Dataflow, EnergyWeights};
+use crate::coordinator::Coordinator;
+use crate::nets;
+use crate::pareto::nsga2::Nsga2Params;
+use crate::report::figures::{self, FigureContext};
+use crate::report::{kv_block, pareto_table};
+use crate::runtime::{Manifest, PjrtRuntime};
+use crate::util::human_count;
+use args::{Args, Schema};
+use std::path::{Path, PathBuf};
+
+const SCHEMA: Schema = Schema {
+    options: &[
+        "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "threads", "artifacts",
+        "dataflow", "seed", "energy-model",
+    ],
+    flags: &["json", "per-layer", "smoke", "help", "quiet", "verbose"],
+};
+
+pub fn usage() -> &'static str {
+    "camuy — Configurable Accelerator Modeling for Understanding and Analysis
+
+USAGE: camuy <command> [options]
+
+COMMANDS:
+  zoo                 list registered networks
+  emulate             run one network on one array configuration
+  sweep               Fig 2: heatmaps for one network over the grid
+  pareto              Fig 3: NSGA-II Pareto sets for one network
+  heatmaps            Fig 4: data-movement heatmaps for all paper models
+  robust              Fig 5: robust Pareto across all paper models
+  equal-pe            Fig 6: equal-PE-count aspect-ratio study
+  figures             regenerate every paper figure into --out
+  memory              per-layer UB working sets, spills, DRAM overhead
+  verify              three-way check: reference = emulator = PJRT artifact
+
+OPTIONS:
+  --net NAME          network (see `camuy zoo`)
+  --batch N           inference batch size (emulate; default 1)
+  --arrays N          multi-array bank size (emulate; default 1)
+  --height H --width W --acc N   array geometry / accumulator entries
+  --dataflow ws|os    dataflow concept (default ws)
+  --energy-model paper|dally14nm  Equation-1 weights
+  --grid paper|smoke  sweep grid (961-point paper grid or 4x4 smoke)
+  --budget N          equal-PE budget (repeatable; default 4096 16384 65536)
+  --out DIR           output directory for CSV/PGM/TXT (default results/)
+  --threads N         sweep parallelism (default: cores)
+  --artifacts DIR     AOT artifact directory (default artifacts/)
+  --per-layer --json --smoke --quiet --verbose --help
+"
+}
+
+/// Entry point; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let args = match Args::parse(argv, &SCHEMA) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage());
+            return 2;
+        }
+    };
+    crate::util::logging::init(crate::util::logging::level_from_verbosity(
+        args.flag("quiet"),
+        if args.flag("verbose") { 1 } else { 0 },
+    ));
+    if args.flag("help") || args.command.is_none() {
+        println!("{}", usage());
+        return if args.command.is_none() && !args.flag("help") { 2 } else { 0 };
+    }
+    let cmd = args.command.clone().unwrap();
+    let result = match cmd.as_str() {
+        "zoo" => cmd_zoo(),
+        "emulate" => cmd_emulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "pareto" => cmd_pareto(&args),
+        "heatmaps" => cmd_heatmaps(&args),
+        "robust" => cmd_robust(&args),
+        "equal-pe" => cmd_equal_pe(&args),
+        "figures" => cmd_figures(&args),
+        "memory" => cmd_memory(&args),
+        "verify" => cmd_verify(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{}", usage());
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt("out").unwrap_or("results"))
+}
+
+fn context(args: &Args) -> anyhow::Result<FigureContext> {
+    let mut ctx = match args.opt("grid").unwrap_or("paper") {
+        "paper" => FigureContext::paper(),
+        "smoke" => FigureContext::smoke(),
+        g => anyhow::bail!("unknown grid '{g}' (paper|smoke)"),
+    };
+    if args.flag("smoke") {
+        ctx.grid = FigureContext::smoke().grid;
+    }
+    ctx.template = template_config(args, 1, 1)?;
+    ctx.threads = args.opt_usize("threads", ctx.threads)?;
+    ctx.weights = energy_weights(args)?;
+    Ok(ctx)
+}
+
+fn energy_weights(args: &Args) -> anyhow::Result<EnergyWeights> {
+    Ok(match args.opt("energy-model").unwrap_or("paper") {
+        "paper" => EnergyWeights::paper(),
+        "dally14nm" => EnergyWeights::dally_14nm(),
+        other => anyhow::bail!("unknown energy model '{other}' (paper|dally14nm)"),
+    })
+}
+
+fn template_config(args: &Args, def_h: usize, def_w: usize) -> anyhow::Result<ArrayConfig> {
+    let mut cfg = ArrayConfig::new(
+        args.opt_usize("height", def_h)?,
+        args.opt_usize("width", def_w)?,
+    );
+    cfg.acc_capacity = args.opt_usize("acc", cfg.acc_capacity)?;
+    if let Some(df) = args.opt("dataflow") {
+        cfg.dataflow =
+            Dataflow::parse(df).ok_or_else(|| anyhow::anyhow!("unknown dataflow '{df}'"))?;
+    }
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+fn require_net(args: &Args) -> anyhow::Result<String> {
+    args.opt("net")
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("--net is required (see `camuy zoo`)"))
+}
+
+fn cmd_zoo() -> anyhow::Result<()> {
+    println!(
+        "{:<18} {:>10} {:>10} {:>8} {:>15}",
+        "network", "params", "MACs", "layers", "distinct GEMMs"
+    );
+    for name in nets::ALL_MODELS {
+        let net = nets::build(name).unwrap();
+        println!(
+            "{:<18} {:>10} {:>10} {:>8} {:>15}",
+            name,
+            human_count(net.params()),
+            human_count(net.macs()),
+            net.layers.len(),
+            net.gemm_histogram().len(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_emulate(args: &Args) -> anyhow::Result<()> {
+    let name = require_net(args)?;
+    let net = nets::build(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown network '{name}'"))?
+        .with_batch(args.opt_usize("batch", 1)?);
+    let cfg = template_config(args, 128, 128)?;
+    let coord = Coordinator::new(cfg.clone())
+        .map_err(anyhow::Error::msg)?
+        .with_weights(energy_weights(args)?);
+    let arrays = args.opt_usize("arrays", 1)?;
+    if arrays > 1 {
+        let mcfg = crate::model::multi::MultiArrayConfig::new(arrays, cfg.clone());
+        let m = crate::model::multi::network_metrics_multi(&net, &mcfg);
+        println!(
+            "{}",
+            kv_block(
+                &format!("{name} on {arrays}x [{cfg}]"),
+                &[
+                    ("makespan cycles", human_count(m.makespan_cycles)),
+                    ("busy cycles (sum)", human_count(m.total.cycles)),
+                    ("MACs", human_count(m.total.macs)),
+                    ("bank utilization", format!("{:.4}", m.utilization(&mcfg))),
+                    (
+                        "energy (Eq.1)",
+                        format!("{:.4e}", m.energy(&energy_weights(args)?))
+                    ),
+                    ("M_UB", human_count(m.total.movements.m_ub())),
+                ]
+            )
+        );
+        return Ok(());
+    }
+    let run = coord.run_inference(&net);
+
+    if args.flag("json") {
+        println!("{}", run.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "{}",
+        kv_block(
+            &format!("{name} on {cfg}"),
+            &[
+                ("cycles", human_count(run.total.cycles)),
+                ("stall cycles", human_count(run.total.stall_cycles)),
+                ("MACs", human_count(run.total.macs)),
+                ("passes", human_count(run.total.passes)),
+                ("utilization", format!("{:.4}", run.utilization())),
+                (
+                    "energy (Eq.1)",
+                    format!("{:.4e}", run.energy(&coord.weights))
+                ),
+                ("M_UB", human_count(run.total.movements.m_ub())),
+                ("M_INTER_PE", human_count(run.total.movements.m_inter_pe())),
+                ("M_AA", human_count(run.total.movements.m_aa())),
+                ("M_INTRA_PE", human_count(run.total.movements.m_intra_pe())),
+                (
+                    "UB bandwidth (B/cy)",
+                    format!("{:.2}", run.bandwidth.ub_total())
+                ),
+                (
+                    "UB spills",
+                    if run.ub_violations.is_empty() {
+                        "none".to_string()
+                    } else {
+                        format!("{} layers exceed the UB", run.ub_violations.len())
+                    }
+                ),
+            ]
+        )
+    );
+    if args.flag("per-layer") {
+        let (rooflines, mem_share) = crate::model::roofline::network_roofline(&net, &cfg);
+        println!(
+            "top layers by cycles (machine balance {:.1} MACs/B; {:.0}% of layers memory-bound):",
+            crate::model::roofline::machine_balance(&cfg),
+            100.0 * mem_share
+        );
+        let roofline_of = |name: &str| rooflines.iter().find(|r| r.layer == name);
+        for t in run.top_layers_by_cycles(15) {
+            let rl = roofline_of(&t.layer);
+            println!(
+                "  {:<40} {:>12} cycles  util {:.3}  E {:.3e}  {} ({:.1} MACs/B)",
+                t.layer,
+                human_count(t.metrics.cycles),
+                t.utilization,
+                t.energy,
+                rl.map(|r| match r.bound {
+                    crate::model::roofline::Bound::Compute => "compute-bound",
+                    crate::model::roofline::Bound::Memory => "memory-bound",
+                })
+                .unwrap_or("?"),
+                rl.map(|r| r.intensity).unwrap_or(0.0),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let name = require_net(args)?;
+    let ctx = context(args)?;
+    log::info!("sweeping {name} over {} configs", ctx.grid.len());
+    let data = figures::fig2_heatmaps(&name, &ctx);
+    let dir = out_dir(args);
+    figures::write_fig2(&data, &dir)?;
+    println!("{}", data.energy.ascii());
+    println!("{}", data.utilization.ascii());
+    println!("wrote fig2 outputs to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
+    let name = require_net(args)?;
+    let ctx = context(args)?;
+    let params = Nsga2Params {
+        seed: args.opt_usize("seed", 0xCA_0001)? as u64,
+        ..Default::default()
+    };
+    let data = figures::fig3_pareto(&name, &ctx, &params);
+    let dir = out_dir(args);
+    figures::write_fig3(&data, &dir)?;
+    println!(
+        "{}",
+        pareto_table(
+            &format!("{name}: Pareto set (E, cycles) — NSGA-II"),
+            &["energy", "cycles"],
+            &data.energy_front
+        )
+    );
+    println!(
+        "exhaustive front: {} points; NSGA-II found {}",
+        data.exhaustive_energy_front.len(),
+        data.energy_front.len()
+    );
+    println!("wrote fig3 outputs to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_heatmaps(args: &Args) -> anyhow::Result<()> {
+    let ctx = context(args)?;
+    let data = figures::fig4_heatmaps(&ctx);
+    let dir = out_dir(args);
+    figures::write_fig4(&data, &dir)?;
+    for d in &data {
+        let (h, w, v) = d.energy.min_cell();
+        println!("{:<16} min E {v:.3e} at ({h:>3}, {w:>3})", d.network);
+    }
+    println!("wrote fig4 outputs to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_robust(args: &Args) -> anyhow::Result<()> {
+    let ctx = context(args)?;
+    let params = Nsga2Params::default();
+    let data = figures::fig5_robust(&ctx, &params);
+    let dir = out_dir(args);
+    figures::write_fig5(&data, &dir)?;
+    println!(
+        "{}",
+        pareto_table(
+            "Robust Pareto (avg normalized E, cycles) — all paper models",
+            &["avg_norm_E", "avg_norm_cyc"],
+            &data.front
+        )
+    );
+    println!("wrote fig5 outputs to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_equal_pe(args: &Args) -> anyhow::Result<()> {
+    let ctx = context(args)?;
+    let budgets: Vec<usize> = {
+        let given = args.opt_list("budget");
+        if given.is_empty() {
+            vec![4096, 16384, 65536]
+        } else {
+            given
+                .iter()
+                .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --budget '{s}'")))
+                .collect::<anyhow::Result<_>>()?
+        }
+    };
+    let data: Vec<_> = budgets
+        .iter()
+        .map(|&b| figures::fig6_equal_pe(b, 8, &ctx))
+        .collect();
+    let dir = out_dir(args);
+    figures::write_fig6(&data, &dir)?;
+    for d in &data {
+        println!("PE budget {}:", d.pe_budget);
+        for (i, &(h, w)) in d.shapes.iter().enumerate() {
+            println!("  {h:>5} x {w:<5} avg norm E = {:.4}", d.average[i]);
+        }
+    }
+    println!("wrote fig6 outputs to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let ctx = context(args)?;
+    let dir = out_dir(args);
+    let params = Nsga2Params::default();
+
+    log::info!("Fig 2 (ResNet-152 heatmaps)…");
+    figures::write_fig2(&figures::fig2_heatmaps("resnet152", &ctx), &dir)?;
+    log::info!("Fig 3 (ResNet-152 Pareto)…");
+    figures::write_fig3(&figures::fig3_pareto("resnet152", &ctx, &params), &dir)?;
+    log::info!("Fig 4 (all-model heatmaps)…");
+    figures::write_fig4(&figures::fig4_heatmaps(&ctx), &dir)?;
+    log::info!("Fig 5 (robust Pareto)…");
+    figures::write_fig5(&figures::fig5_robust(&ctx, &params), &dir)?;
+    log::info!("Fig 6 (equal-PE aspect ratios)…");
+    let f6: Vec<_> = [4096usize, 16384, 65536]
+        .iter()
+        .map(|&b| figures::fig6_equal_pe(b, 8, &ctx))
+        .collect();
+    figures::write_fig6(&f6, &dir)?;
+    println!("all figures written to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> anyhow::Result<()> {
+    let name = require_net(args)?;
+    let net = nets::build(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown network '{name}'"))?
+        .with_batch(args.opt_usize("batch", 1)?);
+    let cfg = template_config(args, 128, 128)?;
+    let analysis = crate::model::memory::MemoryAnalysis::of(&net, &cfg);
+    println!(
+        "{name} on {cfg} (UB {} MiB):",
+        cfg.ub_bytes >> 20
+    );
+    println!(
+        "  peak working set {:.2} MiB; {} of {} layers spill; DRAM words {}",
+        analysis.peak_working_set_bytes as f64 / (1 << 20) as f64,
+        analysis.spilling_layers,
+        analysis.layers.len(),
+        human_count(analysis.total_dram_words)
+    );
+    let w = energy_weights(args)?;
+    let base = net.metrics(&cfg).energy(&w);
+    let corrected = analysis.corrected_energy(&net, &cfg, &w);
+    println!(
+        "  Eq.1 energy {base:.4e}; with DRAM spills {corrected:.4e} ({:+.1}%)",
+        100.0 * (corrected / base - 1.0)
+    );
+    let mut spillers: Vec<_> = analysis.layers.iter().filter(|l| !l.fits).collect();
+    spillers.sort_by(|a, b| b.working_set_bytes.cmp(&a.working_set_bytes));
+    for l in spillers.iter().take(10) {
+        println!(
+            "    {:<40} {:.2} MiB working set, {} DRAM words",
+            l.layer,
+            l.working_set_bytes as f64 / (1 << 20) as f64,
+            human_count(l.dram_words)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(crate::runtime::default_artifact_dir);
+    let manifest = Manifest::load(Path::new(&dir))?;
+    let rt = PjrtRuntime::cpu()?;
+    let cfg = template_config(args, 32, 32)?;
+    println!(
+        "PJRT platform: {} | artifacts: {}",
+        rt.platform(),
+        manifest.artifacts.len()
+    );
+    let mut failures = 0;
+    for entry in manifest.artifacts.iter().filter(|a| a.kind == "gemm") {
+        let report = crate::coordinator::verify_gemm_artifact(&rt, entry, &cfg, 42)?;
+        println!("{report}");
+        if !report.pass {
+            failures += 1;
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} artifact verification(s) failed");
+    println!("verification PASSED");
+    Ok(())
+}

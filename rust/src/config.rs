@@ -1,0 +1,309 @@
+//! Central configuration types: systolic array geometry, memory
+//! provisioning, operand bitwidths, dataflow selection and the data-movement
+//! energy weights of Equation 1.
+//!
+//! These mirror the knobs the paper's wrapper library exposes when it
+//! "dynamically creates emulator instances of certain configurations (bit
+//! widths for weights, input and output activations, array dimensions, and
+//! accumulator array size)".
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// Which dataflow the array implements. The paper's experiments use
+/// weight-stationary (TPUv1-like); output-stationary is implemented as the
+/// paper's named future-work extension and used in ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    WeightStationary,
+    OutputStationary,
+}
+
+impl Dataflow {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dataflow::WeightStationary => "weight-stationary",
+            Dataflow::OutputStationary => "output-stationary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s {
+            "ws" | "weight-stationary" => Some(Dataflow::WeightStationary),
+            "os" | "output-stationary" => Some(Dataflow::OutputStationary),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Geometry and provisioning of one emulated processor array instance.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArrayConfig {
+    /// Array height `m`: rows, mapped to the GEMM reduction dimension K.
+    /// Activations enter rows from the left (via the SDS FIFOs).
+    pub height: usize,
+    /// Array width `n`: columns, mapped to the GEMM output dimension N.
+    /// Partial sums exit the bottom row into the accumulator array.
+    pub width: usize,
+    /// Total accumulator-array capacity in *entries* (shared across the
+    /// active columns of a pass; TPUv1 provisioned 4096 per column but the
+    /// paper treats it as one sizing knob — see DESIGN.md §3.1).
+    pub acc_capacity: usize,
+    /// Unified Buffer capacity in bytes. CAMUY keeps weights *and*
+    /// activations on chip (its stated departure from TPUv1); layers whose
+    /// working set exceeds this are flagged by the coordinator (TPUv1's
+    /// activation buffer was 24 MiB — the default here).
+    pub ub_bytes: usize,
+    /// Operand bitwidths. They scale byte-bandwidth reports; the
+    /// access-count metrics of Equation 1 are bitwidth-independent.
+    pub weight_bits: u32,
+    pub act_bits: u32,
+    pub out_bits: u32,
+    /// Dataflow concept of the array.
+    pub dataflow: Dataflow,
+}
+
+impl ArrayConfig {
+    /// The paper's default instance: weight-stationary, TPUv1-style
+    /// provisioning, int8 operands with int32 accumulation.
+    pub fn new(height: usize, width: usize) -> Self {
+        Self {
+            height,
+            width,
+            acc_capacity: 4096,
+            ub_bytes: 24 * 1024 * 1024,
+            weight_bits: 8,
+            act_bits: 8,
+            out_bits: 32,
+            dataflow: Dataflow::WeightStationary,
+        }
+    }
+
+    /// The commercially deployed TPUv1 geometry the paper compares against.
+    pub fn tpu_v1() -> Self {
+        Self::new(256, 256)
+    }
+
+    pub fn with_acc_capacity(mut self, cap: usize) -> Self {
+        self.acc_capacity = cap;
+        self
+    }
+
+    pub fn with_ub_bytes(mut self, bytes: usize) -> Self {
+        self.ub_bytes = bytes;
+        self
+    }
+
+    pub fn with_dataflow(mut self, df: Dataflow) -> Self {
+        self.dataflow = df;
+        self
+    }
+
+    pub fn with_bits(mut self, weight: u32, act: u32, out: u32) -> Self {
+        self.weight_bits = weight;
+        self.act_bits = act;
+        self.out_bits = out;
+        self
+    }
+
+    /// Number of processing elements.
+    pub fn pe_count(&self) -> usize {
+        self.height * self.width
+    }
+
+    /// Validate invariants; returns a human-readable error on violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.height == 0 || self.width == 0 {
+            return Err("array dimensions must be positive".into());
+        }
+        if self.acc_capacity == 0 {
+            return Err("accumulator capacity must be positive".into());
+        }
+        if self.ub_bytes == 0 {
+            return Err("unified buffer capacity must be positive".into());
+        }
+        for (name, bits) in [
+            ("weight_bits", self.weight_bits),
+            ("act_bits", self.act_bits),
+            ("out_bits", self.out_bits),
+        ] {
+            if bits == 0 || bits > 64 {
+                return Err(format!("{name} must be in 1..=64, got {bits}"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("height", Json::num(self.height as f64)),
+            ("width", Json::num(self.width as f64)),
+            ("acc_capacity", Json::num(self.acc_capacity as f64)),
+            ("ub_bytes", Json::num(self.ub_bytes as f64)),
+            ("weight_bits", Json::num(self.weight_bits as f64)),
+            ("act_bits", Json::num(self.act_bits as f64)),
+            ("out_bits", Json::num(self.out_bits as f64)),
+            ("dataflow", Json::str(self.dataflow.as_str())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let get_usize = |k: &str| -> Result<usize, String> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("missing or invalid field '{k}'"))
+        };
+        let cfg = Self {
+            height: get_usize("height")?,
+            width: get_usize("width")?,
+            acc_capacity: get_usize("acc_capacity").unwrap_or(4096),
+            ub_bytes: get_usize("ub_bytes").unwrap_or(24 * 1024 * 1024),
+            weight_bits: get_usize("weight_bits").unwrap_or(8) as u32,
+            act_bits: get_usize("act_bits").unwrap_or(8) as u32,
+            out_bits: get_usize("out_bits").unwrap_or(32) as u32,
+            dataflow: v
+                .get("dataflow")
+                .and_then(Json::as_str)
+                .map(|s| Dataflow::parse(s).ok_or_else(|| format!("bad dataflow '{s}'")))
+                .transpose()?
+                .unwrap_or(Dataflow::WeightStationary),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl fmt::Display for ArrayConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}x{} {} acc={} w{}a{}o{}",
+            self.height,
+            self.width,
+            self.dataflow,
+            self.acc_capacity,
+            self.weight_bits,
+            self.act_bits,
+            self.out_bits
+        )
+    }
+}
+
+/// Weights of the normalized data-movement energy model, Equation 1:
+/// `E = 6·M_UB + 2·(M_INTER_PE + M_AA) + M_INTRA_PE`, derived by the paper
+/// from Eyeriss' energy hierarchy (Chen et al. 2016).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyWeights {
+    pub unified_buffer: f64,
+    pub inter_pe: f64,
+    pub accumulator: f64,
+    pub intra_pe: f64,
+}
+
+impl EnergyWeights {
+    /// Equation 1 of the paper.
+    pub const fn paper() -> Self {
+        Self {
+            unified_buffer: 6.0,
+            inter_pe: 2.0,
+            accumulator: 2.0,
+            intra_pe: 1.0,
+        }
+    }
+
+    /// 14 nm technology re-weighting after Dally, Turakhia & Han,
+    /// "Domain-specific hardware accelerators" (CACM 2020): on-chip SRAM
+    /// access grows relative to register traffic as wires dominate. The
+    /// paper names this re-weighting as future work; used in ablations.
+    pub const fn dally_14nm() -> Self {
+        Self {
+            unified_buffer: 10.0,
+            inter_pe: 2.0,
+            accumulator: 3.0,
+            intra_pe: 1.0,
+        }
+    }
+}
+
+impl Default for EnergyWeights {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_tpu_like_int8() {
+        let c = ArrayConfig::new(128, 64);
+        assert_eq!(c.pe_count(), 8192);
+        assert_eq!(c.acc_capacity, 4096);
+        assert_eq!((c.weight_bits, c.act_bits, c.out_bits), (8, 8, 32));
+        assert_eq!(c.dataflow, Dataflow::WeightStationary);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn tpu_v1_geometry() {
+        let c = ArrayConfig::tpu_v1();
+        assert_eq!((c.height, c.width), (256, 256));
+        assert_eq!(c.pe_count(), 65536);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate() {
+        assert!(ArrayConfig::new(0, 8).validate().is_err());
+        assert!(ArrayConfig::new(8, 0).validate().is_err());
+        assert!(ArrayConfig::new(8, 8).with_acc_capacity(0).validate().is_err());
+        assert!(ArrayConfig::new(8, 8).with_bits(0, 8, 32).validate().is_err());
+        assert!(ArrayConfig::new(8, 8).with_bits(8, 128, 32).validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ArrayConfig::new(48, 96)
+            .with_acc_capacity(2048)
+            .with_bits(16, 8, 32)
+            .with_dataflow(Dataflow::OutputStationary);
+        let back = ArrayConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn json_defaults_fill_in() {
+        let v = Json::parse(r#"{"height": 32, "width": 16}"#).unwrap();
+        let c = ArrayConfig::from_json(&v).unwrap();
+        assert_eq!((c.height, c.width), (32, 16));
+        assert_eq!(c.acc_capacity, 4096);
+    }
+
+    #[test]
+    fn dataflow_parsing() {
+        assert_eq!(Dataflow::parse("ws"), Some(Dataflow::WeightStationary));
+        assert_eq!(Dataflow::parse("output-stationary"), Some(Dataflow::OutputStationary));
+        assert_eq!(Dataflow::parse("nope"), None);
+    }
+
+    #[test]
+    fn display_is_compact() {
+        let c = ArrayConfig::new(16, 8);
+        assert_eq!(format!("{c}"), "16x8 weight-stationary acc=4096 w8a8o32");
+    }
+
+    #[test]
+    fn energy_weights_match_equation_1() {
+        let w = EnergyWeights::paper();
+        assert_eq!(w.unified_buffer, 6.0);
+        assert_eq!(w.inter_pe, 2.0);
+        assert_eq!(w.accumulator, 2.0);
+        assert_eq!(w.intra_pe, 1.0);
+    }
+}

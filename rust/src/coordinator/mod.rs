@@ -1,0 +1,9 @@
+//! Layer-3 coordination: the inference driver that runs networks through
+//! the emulator (timeline, per-layer metrics, bandwidth) and the
+//! three-way verification path (reference ⇔ emulator ⇔ PJRT artifact).
+
+pub mod schedule;
+pub mod verify;
+
+pub use schedule::{Coordinator, InferenceRun, TimelineEntry};
+pub use verify::{verify_gemm_artifact, VerifyReport, PJRT_TOL};

@@ -1,0 +1,203 @@
+//! The inference coordinator: drives a whole network through the emulator
+//! layer by layer — the role the paper's TensorFlow-wrapped emulator
+//! instances play — producing a timeline, per-layer metrics, bandwidth
+//! requirements, and aggregate results. Optionally spot-checks layer
+//! numerics against AOT artifacts (see `verify.rs`).
+
+use crate::config::{ArrayConfig, EnergyWeights};
+use crate::metrics::Metrics;
+use crate::model::bandwidth::BandwidthReport;
+use crate::model::network::Network;
+use crate::util::json::Json;
+
+/// One layer's slot in the inference timeline.
+#[derive(Debug, Clone)]
+pub struct TimelineEntry {
+    pub layer: String,
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    pub metrics: Metrics,
+    pub utilization: f64,
+    pub energy: f64,
+}
+
+/// A completed inference run.
+#[derive(Debug, Clone)]
+pub struct InferenceRun {
+    pub network: String,
+    pub config: ArrayConfig,
+    pub timeline: Vec<TimelineEntry>,
+    pub total: Metrics,
+    pub bandwidth: BandwidthReport,
+    /// Layers whose UB working set exceeds `config.ub_bytes` (they would
+    /// spill to DRAM on the modeled chip).
+    pub ub_violations: Vec<String>,
+}
+
+/// The coordinator the CLI/examples instantiate.
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    pub config: ArrayConfig,
+    pub weights: EnergyWeights,
+}
+
+impl Coordinator {
+    pub fn new(config: ArrayConfig) -> Result<Coordinator, String> {
+        config.validate()?;
+        Ok(Coordinator {
+            config,
+            weights: EnergyWeights::paper(),
+        })
+    }
+
+    pub fn with_weights(mut self, w: EnergyWeights) -> Coordinator {
+        self.weights = w;
+        self
+    }
+
+    /// Run one inference of `net`, serialized layer by layer (the array
+    /// processes a single layer's GEMMs at a time, as in the paper).
+    pub fn run_inference(&self, net: &Network) -> InferenceRun {
+        let mut timeline = Vec::with_capacity(net.layers.len());
+        let mut clock: u64 = 0;
+        let mut total = Metrics::default();
+        let mut ub_violations = Vec::new();
+        for layer in &net.layers {
+            if !crate::model::bandwidth::fits_unified_buffer(layer, &self.config) {
+                ub_violations.push(layer.name.clone());
+            }
+            let m = layer.metrics(&self.config);
+            let entry = TimelineEntry {
+                layer: layer.name.clone(),
+                start_cycle: clock,
+                end_cycle: clock + m.cycles,
+                utilization: m.utilization(self.config.pe_count()),
+                energy: m.energy(&self.weights),
+                metrics: m,
+            };
+            clock = entry.end_cycle;
+            total += m;
+            timeline.push(entry);
+        }
+        let bandwidth = BandwidthReport::from_metrics(&total, &self.config);
+        InferenceRun {
+            network: net.name.clone(),
+            config: self.config.clone(),
+            timeline,
+            total,
+            bandwidth,
+            ub_violations,
+        }
+    }
+}
+
+impl InferenceRun {
+    pub fn utilization(&self) -> f64 {
+        self.total.utilization(self.config.pe_count())
+    }
+
+    pub fn energy(&self, w: &EnergyWeights) -> f64 {
+        self.total.energy(w)
+    }
+
+    /// The `k` layers with the largest cycle share (hot-spot report).
+    pub fn top_layers_by_cycles(&self, k: usize) -> Vec<&TimelineEntry> {
+        let mut sorted: Vec<&TimelineEntry> = self.timeline.iter().collect();
+        sorted.sort_by(|a, b| b.metrics.cycles.cmp(&a.metrics.cycles));
+        sorted.truncate(k);
+        sorted
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("network", Json::str(self.network.clone())),
+            ("config", self.config.to_json()),
+            ("total", self.total.to_json()),
+            ("utilization", Json::num(self.utilization())),
+            (
+                "energy",
+                Json::num(self.energy(&EnergyWeights::paper())),
+            ),
+            (
+                "layers",
+                Json::arr(self.timeline.iter().map(|t| {
+                    Json::obj(vec![
+                        ("layer", Json::str(t.layer.clone())),
+                        ("start", Json::num(t.start_cycle as f64)),
+                        ("end", Json::num(t.end_cycle as f64)),
+                        ("utilization", Json::num(t.utilization)),
+                        ("energy", Json::num(t.energy)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Layer, SpatialDims};
+
+    fn net() -> Network {
+        Network::new(
+            "n",
+            vec![
+                Layer::conv("c1", SpatialDims::square(8), 4, 8, 3, 1, 1, 1),
+                Layer::conv("c2", SpatialDims::square(8), 8, 8, 3, 1, 1, 1),
+                Layer::linear("fc", 512, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn ub_violations_reported() {
+        let c = Coordinator::new(ArrayConfig::new(16, 16).with_ub_bytes(64)).unwrap();
+        let run = c.run_inference(&net());
+        // With a 64-byte UB every layer spills.
+        assert_eq!(run.ub_violations.len(), 3);
+        let roomy = Coordinator::new(ArrayConfig::new(16, 16)).unwrap();
+        assert!(roomy.run_inference(&net()).ub_violations.is_empty());
+    }
+
+    #[test]
+    fn timeline_is_contiguous_and_total_consistent() {
+        let c = Coordinator::new(ArrayConfig::new(16, 16)).unwrap();
+        let run = c.run_inference(&net());
+        assert_eq!(run.timeline.len(), 3);
+        assert_eq!(run.timeline[0].start_cycle, 0);
+        for w in run.timeline.windows(2) {
+            assert_eq!(w[0].end_cycle, w[1].start_cycle);
+        }
+        assert_eq!(
+            run.timeline.last().unwrap().end_cycle,
+            run.total.cycles
+        );
+        assert_eq!(run.total, net().metrics(&c.config));
+    }
+
+    #[test]
+    fn top_layers_sorted_desc() {
+        let c = Coordinator::new(ArrayConfig::new(8, 8)).unwrap();
+        let run = c.run_inference(&net());
+        let top = run.top_layers_by_cycles(2);
+        assert_eq!(top.len(), 2);
+        assert!(top[0].metrics.cycles >= top[1].metrics.cycles);
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        assert!(Coordinator::new(ArrayConfig::new(0, 8)).is_err());
+    }
+
+    #[test]
+    fn json_summary_roundtrips() {
+        let c = Coordinator::new(ArrayConfig::new(8, 8)).unwrap();
+        let run = c.run_inference(&net());
+        let j = run.to_json();
+        let text = j.to_string_pretty();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.get("network").unwrap().as_str().unwrap(), "n");
+        assert_eq!(back.get("layers").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,91 @@
+//! Cross-layer verification: run the same GEMM through (1) the plain
+//! matmul reference, (2) the functional emulator, and (3) the AOT-compiled
+//! XLA artifact on the PJRT runtime — and require all three to agree.
+//! This is the proof that the three-layer stack composes (DESIGN.md §7.4).
+
+use crate::arch::{EmulationMode, Emulator};
+use crate::config::ArrayConfig;
+use crate::metrics::Metrics;
+use crate::runtime::artifact::ArtifactEntry;
+use crate::runtime::client::PjrtRuntime;
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// The outcome of one three-way check.
+#[derive(Debug)]
+pub struct VerifyReport {
+    pub artifact: String,
+    pub gemm: (usize, usize, usize),
+    /// max |emulator - reference|; exact 0 for the integral fixtures.
+    pub emulator_vs_reference: f32,
+    /// max |pjrt - reference|.
+    pub pjrt_vs_reference: f32,
+    /// Emulator metrics for the workload (what the coordinator reports
+    /// alongside the numerics).
+    pub metrics: Metrics,
+    pub pass: bool,
+}
+
+/// Tolerance for the PJRT path (f32 reduction order differs).
+pub const PJRT_TOL: f32 = 1e-3;
+
+/// Verify a GEMM-kind artifact end to end.
+pub fn verify_gemm_artifact(
+    runtime: &PjrtRuntime,
+    entry: &ArtifactEntry,
+    cfg: &ArrayConfig,
+    seed: u64,
+) -> Result<VerifyReport> {
+    anyhow::ensure!(entry.kind == "gemm", "artifact {} is not a gemm", entry.name);
+    anyhow::ensure!(
+        entry.inputs.len() == 2 && entry.inputs[0].len() == 2 && entry.inputs[1].len() == 2,
+        "unexpected operand ranks for {}",
+        entry.name
+    );
+    let (m, k) = (entry.inputs[0][0], entry.inputs[0][1]);
+    let (k2, n) = (entry.inputs[1][0], entry.inputs[1][1]);
+    anyhow::ensure!(k == k2, "operand mismatch in manifest for {}", entry.name);
+
+    let mut rng = Rng::new(seed);
+    let a = Matrix::random_small_int(m, k, &mut rng);
+    let w = Matrix::random_small_int(k, n, &mut rng);
+    let reference = a.matmul(&w);
+
+    // Functional emulator (numerics + metrics).
+    let emu = Emulator::new(cfg.clone()).map_err(anyhow::Error::msg)?;
+    let emu_res = emu.run_gemm(&a, &w, EmulationMode::Wavefront);
+
+    // PJRT execution of the compiled JAX/Pallas artifact.
+    let compiled = runtime.load(&entry.name, &entry.file)?;
+    let pjrt_out = compiled.run_gemm(&a, &w)?;
+
+    let d_emu = emu_res.output.max_abs_diff(&reference);
+    let d_pjrt = pjrt_out.max_abs_diff(&reference);
+    Ok(VerifyReport {
+        artifact: entry.name.clone(),
+        gemm: (m, k, n),
+        emulator_vs_reference: d_emu,
+        pjrt_vs_reference: d_pjrt,
+        metrics: emu_res.metrics,
+        pass: d_emu == 0.0 && d_pjrt <= PJRT_TOL,
+    })
+}
+
+impl std::fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (m, k, n) = self.gemm;
+        write!(
+            f,
+            "{:<24} GEMM {m}x{k}x{n}: emu|ref diff {:.1e}, pjrt|ref diff {:.1e}, \
+             cycles {}, E {:.3e} -> {}",
+            self.artifact,
+            self.emulator_vs_reference,
+            self.pjrt_vs_reference,
+            self.metrics.cycles,
+            self.metrics
+                .energy(&crate::config::EnergyWeights::paper()),
+            if self.pass { "PASS" } else { "FAIL" }
+        )
+    }
+}

@@ -1,0 +1,37 @@
+//! # CAMUY — Configurable Accelerator Modeling for Understanding and Analysis
+//!
+//! A reproduction of *"On the Difficulty of Designing Processor Arrays for
+//! Deep Neural Networks"* (Stehle, Schindler, Fröning, 2020): a lightweight
+//! model of a weight-stationary systolic array for fast design-space
+//! exploration of array dimensions against deep neural network workloads.
+//!
+//! The crate provides:
+//!
+//! * [`arch`] — a functional, cycle-level emulator of the array (computes
+//!   real GEMMs, counts every data movement);
+//! * [`model`] — the closed-form analytic model the sweeps run on,
+//!   property-tested to agree with the emulator exactly;
+//! * [`nets`] — the CNN model zoo of the paper's evaluation;
+//! * [`sweep`], [`pareto`] — the design-space exploration engine and the
+//!   multi-objective (NSGA-II) optimizer behind Figures 2–6;
+//! * [`runtime`], [`coordinator`] — the PJRT bridge that executes the
+//!   AOT-compiled JAX/Pallas artifacts and cross-checks the emulator;
+//! * [`report`] — heatmaps, tables and figure regeneration.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod arch;
+pub mod baseline;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod model;
+pub mod nets;
+pub mod pareto;
+pub mod report;
+pub mod runtime;
+pub mod sweep;
+pub mod tensor;
+pub mod util;

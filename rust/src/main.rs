@@ -1,0 +1,12 @@
+//! `camuy` CLI — see `camuy --help` / rust/src/cli/mod.rs.
+
+fn main() {
+    // Restore default SIGPIPE behaviour so `camuy ... | head` terminates
+    // quietly instead of panicking on a closed stdout.
+    #[cfg(unix)]
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(camuy::cli::run(&argv));
+}

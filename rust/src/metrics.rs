@@ -1,0 +1,232 @@
+//! Metric types shared by the analytic model (`model/`) and the functional
+//! emulator (`arch/`). Both produce the exact same counter set; property
+//! tests assert bit-exact equality between the two (DESIGN.md §7).
+
+use crate::config::EnergyWeights;
+use crate::util::json::Json;
+use std::ops::{Add, AddAssign};
+
+/// Every class of data movement the emulator distinguishes. All values are
+/// *access counts* (one word moved = one count); bitwidths convert these to
+/// bytes only in bandwidth reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MovementCounters {
+    /// Unified Buffer reads serving activation streaming (SDS fetches).
+    pub ub_act_reads: u64,
+    /// Unified Buffer reads serving weight-tile fetches.
+    pub ub_weight_reads: u64,
+    /// Unified Buffer writes of final output activations.
+    pub ub_out_writes: u64,
+    /// Activation register reads from the left neighbour (horizontal hops).
+    pub inter_pe_act: u64,
+    /// Partial-sum register reads from the upper neighbour (vertical hops).
+    pub inter_pe_psum: u64,
+    /// Weight shift-down hops during (double-buffered) tile loads.
+    pub inter_pe_weight: u64,
+    /// Register accesses inside a PE (MAC operand reads/writes, weight
+    /// register writes including the shadow copy).
+    pub intra_pe: u64,
+    /// Partial sums leaving the bottom PE row into the accumulator array.
+    pub aa_writes: u64,
+    /// Accumulator reads when draining a finished chunk back to the UB.
+    pub aa_reads: u64,
+}
+
+impl MovementCounters {
+    /// Total Unified Buffer traffic, `M_UB` in the paper's Equation 1.
+    pub fn m_ub(&self) -> u64 {
+        self.ub_act_reads + self.ub_weight_reads + self.ub_out_writes
+    }
+
+    /// Total inter-PE traffic, `M_INTER_PE`.
+    pub fn m_inter_pe(&self) -> u64 {
+        self.inter_pe_act + self.inter_pe_psum + self.inter_pe_weight
+    }
+
+    /// Total accumulator-array traffic, `M_AA`.
+    pub fn m_aa(&self) -> u64 {
+        self.aa_writes + self.aa_reads
+    }
+
+    /// `M_INTRA_PE`.
+    pub fn m_intra_pe(&self) -> u64 {
+        self.intra_pe
+    }
+
+    /// The paper's Equation 1:
+    /// `E = 6·M_UB + 2·(M_INTER_PE + M_AA) + M_INTRA_PE`
+    /// with the weights taken from `w` so technology ablations can rescale.
+    pub fn energy(&self, w: &EnergyWeights) -> f64 {
+        w.unified_buffer * self.m_ub() as f64
+            + w.inter_pe * self.m_inter_pe() as f64
+            + w.accumulator * self.m_aa() as f64
+            + w.intra_pe * self.m_intra_pe() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ub_act_reads", Json::num(self.ub_act_reads as f64)),
+            ("ub_weight_reads", Json::num(self.ub_weight_reads as f64)),
+            ("ub_out_writes", Json::num(self.ub_out_writes as f64)),
+            ("inter_pe_act", Json::num(self.inter_pe_act as f64)),
+            ("inter_pe_psum", Json::num(self.inter_pe_psum as f64)),
+            ("inter_pe_weight", Json::num(self.inter_pe_weight as f64)),
+            ("intra_pe", Json::num(self.intra_pe as f64)),
+            ("aa_writes", Json::num(self.aa_writes as f64)),
+            ("aa_reads", Json::num(self.aa_reads as f64)),
+        ])
+    }
+}
+
+impl Add for MovementCounters {
+    type Output = MovementCounters;
+    fn add(self, rhs: MovementCounters) -> MovementCounters {
+        MovementCounters {
+            ub_act_reads: self.ub_act_reads + rhs.ub_act_reads,
+            ub_weight_reads: self.ub_weight_reads + rhs.ub_weight_reads,
+            ub_out_writes: self.ub_out_writes + rhs.ub_out_writes,
+            inter_pe_act: self.inter_pe_act + rhs.inter_pe_act,
+            inter_pe_psum: self.inter_pe_psum + rhs.inter_pe_psum,
+            inter_pe_weight: self.inter_pe_weight + rhs.inter_pe_weight,
+            intra_pe: self.intra_pe + rhs.intra_pe,
+            aa_writes: self.aa_writes + rhs.aa_writes,
+            aa_reads: self.aa_reads + rhs.aa_reads,
+        }
+    }
+}
+
+impl AddAssign for MovementCounters {
+    fn add_assign(&mut self, rhs: MovementCounters) {
+        *self = *self + rhs;
+    }
+}
+
+/// Complete metric record for one workload (a GEMM, a layer, or a whole
+/// network) on one array configuration.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Metrics {
+    /// Total cycles including fill/drain, exposed weight loads and stalls.
+    pub cycles: u64,
+    /// Cycles lost waiting for weight loads the double buffer couldn't hide.
+    pub stall_cycles: u64,
+    /// Useful multiply-accumulate operations performed.
+    pub macs: u64,
+    /// Number of tile passes executed.
+    pub passes: u64,
+    /// Movement counters.
+    pub movements: MovementCounters,
+}
+
+impl Metrics {
+    /// PE utilization: useful MAC-cycles over available PE-cycles.
+    pub fn utilization(&self, pe_count: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (pe_count as f64 * self.cycles as f64)
+    }
+
+    /// Equation 1 energy under the given weights.
+    pub fn energy(&self, w: &EnergyWeights) -> f64 {
+        self.movements.energy(w)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cycles", Json::num(self.cycles as f64)),
+            ("stall_cycles", Json::num(self.stall_cycles as f64)),
+            ("macs", Json::num(self.macs as f64)),
+            ("passes", Json::num(self.passes as f64)),
+            ("movements", self.movements.to_json()),
+        ])
+    }
+}
+
+impl Add for Metrics {
+    type Output = Metrics;
+    fn add(self, rhs: Metrics) -> Metrics {
+        Metrics {
+            cycles: self.cycles + rhs.cycles,
+            stall_cycles: self.stall_cycles + rhs.stall_cycles,
+            macs: self.macs + rhs.macs,
+            passes: self.passes + rhs.passes,
+            movements: self.movements + rhs.movements,
+        }
+    }
+}
+
+impl AddAssign for Metrics {
+    fn add_assign(&mut self, rhs: Metrics) {
+        *self = *self + rhs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MovementCounters {
+        MovementCounters {
+            ub_act_reads: 10,
+            ub_weight_reads: 20,
+            ub_out_writes: 30,
+            inter_pe_act: 1,
+            inter_pe_psum: 2,
+            inter_pe_weight: 3,
+            intra_pe: 100,
+            aa_writes: 5,
+            aa_reads: 7,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let c = sample();
+        assert_eq!(c.m_ub(), 60);
+        assert_eq!(c.m_inter_pe(), 6);
+        assert_eq!(c.m_aa(), 12);
+        assert_eq!(c.m_intra_pe(), 100);
+    }
+
+    #[test]
+    fn equation_1() {
+        let c = sample();
+        let e = c.energy(&EnergyWeights::paper());
+        // 6*60 + 2*(6 + 12) + 100 = 360 + 36 + 100
+        assert_eq!(e, 496.0);
+    }
+
+    #[test]
+    fn counters_add() {
+        let c = sample() + sample();
+        assert_eq!(c.m_ub(), 120);
+        assert_eq!(c.intra_pe, 200);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let m = Metrics {
+            cycles: 100,
+            macs: 1600,
+            ..Default::default()
+        };
+        // 16 PEs * 100 cycles = 1600 PE-cycles, fully used.
+        assert_eq!(m.utilization(16), 1.0);
+        assert_eq!(Metrics::default().utilization(16), 0.0);
+    }
+
+    #[test]
+    fn metrics_add() {
+        let a = Metrics {
+            cycles: 10,
+            stall_cycles: 1,
+            macs: 100,
+            passes: 2,
+            movements: sample(),
+        };
+        let s = a + a;
+        assert_eq!(s.cycles, 20);
+        assert_eq!(s.passes, 4);
+        assert_eq!(s.movements.aa_reads, 14);
+    }
+}

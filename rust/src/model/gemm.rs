@@ -1,0 +1,425 @@
+//! Analytic per-GEMM metrics.
+//!
+//! Two implementations of the weight-stationary model:
+//!
+//! * [`ws_metrics_ref`] — the *reference*: literally walks the pass stream
+//!   of [`WsSchedule`] and accumulates per-pass terms. Exact by definition,
+//!   O(#passes).
+//! * [`ws_metrics`] — closed form, O(1): partial-tile classes are summed
+//!   algebraically. This is what the sweep engine runs (the paper's "fast
+//!   exploration" claim lives here). Verified against the reference by unit
+//!   and property tests, and both against the functional emulator.
+//!
+//! Plus [`os_metrics`], the output-stationary variant (paper §6 future
+//! work) used by the dataflow ablation.
+//!
+//! Per-pass accounting (see DESIGN.md §3 for derivations). `h`/`w` are the
+//! *array* dimensions: the modeled array has no clock gating, so an
+//! activation entering an active row propagates through all `w` columns and
+//! a partial sum descends through all `h` rows to the accumulators at the
+//! bottom edge — partial tiles pay for the idle silicon around them, which
+//! is exactly why oversized arrays lose on Equation 1:
+//!
+//! ```text
+//! compute cycles   Mc + h + n_t - 2     (full-height drain)
+//! UB act reads     Mc * k_t
+//! UB weight reads  k_t * n_t
+//! inter-PE act     Mc * k_t * (w - 1)   (full-width propagation)
+//! inter-PE psum    Mc * n_t * (h - 1)   (full-height descent)
+//! inter-PE weight  n_t * k_t*(k_t-1)/2
+//! intra-PE         5 * Mc*k_t*n_t  +  2 * k_t*n_t
+//! AA writes        Mc * n_t
+//! per (j,c) chunk writeback: AA reads += Mc*n_t, UB out writes += Mc*n_t
+//! ```
+
+use crate::config::{ArrayConfig, Dataflow};
+use crate::metrics::{Metrics, MovementCounters};
+use crate::model::schedule::{GemmShape, WsSchedule};
+use crate::util::ceil_div;
+
+/// Dispatch on the configured dataflow.
+pub fn gemm_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
+    match cfg.dataflow {
+        Dataflow::WeightStationary => ws_metrics(gemm, cfg),
+        Dataflow::OutputStationary => os_metrics(gemm, cfg),
+    }
+}
+
+/// Reference implementation: iterate the schedule pass by pass.
+pub fn ws_metrics_ref(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
+    if gemm.is_empty() {
+        return Metrics::default();
+    }
+    let sched = WsSchedule::new(gemm, cfg);
+    let mut mv = MovementCounters::default();
+    let mut cycles: u64 = 0;
+    let mut stall: u64 = 0;
+    let mut passes: u64 = 0;
+    let mut prev_compute: Option<u64> = None; // D_{p-1}
+
+    for p in sched.passes() {
+        let (mc, kt, nt) = (p.mc as u64, p.k_t as u64, p.n_t as u64);
+        // Weight-load exposure: first pass exposes its full load; later
+        // passes stall for max(0, L_p - D_{p-1}).
+        match prev_compute {
+            None => cycles += p.load_cycles(),
+            Some(d_prev) => {
+                let s = p.load_cycles().saturating_sub(d_prev);
+                cycles += s;
+                stall += s;
+            }
+        }
+        let d = p.compute_cycles();
+        cycles += d;
+        prev_compute = Some(d);
+        passes += 1;
+
+        let h = p.array_height as u64;
+        let w = p.array_width as u64;
+        mv.ub_act_reads += mc * kt;
+        mv.ub_weight_reads += kt * nt;
+        mv.inter_pe_act += mc * kt * (w - 1);
+        mv.inter_pe_psum += mc * nt * (h - 1);
+        mv.inter_pe_weight += nt * kt * (kt - 1) / 2;
+        mv.intra_pe += 5 * mc * kt * nt + 2 * kt * nt;
+        mv.aa_writes += mc * nt;
+        if p.writeback_after {
+            mv.aa_reads += mc * nt;
+            mv.ub_out_writes += mc * nt;
+        }
+    }
+
+    Metrics {
+        cycles,
+        stall_cycles: stall,
+        macs: gemm.macs(),
+        passes,
+        movements: mv,
+    }
+}
+
+/// Closed-form weight-stationary metrics, O(1) in the operand sizes.
+pub fn ws_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
+    if gemm.is_empty() {
+        return Metrics::default();
+    }
+    let (big_m, big_k, big_n) = (gemm.m as u64, gemm.k as u64, gemm.n as u64);
+    let h = cfg.height as u64;
+    let w = cfg.width as u64;
+    let acc = cfg.acc_capacity as u64;
+
+    let tr = ceil_div(gemm.k, cfg.height) as u64;
+    let tc = ceil_div(gemm.n, cfg.width) as u64;
+    let k_tail = big_k - (tr - 1) * h; // == h when divisible
+    let k0 = big_k.min(h); // k_t(0)
+
+    // Sum over row-tiles of k_t*(k_t-1)/2 — the weight shift-down hops of
+    // one tile-column load.
+    let s_kk = (tr - 1) * (h * (h - 1) / 2) + k_tail * (k_tail - 1) / 2;
+
+    // Col-tile classes: (tc - 1) full tiles of width w, one tail of n_tail.
+    let n_tail = big_n - (tc - 1) * w;
+    // (width extent, number of such col-tiles)
+    let classes: [(u64, u64); 2] = [(w, tc - 1), (n_tail, 1)];
+
+    let mut mv = MovementCounters::default();
+    let mut passes = 0u64;
+    let mut sum_compute = 0u64; // sum of D_p over all passes
+
+    for &(nt, count) in &classes {
+        if count == 0 || nt == 0 {
+            continue;
+        }
+        let r = (acc / nt).max(1); // row budget
+        let c = ceil_div(gemm.m, r as usize) as u64; // chunks
+
+        // --- movement counters, per single col-tile of this class ---
+        let ub_act = big_m * big_k;
+        let ub_w = c * big_k * nt;
+        // Full-array propagation: acts cross all w columns, psums descend
+        // all h rows (per active source element; see module docs).
+        let inter_act = big_m * big_k * (w - 1);
+        let inter_psum = big_m * nt * (h - 1) * tr;
+        let inter_weight = c * nt * s_kk;
+        let intra = 5 * big_m * big_k * nt + 2 * c * big_k * nt;
+        let aa_w = big_m * nt * tr;
+        let out = big_m * nt;
+
+        mv.ub_act_reads += count * ub_act;
+        mv.ub_weight_reads += count * ub_w;
+        mv.inter_pe_act += count * inter_act;
+        mv.inter_pe_psum += count * inter_psum;
+        mv.inter_pe_weight += count * inter_weight;
+        mv.intra_pe += count * intra;
+        mv.aa_writes += count * aa_w;
+        mv.aa_reads += count * out;
+        mv.ub_out_writes += count * out;
+
+        passes += count * c * tr;
+        // Sum of compute durations: sum_{c,i} (mc + h + nt - 2)
+        //   = tr * M + C*tr*(h + nt - 2)
+        sum_compute += count * (tr * big_m + c * tr * (h + nt - 2));
+    }
+
+    // --- cycles: exposed initial load + sum of compute ---
+    // With full-height drains every pass lasts at least h cycles, which is
+    // always >= the next tile's k_t-cycle load: double buffering hides all
+    // loads except the very first (k0). Stalls are structurally impossible
+    // in the WS schedule (the bandwidth report still flags the exposure
+    // via stall_cycles for the other dataflows/baselines).
+    let _ = k_tail;
+    let cycles = k0 + sum_compute;
+
+    Metrics {
+        cycles,
+        stall_cycles: 0,
+        macs: gemm.macs(),
+        passes,
+        movements: mv,
+    }
+}
+
+/// Output-stationary metrics (closed form). The array pins an (mt x nt)
+/// tile of C in the PEs; A streams in from the left, W from the top, for K
+/// cycles, then the finished tile drains down its columns.
+///
+/// Per C-tile (extents mt = min(h, M - ih), nt = min(w, N - jw)):
+///
+/// ```text
+/// cycles          K + mt + nt - 2  (skewed stream)  +  mt (drain)
+/// UB act reads    K * mt
+/// UB weight reads K * nt
+/// inter-PE act    K * mt * (nt - 1)
+/// inter-PE weight K * nt * (mt - 1)
+/// inter-PE psum   nt * mt*(mt-1)/2          (drain shift-down)
+/// intra-PE        5 * K*mt*nt + 2 * mt*nt   (MACs + drain regs)
+/// AA writes/reads mt * nt each (outputs cross the array boundary once)
+/// UB out writes   mt * nt
+/// ```
+pub fn os_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
+    if gemm.is_empty() {
+        return Metrics::default();
+    }
+    let (big_m, big_k, big_n) = (gemm.m as u64, gemm.k as u64, gemm.n as u64);
+    let h = cfg.height as u64;
+    let w = cfg.width as u64;
+    let tm = ceil_div(gemm.m, cfg.height) as u64;
+    let tc = ceil_div(gemm.n, cfg.width) as u64;
+    let m_tail = big_m - (tm - 1) * h;
+    let n_tail = big_n - (tc - 1) * w;
+
+    let mut mv = MovementCounters::default();
+    let mut cycles = 0u64;
+    let row_classes = [(h, tm - 1), (m_tail, 1)];
+    let col_classes = [(w, tc - 1), (n_tail, 1)];
+
+    for &(mt, rc) in &row_classes {
+        for &(nt, cc) in &col_classes {
+            let tiles = rc * cc;
+            if tiles == 0 {
+                continue;
+            }
+            // Full-array propagation, as in the WS model: activations
+            // cross all w columns; the finished tile drains down the full
+            // h-row height to the bottom edge.
+            cycles += tiles * (big_k + mt + nt - 2 + h);
+            mv.ub_act_reads += tiles * big_k * mt;
+            mv.ub_weight_reads += tiles * big_k * nt;
+            mv.inter_pe_act += tiles * big_k * mt * (w - 1);
+            mv.inter_pe_weight += tiles * big_k * nt * (mt - 1);
+            // Drain: the output at row r descends (h - 1 - r) hops.
+            mv.inter_pe_psum += tiles * nt * (mt * (h - 1) - mt * (mt - 1) / 2);
+            mv.intra_pe += tiles * (5 * big_k * mt * nt + 2 * mt * nt);
+            mv.aa_writes += tiles * mt * nt;
+            mv.aa_reads += tiles * mt * nt;
+            mv.ub_out_writes += tiles * mt * nt;
+        }
+    }
+
+    Metrics {
+        cycles,
+        stall_cycles: 0,
+        macs: gemm.macs(),
+        passes: tm * tc,
+        movements: mv,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(h: usize, w: usize, acc: usize) -> ArrayConfig {
+        ArrayConfig::new(h, w).with_acc_capacity(acc)
+    }
+
+    #[test]
+    fn empty_gemm_is_zero() {
+        let m = ws_metrics(GemmShape::new(0, 8, 8), &cfg(8, 8, 4096));
+        assert_eq!(m, Metrics::default());
+    }
+
+    #[test]
+    fn single_pass_by_hand() {
+        // M=3, K=4, N=2 on a 4x2 array, big accumulator: one pass.
+        let g = GemmShape::new(3, 4, 2);
+        let m = ws_metrics(g, &cfg(4, 2, 4096));
+        assert_eq!(m.passes, 1);
+        // cycles = initial load (4) + compute (3+4+2-2 = 7) = 11.
+        assert_eq!(m.cycles, 11);
+        assert_eq!(m.stall_cycles, 0);
+        assert_eq!(m.macs, 24);
+        let mv = m.movements;
+        assert_eq!(mv.ub_act_reads, 3 * 4);
+        assert_eq!(mv.ub_weight_reads, 4 * 2);
+        assert_eq!(mv.ub_out_writes, 3 * 2);
+        assert_eq!(mv.inter_pe_act, 3 * 4 * 1);
+        assert_eq!(mv.inter_pe_psum, 3 * 2 * 3);
+        assert_eq!(mv.inter_pe_weight, 2 * (4 * 3) / 2);
+        assert_eq!(mv.intra_pe, 5 * 24 + 2 * 8);
+        assert_eq!(mv.aa_writes, 6);
+        assert_eq!(mv.aa_reads, 6);
+    }
+
+    #[test]
+    fn closed_form_matches_reference_grid() {
+        // Exhaustive small grid, including every partial-tile and
+        // accumulator-chunking combination.
+        for m in [1, 2, 3, 5, 7, 16] {
+            for k in [1, 3, 4, 9, 17] {
+                for n in [1, 2, 5, 8, 13] {
+                    for (h, w) in [(1, 1), (2, 3), (4, 4), (8, 2), (3, 7)] {
+                        for acc in [1, 2, 7, 64, 4096] {
+                            let g = GemmShape::new(m, k, n);
+                            let c = cfg(h, w, acc);
+                            let fast = ws_metrics(g, &c);
+                            let slow = ws_metrics_ref(g, &c);
+                            assert_eq!(
+                                fast, slow,
+                                "mismatch at M{m} K{k} N{n} h{h} w{w} acc{acc}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weight_reads_grow_with_chunking() {
+        // Small accumulator forces weight re-fetch per chunk: the width
+        // penalty of DESIGN.md §3.1.
+        let g = GemmShape::new(64, 32, 32);
+        let roomy = ws_metrics(g, &cfg(8, 32, 4096));
+        let tight = ws_metrics(g, &cfg(8, 32, 64)); // budget 2 rows -> 32 chunks
+        assert_eq!(roomy.movements.ub_weight_reads, 32 * 32);
+        assert_eq!(tight.movements.ub_weight_reads, 32 * 32 * 32);
+    }
+
+    #[test]
+    fn act_rereads_grow_with_col_tiles() {
+        let g = GemmShape::new(10, 16, 64);
+        let wide = ws_metrics(g, &cfg(16, 64, 4096)); // Tc = 1
+        let narrow = ws_metrics(g, &cfg(16, 8, 4096)); // Tc = 8
+        assert_eq!(wide.movements.ub_act_reads, 10 * 16);
+        assert_eq!(narrow.movements.ub_act_reads, 10 * 16 * 8);
+    }
+
+    #[test]
+    fn aa_spills_grow_with_row_tiles() {
+        let g = GemmShape::new(10, 64, 8);
+        let tall = ws_metrics(g, &cfg(64, 8, 4096)); // Tr = 1
+        let short = ws_metrics(g, &cfg(8, 8, 4096)); // Tr = 8
+        assert_eq!(tall.movements.aa_writes, 10 * 8);
+        assert_eq!(short.movements.aa_writes, 10 * 8 * 8);
+    }
+
+    #[test]
+    fn utilization_is_one_on_exact_fit_streaming() {
+        // Large M amortizes fill/drain: utilization approaches K*N fit.
+        let g = GemmShape::new(100_000, 8, 8);
+        let m = ws_metrics(g, &cfg(8, 8, 1 << 30));
+        let u = m.utilization(64);
+        assert!(u > 0.99, "utilization {u}");
+    }
+
+    #[test]
+    fn oversized_array_wastes_utilization() {
+        let g = GemmShape::new(100_000, 8, 8);
+        let m = ws_metrics(g, &cfg(64, 64, 1 << 30));
+        let u = m.utilization(64 * 64);
+        assert!(u < 0.02, "utilization {u}");
+    }
+
+    #[test]
+    fn weight_loads_hidden_after_first() {
+        // Every pass lasts >= h cycles (full-height drain) and loads take
+        // k_t <= h: double buffering hides everything but the first load.
+        let g = GemmShape::new(1, 65, 8);
+        let c = cfg(64, 4, 4096);
+        let m = ws_metrics(g, &c);
+        assert_eq!(m.stall_cycles, 0);
+        assert_eq!(m, ws_metrics_ref(g, &c));
+        // First-load exposure is visible: a 1-pass GEMM costs load + D.
+        let tiny = ws_metrics(GemmShape::new(2, 8, 4), &cfg(8, 4, 4096));
+        assert_eq!(tiny.cycles, 8 + (2 + 8 + 4 - 2));
+    }
+
+    #[test]
+    fn full_array_propagation_penalizes_oversized_arrays() {
+        // A thin operand (depthwise-like: K=9, N=1) on a big array moves
+        // far more inter-PE data than on a snug one — the §3.1 mechanism
+        // behind "small arrays win".
+        let g = GemmShape::new(196, 9, 1);
+        let snug = ws_metrics(g, &cfg(9, 1, 4096));
+        let huge = ws_metrics(g, &cfg(256, 256, 4096));
+        assert!(
+            huge.movements.m_inter_pe() > 20 * snug.movements.m_inter_pe(),
+            "huge {} vs snug {}",
+            huge.movements.m_inter_pe(),
+            snug.movements.m_inter_pe()
+        );
+        // And the energy ordering follows.
+        let w = crate::config::EnergyWeights::paper();
+        assert!(huge.energy(&w) > snug.energy(&w));
+    }
+
+    #[test]
+    fn os_single_tile_by_hand() {
+        let g = GemmShape::new(4, 6, 2);
+        let m = os_metrics(g, &cfg(4, 2, 4096));
+        assert_eq!(m.passes, 1);
+        // K + mt + nt - 2 + h = 6 + 4 + 2 - 2 + 4 = 14.
+        assert_eq!(m.cycles, 14);
+        assert_eq!(m.movements.ub_act_reads, 6 * 4);
+        assert_eq!(m.movements.ub_weight_reads, 6 * 2);
+        assert_eq!(m.movements.ub_out_writes, 8);
+        assert_eq!(m.movements.aa_writes, 8);
+        // Drain hops: nt * (mt*(h-1) - mt*(mt-1)/2) = 2 * (12 - 6) = 12.
+        assert_eq!(m.movements.inter_pe_psum, 12);
+    }
+
+    #[test]
+    fn os_has_no_accumulator_chunking_penalty() {
+        let g = GemmShape::new(512, 64, 64);
+        let tiny_acc = os_metrics(g, &cfg(8, 8, 1));
+        let huge_acc = os_metrics(g, &cfg(8, 8, 1 << 30));
+        assert_eq!(tiny_acc, huge_acc);
+    }
+
+    #[test]
+    fn dispatch_follows_dataflow() {
+        let g = GemmShape::new(16, 16, 16);
+        let ws_cfg = cfg(8, 8, 4096);
+        let os_cfg = ws_cfg.clone().with_dataflow(Dataflow::OutputStationary);
+        assert_eq!(gemm_metrics(g, &ws_cfg), ws_metrics(g, &ws_cfg));
+        assert_eq!(gemm_metrics(g, &os_cfg), os_metrics(g, &os_cfg));
+    }
+
+    #[test]
+    fn macs_are_shape_product() {
+        let g = GemmShape::new(7, 11, 13);
+        assert_eq!(ws_metrics(g, &cfg(4, 4, 64)).macs, 7 * 11 * 13);
+        assert_eq!(os_metrics(g, &cfg(4, 4, 64)).macs, 7 * 11 * 13);
+    }
+}

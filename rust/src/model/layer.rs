@@ -1,0 +1,321 @@
+//! Layer descriptions and their lowering to GEMM operands.
+//!
+//! The emulator only ever sees matrix multiplications; this module captures
+//! how convolution variants (strided, padded, dilated, grouped, depthwise)
+//! and fully-connected layers map onto GEMM operand dimensions — the
+//! "operand's dimension varies substantially" design space the paper's
+//! introduction describes.
+
+use crate::config::ArrayConfig;
+use crate::metrics::Metrics;
+use crate::model::gemm::gemm_metrics;
+use crate::model::schedule::GemmShape;
+use std::fmt;
+
+/// Spatial input geometry of a layer invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SpatialDims {
+    pub h: usize,
+    pub w: usize,
+}
+
+impl SpatialDims {
+    pub fn square(s: usize) -> Self {
+        Self { h: s, w: s }
+    }
+}
+
+/// The operator kinds the model zoo uses.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// 2-D convolution, lowered im2col-style. `dilation` expands the
+    /// effective receptive field without extra MACs.
+    Conv2d {
+        c_in: usize,
+        c_out: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+        dilation: (usize, usize),
+        groups: usize,
+    },
+    /// Fully-connected layer over a flattened input.
+    Linear { in_features: usize, out_features: usize },
+}
+
+/// A named layer instance with its input geometry and batch size.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input spatial dims (ignored for Linear).
+    pub input: SpatialDims,
+    pub batch: usize,
+}
+
+impl Layer {
+    pub fn conv(
+        name: impl Into<String>,
+        input: SpatialDims,
+        c_in: usize,
+        c_out: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        groups: usize,
+    ) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv2d {
+                c_in,
+                c_out,
+                kernel: (kernel, kernel),
+                stride: (stride, stride),
+                padding: (padding, padding),
+                dilation: (1, 1),
+                groups,
+            },
+            input,
+            batch: 1,
+        }
+    }
+
+    pub fn linear(name: impl Into<String>, in_features: usize, out_features: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Linear {
+                in_features,
+                out_features,
+            },
+            input: SpatialDims { h: 1, w: 1 },
+            batch: 1,
+        }
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Layer {
+        self.batch = batch;
+        self
+    }
+
+    /// Output spatial dims of a conv (standard floor formula); Linear
+    /// returns 1x1.
+    pub fn output_dims(&self) -> SpatialDims {
+        match &self.kind {
+            LayerKind::Conv2d {
+                kernel,
+                stride,
+                padding,
+                dilation,
+                ..
+            } => {
+                let eff_kh = dilation.0 * (kernel.0 - 1) + 1;
+                let eff_kw = dilation.1 * (kernel.1 - 1) + 1;
+                let oh = (self.input.h + 2 * padding.0).saturating_sub(eff_kh) / stride.0 + 1;
+                let ow = (self.input.w + 2 * padding.1).saturating_sub(eff_kw) / stride.1 + 1;
+                SpatialDims { h: oh, w: ow }
+            }
+            LayerKind::Linear { .. } => SpatialDims { h: 1, w: 1 },
+        }
+    }
+
+    /// Output channel count.
+    pub fn c_out(&self) -> usize {
+        match &self.kind {
+            LayerKind::Conv2d { c_out, .. } => *c_out,
+            LayerKind::Linear { out_features, .. } => *out_features,
+        }
+    }
+
+    /// The per-group GEMM and the group count (the array serializes one
+    /// GEMM per group, as the paper notes for group convolutions).
+    pub fn gemm(&self) -> (GemmShape, usize) {
+        match &self.kind {
+            LayerKind::Conv2d {
+                c_in,
+                c_out,
+                kernel,
+                groups,
+                ..
+            } => {
+                assert!(*groups > 0 && c_in % groups == 0 && c_out % groups == 0,
+                        "layer {}: channels {}->{} not divisible by groups {}",
+                        self.name, c_in, c_out, groups);
+                let out = self.output_dims();
+                let m = self.batch * out.h * out.w;
+                let k = (c_in / groups) * kernel.0 * kernel.1;
+                let n = c_out / groups;
+                (GemmShape::new(m, k, n), *groups)
+            }
+            LayerKind::Linear {
+                in_features,
+                out_features,
+            } => (GemmShape::new(self.batch, *in_features, *out_features), 1),
+        }
+    }
+
+    /// Trainable parameter count (weights only, no biases — the emulator
+    /// moves no bias data; matches how the zoo sanity tests count).
+    pub fn params(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv2d {
+                c_in,
+                c_out,
+                kernel,
+                groups,
+                ..
+            } => (c_in / groups) as u64 * kernel.0 as u64 * kernel.1 as u64 * *c_out as u64,
+            LayerKind::Linear {
+                in_features,
+                out_features,
+            } => *in_features as u64 * *out_features as u64,
+        }
+    }
+
+    /// Useful MAC count of the layer.
+    pub fn macs(&self) -> u64 {
+        let (g, groups) = self.gemm();
+        g.macs() * groups as u64
+    }
+
+    /// Analytic metrics of this layer on the given array: the per-group
+    /// GEMM serialized `groups` times.
+    pub fn metrics(&self, cfg: &ArrayConfig) -> Metrics {
+        let (gemm, groups) = self.gemm();
+        let one = gemm_metrics(gemm, cfg);
+        let mut total = Metrics::default();
+        // Groups are identical GEMMs run back-to-back; scalar multiply.
+        for _ in 0..groups {
+            total += one;
+        }
+        total
+    }
+}
+
+impl fmt::Display for Layer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.kind {
+            LayerKind::Conv2d {
+                c_in,
+                c_out,
+                kernel,
+                stride,
+                groups,
+                ..
+            } => write!(
+                f,
+                "{}: conv {}x{} {}->{} s{} g{} @{}x{}",
+                self.name, kernel.0, kernel.1, c_in, c_out, stride.0, groups,
+                self.input.h, self.input.w
+            ),
+            LayerKind::Linear {
+                in_features,
+                out_features,
+            } => write!(f, "{}: linear {}->{}", self.name, in_features, out_features),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_dims_standard() {
+        // 224x224, 7x7 s2 p3 -> 112x112 (ResNet stem).
+        let l = Layer::conv("stem", SpatialDims::square(224), 3, 64, 7, 2, 3, 1);
+        assert_eq!(l.output_dims(), SpatialDims::square(112));
+        // 56x56, 3x3 s1 p1 -> 56x56.
+        let l = Layer::conv("c", SpatialDims::square(56), 64, 64, 3, 1, 1, 1);
+        assert_eq!(l.output_dims(), SpatialDims::square(56));
+        // 13x13, 3x3 s2 p0 -> 6x6.
+        let l = Layer::conv("p", SpatialDims::square(13), 8, 8, 3, 2, 0, 1);
+        assert_eq!(l.output_dims(), SpatialDims::square(6));
+    }
+
+    #[test]
+    fn dilation_expands_receptive_field() {
+        // 3x3 d2 has the footprint of 5x5: 32x32 p0 s1 -> 28x28.
+        let mut l = Layer::conv("d", SpatialDims::square(32), 4, 4, 3, 1, 0, 1);
+        if let LayerKind::Conv2d { dilation, .. } = &mut l.kind {
+            *dilation = (2, 2);
+        }
+        assert_eq!(l.output_dims(), SpatialDims::square(28));
+        // MACs are unchanged by dilation (same 9 taps).
+        let (g, _) = l.gemm();
+        assert_eq!(g.k, 4 * 9);
+    }
+
+    #[test]
+    fn conv_gemm_lowering() {
+        let l = Layer::conv("c", SpatialDims::square(56), 64, 128, 3, 1, 1, 1);
+        let (g, groups) = l.gemm();
+        assert_eq!(groups, 1);
+        assert_eq!(g.m, 56 * 56);
+        assert_eq!(g.k, 64 * 9);
+        assert_eq!(g.n, 128);
+    }
+
+    #[test]
+    fn grouped_conv_shrinks_operands() {
+        let l = Layer::conv("g", SpatialDims::square(14), 256, 256, 3, 1, 1, 32);
+        let (g, groups) = l.gemm();
+        assert_eq!(groups, 32);
+        assert_eq!(g.k, 8 * 9);
+        assert_eq!(g.n, 8);
+        // Depthwise: groups == c_in.
+        let dw = Layer::conv("dw", SpatialDims::square(14), 256, 256, 3, 1, 1, 256);
+        let (g, groups) = dw.gemm();
+        assert_eq!(groups, 256);
+        assert_eq!((g.k, g.n), (9, 1));
+    }
+
+    #[test]
+    fn linear_gemm_is_batch_by_features() {
+        let l = Layer::linear("fc", 4096, 1000).with_batch(8);
+        let (g, groups) = l.gemm();
+        assert_eq!((g.m, g.k, g.n, groups), (8, 4096, 1000, 1));
+    }
+
+    #[test]
+    fn params_and_macs() {
+        // AlexNet conv1: 11x11x3x96 = 34848 params.
+        let l = Layer::conv("c1", SpatialDims::square(227), 3, 96, 11, 4, 0, 1);
+        assert_eq!(l.params(), 11 * 11 * 3 * 96);
+        assert_eq!(l.output_dims(), SpatialDims::square(55));
+        assert_eq!(l.macs(), 55 * 55 * 11 * 11 * 3 * 96);
+        // Grouped params divide by g.
+        let g = Layer::conv("g", SpatialDims::square(7), 64, 64, 3, 1, 1, 8);
+        assert_eq!(g.params(), (64 / 8) * 9 * 64);
+    }
+
+    #[test]
+    fn batch_scales_m() {
+        let l = Layer::conv("c", SpatialDims::square(8), 4, 4, 3, 1, 1, 1).with_batch(3);
+        let (g, _) = l.gemm();
+        assert_eq!(g.m, 3 * 64);
+    }
+
+    #[test]
+    fn group_metrics_serialize() {
+        let cfg = ArrayConfig::new(8, 8);
+        let l1 = Layer::conv("g1", SpatialDims::square(7), 16, 16, 3, 1, 1, 1);
+        let l4 = Layer::conv("g4", SpatialDims::square(7), 16, 16, 3, 1, 1, 4);
+        let m1 = l1.metrics(&cfg);
+        let m4 = l4.metrics(&cfg);
+        // Same useful MACs per layer? No: grouped layer does fewer MACs
+        // (that is the efficiency win); but cycles per MAC are worse.
+        assert_eq!(m1.macs, l1.macs());
+        assert_eq!(m4.macs, l4.macs());
+        assert_eq!(m4.macs * 4, m1.macs);
+        let upm1 = m1.cycles as f64 / m1.macs as f64;
+        let upm4 = m4.cycles as f64 / m4.macs as f64;
+        assert!(upm4 > upm1, "grouped should cost more cycles per MAC");
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn bad_groups_panic() {
+        let l = Layer::conv("bad", SpatialDims::square(8), 6, 8, 3, 1, 1, 4);
+        let _ = l.gemm();
+    }
+}

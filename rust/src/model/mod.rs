@@ -1,0 +1,24 @@
+//! The analytic performance model: the fast path of CAMUY.
+//!
+//! `schedule` defines the tile schedule shared with the functional emulator
+//! (`crate::arch`); `gemm` turns a schedule into closed-form metrics;
+//! `layer` lowers convolution variants to GEMM operands; `network`
+//! aggregates layers; `bandwidth` derives byte-bandwidth requirements.
+
+pub mod bandwidth;
+pub mod gemm;
+pub mod layer;
+pub mod memory;
+pub mod multi;
+pub mod network;
+pub mod roofline;
+pub mod schedule;
+
+pub use bandwidth::BandwidthReport;
+pub use gemm::{gemm_metrics, os_metrics, ws_metrics, ws_metrics_ref};
+pub use layer::{Layer, LayerKind, SpatialDims};
+pub use memory::{MemoryAnalysis, DRAM_COST};
+pub use multi::{layer_metrics_multi, network_metrics_multi, MultiArrayConfig, MultiMetrics};
+pub use network::{LayerReport, Network};
+pub use roofline::{layer_roofline, machine_balance, network_roofline, Bound, LayerRoofline};
+pub use schedule::{GemmShape, Pass, WsSchedule};

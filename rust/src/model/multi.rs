@@ -1,0 +1,220 @@
+//! Multi-array scaling — the paper's §6 future work ("we will extend CAMUY
+//! to ... multi-array concepts, in order to improve parallelism for modern
+//! CNN models"), built as a first-class analytic feature.
+//!
+//! Scheduling model: `arrays` identical weight-stationary arrays execute one
+//! layer at a time (layers are data-dependent and stay serialized).
+//! Within a layer:
+//!
+//! * a **grouped** layer's per-group GEMMs are independent and distribute
+//!   round-robin — makespan = ceil(groups / arrays) serialized rounds;
+//! * a **plain** layer (one GEMM) splits its M dimension (output pixels)
+//!   evenly — every array must load the *full* weight matrix, so latency
+//!   drops while weight traffic multiplies: the bandwidth-for-latency trade
+//!   this extension is meant to expose.
+//!
+//! Energy (Equation 1) uses the summed movements of all arrays; makespan
+//! cycles use the slowest array of each layer.
+
+use crate::config::ArrayConfig;
+use crate::metrics::Metrics;
+use crate::model::gemm::gemm_metrics;
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+use crate::util::ceil_div;
+
+/// A bank of identical arrays.
+#[derive(Debug, Clone)]
+pub struct MultiArrayConfig {
+    pub arrays: usize,
+    pub array: ArrayConfig,
+}
+
+impl MultiArrayConfig {
+    pub fn new(arrays: usize, array: ArrayConfig) -> Self {
+        assert!(arrays > 0);
+        Self { arrays, array }
+    }
+
+    pub fn pe_count(&self) -> usize {
+        self.arrays * self.array.pe_count()
+    }
+}
+
+/// Layer-level result: makespan plus summed movement work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MultiMetrics {
+    /// Critical-path cycles (slowest array, rounds serialized).
+    pub makespan_cycles: u64,
+    /// Summed metrics across all arrays (movements, MACs, passes; the
+    /// `cycles` field holds total busy cycles, not the makespan).
+    pub total: Metrics,
+}
+
+impl MultiMetrics {
+    pub fn energy(&self, w: &crate::config::EnergyWeights) -> f64 {
+        self.total.energy(w)
+    }
+
+    /// Utilization against the whole bank over the makespan.
+    pub fn utilization(&self, cfg: &MultiArrayConfig) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.total.macs as f64 / (cfg.pe_count() as f64 * self.makespan_cycles as f64)
+    }
+}
+
+impl std::ops::Add for MultiMetrics {
+    type Output = MultiMetrics;
+    fn add(self, rhs: MultiMetrics) -> MultiMetrics {
+        MultiMetrics {
+            makespan_cycles: self.makespan_cycles + rhs.makespan_cycles,
+            total: self.total + rhs.total,
+        }
+    }
+}
+
+/// One layer on the bank.
+pub fn layer_metrics_multi(layer: &Layer, cfg: &MultiArrayConfig) -> MultiMetrics {
+    let (gemm, groups) = layer.gemm();
+    if groups >= cfg.arrays && groups > 1 {
+        // Round-robin the per-group GEMMs; all groups are identical.
+        let one = gemm_metrics(gemm, &cfg.array);
+        let rounds = ceil_div(groups, cfg.arrays) as u64;
+        let mut total = Metrics::default();
+        for _ in 0..groups {
+            total += one;
+        }
+        MultiMetrics {
+            makespan_cycles: rounds * one.cycles,
+            total,
+        }
+    } else {
+        // Split M across the bank (each split still runs `groups` GEMMs
+        // serially on its array — covers 1 < groups < arrays too).
+        let splits = cfg.arrays.min(gemm.m);
+        let rows = ceil_div(gemm.m, splits);
+        let mut makespan = 0u64;
+        let mut total = Metrics::default();
+        let mut remaining = gemm.m;
+        for _ in 0..splits {
+            let m_here = rows.min(remaining);
+            if m_here == 0 {
+                break;
+            }
+            remaining -= m_here;
+            let part = gemm_metrics(
+                crate::model::schedule::GemmShape::new(m_here, gemm.k, gemm.n),
+                &cfg.array,
+            );
+            let mut array_total = Metrics::default();
+            for _ in 0..groups {
+                array_total += part;
+            }
+            makespan = makespan.max(array_total.cycles);
+            total += array_total;
+        }
+        MultiMetrics {
+            makespan_cycles: makespan,
+            total,
+        }
+    }
+}
+
+/// A whole network: layers serialize; per-layer makespans add.
+pub fn network_metrics_multi(net: &Network, cfg: &MultiArrayConfig) -> MultiMetrics {
+    net.layers
+        .iter()
+        .map(|l| layer_metrics_multi(l, cfg))
+        .fold(
+            MultiMetrics {
+                makespan_cycles: 0,
+                total: Metrics::default(),
+            },
+            |a, b| a + b,
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnergyWeights;
+    use crate::model::layer::SpatialDims;
+
+    fn bank(n: usize) -> MultiArrayConfig {
+        MultiArrayConfig::new(n, ArrayConfig::new(16, 16))
+    }
+
+    #[test]
+    fn single_array_matches_plain_model() {
+        let layer = Layer::conv("c", SpatialDims::square(14), 32, 64, 3, 1, 1, 1);
+        let multi = layer_metrics_multi(&layer, &bank(1));
+        let plain = layer.metrics(&bank(1).array);
+        assert_eq!(multi.makespan_cycles, plain.cycles);
+        assert_eq!(multi.total, plain);
+    }
+
+    #[test]
+    fn grouped_layer_parallelizes_perfectly() {
+        // 32 groups on 4 arrays: 8 serialized rounds instead of 32.
+        let layer = Layer::conv("g", SpatialDims::square(14), 256, 256, 3, 1, 1, 32);
+        let single = layer_metrics_multi(&layer, &bank(1));
+        let multi = layer_metrics_multi(&layer, &bank(4));
+        assert_eq!(multi.makespan_cycles * 4, single.makespan_cycles);
+        // Movement work is unchanged — group distribution is free.
+        assert_eq!(multi.total, single.total);
+    }
+
+    #[test]
+    fn plain_layer_m_split_trades_weight_traffic_for_latency() {
+        let layer = Layer::conv("c", SpatialDims::square(28), 64, 64, 3, 1, 1, 1);
+        let single = layer_metrics_multi(&layer, &bank(1));
+        let multi = layer_metrics_multi(&layer, &bank(4));
+        // Latency improves...
+        assert!(multi.makespan_cycles < single.makespan_cycles);
+        // ...but every array fetched the full weight matrix at least once.
+        assert!(
+            multi.total.movements.ub_weight_reads >= single.total.movements.ub_weight_reads,
+            "weight traffic should not shrink under M-splitting"
+        );
+        // MACs are conserved exactly.
+        assert_eq!(multi.total.macs, single.total.macs);
+        // And Eq.1 energy does not improve (movements only grow).
+        let w = EnergyWeights::paper();
+        assert!(multi.energy(&w) >= single.energy(&w) * 0.999);
+    }
+
+    #[test]
+    fn network_scaling_curve_is_monotone_in_latency() {
+        let net = crate::nets::build("mobilenetv3l").unwrap();
+        let mut last = u64::MAX;
+        for arrays in [1usize, 2, 4, 8] {
+            let m = network_metrics_multi(&net, &bank(arrays));
+            assert!(
+                m.makespan_cycles <= last,
+                "{arrays} arrays: {} > previous {last}",
+                m.makespan_cycles
+            );
+            last = m.makespan_cycles;
+        }
+    }
+
+    #[test]
+    fn utilization_accounts_for_the_whole_bank() {
+        let layer = Layer::conv("c", SpatialDims::square(14), 32, 64, 3, 1, 1, 1);
+        let cfg = bank(4);
+        let m = layer_metrics_multi(&layer, &cfg);
+        let u = m.utilization(&cfg);
+        assert!(u > 0.0 && u <= 1.0);
+    }
+
+    #[test]
+    fn more_arrays_than_rows_degrades_gracefully() {
+        // M=4 on 8 arrays: only 4 splits exist.
+        let layer = Layer::linear("fc", 64, 32).with_batch(4);
+        let m = layer_metrics_multi(&layer, &bank(8));
+        assert!(m.makespan_cycles > 0);
+        assert_eq!(m.total.macs, layer.macs());
+    }
+}

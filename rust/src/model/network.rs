@@ -1,0 +1,184 @@
+//! Network-level aggregation: a `Network` is an ordered list of layers (the
+//! GEMM-bearing operators only — pooling/activation are metric-neutral in
+//! the paper's model) plus metadata. Network metrics are the serialized sum
+//! of layer metrics, exactly as the emulator would run inference.
+
+use crate::config::ArrayConfig;
+use crate::metrics::Metrics;
+use crate::model::layer::Layer;
+use crate::util::json::Json;
+
+/// A named DNN as the emulator sees it.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+/// Per-layer metric breakdown for reports.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub layer: String,
+    pub metrics: Metrics,
+}
+
+impl Network {
+    pub fn new(name: impl Into<String>, layers: Vec<Layer>) -> Self {
+        Self {
+            name: name.into(),
+            layers,
+        }
+    }
+
+    /// Re-batch every layer (M scales with batch for convs; FC rows =
+    /// batch). Used by `camuy emulate --batch N`.
+    pub fn with_batch(mut self, batch: usize) -> Network {
+        assert!(batch > 0);
+        for l in &mut self.layers {
+            l.batch = batch;
+        }
+        self
+    }
+
+    /// Total trainable parameters (conv + fc weights).
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Total useful MACs for one inference.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Serialized inference metrics on one array configuration.
+    pub fn metrics(&self, cfg: &ArrayConfig) -> Metrics {
+        let mut total = Metrics::default();
+        for l in &self.layers {
+            total += l.metrics(cfg);
+        }
+        total
+    }
+
+    /// Per-layer breakdown (for the `camuy emulate --per-layer` report).
+    pub fn layer_reports(&self, cfg: &ArrayConfig) -> Vec<LayerReport> {
+        self.layers
+            .iter()
+            .map(|l| LayerReport {
+                layer: l.name.clone(),
+                metrics: l.metrics(cfg),
+            })
+            .collect()
+    }
+
+    /// Distinct GEMM shapes with multiplicity — the operand-diversity
+    /// histogram the paper discusses per architecture family.
+    pub fn gemm_histogram(&self) -> Vec<(crate::model::schedule::GemmShape, usize, usize)> {
+        // (shape, groups, occurrence count)
+        let mut hist: Vec<(crate::model::schedule::GemmShape, usize, usize)> = Vec::new();
+        for l in &self.layers {
+            let (g, groups) = l.gemm();
+            if let Some(e) = hist.iter_mut().find(|(s, gr, _)| *s == g && *gr == groups) {
+                e.2 += 1;
+            } else {
+                hist.push((g, groups, 1));
+            }
+        }
+        hist
+    }
+
+    pub fn summary_json(&self, cfg: &ArrayConfig) -> Json {
+        let m = self.metrics(cfg);
+        Json::obj(vec![
+            ("network", Json::str(self.name.clone())),
+            ("config", cfg.to_json()),
+            ("params", Json::num(self.params() as f64)),
+            ("macs", Json::num(self.macs() as f64)),
+            ("metrics", m.to_json()),
+            ("utilization", Json::num(m.utilization(cfg.pe_count()))),
+            (
+                "energy",
+                Json::num(m.energy(&crate::config::EnergyWeights::paper())),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::SpatialDims;
+
+    fn tiny_net() -> Network {
+        Network::new(
+            "tiny",
+            vec![
+                Layer::conv("c1", SpatialDims::square(8), 3, 8, 3, 1, 1, 1),
+                Layer::conv("c2", SpatialDims::square(8), 8, 8, 3, 1, 1, 1),
+                Layer::linear("fc", 8 * 8 * 8, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn totals_are_sums() {
+        let net = tiny_net();
+        let cfg = ArrayConfig::new(8, 8);
+        let total = net.metrics(&cfg);
+        let by_layer: Metrics = net
+            .layers
+            .iter()
+            .map(|l| l.metrics(&cfg))
+            .fold(Metrics::default(), |a, b| a + b);
+        assert_eq!(total, by_layer);
+        assert_eq!(net.params(), 3 * 8 * 9 + 8 * 8 * 9 + 512 * 10);
+        assert!(net.macs() > 0);
+    }
+
+    #[test]
+    fn layer_reports_align() {
+        let net = tiny_net();
+        let cfg = ArrayConfig::new(4, 4);
+        let reports = net.layer_reports(&cfg);
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0].layer, "c1");
+        let sum: Metrics = reports
+            .iter()
+            .map(|r| r.metrics)
+            .fold(Metrics::default(), |a, b| a + b);
+        assert_eq!(sum, net.metrics(&cfg));
+    }
+
+    #[test]
+    fn histogram_collapses_duplicates() {
+        let net = Network::new(
+            "dup",
+            vec![
+                Layer::conv("a", SpatialDims::square(8), 8, 8, 3, 1, 1, 1),
+                Layer::conv("b", SpatialDims::square(8), 8, 8, 3, 1, 1, 1),
+                Layer::conv("c", SpatialDims::square(8), 8, 16, 3, 1, 1, 1),
+            ],
+        );
+        let hist = net.gemm_histogram();
+        assert_eq!(hist.len(), 2);
+        assert_eq!(hist[0].2, 2);
+    }
+
+    #[test]
+    fn with_batch_scales_macs_linearly() {
+        let net = tiny_net();
+        let b4 = tiny_net().with_batch(4);
+        assert_eq!(b4.macs(), 4 * net.macs());
+        assert_eq!(b4.params(), net.params()); // weights unchanged
+        let cfg = ArrayConfig::new(8, 8);
+        assert!(b4.metrics(&cfg).cycles > net.metrics(&cfg).cycles);
+    }
+
+    #[test]
+    fn summary_json_has_fields() {
+        let net = tiny_net();
+        let j = net.summary_json(&ArrayConfig::new(8, 8));
+        assert_eq!(j.get("network").unwrap().as_str().unwrap(), "tiny");
+        assert!(j.get("utilization").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("energy").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Roofline analysis for the modeled array: arithmetic intensity per layer
+//! (MACs per Unified Buffer byte), the configuration's machine balance
+//! (PE throughput over UB bandwidth), and compute- vs memory-bound
+//! classification. This quantifies *why* a configuration under-performs —
+//! the refinement step the paper defers to slower tools, approximated here
+//! from the model's own counters.
+
+use crate::config::ArrayConfig;
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+
+/// Classification of one layer on one configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// PE array limits throughput (intensity >= machine balance).
+    Compute,
+    /// UB bandwidth limits throughput.
+    Memory,
+}
+
+/// Per-layer roofline data.
+#[derive(Debug, Clone)]
+pub struct LayerRoofline {
+    pub layer: String,
+    /// MACs per UB byte moved (arithmetic intensity on this config —
+    /// depends on tiling-induced re-reads, not just the operand sizes).
+    pub intensity: f64,
+    /// Fraction of peak MAC throughput actually achieved.
+    pub achieved_of_peak: f64,
+    pub bound: Bound,
+}
+
+/// Machine balance of a configuration: peak MACs/cycle over peak UB
+/// bytes/cycle. Port widths scale with the array edges, as in the modeled
+/// datapath: the SDS can fetch one full activation column (`height` words)
+/// per cycle, the Weight Fetcher one tile row (`width` words), and the
+/// accumulator drain writes up to `width` outputs.
+pub fn machine_balance(cfg: &ArrayConfig) -> f64 {
+    let peak_macs_per_cycle = cfg.pe_count() as f64;
+    let act = cfg.height as f64 * cfg.act_bits as f64 / 8.0;
+    let wgt = cfg.width as f64 * cfg.weight_bits as f64 / 8.0;
+    let out = cfg.width as f64 * cfg.out_bits as f64 / 8.0;
+    peak_macs_per_cycle / (act + wgt + out)
+}
+
+/// Roofline of one layer.
+pub fn layer_roofline(layer: &Layer, cfg: &ArrayConfig) -> LayerRoofline {
+    let m = layer.metrics(cfg);
+    let ub_bytes = (m.movements.ub_act_reads * cfg.act_bits as u64
+        + m.movements.ub_weight_reads * cfg.weight_bits as u64
+        + m.movements.ub_out_writes * cfg.out_bits as u64) as f64
+        / 8.0;
+    let intensity = m.macs as f64 / ub_bytes.max(1.0);
+    let achieved = m.macs as f64 / m.cycles.max(1) as f64; // MACs/cycle
+    let peak = cfg.pe_count() as f64;
+    LayerRoofline {
+        layer: layer.name.clone(),
+        intensity,
+        achieved_of_peak: achieved / peak,
+        bound: if intensity >= machine_balance(cfg) {
+            Bound::Compute
+        } else {
+            Bound::Memory
+        },
+    }
+}
+
+/// Whole-network summary: per-layer data plus the memory-bound share.
+pub fn network_roofline(net: &Network, cfg: &ArrayConfig) -> (Vec<LayerRoofline>, f64) {
+    let layers: Vec<LayerRoofline> = net
+        .layers
+        .iter()
+        .map(|l| layer_roofline(l, cfg))
+        .collect();
+    let memory_bound = layers.iter().filter(|l| l.bound == Bound::Memory).count();
+    let share = memory_bound as f64 / layers.len().max(1) as f64;
+    (layers, share)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::SpatialDims;
+
+    #[test]
+    fn machine_balance_scales_with_edge_length() {
+        // PEs grow with edge^2, port bandwidth with edge: balance ∝ edge —
+        // bigger square arrays demand ever more data re-use to stay busy.
+        let small = machine_balance(&ArrayConfig::new(16, 16));
+        let big = machine_balance(&ArrayConfig::new(256, 256));
+        assert!((big / small - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fat_conv_is_compute_bound_on_small_array() {
+        // A 3x3 conv with wide channels re-uses every fetched byte many
+        // times: high intensity.
+        let l = Layer::conv("c", SpatialDims::square(28), 256, 256, 3, 1, 1, 1);
+        let r = layer_roofline(&l, &ArrayConfig::new(32, 32));
+        assert!(r.intensity > machine_balance(&ArrayConfig::new(32, 32)));
+        assert_eq!(r.bound, Bound::Compute);
+        assert!(r.achieved_of_peak > 0.0 && r.achieved_of_peak <= 1.0);
+    }
+
+    #[test]
+    fn fc_layer_is_memory_bound() {
+        // Batch-1 FC touches every weight once: intensity < 1 MAC/byte.
+        let l = Layer::linear("fc", 4096, 4096);
+        let cfg = ArrayConfig::new(128, 128);
+        let r = layer_roofline(&l, &cfg);
+        assert!(r.intensity < 2.0, "intensity {}", r.intensity);
+        assert_eq!(r.bound, Bound::Memory);
+    }
+
+    #[test]
+    fn vgg_has_memory_bound_tail_resnet_mostly_compute() {
+        let cfg = ArrayConfig::new(64, 64);
+        let (_, vgg_share) = network_roofline(&crate::nets::build("vgg16").unwrap(), &cfg);
+        assert!(vgg_share > 0.0, "VGG's FC tail must be memory-bound");
+        let (_, rn_share) = network_roofline(&crate::nets::build("resnet50").unwrap(), &cfg);
+        assert!(rn_share < 0.5, "ResNet-50 share {rn_share}");
+    }
+
+    #[test]
+    fn oversized_array_lowers_achieved_fraction() {
+        let l = Layer::conv("c", SpatialDims::square(14), 64, 64, 3, 1, 1, 1);
+        let snug = layer_roofline(&l, &ArrayConfig::new(32, 32));
+        let huge = layer_roofline(&l, &ArrayConfig::new(256, 256));
+        assert!(huge.achieved_of_peak < snug.achieved_of_peak);
+    }
+}

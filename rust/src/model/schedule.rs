@@ -1,0 +1,295 @@
+//! The tile schedule of the weight-stationary array — the single source of
+//! truth shared by the analytic model (`model/gemm.rs`) and the functional
+//! emulator (`arch/control.rs`). Both consume the same pass stream, so
+//! their counters agree by construction and their cycle counts are checked
+//! against each other by property tests.
+//!
+//! Schedule (Main Control Unit semantics, DESIGN.md §3):
+//!
+//! ```text
+//! for each col-tile j (width extent n_t):
+//!   row budget R_j = max(1, acc_capacity / n_t)   # shared accumulator
+//!   for each M-chunk c (Mc rows, Mc <= R_j):
+//!     for each row-tile i (height extent k_t):
+//!       PASS: stream the chunk's Mc skewed activation rows through the
+//!             stationary k_t x n_t weight tile, accumulating into the AA
+//!     writeback: drain Mc x n_t finished outputs from the AA to the UB
+//! ```
+//!
+//! Weight loads are double buffered: the Weight Fetcher starts loading pass
+//! p's tile the moment pass p-1 begins computing (its shadow registers are
+//! free from then on) and needs `k_t` cycles (one weight row pushed down per
+//! cycle). Pass p starts at `max(end(p-1), start(p-1) + load(p))`; the first
+//! pass exposes its full load.
+
+use crate::config::ArrayConfig;
+use crate::util::ceil_div;
+
+/// One GEMM `C[M,N] += A[M,K] * W[K,N]` as seen by the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    /// Output rows M (batch x output pixels for a conv layer).
+    pub m: usize,
+    /// Reduction depth K (receptive field x input channels / groups).
+    pub k: usize,
+    /// Output columns N (filters / groups).
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> Self {
+        Self { m, k, n }
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0 || self.k == 0 || self.n == 0
+    }
+}
+
+/// One pass of the schedule: a chunk of activation rows streamed through
+/// one stationary weight tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pass {
+    /// Col-tile index and active width extent.
+    pub j: usize,
+    pub n_t: usize,
+    /// M-chunk index, first row, and row count.
+    pub c: usize,
+    pub row_start: usize,
+    pub mc: usize,
+    /// Row-tile index and active height extent.
+    pub i: usize,
+    pub k_t: usize,
+    /// Full array height: partial sums must descend through the whole
+    /// column (the array has no row-skipping path), so drain latency and
+    /// vertical hop counts use this, not `k_t`.
+    pub array_height: usize,
+    /// Full array width: activations propagate through every column's
+    /// registers (no clock gating in the modeled array), so horizontal hop
+    /// counts use this, not `n_t`.
+    pub array_width: usize,
+    /// True when this is the last row-tile of its (j, c) — the accumulator
+    /// chunk is complete and drains to the UB after this pass.
+    pub writeback_after: bool,
+}
+
+impl Pass {
+    /// Compute duration: skewed fill + stream + full-height drain
+    /// (DESIGN.md §3): `Mc + m + n_t - 2` cycles, where `m` is the *array*
+    /// height — partial tiles still drain through the idle rows below.
+    /// The 1x1x1 pass on a 1x1 array takes exactly 1 cycle.
+    pub fn compute_cycles(&self) -> u64 {
+        (self.mc + self.array_height + self.n_t - 2) as u64
+    }
+
+    /// Weight-load duration: one weight row per cycle.
+    pub fn load_cycles(&self) -> u64 {
+        self.k_t as u64
+    }
+}
+
+/// The fully-expanded schedule parameters for one (GEMM, array) pair.
+#[derive(Debug, Clone)]
+pub struct WsSchedule {
+    pub gemm: GemmShape,
+    pub height: usize,
+    pub width: usize,
+    pub acc_capacity: usize,
+    /// Row tiles over K.
+    pub tr: usize,
+    /// Col tiles over N.
+    pub tc: usize,
+}
+
+impl WsSchedule {
+    pub fn new(gemm: GemmShape, cfg: &ArrayConfig) -> Self {
+        assert!(!gemm.is_empty(), "schedule of an empty GEMM");
+        Self {
+            gemm,
+            height: cfg.height,
+            width: cfg.width,
+            acc_capacity: cfg.acc_capacity,
+            tr: ceil_div(gemm.k, cfg.height),
+            tc: ceil_div(gemm.n, cfg.width),
+        }
+    }
+
+    /// Active width of col-tile `j`.
+    pub fn n_t(&self, j: usize) -> usize {
+        debug_assert!(j < self.tc);
+        (self.gemm.n - j * self.width).min(self.width)
+    }
+
+    /// Active height of row-tile `i`.
+    pub fn k_t(&self, i: usize) -> usize {
+        debug_assert!(i < self.tr);
+        (self.gemm.k - i * self.height).min(self.height)
+    }
+
+    /// Accumulator row budget for col-tile `j`: how many output rows the
+    /// shared accumulator array can buffer while `n_t(j)` columns are live.
+    pub fn row_budget(&self, j: usize) -> usize {
+        (self.acc_capacity / self.n_t(j)).max(1)
+    }
+
+    /// Number of M-chunks for col-tile `j`.
+    pub fn chunks(&self, j: usize) -> usize {
+        ceil_div(self.gemm.m, self.row_budget(j))
+    }
+
+    /// Rows in chunk `c` of col-tile `j`.
+    pub fn chunk_rows(&self, j: usize, c: usize) -> usize {
+        let r = self.row_budget(j);
+        debug_assert!(c < self.chunks(j));
+        (self.gemm.m - c * r).min(r)
+    }
+
+    /// Total number of passes.
+    pub fn pass_count(&self) -> u64 {
+        (0..self.tc)
+            .map(|j| self.chunks(j) as u64 * self.tr as u64)
+            .sum()
+    }
+
+    /// Iterate all passes in execution order.
+    pub fn passes(&self) -> impl Iterator<Item = Pass> + '_ {
+        (0..self.tc).flat_map(move |j| {
+            let n_t = self.n_t(j);
+            let r = self.row_budget(j);
+            (0..self.chunks(j)).flat_map(move |c| {
+                let mc = self.chunk_rows(j, c);
+                (0..self.tr).map(move |i| Pass {
+                    j,
+                    n_t,
+                    c,
+                    row_start: c * r,
+                    mc,
+                    i,
+                    k_t: self.k_t(i),
+                    array_height: self.height,
+                    array_width: self.width,
+                    writeback_after: i == self.tr - 1,
+                })
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(h: usize, w: usize, acc: usize) -> ArrayConfig {
+        ArrayConfig::new(h, w).with_acc_capacity(acc)
+    }
+
+    #[test]
+    fn exact_fit_single_pass() {
+        let s = WsSchedule::new(GemmShape::new(5, 8, 4), &cfg(8, 4, 4096));
+        assert_eq!((s.tr, s.tc), (1, 1));
+        let passes: Vec<Pass> = s.passes().collect();
+        assert_eq!(passes.len(), 1);
+        let p = passes[0];
+        assert_eq!((p.k_t, p.n_t, p.mc), (8, 4, 5));
+        assert!(p.writeback_after);
+        // Full-height drain: array height 8 == k_t here.
+        assert_eq!(p.compute_cycles(), 5 + 8 + 4 - 2);
+    }
+
+    #[test]
+    fn partial_tiles() {
+        // K=10 on height 8 -> tiles of 8 and 2; N=6 on width 4 -> 4 and 2.
+        let s = WsSchedule::new(GemmShape::new(3, 10, 6), &cfg(8, 4, 4096));
+        assert_eq!((s.tr, s.tc), (2, 2));
+        assert_eq!(s.k_t(0), 8);
+        assert_eq!(s.k_t(1), 2);
+        assert_eq!(s.n_t(0), 4);
+        assert_eq!(s.n_t(1), 2);
+        assert_eq!(s.pass_count(), 4);
+    }
+
+    #[test]
+    fn accumulator_chunking() {
+        // acc=8 entries, col-tile width 4 -> budget 2 rows; M=5 -> chunks 2,2,1.
+        let s = WsSchedule::new(GemmShape::new(5, 4, 4), &cfg(4, 4, 8));
+        assert_eq!(s.row_budget(0), 2);
+        assert_eq!(s.chunks(0), 3);
+        assert_eq!(s.chunk_rows(0, 0), 2);
+        assert_eq!(s.chunk_rows(0, 2), 1);
+        let passes: Vec<Pass> = s.passes().collect();
+        assert_eq!(passes.len(), 3);
+        assert_eq!(passes[2].row_start, 4);
+        assert_eq!(passes[2].mc, 1);
+    }
+
+    #[test]
+    fn narrow_tail_gets_bigger_budget() {
+        // N=6 on width 4: tail tile is 2 wide -> budget doubles.
+        let s = WsSchedule::new(GemmShape::new(100, 4, 6), &cfg(4, 4, 8));
+        assert_eq!(s.row_budget(0), 2);
+        assert_eq!(s.row_budget(1), 4);
+        assert_eq!(s.chunks(0), 50);
+        assert_eq!(s.chunks(1), 25);
+    }
+
+    #[test]
+    fn budget_clamps_to_one_row() {
+        // Accumulator smaller than the active width: degrade to 1 row.
+        let s = WsSchedule::new(GemmShape::new(3, 4, 16), &cfg(4, 16, 8));
+        assert_eq!(s.row_budget(0), 1);
+        assert_eq!(s.chunks(0), 3);
+    }
+
+    #[test]
+    fn pass_order_is_j_c_i() {
+        let s = WsSchedule::new(GemmShape::new(2, 10, 6), &cfg(8, 4, 4096));
+        let order: Vec<(usize, usize, usize)> = s.passes().map(|p| (p.j, p.c, p.i)).collect();
+        assert_eq!(order, vec![(0, 0, 0), (0, 0, 1), (1, 0, 0), (1, 0, 1)]);
+    }
+
+    #[test]
+    fn writeback_flags_on_last_row_tile_only() {
+        let s = WsSchedule::new(GemmShape::new(2, 10, 4), &cfg(8, 4, 4096));
+        let flags: Vec<bool> = s.passes().map(|p| p.writeback_after).collect();
+        assert_eq!(flags, vec![false, true]);
+    }
+
+    #[test]
+    fn pass_count_matches_iterator() {
+        let s = WsSchedule::new(GemmShape::new(37, 29, 23), &cfg(8, 4, 32));
+        assert_eq!(s.pass_count(), s.passes().count() as u64);
+    }
+
+    #[test]
+    fn single_mac_pass_is_one_cycle() {
+        let p = Pass {
+            j: 0,
+            n_t: 1,
+            c: 0,
+            row_start: 0,
+            mc: 1,
+            i: 0,
+            k_t: 1,
+            array_height: 1,
+            array_width: 1,
+            writeback_after: true,
+        };
+        assert_eq!(p.compute_cycles(), 1);
+        assert_eq!(p.load_cycles(), 1);
+    }
+
+    #[test]
+    fn partial_tile_still_drains_full_height() {
+        // K=2 on a height-8 array: the pass must still pay the 8-row
+        // descent to the accumulators at the bottom edge.
+        let s = WsSchedule::new(GemmShape::new(4, 2, 4), &cfg(8, 4, 4096));
+        let p = s.passes().next().unwrap();
+        assert_eq!(p.k_t, 2);
+        assert_eq!(p.array_height, 8);
+        assert_eq!(p.compute_cycles(), (4 + 8 + 4 - 2) as u64);
+    }
+}

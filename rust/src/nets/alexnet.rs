@@ -1,0 +1,66 @@
+//! AlexNet (Krizhevsky et al., NIPS 2012) — the classic straight-forward
+//! CNN of the paper's evaluation. The original two-GPU split is kept as
+//! grouped convolutions (g=2) on conv2/4/5, which is part of the operand
+//! diversity story.
+
+use crate::model::layer::SpatialDims;
+use crate::model::network::Network;
+use crate::nets::ops::Stack;
+
+/// AlexNet over 227x227 RGB input (the stride-4 11x11 stem yields 55x55).
+pub fn alexnet() -> Network {
+    let mut s = Stack::new("alexnet", SpatialDims::square(227), 3);
+    s.conv(96, 11, 4, 0) // conv1: 55x55x96
+        .pool(3, 2, 0) // 27x27
+        .conv_g(256, 5, 1, 2, 2) // conv2 (grouped)
+        .pool(3, 2, 0) // 13x13
+        .conv(384, 3, 1, 1) // conv3
+        .conv_g(384, 3, 1, 1, 2) // conv4 (grouped)
+        .conv_g(256, 3, 1, 1, 2) // conv5 (grouped)
+        .pool(3, 2, 0) // 6x6
+        .linear(4096)
+        .linear(4096)
+        .linear(1000);
+    Network::new("alexnet", s.layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 5 convs + 3 FCs.
+        assert_eq!(alexnet().layers.len(), 8);
+    }
+
+    #[test]
+    fn parameter_count_matches_published() {
+        // ~60.9M weights (we count no biases: 60.95M -> ~60.9M).
+        let p = alexnet().params() as f64 / 1e6;
+        assert!((60.0..62.0).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn mac_count_matches_published() {
+        // ~715M MACs for 227x227 single-crop inference (grouped conv).
+        let m = alexnet().macs() as f64 / 1e6;
+        assert!((650.0..780.0).contains(&m), "macs {m}M");
+    }
+
+    #[test]
+    fn fc6_sees_6x6x256() {
+        let net = alexnet();
+        let fc6 = net
+            .layers
+            .iter()
+            .find(|l| matches!(l.kind, crate::model::layer::LayerKind::Linear { .. }))
+            .unwrap();
+        match &fc6.kind {
+            crate::model::layer::LayerKind::Linear { in_features, .. } => {
+                assert_eq!(*in_features, 6 * 6 * 256)
+            }
+            _ => unreachable!(),
+        }
+    }
+}

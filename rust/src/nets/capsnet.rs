@@ -1,0 +1,116 @@
+//! CapsNet (Sabour, Frosst, Hinton, NIPS 2017) — the paper's §6 names
+//! capsule networks among the emerging architectures to study on systolic
+//! arrays. The interesting systolic property: the prediction step
+//! (û_{j|i} = W_{ij} u_i) is thousands of *tiny* independent matrix
+//! products (8x16 per capsule pair), the most extreme serialized-GEMM
+//! workload in the zoo — encoded here through the grouped-GEMM machinery.
+
+use crate::model::layer::{Layer, LayerKind, SpatialDims};
+use crate::model::network::Network;
+use crate::nets::ops::Stack;
+
+/// CapsNet over 28x28x1 MNIST input (encoder only; the reconstruction
+/// decoder is a training-time auxiliary).
+pub fn capsnet_mnist() -> Network {
+    let mut s = Stack::new("capsnet", SpatialDims::square(28), 1);
+    // conv1: 9x9, 256 channels, stride 1, valid padding -> 20x20.
+    s.conv(256, 9, 1, 0);
+    // PrimaryCaps: 9x9 conv stride 2 -> 6x6, 32 capsules x 8D = 256 ch.
+    s.conv(256, 9, 2, 0);
+
+    let mut layers = s.layers;
+    // DigitCaps routing predictions: 1152 input capsules (32*6*6), each
+    // mapped to 10 classes through its own 8->16 weight matrix:
+    // 11520 independent GEMMs of (1, 8, 16), encoded as one grouped layer.
+    let caps_in = 32 * 6 * 6;
+    let classes = 10;
+    layers.push(Layer {
+        name: "capsnet.digitcaps.uhat".into(),
+        kind: LayerKind::Conv2d {
+            c_in: 8 * caps_in * classes,
+            c_out: 16 * caps_in * classes,
+            kernel: (1, 1),
+            stride: (1, 1),
+            padding: (0, 0),
+            dilation: (1, 1),
+            groups: caps_in * classes,
+        },
+        input: SpatialDims { h: 1, w: 1 },
+        batch: 1,
+    });
+    // Routing agreement updates (3 iterations): s_j = sum_i c_ij u_hat —
+    // per class a (1 x 1152) x (1152 x 16) product, 3 rounds.
+    for round in 0..3 {
+        layers.push(Layer {
+            name: format!("capsnet.routing{round}"),
+            kind: LayerKind::Conv2d {
+                c_in: caps_in * classes,
+                c_out: 16 * classes,
+                kernel: (1, 1),
+                stride: (1, 1),
+                padding: (0, 0),
+                dilation: (1, 1),
+                groups: classes,
+            },
+            input: SpatialDims { h: 1, w: 1 },
+            batch: 1,
+        });
+    }
+    Network::new("capsnet", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrayConfig, EnergyWeights};
+
+    #[test]
+    fn params_match_published_encoder() {
+        // conv1 9*9*1*256 = 20.7k; primarycaps 9*9*256*256 = 5.31M;
+        // W_ij: 1152*10*8*16 = 1.47M  -> ~6.8M encoder weights.
+        let net = capsnet_mnist();
+        let p = net.params() as f64 / 1e6;
+        assert!((6.5..7.5).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn uhat_is_an_extreme_grouped_workload() {
+        let net = capsnet_mnist();
+        let uhat = net
+            .layers
+            .iter()
+            .find(|l| l.name.contains("uhat"))
+            .unwrap();
+        let (g, groups) = uhat.gemm();
+        assert_eq!(groups, 11520);
+        assert_eq!((g.m, g.k, g.n), (1, 8, 16));
+    }
+
+    #[test]
+    fn tiny_gemms_crater_utilization_on_big_arrays() {
+        // The paper's future-work motivation quantified: a 128x128 array
+        // achieves essentially zero utilization on the routing workload.
+        let net = capsnet_mnist();
+        let uhat = net
+            .layers
+            .iter()
+            .find(|l| l.name.contains("uhat"))
+            .unwrap();
+        let big = uhat.metrics(&ArrayConfig::new(128, 128));
+        let small = uhat.metrics(&ArrayConfig::new(8, 16));
+        assert!(big.utilization(128 * 128) < 0.001);
+        // Even a snug 8x16 array caps out around 3% (fill/drain dominates
+        // M=1 passes), but that is still two orders of magnitude better.
+        assert!(small.utilization(8 * 16) > 50.0 * big.utilization(128 * 128));
+        let w = EnergyWeights::paper();
+        // Full-array propagation makes the oversized array ~2.7x costlier.
+        assert!(big.energy(&w) > 2.0 * small.energy(&w));
+    }
+
+    #[test]
+    fn registered_in_zoo() {
+        let net = crate::nets::build("capsnet").expect("capsnet registered");
+        assert_eq!(net.name, "capsnet");
+        assert!(net.macs() > 0);
+    }
+}

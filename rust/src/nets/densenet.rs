@@ -1,0 +1,120 @@
+//! DenseNet (Huang et al., CVPR 2017). Dense connectivity concatenates
+//! all previous features, so the 1x1 bottleneck's K dimension grows
+//! linearly with depth — the "high diversity in the operand's dimensions"
+//! the paper attributes to dense connections.
+
+use crate::model::layer::SpatialDims;
+use crate::model::network::Network;
+use crate::nets::ops::Stack;
+
+/// Generic DenseNet-BC. Each dense layer: 1x1 bottleneck to `4*growth`,
+/// then 3x3 to `growth`, input channels += growth. Transitions halve
+/// channels (compression 0.5) and avg-pool stride 2.
+pub fn densenet(name: &str, growth: usize, block_layers: &[usize]) -> Network {
+    let mut s = Stack::new(name.to_string(), SpatialDims::square(224), 3);
+    let init = 2 * growth;
+    s.conv(init, 7, 2, 3); // 112x112
+    s.pool(3, 2, 1); // 56x56
+
+    let mut channels = init;
+    for (bi, &layers) in block_layers.iter().enumerate() {
+        for _ in 0..layers {
+            // Bottleneck reads the full concatenation.
+            s.set_channels(channels);
+            s.conv_1x1(4 * growth);
+            s.conv(growth, 3, 1, 1);
+            channels += growth;
+        }
+        if bi + 1 < block_layers.len() {
+            // Transition: 1x1 compress to half, then 2x2 avg-pool s2.
+            s.set_channels(channels);
+            channels /= 2;
+            s.conv_1x1(channels);
+            s.pool(2, 2, 0);
+        }
+    }
+    s.set_channels(channels);
+    s.global_pool().linear(1000);
+    Network::new(name.to_string(), s.layers)
+}
+
+/// DenseNet-201 (growth 32, blocks 6/12/48/32) — the dense representative.
+pub fn densenet201() -> Network {
+    densenet("densenet201", 32, &[6, 12, 48, 32])
+}
+
+/// DenseNet-121 for ablations.
+pub fn densenet121() -> Network {
+    densenet("densenet121", 32, &[6, 12, 24, 16])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn densenet201_layer_count() {
+        // Stem + 2 per dense layer * (6+12+48+32) + 3 transitions + fc
+        // = 1 + 196 + 3 + 1 = 201 GEMM layers (hence the name modulo BN).
+        assert_eq!(densenet201().layers.len(), 201);
+    }
+
+    #[test]
+    fn densenet201_params_match_published() {
+        // 20.0M in torchvision (incl. BN); weights-only slightly lower.
+        let p = densenet201().params() as f64 / 1e6;
+        assert!((18.5..20.5).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn densenet201_macs_match_published() {
+        // ~4.3 GMACs at 224x224.
+        let g = densenet201().macs() as f64 / 1e9;
+        assert!((4.0..4.7).contains(&g), "macs {g}G");
+    }
+
+    #[test]
+    fn densenet121_params_match_published() {
+        // 7.98M in torchvision.
+        let p = densenet121().params() as f64 / 1e6;
+        assert!((7.4..8.2).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn bottleneck_k_grows_with_depth() {
+        // The 1x1 bottlenecks' input channels must increase by `growth`
+        // within a block: the operand-diversity signature of DenseNet.
+        let net = densenet201();
+        let bottleneck_k: Vec<usize> = net
+            .layers
+            .iter()
+            .filter_map(|l| match &l.kind {
+                LayerKind::Conv2d {
+                    c_in,
+                    kernel: (1, 1),
+                    c_out,
+                    ..
+                } if *c_out == 128 => Some(*c_in),
+                _ => None,
+            })
+            .collect();
+        // First block: 64, 96, 128, ... step 32.
+        assert_eq!(&bottleneck_k[..4], &[64, 96, 128, 160]);
+        // Operand diversity: many distinct K values.
+        let mut uniq = bottleneck_k.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() > 40, "distinct bottleneck widths: {}", uniq.len());
+    }
+
+    #[test]
+    fn final_channels_are_1920() {
+        let net = densenet201();
+        let fc = net.layers.last().unwrap();
+        match &fc.kind {
+            LayerKind::Linear { in_features, .. } => assert_eq!(*in_features, 1920),
+            _ => panic!("last layer should be the classifier"),
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! EfficientNet-B0 (Tan & Le, ICML 2019): MBConv (inverted residual with
+//! depthwise conv + SE) backbone found by NAS — the paper's second
+//! depthwise representative.
+
+use crate::model::layer::SpatialDims;
+use crate::model::network::Network;
+use crate::nets::ops::Stack;
+
+/// One MBConv stage of the B0 table:
+/// (expansion factor, out channels, repeats, stride of first, kernel).
+struct Stage {
+    e: usize,
+    c: usize,
+    r: usize,
+    s: usize,
+    k: usize,
+}
+
+/// EfficientNet-B0 over 224x224 input.
+pub fn efficientnet_b0() -> Network {
+    let stages = [
+        Stage { e: 1, c: 16, r: 1, s: 1, k: 3 },
+        Stage { e: 6, c: 24, r: 2, s: 2, k: 3 },
+        Stage { e: 6, c: 40, r: 2, s: 2, k: 5 },
+        Stage { e: 6, c: 80, r: 3, s: 2, k: 3 },
+        Stage { e: 6, c: 112, r: 3, s: 1, k: 5 },
+        Stage { e: 6, c: 192, r: 4, s: 2, k: 5 },
+        Stage { e: 6, c: 320, r: 1, s: 1, k: 3 },
+    ];
+
+    let mut s = Stack::new("efficientnetb0", SpatialDims::square(224), 3);
+    s.conv(32, 3, 2, 1); // stem -> 112x112
+
+    for st in &stages {
+        for rep in 0..st.r {
+            let stride = if rep == 0 { st.s } else { 1 };
+            let in_c = s.at().1;
+            let exp_c = in_c * st.e;
+            if st.e != 1 {
+                s.conv_1x1(exp_c); // expand
+            }
+            s.conv_dw(st.k, stride, st.k / 2); // depthwise
+            // SE squeeze ratio 0.25 of the block *input* channels.
+            s.se_block(((in_c as f64) * 0.25).max(1.0) as usize);
+            s.conv_1x1(st.c); // project
+        }
+    }
+
+    s.conv_1x1(1280); // head
+    s.global_pool().linear(1000);
+    Network::new("efficientnetb0", s.layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn params_match_published() {
+        // 5.29M in the paper (incl. BN); weights-only ~5.2M.
+        let p = efficientnet_b0().params() as f64 / 1e6;
+        assert!((4.8..5.5).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn macs_match_published() {
+        // ~390 MMACs at 224x224 (0.39B FLOPs/2).
+        let m = efficientnet_b0().macs() as f64 / 1e6;
+        assert!((360.0..420.0).contains(&m), "macs {m}M");
+    }
+
+    #[test]
+    fn block_count() {
+        // 16 MBConv blocks in B0.
+        let net = efficientnet_b0();
+        let dw = net
+            .layers
+            .iter()
+            .filter(|l| match &l.kind {
+                LayerKind::Conv2d { groups, c_in, .. } => groups == c_in,
+                _ => false,
+            })
+            .count();
+        assert_eq!(dw, 16);
+    }
+
+    #[test]
+    fn every_block_has_se() {
+        let net = efficientnet_b0();
+        let se_fcs = net
+            .layers
+            .iter()
+            .filter(|l| l.name.contains(".se."))
+            .count();
+        assert_eq!(se_fcs, 32); // 16 blocks x 2 FCs
+    }
+
+    #[test]
+    fn head_sees_7x7() {
+        let net = efficientnet_b0();
+        let head = net
+            .layers
+            .iter()
+            .rev()
+            .find(|l| matches!(l.kind, LayerKind::Conv2d { .. }))
+            .unwrap();
+        assert_eq!(head.input, SpatialDims::square(7));
+        assert_eq!(head.c_out(), 1280);
+    }
+
+    #[test]
+    fn depthwise_operands_are_tiny() {
+        // The 5x5 depthwise on 672 channels is 672 serialized 25x1 GEMMs:
+        // the worst case for any large array.
+        let net = efficientnet_b0();
+        let dw = net
+            .layers
+            .iter()
+            .find(|l| l.name.contains("conv5x5g672"))
+            .expect("5x5 depthwise at 672ch");
+        let (g, groups) = dw.gemm();
+        assert_eq!(groups, 672);
+        assert_eq!((g.k, g.n), (25, 1));
+    }
+}

@@ -1,0 +1,217 @@
+//! GoogLeNet (Inception-v1, Szegedy et al. 2015) and BN-Inception
+//! (Inception-v2, Ioffe & Szegedy 2015). Multi-receptive-field branches
+//! (1x1 / 3x3 / 5x5 / double-3x3) over the same input increase the
+//! variance of GEMM operand dimensions — the paper's second architecture
+//! family.
+//!
+//! Channel tables follow the published architectures (GoogLeNet Table 1;
+//! BN-Inception as replicated by the reference Caffe/pretrained-models
+//! implementations). Auxiliary classifiers are omitted: they are
+//! train-time only and the paper evaluates inference.
+
+use crate::model::layer::SpatialDims;
+use crate::model::network::Network;
+use crate::nets::ops::Stack;
+
+/// GoogLeNet inception module: (#1x1, #3x3red, #3x3, #5x5red, #5x5, pool-proj).
+fn inception_v1(s: &mut Stack, tag: &str, c: (usize, usize, usize, usize, usize, usize)) {
+    let (c1, c3r, c3, c5r, c5, cp) = c;
+    let dims = s.at().0;
+    let mut total = 0;
+    total += s.branch_expect(&format!("{tag}.b1"), dims, |b| {
+        b.conv_1x1(c1);
+    });
+    total += s.branch_expect(&format!("{tag}.b3"), dims, |b| {
+        b.conv_1x1(c3r).conv(c3, 3, 1, 1);
+    });
+    total += s.branch_expect(&format!("{tag}.b5"), dims, |b| {
+        b.conv_1x1(c5r).conv(c5, 5, 1, 2);
+    });
+    total += s.branch_expect(&format!("{tag}.bp"), dims, |b| {
+        b.pool(3, 1, 1).conv_1x1(cp);
+    });
+    s.set_channels(total);
+}
+
+/// GoogLeNet over 224x224 input.
+pub fn googlenet() -> Network {
+    let mut s = Stack::new("googlenet", SpatialDims::square(224), 3);
+    s.conv(64, 7, 2, 3); // 112
+    s.pool_ceil(3, 2, 0); // 56
+    s.conv_1x1(64).conv(192, 3, 1, 1);
+    s.pool_ceil(3, 2, 0); // 28
+
+    inception_v1(&mut s, "3a", (64, 96, 128, 16, 32, 32)); // 256
+    inception_v1(&mut s, "3b", (128, 128, 192, 32, 96, 64)); // 480
+    s.pool_ceil(3, 2, 0); // 14
+    inception_v1(&mut s, "4a", (192, 96, 208, 16, 48, 64)); // 512
+    inception_v1(&mut s, "4b", (160, 112, 224, 24, 64, 64)); // 512
+    inception_v1(&mut s, "4c", (128, 128, 256, 24, 64, 64)); // 512
+    inception_v1(&mut s, "4d", (112, 144, 288, 32, 64, 64)); // 528
+    inception_v1(&mut s, "4e", (256, 160, 320, 32, 128, 128)); // 832
+    s.pool_ceil(3, 2, 0); // 7
+    inception_v1(&mut s, "5a", (256, 160, 320, 32, 128, 128)); // 832
+    inception_v1(&mut s, "5b", (384, 192, 384, 48, 128, 128)); // 1024
+    s.global_pool().linear(1000);
+    Network::new("googlenet", s.layers)
+}
+
+/// BN-Inception module with the double-3x3 branch:
+/// (#1x1, #3x3red, #3x3, #d3x3red, #d3x3, pool-proj, avg?).
+fn inception_v2(
+    s: &mut Stack,
+    tag: &str,
+    c: (usize, usize, usize, usize, usize, usize),
+) {
+    let (c1, c3r, c3, cdr, cd, cp) = c;
+    let dims = s.at().0;
+    let mut total = 0;
+    total += s.branch_expect(&format!("{tag}.b1"), dims, |b| {
+        b.conv_1x1(c1);
+    });
+    total += s.branch_expect(&format!("{tag}.b3"), dims, |b| {
+        b.conv_1x1(c3r).conv(c3, 3, 1, 1);
+    });
+    total += s.branch_expect(&format!("{tag}.bd"), dims, |b| {
+        b.conv_1x1(cdr).conv(cd, 3, 1, 1).conv(cd, 3, 1, 1);
+    });
+    total += s.branch_expect(&format!("{tag}.bp"), dims, |b| {
+        b.pool(3, 1, 1).conv_1x1(cp);
+    });
+    s.set_channels(total);
+}
+
+/// BN-Inception stride-2 (grid reduction) module: no 1x1 branch, pooling
+/// branch passes channels through unprojected.
+fn inception_v2_reduce(s: &mut Stack, tag: &str, c: (usize, usize, usize, usize)) {
+    let (c3r, c3, cdr, cd) = c;
+    let in_c = s.at().1;
+    let out_dims = {
+        // 3x3 stride-2 pad-1 geometry.
+        let d = s.at().0;
+        SpatialDims {
+            h: (d.h + 2 - 3) / 2 + 1,
+            w: (d.w + 2 - 3) / 2 + 1,
+        }
+    };
+    let mut total = 0;
+    total += s.branch_expect(&format!("{tag}.b3"), out_dims, |b| {
+        b.conv_1x1(c3r).conv(c3, 3, 2, 1);
+    });
+    total += s.branch_expect(&format!("{tag}.bd"), out_dims, |b| {
+        b.conv_1x1(cdr).conv(cd, 3, 1, 1).conv(cd, 3, 2, 1);
+    });
+    // Max-pool branch: stride-2, channels pass through.
+    total += in_c;
+    s.pool(3, 2, 1);
+    s.set_channels(total);
+}
+
+/// BN-Inception (Inception-v2) over 224x224 input.
+pub fn bn_inception() -> Network {
+    let mut s = Stack::new("bninception", SpatialDims::square(224), 3);
+    s.conv(64, 7, 2, 3); // 112
+    s.pool_ceil(3, 2, 0); // 56
+    s.conv_1x1(64).conv(192, 3, 1, 1);
+    s.pool_ceil(3, 2, 0); // 28
+
+    inception_v2(&mut s, "3a", (64, 64, 64, 64, 96, 32)); // 256
+    inception_v2(&mut s, "3b", (64, 64, 96, 64, 96, 64)); // 320
+    inception_v2_reduce(&mut s, "3c", (128, 160, 64, 96)); // 576 @ 14
+    inception_v2(&mut s, "4a", (224, 64, 96, 96, 128, 128)); // 576
+    inception_v2(&mut s, "4b", (192, 96, 128, 96, 128, 128)); // 576
+    inception_v2(&mut s, "4c", (160, 128, 160, 128, 160, 96)); // 576
+    inception_v2(&mut s, "4d", (96, 128, 192, 160, 192, 96)); // 576
+    inception_v2_reduce(&mut s, "4e", (128, 192, 192, 256)); // 1024 @ 7
+    inception_v2(&mut s, "5a", (352, 192, 320, 160, 224, 128)); // 1024
+    inception_v2(&mut s, "5b", (352, 192, 320, 192, 224, 128)); // 1024
+    s.global_pool().linear(1000);
+    Network::new("bninception", s.layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn googlenet_params_match_published() {
+        // ~7M weights (the GoogLeNet paper's often-quoted figure; the
+        // 5x5 branches and pool projections account for the spread across
+        // published reimplementations).
+        let p = googlenet().params() as f64 / 1e6;
+        assert!((6.4..7.4).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn googlenet_macs_match_published() {
+        // ~1.5 GMACs at 224x224.
+        let g = googlenet().macs() as f64 / 1e9;
+        assert!((1.3..1.7).contains(&g), "macs {g}G");
+    }
+
+    #[test]
+    fn googlenet_module_output_channels() {
+        // The classifier must see 1024 channels.
+        let net = googlenet();
+        match &net.layers.last().unwrap().kind {
+            LayerKind::Linear { in_features, .. } => assert_eq!(*in_features, 1024),
+            _ => panic!("classifier missing"),
+        }
+    }
+
+    #[test]
+    fn googlenet_layer_count() {
+        // Stem 3 convs + 9 modules x 6 convs + fc = 58.
+        assert_eq!(googlenet().layers.len(), 58);
+    }
+
+    #[test]
+    fn bninception_params_match_published() {
+        // ~10.9M weights (reference implementations: 11.3M incl. BN).
+        let p = bn_inception().params() as f64 / 1e6;
+        assert!((10.0..12.0).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn bninception_macs_match_published() {
+        // ~2.0 GMACs at 224x224.
+        let g = bn_inception().macs() as f64 / 1e9;
+        assert!((1.7..2.3).contains(&g), "macs {g}G");
+    }
+
+    #[test]
+    fn bninception_classifier_sees_1024() {
+        match &bn_inception().layers.last().unwrap().kind {
+            LayerKind::Linear { in_features, .. } => assert_eq!(*in_features, 1024),
+            _ => panic!("classifier missing"),
+        }
+    }
+
+    #[test]
+    fn reduce_modules_halve_dims() {
+        // After 3c the grid is 14x14; after 4e it is 7x7 — verified by the
+        // input dims of the following modules' convs.
+        let net = bn_inception();
+        let four_a = net
+            .layers
+            .iter()
+            .find(|l| l.name.contains("4a.b1"))
+            .unwrap();
+        assert_eq!(four_a.input, SpatialDims::square(14));
+        let five_a = net
+            .layers
+            .iter()
+            .find(|l| l.name.contains("5a.b1"))
+            .unwrap();
+        assert_eq!(five_a.input, SpatialDims::square(7));
+    }
+
+    #[test]
+    fn operand_diversity_exceeds_plain_models() {
+        // Inception's signature: more distinct GEMM shapes than VGG.
+        let g_count = googlenet().gemm_histogram().len();
+        let v_count = crate::nets::vgg::vgg16().gemm_histogram().len();
+        assert!(g_count > v_count, "googlenet {g_count} vs vgg {v_count}");
+    }
+}

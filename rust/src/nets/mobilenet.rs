@@ -1,0 +1,154 @@
+//! MobileNetV3-Large (Howard et al., ICCV 2019): the depthwise-separable
+//! representative (g = c_in, i.e. per-channel GEMMs of K = k*k, N = 1 —
+//! the extreme of the paper's group-convolution serialization effect).
+//! Squeeze-and-Excitation blocks contribute small FC GEMMs.
+
+use crate::model::layer::SpatialDims;
+use crate::model::network::Network;
+use crate::nets::ops::Stack;
+
+/// One inverted-residual block row of the V3-Large table:
+/// (kernel, expanded channels, out channels, SE?, stride).
+struct Block {
+    k: usize,
+    exp: usize,
+    out: usize,
+    se: bool,
+    stride: usize,
+}
+
+/// Divisible-by-8 rounding used by the reference implementation for SE
+/// squeeze widths.
+fn make_divisible(v: usize) -> usize {
+    let d = 8;
+    let new_v = ((v + d / 2) / d) * d;
+    // Do not round down by more than 10%.
+    if (new_v as f64) < 0.9 * v as f64 {
+        new_v + d
+    } else {
+        new_v.max(d)
+    }
+}
+
+/// MobileNetV3-Large over 224x224 input.
+pub fn mobilenet_v3_large() -> Network {
+    // The published table (paper Table 1).
+    let blocks = [
+        Block { k: 3, exp: 16, out: 16, se: false, stride: 1 },
+        Block { k: 3, exp: 64, out: 24, se: false, stride: 2 },
+        Block { k: 3, exp: 72, out: 24, se: false, stride: 1 },
+        Block { k: 5, exp: 72, out: 40, se: true, stride: 2 },
+        Block { k: 5, exp: 120, out: 40, se: true, stride: 1 },
+        Block { k: 5, exp: 120, out: 40, se: true, stride: 1 },
+        Block { k: 3, exp: 240, out: 80, se: false, stride: 2 },
+        Block { k: 3, exp: 200, out: 80, se: false, stride: 1 },
+        Block { k: 3, exp: 184, out: 80, se: false, stride: 1 },
+        Block { k: 3, exp: 184, out: 80, se: false, stride: 1 },
+        Block { k: 3, exp: 480, out: 112, se: true, stride: 1 },
+        Block { k: 3, exp: 672, out: 112, se: true, stride: 1 },
+        Block { k: 5, exp: 672, out: 160, se: true, stride: 2 },
+        Block { k: 5, exp: 960, out: 160, se: true, stride: 1 },
+        Block { k: 5, exp: 960, out: 160, se: true, stride: 1 },
+    ];
+
+    let mut s = Stack::new("mobilenetv3l", SpatialDims::square(224), 3);
+    s.conv(16, 3, 2, 1); // stem -> 112x112
+
+    for b in &blocks {
+        let in_c = s.at().1;
+        if b.exp != in_c {
+            s.conv_1x1(b.exp); // expand
+        }
+        s.conv_dw(b.k, b.stride, b.k / 2); // depthwise
+        if b.se {
+            s.se_block(make_divisible(b.exp / 4));
+        }
+        s.conv_1x1(b.out); // project
+    }
+
+    s.conv_1x1(960); // head conv
+    s.global_pool();
+    s.linear(1280).linear(1000);
+    Network::new("mobilenetv3l", s.layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn params_match_published() {
+        // 5.48M in torchvision (incl. BN/bias); weights-only ~5.4M.
+        let p = mobilenet_v3_large().params() as f64 / 1e6;
+        assert!((5.0..5.8).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn macs_match_published() {
+        // ~219 MMACs at 224x224.
+        let m = mobilenet_v3_large().macs() as f64 / 1e6;
+        assert!((200.0..240.0).contains(&m), "macs {m}M");
+    }
+
+    #[test]
+    fn depthwise_layers_are_per_channel_gemms() {
+        let net = mobilenet_v3_large();
+        let dw = net
+            .layers
+            .iter()
+            .find(|l| l.name.contains("conv3x3g64"))
+            .expect("depthwise with 64 groups");
+        let (g, groups) = dw.gemm();
+        assert_eq!(groups, 64);
+        assert_eq!((g.k, g.n), (9, 1));
+    }
+
+    #[test]
+    fn first_block_skips_expansion() {
+        // exp == in_c for block 1, so no expand conv: stem then depthwise.
+        let net = mobilenet_v3_large();
+        match &net.layers[1].kind {
+            LayerKind::Conv2d { groups, c_in, .. } => {
+                assert_eq!(*groups, 16);
+                assert_eq!(*c_in, 16);
+            }
+            _ => panic!("expected depthwise after stem"),
+        }
+    }
+
+    #[test]
+    fn se_blocks_present() {
+        let net = mobilenet_v3_large();
+        let se_fcs = net
+            .layers
+            .iter()
+            .filter(|l| l.name.contains(".se."))
+            .count();
+        // 8 SE blocks x 2 FCs.
+        assert_eq!(se_fcs, 16);
+    }
+
+    #[test]
+    fn make_divisible_behaviour() {
+        // 18 rounds to 16, but 16 < 0.9*18 so it bumps to 24.
+        assert_eq!(make_divisible(18), 24);
+        assert_eq!(make_divisible(30), 32);
+        assert_eq!(make_divisible(240 / 4), 64);
+        assert_eq!(make_divisible(4), 8);
+    }
+
+    #[test]
+    fn final_geometry() {
+        // 224 / 32 = 7 at the head conv.
+        let net = mobilenet_v3_large();
+        let head = net
+            .layers
+            .iter()
+            .rev()
+            .find(|l| matches!(l.kind, LayerKind::Conv2d { .. }))
+            .unwrap();
+        assert_eq!(head.input, SpatialDims::square(7));
+        assert_eq!(head.c_out(), 960);
+    }
+}

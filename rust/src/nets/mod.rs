@@ -1,0 +1,24 @@
+//! The DNN model zoo of the paper's evaluation (Section 4.2): classic
+//! straight-forward CNNs (AlexNet, VGG-16), multi-receptive-field models
+//! (GoogLeNet, BN-Inception), advanced-connectivity models (ResNet-152,
+//! DenseNet-201), and group-convolution models (ResNeXt-152 g=32,
+//! MobileNetV3-Large, EfficientNet-B0) — plus transformer encoders as the
+//! paper's named future-work extension.
+//!
+//! Architectures are generated from their block specifications (not
+//! hard-coded layer tables) and sanity-checked against published parameter
+//! and MAC counts.
+
+pub mod alexnet;
+pub mod capsnet;
+pub mod densenet;
+pub mod efficientnet;
+pub mod inception;
+pub mod mobilenet;
+pub mod ops;
+pub mod resnet;
+pub mod transformer;
+pub mod vgg;
+pub mod zoo;
+
+pub use zoo::{build, paper_models, ALL_MODELS, PAPER_MODELS};

@@ -1,0 +1,260 @@
+//! The layer-stack builder DSL the model zoo is written in. It tracks the
+//! current spatial dims and channel count so each architecture module reads
+//! like its paper's table, and it auto-names layers for the per-layer
+//! reports.
+//!
+//! Only GEMM-bearing operators become [`Layer`]s; pooling and activation
+//! update the tracked geometry but move no matrix operands (they are
+//! metric-neutral in the paper's model).
+
+use crate::model::layer::{Layer, SpatialDims};
+
+/// A sequential stack under construction.
+#[derive(Debug, Clone)]
+pub struct Stack {
+    pub net_name: String,
+    pub layers: Vec<Layer>,
+    pub dims: SpatialDims,
+    pub channels: usize,
+    idx: usize,
+}
+
+impl Stack {
+    pub fn new(net_name: impl Into<String>, input: SpatialDims, channels: usize) -> Stack {
+        Stack {
+            net_name: net_name.into(),
+            layers: Vec::new(),
+            dims: input,
+            channels,
+            idx: 0,
+        }
+    }
+
+    fn next_name(&mut self, op: &str) -> String {
+        self.idx += 1;
+        format!("{}.{:03}.{}", self.net_name, self.idx, op)
+    }
+
+    /// Standard convolution; updates dims and channels.
+    pub fn conv(&mut self, c_out: usize, k: usize, stride: usize, pad: usize) -> &mut Self {
+        self.conv_g(c_out, k, stride, pad, 1)
+    }
+
+    /// Grouped convolution.
+    pub fn conv_g(
+        &mut self,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> &mut Self {
+        let name = self.next_name(&format!("conv{k}x{k}g{groups}"));
+        let l = Layer::conv(name, self.dims, self.channels, c_out, k, stride, pad, groups);
+        self.dims = l.output_dims();
+        self.channels = c_out;
+        self.layers.push(l);
+        self
+    }
+
+    /// Depthwise convolution (groups == channels, channel-preserving).
+    pub fn conv_dw(&mut self, k: usize, stride: usize, pad: usize) -> &mut Self {
+        let c = self.channels;
+        self.conv_g(c, k, stride, pad, c)
+    }
+
+    /// Pointwise 1x1 convolution.
+    pub fn conv_1x1(&mut self, c_out: usize) -> &mut Self {
+        self.conv(c_out, 1, 1, 0)
+    }
+
+    /// Max/avg pooling: geometry only.
+    pub fn pool(&mut self, k: usize, stride: usize, pad: usize) -> &mut Self {
+        let probe = Layer::conv("pool-probe", self.dims, 1, 1, k, stride, pad, 1);
+        self.dims = probe.output_dims();
+        self
+    }
+
+    /// Pooling with torch-style `ceil_mode=True` (GoogLeNet, DenseNet
+    /// transitions use it). Output = ceil((in + 2p - k) / s) + 1.
+    pub fn pool_ceil(&mut self, k: usize, stride: usize, pad: usize) -> &mut Self {
+        let out = |i: usize| (i + 2 * pad - k + stride - 1) / stride + 1;
+        self.dims = SpatialDims {
+            h: out(self.dims.h),
+            w: out(self.dims.w),
+        };
+        self
+    }
+
+    /// Global average pooling: dims to 1x1.
+    pub fn global_pool(&mut self) -> &mut Self {
+        self.dims = SpatialDims { h: 1, w: 1 };
+        self
+    }
+
+    /// Fully-connected layer over the flattened feature map.
+    pub fn linear(&mut self, out_features: usize) -> &mut Self {
+        let in_features = self.channels * self.dims.h * self.dims.w;
+        let name = self.next_name("fc");
+        self.layers.push(Layer::linear(name, in_features, out_features));
+        self.dims = SpatialDims { h: 1, w: 1 };
+        self.channels = out_features;
+        self
+    }
+
+    /// Squeeze-and-Excitation block: global pool + two 1x1 FCs (the GEMMs)
+    /// + channel-wise rescale. Spatial dims are untouched.
+    pub fn se_block(&mut self, squeeze_channels: usize) -> &mut Self {
+        let c = self.channels;
+        let n1 = self.next_name("se.squeeze");
+        let n2 = self.next_name("se.expand");
+        self.layers.push(Layer::linear(n1, c, squeeze_channels));
+        self.layers.push(Layer::linear(n2, squeeze_channels, c));
+        self
+    }
+
+    /// Override the tracked channel count (after a concat computed by the
+    /// caller, e.g. inception modules / dense blocks).
+    pub fn set_channels(&mut self, c: usize) -> &mut Self {
+        self.channels = c;
+        self
+    }
+
+    /// Snapshot of (dims, channels) for branch construction.
+    pub fn at(&self) -> (SpatialDims, usize) {
+        (self.dims, self.channels)
+    }
+
+    /// Append a branch: runs `f` on a fork of the stack sharing geometry,
+    /// collects its layers, and returns the branch's resulting channels.
+    /// The caller is responsible for `set_channels` with the concat total.
+    pub fn branch(&mut self, tag: &str, f: impl FnOnce(&mut Stack)) -> usize {
+        let mut fork = Stack {
+            net_name: format!("{}.{}", self.net_name, tag),
+            layers: Vec::new(),
+            dims: self.dims,
+            channels: self.channels,
+            idx: 0,
+        };
+        f(&mut fork);
+        let out_c = fork.channels;
+        self.layers.extend(fork.layers);
+        out_c
+    }
+
+    /// Like `branch` but also asserts the branch ends at the given spatial
+    /// dims (concat requires all branches to agree).
+    pub fn branch_expect(
+        &mut self,
+        tag: &str,
+        expect: SpatialDims,
+        f: impl FnOnce(&mut Stack),
+    ) -> usize {
+        let mut fork = Stack {
+            net_name: format!("{}.{}", self.net_name, tag),
+            layers: Vec::new(),
+            dims: self.dims,
+            channels: self.channels,
+            idx: 0,
+        };
+        f(&mut fork);
+        assert_eq!(
+            fork.dims, expect,
+            "branch '{tag}' of {} ends at {:?}, concat expects {:?}",
+            self.net_name, fork.dims, expect
+        );
+        let out_c = fork.channels;
+        self.layers.extend(fork.layers);
+        out_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn sequential_tracking() {
+        let mut s = Stack::new("t", SpatialDims::square(224), 3);
+        s.conv(64, 7, 2, 3).pool(3, 2, 1).conv(128, 3, 1, 1);
+        assert_eq!(s.dims, SpatialDims::square(56));
+        assert_eq!(s.channels, 128);
+        assert_eq!(s.layers.len(), 2); // pool emits no layer
+    }
+
+    #[test]
+    fn pool_ceil_rounds_up() {
+        let mut s = Stack::new("t", SpatialDims::square(112), 64);
+        // floor: (112 - 3)/2 + 1 = 55; ceil: 56.
+        s.pool_ceil(3, 2, 0);
+        assert_eq!(s.dims, SpatialDims::square(56));
+    }
+
+    #[test]
+    fn depthwise_preserves_channels() {
+        let mut s = Stack::new("t", SpatialDims::square(14), 96);
+        s.conv_dw(3, 1, 1);
+        assert_eq!(s.channels, 96);
+        match &s.layers[0].kind {
+            LayerKind::Conv2d { groups, .. } => assert_eq!(*groups, 96),
+            _ => panic!("not a conv"),
+        }
+    }
+
+    #[test]
+    fn linear_flattens() {
+        let mut s = Stack::new("t", SpatialDims::square(7), 512);
+        s.linear(4096);
+        match &s.layers[0].kind {
+            LayerKind::Linear { in_features, .. } => assert_eq!(*in_features, 512 * 49),
+            _ => panic!("not linear"),
+        }
+        assert_eq!(s.channels, 4096);
+    }
+
+    #[test]
+    fn se_block_emits_two_fcs() {
+        let mut s = Stack::new("t", SpatialDims::square(14), 96);
+        s.se_block(24);
+        assert_eq!(s.layers.len(), 2);
+        assert_eq!(s.channels, 96);
+        assert_eq!(s.dims, SpatialDims::square(14));
+    }
+
+    #[test]
+    fn branches_concat() {
+        let mut s = Stack::new("t", SpatialDims::square(28), 192);
+        let dims = s.dims;
+        let mut total = 0;
+        total += s.branch_expect("b1", dims, |b| {
+            b.conv_1x1(64);
+        });
+        total += s.branch_expect("b2", dims, |b| {
+            b.conv_1x1(96).conv(128, 3, 1, 1);
+        });
+        s.set_channels(total);
+        assert_eq!(s.channels, 192);
+        assert_eq!(s.layers.len(), 3);
+        // Geometry untouched by branches.
+        assert_eq!(s.dims, dims);
+    }
+
+    #[test]
+    #[should_panic(expected = "concat expects")]
+    fn branch_dim_mismatch_is_caught() {
+        let mut s = Stack::new("t", SpatialDims::square(28), 64);
+        let dims = s.dims;
+        s.branch_expect("bad", dims, |b| {
+            b.conv(32, 3, 2, 1); // stride 2 halves dims -> mismatch
+        });
+    }
+
+    #[test]
+    fn names_are_unique_and_prefixed() {
+        let mut s = Stack::new("net", SpatialDims::square(8), 3);
+        s.conv(8, 3, 1, 1).conv(8, 3, 1, 1);
+        assert_ne!(s.layers[0].name, s.layers[1].name);
+        assert!(s.layers[0].name.starts_with("net."));
+    }
+}

@@ -1,0 +1,243 @@
+//! ResNet (He et al., CVPR 2016) and ResNeXt (Xie et al., CVPR 2017)
+//! bottleneck architectures. Residual connectivity itself moves no GEMM
+//! operands, but it shapes them: bottlenecks make layers *thin* (the
+//! reduced operand dimensions the paper discusses), and ResNeXt adds
+//! cardinality — grouped 3x3 convolutions.
+
+use crate::model::layer::SpatialDims;
+use crate::model::network::Network;
+use crate::nets::ops::Stack;
+
+/// Bottleneck-family configuration.
+#[derive(Debug, Clone)]
+pub struct BottleneckSpec {
+    pub name: String,
+    /// Blocks per stage (ResNet-152: [3, 8, 36, 3]).
+    pub stage_blocks: [usize; 4],
+    /// Grouped-conv cardinality for the 3x3 (1 = plain ResNet).
+    pub cardinality: usize,
+    /// Width of the 3x3 per stage, stage 1 value (doubles per stage).
+    /// ResNet: 64; ResNeXt 32x4d: 128 (32 groups x 4d).
+    pub base_width: usize,
+}
+
+/// Build a bottleneck network over 224x224 input.
+pub fn bottleneck_net(spec: &BottleneckSpec) -> Network {
+    let mut s = Stack::new(spec.name.clone(), SpatialDims::square(224), 3);
+    s.conv(64, 7, 2, 3); // stem -> 112x112
+    s.pool(3, 2, 1); // -> 56x56
+
+    let expansion = 4;
+    let mut in_c = 64;
+    for (stage, &blocks) in spec.stage_blocks.iter().enumerate() {
+        let width = spec.base_width << stage; // 3x3 width this stage
+        let out_c = (64 << stage) * expansion; // block output channels
+        for b in 0..blocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            // Projection shortcut when geometry or channels change.
+            if b == 0 {
+                let (dims, _) = s.at();
+                let proj = crate::model::layer::Layer::conv(
+                    format!("{}.s{}b{}.proj", spec.name, stage + 1, b),
+                    dims,
+                    in_c,
+                    out_c,
+                    1,
+                    stride,
+                    0,
+                    1,
+                );
+                s.layers.push(proj);
+            }
+            s.conv_1x1(width); // reduce
+            s.conv_g(width, 3, stride, 1, spec.cardinality); // spatial
+            s.conv_1x1(out_c); // expand
+            in_c = out_c;
+        }
+    }
+    s.global_pool().linear(1000);
+    Network::new(spec.name.clone(), s.layers)
+}
+
+/// Basic-block ResNet (two 3x3 convs per block; ResNet-18/34 family) —
+/// the pre-bottleneck design, used by ablations to contrast operand
+/// shapes against the bottleneck models.
+pub fn basic_net(name: &str, stage_blocks: [usize; 4]) -> Network {
+    let mut s = Stack::new(name.to_string(), SpatialDims::square(224), 3);
+    s.conv(64, 7, 2, 3);
+    s.pool(3, 2, 1);
+    let mut in_c = 64;
+    for (stage, &blocks) in stage_blocks.iter().enumerate() {
+        let out_c = 64 << stage;
+        for b in 0..blocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            if b == 0 && (stride != 1 || in_c != out_c) {
+                let (dims, _) = s.at();
+                s.layers.push(crate::model::layer::Layer::conv(
+                    format!("{}.s{}b{}.proj", name, stage + 1, b),
+                    dims,
+                    in_c,
+                    out_c,
+                    1,
+                    stride,
+                    0,
+                    1,
+                ));
+            }
+            s.conv(out_c, 3, stride, 1);
+            s.conv(out_c, 3, 1, 1);
+            in_c = out_c;
+        }
+    }
+    s.global_pool().linear(1000);
+    Network::new(name.to_string(), s.layers)
+}
+
+/// ResNet-34 (basic blocks [3, 4, 6, 3]).
+pub fn resnet34() -> Network {
+    basic_net("resnet34", [3, 4, 6, 3])
+}
+
+/// ResNet-152: the paper's case-study model (Section 4.1).
+pub fn resnet152() -> Network {
+    bottleneck_net(&BottleneckSpec {
+        name: "resnet152".into(),
+        stage_blocks: [3, 8, 36, 3],
+        cardinality: 1,
+        base_width: 64,
+    })
+}
+
+/// ResNet-50 (used by ablations; same family).
+pub fn resnet50() -> Network {
+    bottleneck_net(&BottleneckSpec {
+        name: "resnet50".into(),
+        stage_blocks: [3, 4, 6, 3],
+        cardinality: 1,
+        base_width: 64,
+    })
+}
+
+/// ResNeXt-152 with cardinality 32 (32x4d widths), the paper's grouped
+/// representative.
+pub fn resnext152() -> Network {
+    bottleneck_net(&BottleneckSpec {
+        name: "resnext152".into(),
+        stage_blocks: [3, 8, 36, 3],
+        cardinality: 32,
+        base_width: 128,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet152_layer_count() {
+        // Stem + per block 3 convs + 4 projections + fc:
+        // 1 + 3*(3+8+36+3) + 4 + 1 = 156.
+        assert_eq!(resnet152().layers.len(), 156);
+    }
+
+    #[test]
+    fn resnet152_params_match_published() {
+        // 60.2M (torchvision, incl. BN/bias ~0.15M).
+        let p = resnet152().params() as f64 / 1e6;
+        assert!((59.0..61.0).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn resnet152_macs_match_published() {
+        // ~11.5 GMACs at 224x224.
+        let g = resnet152().macs() as f64 / 1e9;
+        assert!((11.0..12.0).contains(&g), "macs {g}G");
+    }
+
+    #[test]
+    fn resnet34_params_match_published() {
+        // 21.8M in torchvision.
+        let p = resnet34().params() as f64 / 1e6;
+        assert!((21.0..22.5).contains(&p), "params {p}M");
+        // ~3.6 GMACs.
+        let g = resnet34().macs() as f64 / 1e9;
+        assert!((3.3..3.9).contains(&g), "macs {g}G");
+    }
+
+    #[test]
+    fn basic_blocks_have_fatter_3x3_operands_than_bottlenecks() {
+        // ResNet-34's 3x3 convs reduce over K = 9*C at full width; the
+        // bottleneck 3x3 sees a 4x thinner C. Compare stage-4 shapes.
+        let b34 = resnet34();
+        let l34 = b34
+            .layers
+            .iter()
+            .rev()
+            .find(|l| l.name.contains("conv3x3"))
+            .unwrap();
+        let (g34, _) = l34.gemm();
+        assert_eq!(g34.k, 512 * 9);
+        let b152 = resnet152();
+        let l152 = b152
+            .layers
+            .iter()
+            .rev()
+            .find(|l| l.name.contains("conv3x3"))
+            .unwrap();
+        let (g152, _) = l152.gemm();
+        assert_eq!(g152.k, 512 * 9); // stage-4 bottleneck width is 512 too
+        // but the bottleneck net's N is the thin width, not the 4x output
+        assert_eq!(g152.n, 512);
+        assert_eq!(g34.n, 512);
+    }
+
+    #[test]
+    fn resnet50_params_match_published() {
+        // 25.56M in torchvision.
+        let p = resnet50().params() as f64 / 1e6;
+        assert!((25.0..26.0).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn resnext152_uses_grouped_convs() {
+        let net = resnext152();
+        let grouped = net
+            .layers
+            .iter()
+            .filter(|l| match &l.kind {
+                crate::model::layer::LayerKind::Conv2d { groups, .. } => *groups == 32,
+                _ => false,
+            })
+            .count();
+        assert_eq!(grouped, 3 + 8 + 36 + 3);
+    }
+
+    #[test]
+    fn resnext_thinner_gemms_than_resnet() {
+        // The grouped 3x3 has K and N divided by cardinality vs. a plain
+        // conv of the same width.
+        let rn = resnext152();
+        let l = rn
+            .layers
+            .iter()
+            .find(|l| l.name.contains("conv3x3g32"))
+            .unwrap();
+        let (g, groups) = l.gemm();
+        assert_eq!(groups, 32);
+        assert_eq!(g.k, (128 / 32) * 9);
+        assert_eq!(g.n, 128 / 32);
+    }
+
+    #[test]
+    fn stage_geometry() {
+        // After the stem + pool we are at 56x56; stages end at 7x7.
+        let net = resnet152();
+        let last_conv = net
+            .layers
+            .iter()
+            .rev()
+            .find(|l| matches!(l.kind, crate::model::layer::LayerKind::Conv2d { .. }))
+            .unwrap();
+        assert_eq!(last_conv.input, SpatialDims::square(7));
+    }
+}

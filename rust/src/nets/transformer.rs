@@ -1,0 +1,143 @@
+//! Transformer encoder workloads — the paper's §6 future work ("we plan to
+//! study the impact of emerging ... architectures, such as transformers
+//! ... on systolic arrays"). Implemented here as an extension: a BERT-style
+//! encoder's GEMM-bearing operators per layer, with attention score/context
+//! matmuls expressed as per-head grouped GEMMs (they serialize on a single
+//! array exactly like group convolutions).
+
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+
+/// Encoder configuration.
+#[derive(Debug, Clone)]
+pub struct TransformerSpec {
+    pub name: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+/// Build the encoder's GEMM stream for one forward pass.
+///
+/// Per layer: Q/K/V/O projections (seq x d_model x d_model), the per-head
+/// attention matmuls QK^T (seq x d_head x seq) and AV (seq x seq x d_head)
+/// — modelled as `heads` serialized GEMMs via the grouped-conv mechanism —
+/// and the two FFN projections.
+pub fn transformer_encoder(spec: &TransformerSpec) -> Network {
+    assert!(spec.d_model % spec.heads == 0);
+    let d_head = spec.d_model / spec.heads;
+    let s = spec.seq_len;
+    let mut layers: Vec<Layer> = Vec::new();
+
+    for l in 0..spec.layers {
+        let p = |op: &str| format!("{}.l{:02}.{}", spec.name, l, op);
+        // Projections: X[s, d] * W[d, d].
+        for op in ["q", "k", "v", "o"] {
+            layers.push(Layer::linear(p(op), spec.d_model, spec.d_model).with_batch(s));
+        }
+        // Attention scores per head: [s, d_head] x [d_head, s], h heads.
+        layers.push(attention_gemm(p("qk"), s, d_head, s, spec.heads));
+        // Context per head: [s, s] x [s, d_head].
+        layers.push(attention_gemm(p("av"), s, s, d_head, spec.heads));
+        // FFN.
+        layers.push(Layer::linear(p("ffn1"), spec.d_model, spec.d_ff).with_batch(s));
+        layers.push(Layer::linear(p("ffn2"), spec.d_ff, spec.d_model).with_batch(s));
+    }
+    Network::new(spec.name.clone(), layers)
+}
+
+/// A batch of `heads` serialized (m x k x n) GEMMs, encoded as a grouped
+/// 1x1 "conv" so the group-serialization machinery applies unchanged.
+fn attention_gemm(name: String, m: usize, k: usize, n: usize, heads: usize) -> Layer {
+    let mut l = Layer::conv(
+        name,
+        crate::model::layer::SpatialDims { h: m, w: 1 },
+        k * heads,
+        n * heads,
+        1,
+        1,
+        0,
+        heads,
+    );
+    l.batch = 1;
+    l
+}
+
+/// BERT-Base as the canonical instance (12 layers, d=768, 12 heads,
+/// ffn 3072) at sequence length 128.
+pub fn bert_base_seq128() -> Network {
+    transformer_encoder(&TransformerSpec {
+        name: "bertbase-s128".into(),
+        layers: 12,
+        d_model: 768,
+        heads: 12,
+        d_ff: 3072,
+        seq_len: 128,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_params() {
+        // Encoder GEMM weights: 12 * (4 * 768^2 + 2 * 768 * 3072) = 85.0M.
+        // (Attention matmuls are weightless only in reality; our grouped
+        //  encoding carries pseudo-weights we must exclude from the check.)
+        let net = bert_base_seq128();
+        let proj_params: u64 = net
+            .layers
+            .iter()
+            .filter(|l| !l.name.contains(".qk") && !l.name.contains(".av"))
+            .map(|l| l.params())
+            .sum();
+        assert_eq!(proj_params, 12 * (4 * 768 * 768 + 2 * 768 * 3072));
+    }
+
+    #[test]
+    fn attention_macs_scale_with_seq_squared() {
+        let short = transformer_encoder(&TransformerSpec {
+            name: "t".into(),
+            layers: 1,
+            d_model: 64,
+            heads: 4,
+            d_ff: 128,
+            seq_len: 32,
+        });
+        let long = transformer_encoder(&TransformerSpec {
+            name: "t".into(),
+            layers: 1,
+            d_model: 64,
+            heads: 4,
+            d_ff: 128,
+            seq_len: 64,
+        });
+        let qk = |n: &Network| {
+            n.layers
+                .iter()
+                .find(|l| l.name.contains(".qk"))
+                .unwrap()
+                .macs()
+        };
+        // QK^T MACs = s^2 * d_model: 4x for 2x sequence length.
+        assert_eq!(qk(&long), 4 * qk(&short));
+    }
+
+    #[test]
+    fn per_head_gemm_shape() {
+        let net = bert_base_seq128();
+        let qk = net.layers.iter().find(|l| l.name.contains(".qk")).unwrap();
+        let (g, heads) = qk.gemm();
+        assert_eq!(heads, 12);
+        assert_eq!((g.m, g.k, g.n), (128, 64, 128));
+    }
+
+    #[test]
+    fn layer_count() {
+        // 8 GEMM ops per encoder layer.
+        assert_eq!(bert_base_seq128().layers.len(), 12 * 8);
+    }
+}

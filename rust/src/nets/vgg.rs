@@ -1,0 +1,53 @@
+//! VGG-16 (Simonyan & Zisserman, ICLR 2015): configuration D. Uniform
+//! 3x3 convolutions — the paper's example of a model whose GEMM operand
+//! dimensions depend only on filter count and receptive field.
+
+use crate::model::layer::SpatialDims;
+use crate::model::network::Network;
+use crate::nets::ops::Stack;
+
+/// VGG-16 over 224x224 RGB input.
+pub fn vgg16() -> Network {
+    let mut s = Stack::new("vgg16", SpatialDims::square(224), 3);
+    for (reps, c) in [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)] {
+        for _ in 0..reps {
+            s.conv(c, 3, 1, 1);
+        }
+        s.pool(2, 2, 0);
+    }
+    s.linear(4096).linear(4096).linear(1000);
+    Network::new("vgg16", s.layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 13 convs + 3 FCs.
+        assert_eq!(vgg16().layers.len(), 16);
+    }
+
+    #[test]
+    fn parameter_count_matches_published() {
+        // 138.3M with biases; ~138.3M weights-only is ~138.3 - 0.05M.
+        let p = vgg16().params() as f64 / 1e6;
+        assert!((136.0..140.0).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn mac_count_matches_published() {
+        // ~15.5 GMACs at 224x224.
+        let g = vgg16().macs() as f64 / 1e9;
+        assert!((15.0..16.0).contains(&g), "macs {g}G");
+    }
+
+    #[test]
+    fn fc1_dominates_params() {
+        let net = vgg16();
+        let fc1 = net.layers.iter().find(|l| l.name.ends_with("fc")).unwrap();
+        // 7x7x512 x 4096 = 102.76M.
+        assert_eq!(fc1.params(), 7 * 7 * 512 * 4096);
+    }
+}

@@ -1,0 +1,139 @@
+//! The model-zoo registry: lookup by name and the paper's evaluation set.
+
+use crate::model::network::Network;
+
+/// Names of the nine CNN models of the paper's Figure 4, in paper order.
+pub const PAPER_MODELS: [&str; 9] = [
+    "alexnet",
+    "vgg16",
+    "googlenet",
+    "bninception",
+    "resnet152",
+    "densenet201",
+    "resnext152",
+    "mobilenetv3l",
+    "efficientnetb0",
+];
+
+/// All registered model names (paper set + extensions).
+pub const ALL_MODELS: [&str; 15] = [
+    "alexnet",
+    "vgg16",
+    "googlenet",
+    "bninception",
+    "resnet152",
+    "densenet201",
+    "resnext152",
+    "mobilenetv3l",
+    "efficientnetb0",
+    // extensions / ablation helpers
+    "resnet34",
+    "resnet50",
+    "densenet121",
+    "bertbase-s128",
+    "bertbase-s512",
+    "capsnet",
+];
+
+/// Construct a network by registry name.
+pub fn build(name: &str) -> Option<Network> {
+    Some(match name {
+        "alexnet" => super::alexnet::alexnet(),
+        "vgg16" => super::vgg::vgg16(),
+        "googlenet" => super::inception::googlenet(),
+        "bninception" => super::inception::bn_inception(),
+        "resnet152" => super::resnet::resnet152(),
+        "resnet34" => super::resnet::resnet34(),
+        "resnet50" => super::resnet::resnet50(),
+        "densenet201" => super::densenet::densenet201(),
+        "densenet121" => super::densenet::densenet121(),
+        "resnext152" => super::resnet::resnext152(),
+        "mobilenetv3l" => super::mobilenet::mobilenet_v3_large(),
+        "efficientnetb0" => super::efficientnet::efficientnet_b0(),
+        "bertbase-s128" => super::transformer::bert_base_seq128(),
+        "capsnet" => super::capsnet::capsnet_mnist(),
+        "bertbase-s512" => super::transformer::transformer_encoder(
+            &super::transformer::TransformerSpec {
+                name: "bertbase-s512".into(),
+                layers: 12,
+                d_model: 768,
+                heads: 12,
+                d_ff: 3072,
+                seq_len: 512,
+            },
+        ),
+        _ => return None,
+    })
+}
+
+/// The paper's nine evaluation models.
+pub fn paper_models() -> Vec<Network> {
+    PAPER_MODELS
+        .iter()
+        .map(|n| build(n).expect("registered"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_name_builds() {
+        for name in ALL_MODELS {
+            let net = build(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(net.name, name);
+            assert!(!net.layers.is_empty(), "{name} has no layers");
+            assert!(net.macs() > 0, "{name} has zero MACs");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(build("lenet-9000").is_none());
+    }
+
+    #[test]
+    fn paper_set_is_nine() {
+        let nets = paper_models();
+        assert_eq!(nets.len(), 9);
+    }
+
+    #[test]
+    fn every_layer_shape_is_consistent() {
+        // Each layer's GEMM must be well-formed (no zero dims) and groups
+        // divide channels — catches any table typo in the zoo.
+        for name in ALL_MODELS {
+            let net = build(name).unwrap();
+            for l in &net.layers {
+                let (g, groups) = l.gemm();
+                assert!(groups >= 1, "{name}/{}", l.name);
+                assert!(
+                    g.m > 0 && g.k > 0 && g.n > 0,
+                    "{name}/{} degenerate GEMM {g:?}",
+                    l.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relative_model_sizes_are_sane() {
+        let p = |n: &str| build(n).unwrap().params();
+        // VGG-16 is the largest of the paper set; MobileNet/EfficientNet
+        // the smallest.
+        assert!(p("vgg16") > p("resnet152"));
+        assert!(p("resnet152") > p("densenet201"));
+        assert!(p("densenet201") > p("mobilenetv3l"));
+        let m = |n: &str| build(n).unwrap().macs();
+        // VGG has the most MACs; MobileNetV3 the fewest.
+        for other in PAPER_MODELS {
+            if other != "vgg16" {
+                assert!(m("vgg16") > m(other), "vgg16 vs {other}");
+            }
+            if other != "mobilenetv3l" {
+                assert!(m("mobilenetv3l") < m(other), "mobilenet vs {other}");
+            }
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Pareto dominance primitives: dominance tests, exhaustive front
+//! extraction (exact on the 961-point paper grid), fast non-dominated
+//! sorting and crowding distance (Deb et al. 2002) for NSGA-II.
+
+/// `a` dominates `b` iff a <= b in every objective and a < b in at least
+/// one (all objectives minimized).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the exact Pareto front (non-dominated points). O(n²·d).
+pub fn pareto_front_indices<T: AsRef<[f64]>>(points: &[T]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i != j && dominates(q.as_ref(), p.as_ref()) {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// Fast non-dominated sort: returns fronts of indices, best first.
+pub fn fast_non_dominated_sort<T: AsRef<[f64]>>(points: &[T]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // S_p
+    let mut dom_count = vec![0usize; n]; // n_p
+    let mut fronts: Vec<Vec<usize>> = vec![Vec::new()];
+
+    for p in 0..n {
+        for q in 0..n {
+            if p == q {
+                continue;
+            }
+            if dominates(points[p].as_ref(), points[q].as_ref()) {
+                dominated_by[p].push(q);
+            } else if dominates(points[q].as_ref(), points[p].as_ref()) {
+                dom_count[p] += 1;
+            }
+        }
+        if dom_count[p] == 0 {
+            fronts[0].push(p);
+        }
+    }
+
+    let mut i = 0;
+    while !fronts[i].is_empty() {
+        let mut next = Vec::new();
+        for &p in &fronts[i] {
+            for &q in &dominated_by[p] {
+                dom_count[q] -= 1;
+                if dom_count[q] == 0 {
+                    next.push(q);
+                }
+            }
+        }
+        i += 1;
+        fronts.push(next);
+    }
+    fronts.pop(); // drop the trailing empty front
+    fronts
+}
+
+/// Crowding distances of the given front members (Deb et al. 2002):
+/// boundary points get infinity; interior points the normalized cuboid
+/// perimeter contribution.
+pub fn crowding_distance<T: AsRef<[f64]>>(points: &[T], front: &[usize]) -> Vec<f64> {
+    let m = if front.is_empty() { 0 } else { points[front[0]].as_ref().len() };
+    let mut dist = vec![0.0f64; front.len()];
+    if front.len() <= 2 {
+        for d in &mut dist {
+            *d = f64::INFINITY;
+        }
+        return dist;
+    }
+    for obj in 0..m {
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&a, &b| {
+            points[front[a]].as_ref()[obj]
+                .partial_cmp(&points[front[b]].as_ref()[obj])
+                .unwrap()
+        });
+        let lo = points[front[order[0]]].as_ref()[obj];
+        let hi = points[front[*order.last().unwrap()]].as_ref()[obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[*order.last().unwrap()] = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for w in order.windows(3) {
+            let (prev, cur, next) = (w[0], w[1], w[2]);
+            dist[cur] +=
+                (points[front[next]].as_ref()[obj] - points[front[prev]].as_ref()[obj]) / span;
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0])); // trade-off
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal
+    }
+
+    #[test]
+    fn exhaustive_front() {
+        let pts = vec![
+            vec![1.0, 4.0], // front
+            vec![2.0, 2.0], // front
+            vec![4.0, 1.0], // front
+            vec![3.0, 3.0], // dominated by (2,2)
+            vec![2.0, 2.0], // duplicate of front point (kept: not dominated)
+        ];
+        let f = pareto_front_indices(&pts);
+        assert_eq!(f, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn nds_fronts_are_ordered() {
+        let pts = vec![
+            vec![1.0, 1.0], // front 0 (dominates everything)
+            vec![2.0, 2.0], // front 1
+            vec![3.0, 3.0], // front 3 (dominated by (2,3) too)
+            vec![2.0, 3.0], // front 2 (dominated by (2,2), dominates (3,3))
+        ];
+        let fronts = fast_non_dominated_sort(&pts);
+        assert_eq!(fronts[0], vec![0]);
+        assert_eq!(fronts[1], vec![1]);
+        assert_eq!(fronts[2], vec![3]);
+        assert_eq!(fronts[3], vec![2]);
+    }
+
+    #[test]
+    fn nds_front0_equals_exhaustive() {
+        // Random-ish cloud: front 0 of NDS must equal the exhaustive front.
+        let mut pts = Vec::new();
+        let mut x = 7u64;
+        for _ in 0..200 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let a = ((x >> 33) % 1000) as f64;
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let b = ((x >> 33) % 1000) as f64;
+            pts.push(vec![a, b]);
+        }
+        let mut f0 = fast_non_dominated_sort(&pts)[0].clone();
+        f0.sort_unstable();
+        let mut ex = pareto_front_indices(&pts);
+        ex.sort_unstable();
+        assert_eq!(f0, ex);
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let pts = vec![
+            vec![0.0, 3.0],
+            vec![1.0, 2.0],
+            vec![2.0, 1.0],
+            vec![3.0, 0.0],
+        ];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&pts, &front);
+        assert_eq!(d[0], f64::INFINITY);
+        assert_eq!(d[3], f64::INFINITY);
+        assert!(d[1].is_finite() && d[1] > 0.0);
+        // Interior symmetric points have equal crowding.
+        assert!((d[1] - d[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crowding_tiny_fronts_all_infinite() {
+        let pts = vec![vec![1.0, 2.0], vec![2.0, 1.0]];
+        let d = crowding_distance(&pts, &[0, 1]);
+        assert!(d.iter().all(|x| x.is_infinite()));
+    }
+}

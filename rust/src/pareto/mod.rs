@@ -1,0 +1,8 @@
+//! Multi-objective optimization: dominance primitives, exact front
+//! extraction, and NSGA-II (the algorithm the paper uses for Figures 3/5).
+
+pub mod dominance;
+pub mod nsga2;
+
+pub use dominance::{crowding_distance, dominates, fast_non_dominated_sort, pareto_front_indices};
+pub use nsga2::{nsga2, Nsga2Params, Solution};

@@ -1,0 +1,436 @@
+//! Figure regeneration: one driver per paper artifact (Figures 2–6). Each
+//! `figN_*` function computes the figure's data from scratch through the
+//! sweep/pareto machinery; `write_*` companions serialize CSV + ASCII/PGM
+//! into an output directory. The CLI, the examples and the benches all call
+//! through here, so the paper pipeline has exactly one implementation.
+
+use crate::config::{ArrayConfig, EnergyWeights};
+use crate::nets;
+use crate::pareto::dominance::pareto_front_indices;
+use crate::pareto::nsga2::{nsga2, Nsga2Params, Solution};
+use crate::report::heatmap::Heatmap;
+use crate::report::table::{pareto_csv, pareto_table};
+use crate::sweep::grid::{equal_pe_factorizations, DimGrid};
+use crate::sweep::normalize::RobustObjectives;
+use crate::sweep::runner::{sweep_network, SweepResult};
+use crate::util::csv::{fmt_f64, CsvTable};
+use crate::util::stats::min_max_normalize;
+use std::collections::HashMap;
+use std::io;
+use std::path::Path;
+
+/// Shared sweep context.
+#[derive(Debug, Clone)]
+pub struct FigureContext {
+    pub grid: DimGrid,
+    pub template: ArrayConfig,
+    pub weights: EnergyWeights,
+    pub threads: usize,
+}
+
+impl FigureContext {
+    /// The paper's setup: 16..256 step 8, TPUv1-style provisioning.
+    pub fn paper() -> FigureContext {
+        FigureContext {
+            grid: DimGrid::paper(),
+            template: ArrayConfig::new(1, 1),
+            weights: EnergyWeights::paper(),
+            threads: crate::sweep::runner::default_threads(),
+        }
+    }
+
+    /// A reduced grid for tests and smoke runs.
+    pub fn smoke() -> FigureContext {
+        FigureContext {
+            grid: DimGrid::coarse(16, 64, 16),
+            ..FigureContext::paper()
+        }
+    }
+
+    fn configs(&self) -> Vec<ArrayConfig> {
+        self.grid.configs(&self.template)
+    }
+}
+
+// ---------------------------------------------------------------- Figure 2
+
+/// Figure 2: data-movement-cost and utilization heatmaps for one network.
+#[derive(Debug, Clone)]
+pub struct Fig2Data {
+    pub network: String,
+    pub energy: Heatmap,
+    pub utilization: Heatmap,
+    pub sweep: SweepResult,
+}
+
+pub fn fig2_heatmaps(net_name: &str, ctx: &FigureContext) -> Fig2Data {
+    let net = nets::build(net_name).unwrap_or_else(|| panic!("unknown network {net_name}"));
+    let sweep = sweep_network(&net, &ctx.configs(), &ctx.weights, ctx.threads);
+    let energy = Heatmap::from_grid(
+        format!("{net_name}: data movement cost E"),
+        ctx.grid.heights.clone(),
+        ctx.grid.widths.clone(),
+        sweep.energies(),
+    );
+    let utilization = Heatmap::from_grid(
+        format!("{net_name}: PE utilization"),
+        ctx.grid.heights.clone(),
+        ctx.grid.widths.clone(),
+        sweep.utilizations(),
+    );
+    Fig2Data {
+        network: net_name.to_string(),
+        energy,
+        utilization,
+        sweep,
+    }
+}
+
+pub fn write_fig2(data: &Fig2Data, outdir: &Path) -> io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let base = outdir.join(format!("fig2_{}", data.network));
+    data.energy
+        .to_csv()
+        .write_to(base.with_extension("energy.csv"))?;
+    data.utilization
+        .to_csv()
+        .write_to(base.with_extension("utilization.csv"))?;
+    std::fs::write(base.with_extension("energy.pgm"), data.energy.to_pgm())?;
+    std::fs::write(
+        base.with_extension("txt"),
+        format!("{}\n{}", data.energy.ascii(), data.utilization.ascii()),
+    )
+}
+
+// ---------------------------------------------------------------- Figure 3
+
+/// Figure 3: Pareto sets for (E, cycles) and (1 - utilization, cycles),
+/// via NSGA-II, plus the exhaustive fronts for validation.
+#[derive(Debug, Clone)]
+pub struct Fig3Data {
+    pub network: String,
+    pub energy_front: Vec<Solution>,
+    pub utilization_front: Vec<Solution>,
+    pub exhaustive_energy_front: Vec<Solution>,
+    pub exhaustive_utilization_front: Vec<Solution>,
+}
+
+pub fn fig3_pareto(net_name: &str, ctx: &FigureContext, params: &Nsga2Params) -> Fig3Data {
+    let data = fig2_heatmaps(net_name, ctx);
+    // Lookup table (h, w) -> (energy, cycles, utilization).
+    let lut: HashMap<(usize, usize), (f64, f64, f64)> = data
+        .sweep
+        .points
+        .iter()
+        .map(|p| {
+            (
+                (p.height, p.width),
+                (p.energy, p.metrics.cycles as f64, p.utilization),
+            )
+        })
+        .collect();
+
+    let eval_energy = |h: usize, w: usize| -> Vec<f64> {
+        let (e, c, _) = lut[&(h, w)];
+        vec![e, c]
+    };
+    let eval_util = |h: usize, w: usize| -> Vec<f64> {
+        let (_, c, u) = lut[&(h, w)];
+        vec![1.0 - u, c]
+    };
+
+    let exhaustive = |objs: &dyn Fn(usize, usize) -> Vec<f64>| -> Vec<Solution> {
+        let pairs = ctx.grid.pairs();
+        let points: Vec<Vec<f64>> = pairs.iter().map(|&(h, w)| objs(h, w)).collect();
+        let mut sols: Vec<Solution> = pareto_front_indices(&points)
+            .into_iter()
+            .map(|i| Solution {
+                height: pairs[i].0,
+                width: pairs[i].1,
+                objectives: points[i].clone(),
+            })
+            .collect();
+        sols.sort_by(|a, b| a.objectives[0].partial_cmp(&b.objectives[0]).unwrap());
+        sols
+    };
+
+    Fig3Data {
+        network: net_name.to_string(),
+        energy_front: nsga2(&ctx.grid, params, eval_energy),
+        utilization_front: nsga2(&ctx.grid, params, eval_util),
+        exhaustive_energy_front: exhaustive(&eval_energy),
+        exhaustive_utilization_front: exhaustive(&eval_util),
+    }
+}
+
+pub fn write_fig3(data: &Fig3Data, outdir: &Path) -> io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let base = outdir.join(format!("fig3_{}", data.network));
+    pareto_csv(&["energy", "cycles"], &data.energy_front)
+        .write_to(base.with_extension("energy_pareto.csv"))?;
+    pareto_csv(&["one_minus_util", "cycles"], &data.utilization_front)
+        .write_to(base.with_extension("util_pareto.csv"))?;
+    let txt = format!(
+        "{}\n{}",
+        pareto_table(
+            &format!("{}: Pareto (E vs cycles), NSGA-II", data.network),
+            &["energy", "cycles"],
+            &data.energy_front
+        ),
+        pareto_table(
+            &format!("{}: Pareto (1-utilization vs cycles), NSGA-II", data.network),
+            &["1-util", "cycles"],
+            &data.utilization_front
+        ),
+    );
+    std::fs::write(base.with_extension("txt"), txt)
+}
+
+// ---------------------------------------------------------------- Figure 4
+
+/// Figure 4: data-movement heatmaps for the nine paper models.
+pub fn fig4_heatmaps(ctx: &FigureContext) -> Vec<Fig2Data> {
+    nets::PAPER_MODELS
+        .iter()
+        .map(|name| fig2_heatmaps(name, ctx))
+        .collect()
+}
+
+pub fn write_fig4(data: &[Fig2Data], outdir: &Path) -> io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut combined = String::new();
+    for d in data {
+        let base = outdir.join(format!("fig4_{}", d.network));
+        d.energy.to_csv().write_to(base.with_extension("energy.csv"))?;
+        std::fs::write(base.with_extension("energy.pgm"), d.energy.to_pgm())?;
+        combined.push_str(&d.energy.ascii());
+        combined.push('\n');
+    }
+    std::fs::write(outdir.join("fig4_all.txt"), combined)
+}
+
+// ---------------------------------------------------------------- Figure 5
+
+/// Figure 5: robust Pareto over averaged normalized (E, cycles) across all
+/// paper models.
+#[derive(Debug, Clone)]
+pub struct Fig5Data {
+    pub front: Vec<Solution>,
+    pub exhaustive_front: Vec<Solution>,
+    pub objectives: RobustObjectives,
+}
+
+pub fn fig5_robust(ctx: &FigureContext, params: &Nsga2Params) -> Fig5Data {
+    let configs = ctx.configs();
+    let sweeps: Vec<SweepResult> = nets::paper_models()
+        .iter()
+        .map(|net| sweep_network(net, &configs, &ctx.weights, ctx.threads))
+        .collect();
+    let objectives = RobustObjectives::from_sweeps(&sweeps);
+
+    let lut: HashMap<(usize, usize), (f64, f64)> = (0..objectives.len())
+        .map(|i| {
+            (
+                (objectives.heights[i], objectives.widths[i]),
+                (objectives.avg_norm_energy[i], objectives.avg_norm_cycles[i]),
+            )
+        })
+        .collect();
+    let eval = |h: usize, w: usize| -> Vec<f64> {
+        let (e, c) = lut[&(h, w)];
+        vec![e, c]
+    };
+
+    let pairs = ctx.grid.pairs();
+    let points: Vec<Vec<f64>> = pairs.iter().map(|&(h, w)| eval(h, w)).collect();
+    let mut exhaustive: Vec<Solution> = pareto_front_indices(&points)
+        .into_iter()
+        .map(|i| Solution {
+            height: pairs[i].0,
+            width: pairs[i].1,
+            objectives: points[i].clone(),
+        })
+        .collect();
+    exhaustive.sort_by(|a, b| a.objectives[0].partial_cmp(&b.objectives[0]).unwrap());
+
+    Fig5Data {
+        front: nsga2(&ctx.grid, params, eval),
+        exhaustive_front: exhaustive,
+        objectives,
+    }
+}
+
+pub fn write_fig5(data: &Fig5Data, outdir: &Path) -> io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    pareto_csv(&["avg_norm_energy", "avg_norm_cycles"], &data.front)
+        .write_to(outdir.join("fig5_robust_pareto.csv"))?;
+    let mut all = CsvTable::new(vec!["height", "width", "avg_norm_energy", "avg_norm_cycles"]);
+    for i in 0..data.objectives.len() {
+        all.push(vec![
+            data.objectives.heights[i].to_string(),
+            data.objectives.widths[i].to_string(),
+            fmt_f64(data.objectives.avg_norm_energy[i]),
+            fmt_f64(data.objectives.avg_norm_cycles[i]),
+        ]);
+    }
+    all.write_to(outdir.join("fig5_all_points.csv"))?;
+    std::fs::write(
+        outdir.join("fig5_robust_pareto.txt"),
+        pareto_table(
+            "Robust Pareto: averaged normalized E vs cycles (all models)",
+            &["avg_norm_E", "avg_norm_cycles"],
+            &data.front,
+        ),
+    )
+}
+
+// ---------------------------------------------------------------- Figure 6
+
+/// Figure 6: normalized data-movement cost at equal PE counts across
+/// extreme aspect ratios, per model.
+#[derive(Debug, Clone)]
+pub struct Fig6Data {
+    pub pe_budget: usize,
+    /// (height, width) factorizations in ascending height order.
+    pub shapes: Vec<(usize, usize)>,
+    /// Per model: (name, normalized E per shape aligned with `shapes`).
+    pub series: Vec<(String, Vec<f64>)>,
+    /// Average across models per shape.
+    pub average: Vec<f64>,
+}
+
+pub fn fig6_equal_pe(pe_budget: usize, min_dim: usize, ctx: &FigureContext) -> Fig6Data {
+    let shapes = equal_pe_factorizations(pe_budget, min_dim);
+    let configs: Vec<ArrayConfig> = shapes
+        .iter()
+        .map(|&(h, w)| {
+            let mut c = ctx.template.clone();
+            c.height = h;
+            c.width = w;
+            c
+        })
+        .collect();
+
+    let mut series = Vec::new();
+    let mut avg = vec![0.0; shapes.len()];
+    let models = nets::paper_models();
+    for net in &models {
+        let sweep = sweep_network(net, &configs, &ctx.weights, ctx.threads);
+        let norm = min_max_normalize(&sweep.energies());
+        for (a, n) in avg.iter_mut().zip(&norm) {
+            *a += n;
+        }
+        series.push((net.name.clone(), norm));
+    }
+    for a in &mut avg {
+        *a /= models.len() as f64;
+    }
+
+    Fig6Data {
+        pe_budget,
+        shapes,
+        series,
+        average: avg,
+    }
+}
+
+pub fn write_fig6(data: &[Fig6Data], outdir: &Path) -> io::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let mut t = CsvTable::new(vec!["pe_budget", "height", "width", "model", "norm_energy"]);
+    let mut txt = String::new();
+    for d in data {
+        txt.push_str(&format!("PE budget {}\n", d.pe_budget));
+        txt.push_str(&format!("{:>8} {:>8} {:>12}\n", "height", "width", "avg_norm_E"));
+        for (si, &(h, w)) in d.shapes.iter().enumerate() {
+            for (name, norm) in &d.series {
+                t.push(vec![
+                    d.pe_budget.to_string(),
+                    h.to_string(),
+                    w.to_string(),
+                    name.clone(),
+                    fmt_f64(norm[si]),
+                ]);
+            }
+            txt.push_str(&format!(
+                "{:>8} {:>8} {:>12}\n",
+                h,
+                w,
+                fmt_f64(d.average[si])
+            ));
+        }
+        txt.push('\n');
+    }
+    t.write_to(outdir.join("fig6_equal_pe.csv"))?;
+    std::fs::write(outdir.join("fig6_equal_pe.txt"), txt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_smoke_produces_dense_heatmaps() {
+        let ctx = FigureContext::smoke();
+        let d = fig2_heatmaps("alexnet", &ctx);
+        assert_eq!(d.energy.row_labels.len(), 4);
+        assert_eq!(d.sweep.points.len(), 16);
+        // Energy positive everywhere; utilization within (0, 1].
+        for p in &d.sweep.points {
+            assert!(p.energy > 0.0);
+            assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn fig3_nsga2_front_is_subset_of_exhaustive() {
+        let ctx = FigureContext::smoke();
+        let params = Nsga2Params {
+            population: 24,
+            generations: 30,
+            ..Default::default()
+        };
+        let d = fig3_pareto("alexnet", &ctx, &params);
+        let exact: std::collections::HashSet<(usize, usize)> = d
+            .exhaustive_energy_front
+            .iter()
+            .map(|s| (s.height, s.width))
+            .collect();
+        for s in &d.energy_front {
+            assert!(
+                exact.contains(&(s.height, s.width)),
+                "NSGA-II returned dominated point ({}, {})",
+                s.height,
+                s.width
+            );
+        }
+        assert!(!d.energy_front.is_empty());
+        assert!(!d.utilization_front.is_empty());
+    }
+
+    #[test]
+    fn fig6_shapes_and_series_align() {
+        let mut ctx = FigureContext::smoke();
+        ctx.threads = 2;
+        let d = fig6_equal_pe(4096, 16, &ctx);
+        assert_eq!(d.series.len(), 9);
+        for (_, s) in &d.series {
+            assert_eq!(s.len(), d.shapes.len());
+        }
+        assert_eq!(d.average.len(), d.shapes.len());
+        for &a in &d.average {
+            assert!((0.0..=1.0).contains(&a));
+        }
+    }
+
+    #[test]
+    fn writers_create_files() {
+        let ctx = FigureContext::smoke();
+        let tmp = std::env::temp_dir().join("camuy_fig_test");
+        let _ = std::fs::remove_dir_all(&tmp);
+        let d2 = fig2_heatmaps("alexnet", &ctx);
+        write_fig2(&d2, &tmp).unwrap();
+        assert!(tmp.join("fig2_alexnet.energy.csv").exists());
+        assert!(tmp.join("fig2_alexnet.txt").exists());
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

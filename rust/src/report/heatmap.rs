@@ -1,0 +1,177 @@
+//! Heatmap rendering for the Figure 2/4 style grids: ASCII shading for the
+//! terminal, CSV for plotting, and PGM (portable graymap) as an
+//! image-without-dependencies format.
+
+use crate::util::csv::{fmt_f64, CsvTable};
+use crate::util::stats::min_max_normalize;
+
+/// A dense (height x width) grid of values, heights as rows.
+#[derive(Debug, Clone)]
+pub struct Heatmap {
+    pub title: String,
+    pub row_labels: Vec<usize>, // heights
+    pub col_labels: Vec<usize>, // widths
+    values: Vec<f64>,           // row-major
+}
+
+impl Heatmap {
+    /// Build from sweep output in height-major pair order (the order
+    /// `DimGrid::pairs` produces).
+    pub fn from_grid(
+        title: impl Into<String>,
+        heights: Vec<usize>,
+        widths: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Heatmap {
+        assert_eq!(values.len(), heights.len() * widths.len());
+        Heatmap {
+            title: title.into(),
+            row_labels: heights,
+            col_labels: widths,
+            values,
+        }
+    }
+
+    pub fn get(&self, row: usize, col: usize) -> f64 {
+        self.values[row * self.col_labels.len() + col]
+    }
+
+    /// Minimum cell with its (height, width) labels.
+    pub fn min_cell(&self) -> (usize, usize, f64) {
+        let (mut best, mut bi) = (f64::INFINITY, 0);
+        for (i, &v) in self.values.iter().enumerate() {
+            if v < best {
+                best = v;
+                bi = i;
+            }
+        }
+        let r = bi / self.col_labels.len();
+        let c = bi % self.col_labels.len();
+        (self.row_labels[r], self.col_labels[c], best)
+    }
+
+    /// ASCII shading: low values light, high values dark (the paper's
+    /// green-to-red spectrum collapsed to grayscale glyphs).
+    pub fn ascii(&self) -> String {
+        const SHADES: &[u8] = b" .:-=+*#%@";
+        let norm = min_max_normalize(&self.values);
+        let mut out = String::new();
+        out.push_str(&format!("{} (rows: height, cols: width)\n", self.title));
+        // Column header (sparse to stay readable).
+        out.push_str("      ");
+        for (c, &w) in self.col_labels.iter().enumerate() {
+            if c % 5 == 0 {
+                out.push_str(&format!("{w:<5}"));
+            }
+        }
+        out.push('\n');
+        for (r, &h) in self.row_labels.iter().enumerate() {
+            out.push_str(&format!("{h:>5} "));
+            for c in 0..self.col_labels.len() {
+                let v = norm[r * self.col_labels.len() + c];
+                let idx = ((v * (SHADES.len() - 1) as f64).round() as usize).min(SHADES.len() - 1);
+                out.push(SHADES[idx] as char);
+            }
+            out.push('\n');
+        }
+        let (bh, bw, bv) = self.min_cell();
+        out.push_str(&format!("min = {} at ({bh}, {bw})\n", fmt_f64(bv)));
+        out
+    }
+
+    /// Long-format CSV: height,width,value.
+    pub fn to_csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(vec!["height", "width", "value"]);
+        for (r, &h) in self.row_labels.iter().enumerate() {
+            for (c, &w) in self.col_labels.iter().enumerate() {
+                t.push(vec![h.to_string(), w.to_string(), fmt_f64(self.get(r, c))]);
+            }
+        }
+        t
+    }
+
+    /// PGM (P2) grayscale image, low = white, high = black, one pixel per
+    /// cell.
+    pub fn to_pgm(&self) -> String {
+        let norm = min_max_normalize(&self.values);
+        let mut out = format!(
+            "P2\n# {}\n{} {}\n255\n",
+            self.title,
+            self.col_labels.len(),
+            self.row_labels.len()
+        );
+        for r in 0..self.row_labels.len() {
+            let row: Vec<String> = (0..self.col_labels.len())
+                .map(|c| {
+                    let v = norm[r * self.col_labels.len() + c];
+                    format!("{}", 255 - (v * 255.0).round() as u32)
+                })
+                .collect();
+            out.push_str(&row.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Heatmap {
+        Heatmap::from_grid(
+            "t",
+            vec![16, 24],
+            vec![16, 24, 32],
+            vec![6.0, 5.0, 4.0, 3.0, 2.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let h = sample();
+        assert_eq!(h.get(0, 0), 6.0);
+        assert_eq!(h.get(1, 2), 1.0);
+    }
+
+    #[test]
+    fn min_cell_labels() {
+        let (height, width, v) = sample().min_cell();
+        assert_eq!((height, width, v), (24, 32, 1.0));
+    }
+
+    #[test]
+    fn ascii_contains_labels_and_min() {
+        let s = sample().ascii();
+        assert!(s.contains("   16 "));
+        assert!(s.contains("min = 1 at (24, 32)"));
+        // Lightest glyph for the min, darkest for the max.
+        assert!(s.contains('@'));
+        assert!(s.contains(' '));
+    }
+
+    #[test]
+    fn csv_long_format() {
+        let t = sample().to_csv();
+        assert_eq!(t.rows.len(), 6);
+        assert_eq!(t.rows[0], vec!["16", "16", "6"]);
+        assert_eq!(t.rows[5], vec!["24", "32", "1"]);
+    }
+
+    #[test]
+    fn pgm_shape_and_range() {
+        let p = sample().to_pgm();
+        assert!(p.starts_with("P2\n"));
+        assert!(p.contains("3 2\n255"));
+        // Min value maps to white (255), max to black (0).
+        assert!(p.contains("255"));
+        let last_row = p.lines().last().unwrap();
+        assert!(last_row.ends_with("255"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let _ = Heatmap::from_grid("t", vec![1], vec![1, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Plain-text and CSV tables for Pareto sets and per-layer breakdowns.
+
+use crate::pareto::nsga2::Solution;
+use crate::util::csv::{fmt_f64, CsvTable};
+
+/// Render a Pareto set as a text table, annotated (height, width) like the
+/// paper's figures.
+pub fn pareto_table(title: &str, objective_names: &[&str], sols: &[Solution]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("{:>8} {:>8}", "height", "width"));
+    for n in objective_names {
+        out.push_str(&format!(" {n:>16}"));
+    }
+    out.push('\n');
+    for s in sols {
+        out.push_str(&format!("{:>8} {:>8}", s.height, s.width));
+        for v in &s.objectives {
+            out.push_str(&format!(" {:>16}", fmt_f64(*v)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV version of a Pareto set.
+pub fn pareto_csv(objective_names: &[&str], sols: &[Solution]) -> CsvTable {
+    let mut header = vec!["height".to_string(), "width".to_string()];
+    header.extend(objective_names.iter().map(|s| s.to_string()));
+    let mut t = CsvTable::new(header);
+    for s in sols {
+        let mut row = vec![s.height.to_string(), s.width.to_string()];
+        row.extend(s.objectives.iter().map(|v| fmt_f64(*v)));
+        t.push(row);
+    }
+    t
+}
+
+/// A generic aligned key/value listing for summary blocks.
+pub fn kv_block(title: &str, pairs: &[(&str, String)]) -> String {
+    let width = pairs.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (k, v) in pairs {
+        out.push_str(&format!("  {k:<width$} : {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sols() -> Vec<Solution> {
+        vec![
+            Solution {
+                height: 128,
+                width: 16,
+                objectives: vec![1.5, 2.0],
+            },
+            Solution {
+                height: 64,
+                width: 32,
+                objectives: vec![2.5, 1.0],
+            },
+        ]
+    }
+
+    #[test]
+    fn table_renders_annotations() {
+        let t = pareto_table("Pareto", &["energy", "cycles"], &sols());
+        assert!(t.contains("128"));
+        assert!(t.contains("energy"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let c = pareto_csv(&["e", "c"], &sols());
+        assert_eq!(c.header, vec!["height", "width", "e", "c"]);
+        assert_eq!(c.rows.len(), 2);
+    }
+
+    #[test]
+    fn kv_alignment() {
+        let s = kv_block("Summary", &[("a", "1".into()), ("longer", "2".into())]);
+        assert!(s.contains("a      : 1"));
+        assert!(s.contains("longer : 2"));
+    }
+}

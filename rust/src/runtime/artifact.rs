@@ -1,0 +1,134 @@
+//! The artifact manifest written by `python/compile/aot.py`: names, files,
+//! kinds and operand shapes of every AOT-compiled computation.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    /// Input shapes, outermost first.
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_str)
+            .context("manifest missing 'format'")?;
+        anyhow::ensure!(format == "hlo-text", "unsupported artifact format '{format}'");
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .context("artifact missing file")?;
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("artifact missing inputs")?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .context("shape not an array")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactEntry {
+                name,
+                file: dir.join(file),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                inputs,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// Default artifact directory: `$CAMUY_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("CAMUY_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": [
+        {"name": "gemm_quickstart", "file": "gemm_quickstart.hlo.txt",
+         "kind": "gemm", "dims": {"m": 128, "k": 128, "n": 128},
+         "inputs": [[128, 128], [128, 128]], "hlo_bytes": 1234}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("gemm_quickstart").unwrap();
+        assert_eq!(a.kind, "gemm");
+        assert_eq!(a.inputs, vec![vec![128, 128], vec![128, 128]]);
+        assert_eq!(a.file, Path::new("/tmp/a/gemm_quickstart.hlo.txt"));
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+    }
+}

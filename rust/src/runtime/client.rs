@@ -1,0 +1,88 @@
+//! PJRT bridge: load AOT-compiled HLO-text artifacts, compile them once on
+//! the CPU PJRT client, and execute them from the Rust hot path. Python is
+//! never invoked here — the artifacts are self-contained.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! (text interchange — the 0.5.1 xla_extension rejects jax>=0.5 serialized
+//! protos) → `XlaComputation::from_proto` → `client.compile` → `execute`,
+//! unwrapping the 1-tuple the exporter emits.
+
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU runtime holding compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled artifact ready to run.
+pub struct CompiledArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, name: &str, path: &Path) -> Result<CompiledArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        Ok(CompiledArtifact {
+            exe,
+            name: name.to_string(),
+        })
+    }
+}
+
+impl CompiledArtifact {
+    /// Execute with rank-N f32 inputs given as (shape, data) pairs; returns
+    /// the flat f32 payload of the single tuple output.
+    pub fn run_raw(&self, inputs: &[(&[i64], &[f32])]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(shape, data)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(shape)
+                    .with_context(|| format!("reshape input to {shape:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{}'", self.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a 2-input GEMM-shaped artifact on matrices.
+    pub fn run_gemm(&self, a: &Matrix, w: &Matrix) -> Result<Matrix> {
+        let out = self.run_raw(&[
+            (&[a.rows as i64, a.cols as i64], a.data()),
+            (&[w.rows as i64, w.cols as i64], w.data()),
+        ])?;
+        anyhow::ensure!(
+            out.len() == a.rows * w.cols,
+            "output length {} != {}x{}",
+            out.len(),
+            a.rows,
+            w.cols
+        );
+        Ok(Matrix::from_vec(a.rows, w.cols, out))
+    }
+}

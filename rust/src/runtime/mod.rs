@@ -1,0 +1,8 @@
+//! PJRT runtime: loads and executes the HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`). Python never runs here.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{default_artifact_dir, ArtifactEntry, Manifest};
+pub use client::{CompiledArtifact, PjrtRuntime};

@@ -1,0 +1,130 @@
+//! Configuration grids for design-space sweeps.
+
+use crate::config::ArrayConfig;
+
+/// A rectangular (height, width) grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DimGrid {
+    pub heights: Vec<usize>,
+    pub widths: Vec<usize>,
+}
+
+impl DimGrid {
+    /// The paper's evaluation grid: "all possible width and height
+    /// combinations from 16 to 256 in increments of 8, for a total of 961
+    /// possible dimensions" (Section 4.1).
+    pub fn paper() -> DimGrid {
+        let axis: Vec<usize> = (16..=256).step_by(8).collect();
+        DimGrid {
+            heights: axis.clone(),
+            widths: axis,
+        }
+    }
+
+    /// A smaller grid for quick runs and tests.
+    pub fn coarse(lo: usize, hi: usize, step: usize) -> DimGrid {
+        let axis: Vec<usize> = (lo..=hi).step_by(step).collect();
+        DimGrid {
+            heights: axis.clone(),
+            widths: axis,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heights.len() * self.widths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All (height, width) pairs, row-major (height-major).
+    pub fn pairs(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.len());
+        for &h in &self.heights {
+            for &w in &self.widths {
+                out.push((h, w));
+            }
+        }
+        out
+    }
+
+    /// Configurations built from a template (geometry substituted).
+    pub fn configs(&self, template: &ArrayConfig) -> Vec<ArrayConfig> {
+        self.pairs()
+            .into_iter()
+            .map(|(h, w)| {
+                let mut c = template.clone();
+                c.height = h;
+                c.width = w;
+                c
+            })
+            .collect()
+    }
+}
+
+/// The equal-PE-count spaces of Figure 6 (the SCALE-SIM aspect-ratio
+/// study): all power-of-two (h, w) factorizations of each PE budget.
+pub fn equal_pe_factorizations(pe_count: usize, min_dim: usize) -> Vec<(usize, usize)> {
+    assert!(pe_count.is_power_of_two(), "PE budget must be a power of two");
+    let mut out = Vec::new();
+    let mut h = min_dim;
+    while h <= pe_count / min_dim {
+        let w = pe_count / h;
+        out.push((h, w));
+        h *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_is_961() {
+        let g = DimGrid::paper();
+        assert_eq!(g.len(), 961);
+        assert_eq!(g.heights.len(), 31);
+        assert_eq!(g.heights[0], 16);
+        assert_eq!(*g.heights.last().unwrap(), 256);
+        assert_eq!(g.pairs().len(), 961);
+    }
+
+    #[test]
+    fn pairs_are_height_major() {
+        let g = DimGrid::coarse(2, 4, 2);
+        assert_eq!(g.pairs(), vec![(2, 2), (2, 4), (4, 2), (4, 4)]);
+    }
+
+    #[test]
+    fn configs_substitute_geometry_only() {
+        let template = ArrayConfig::new(1, 1).with_acc_capacity(2048).with_bits(16, 8, 32);
+        let cfgs = DimGrid::coarse(8, 16, 8).configs(&template);
+        assert_eq!(cfgs.len(), 4);
+        for c in &cfgs {
+            assert_eq!(c.acc_capacity, 2048);
+            assert_eq!(c.weight_bits, 16);
+        }
+        assert_eq!((cfgs[1].height, cfgs[1].width), (8, 16));
+    }
+
+    #[test]
+    fn equal_pe_space() {
+        let f = equal_pe_factorizations(16384, 8);
+        // 8x2048 .. 2048x8: 9 entries.
+        assert_eq!(f.len(), 9);
+        assert!(f.contains(&(128, 128)));
+        assert!(f.contains(&(8, 2048)));
+        assert!(f.contains(&(2048, 8)));
+        for (h, w) in f {
+            assert_eq!(h * w, 16384);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn equal_pe_rejects_non_pow2() {
+        equal_pe_factorizations(1000, 8);
+    }
+}

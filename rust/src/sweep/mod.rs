@@ -1,0 +1,11 @@
+//! Design-space exploration: configuration grids, the parallel sweep
+//! engine, cross-model normalization (Section 5) and the equal-PE-count
+//! aspect-ratio space (Figure 6).
+
+pub mod grid;
+pub mod normalize;
+pub mod runner;
+
+pub use grid::{equal_pe_factorizations, DimGrid};
+pub use normalize::RobustObjectives;
+pub use runner::{default_threads, sweep_network, sweep_workload, SweepPoint, SweepResult, Workload};

@@ -1,0 +1,118 @@
+//! Cross-model aggregation for the robustness analysis (paper Section 5):
+//! each model's metric is min-max normalized over the grid, then averaged
+//! across models, so no single large network dominates the objective.
+
+use crate::sweep::runner::SweepResult;
+use crate::util::stats::min_max_normalize;
+
+/// Averaged normalized objectives per grid point, aligned with the
+/// configuration order shared by all input sweeps.
+#[derive(Debug, Clone)]
+pub struct RobustObjectives {
+    pub heights: Vec<usize>,
+    pub widths: Vec<usize>,
+    /// Mean over models of min-max-normalized energy.
+    pub avg_norm_energy: Vec<f64>,
+    /// Mean over models of min-max-normalized cycle count.
+    pub avg_norm_cycles: Vec<f64>,
+}
+
+impl RobustObjectives {
+    /// Combine per-model sweeps (all over the identical config sequence).
+    pub fn from_sweeps(sweeps: &[SweepResult]) -> RobustObjectives {
+        assert!(!sweeps.is_empty(), "no sweeps to aggregate");
+        let n = sweeps[0].points.len();
+        for s in sweeps {
+            assert_eq!(s.points.len(), n, "sweeps must share the grid");
+            for (a, b) in s.points.iter().zip(&sweeps[0].points) {
+                assert_eq!(
+                    (a.height, a.width),
+                    (b.height, b.width),
+                    "sweeps must share the config order"
+                );
+            }
+        }
+
+        let mut avg_e = vec![0.0; n];
+        let mut avg_c = vec![0.0; n];
+        for s in sweeps {
+            let ne = min_max_normalize(&s.energies());
+            let nc = min_max_normalize(&s.cycles());
+            for i in 0..n {
+                avg_e[i] += ne[i];
+                avg_c[i] += nc[i];
+            }
+        }
+        let k = sweeps.len() as f64;
+        for i in 0..n {
+            avg_e[i] /= k;
+            avg_c[i] /= k;
+        }
+
+        RobustObjectives {
+            heights: sweeps[0].points.iter().map(|p| p.height).collect(),
+            widths: sweeps[0].points.iter().map(|p| p.width).collect(),
+            avg_norm_energy: avg_e,
+            avg_norm_cycles: avg_c,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heights.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrayConfig, EnergyWeights};
+    use crate::model::layer::{Layer, SpatialDims};
+    use crate::model::network::Network;
+    use crate::sweep::grid::DimGrid;
+    use crate::sweep::runner::sweep_network;
+
+    fn sweeps() -> Vec<SweepResult> {
+        let cfgs = DimGrid::coarse(8, 32, 8).configs(&ArrayConfig::new(1, 1));
+        let nets = [
+            Network::new(
+                "a",
+                vec![Layer::conv("c", SpatialDims::square(14), 16, 32, 3, 1, 1, 1)],
+            ),
+            Network::new(
+                "b",
+                vec![Layer::conv("c", SpatialDims::square(28), 64, 64, 1, 1, 0, 1)],
+            ),
+        ];
+        nets.iter()
+            .map(|n| sweep_network(n, &cfgs, &EnergyWeights::paper(), 2))
+            .collect()
+    }
+
+    #[test]
+    fn averaged_values_in_unit_interval() {
+        let r = RobustObjectives::from_sweeps(&sweeps());
+        assert_eq!(r.len(), 16);
+        for i in 0..r.len() {
+            assert!((0.0..=1.0).contains(&r.avg_norm_energy[i]));
+            assert!((0.0..=1.0).contains(&r.avg_norm_cycles[i]));
+        }
+    }
+
+    #[test]
+    fn single_model_reduces_to_normalization() {
+        let all = sweeps();
+        let one = RobustObjectives::from_sweeps(&all[..1]);
+        let ne = min_max_normalize(&all[0].energies());
+        assert_eq!(one.avg_norm_energy, ne);
+    }
+
+    #[test]
+    #[should_panic(expected = "no sweeps")]
+    fn empty_input_panics() {
+        let _ = RobustObjectives::from_sweeps(&[]);
+    }
+}

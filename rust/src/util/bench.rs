@@ -1,0 +1,119 @@
+//! A tiny benchmark harness (the offline environment has no criterion):
+//! warmup + timed iterations, robust summary statistics, and the
+//! criterion-style one-line report the `cargo bench` targets print.
+
+use crate::util::stats::Summary;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Configuration for one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 2,
+            measure_iters: 10,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Scale iteration counts for long-running benches.
+    pub fn slow() -> BenchOpts {
+        BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 3,
+        }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub seconds: Summary,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} /iter  (min {:>10}, p95 {:>10}, n={})",
+            self.name,
+            fmt_duration(self.seconds.mean),
+            fmt_duration(self.seconds.min),
+            fmt_duration(self.seconds.p95),
+            self.seconds.n
+        )
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Measure `f`, printing a criterion-style line. The closure's return value
+/// is black-boxed so the work is not optimized away.
+pub fn bench<T>(name: &str, opts: &BenchOpts, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(opts.measure_iters);
+    for _ in 0..opts.measure_iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        seconds: Summary::of(&samples).expect("non-empty"),
+    };
+    println!("{}", result.report_line());
+    result
+}
+
+/// Throughput helper: items per second from a result.
+pub fn throughput(result: &BenchResult, items: u64) -> f64 {
+    items as f64 / result.seconds.mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench(
+            "spin",
+            &BenchOpts {
+                warmup_iters: 1,
+                measure_iters: 5,
+            },
+            || (0..10_000u64).sum::<u64>(),
+        );
+        assert_eq!(r.seconds.n, 5);
+        assert!(r.seconds.mean > 0.0);
+        assert!(throughput(&r, 10_000) > 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert_eq!(fmt_duration(0.0015), "1.500 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_duration(3e-9), "3.0 ns");
+    }
+}

@@ -1,0 +1,84 @@
+//! A minimal `log`-crate backend writing to stderr with wall-clock-relative
+//! timestamps. Installed once by the CLI / examples via [`init`].
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>8.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the stderr logger at the given verbosity. Idempotent.
+pub fn init(level: LevelFilter) {
+    let logger = LOGGER.get_or_init(|| StderrLogger {
+        start: Instant::now(),
+    });
+    // set_logger fails if already installed — that is fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+/// Parse `-q`/`-v`/`-vv` style verbosity into a level filter.
+pub fn level_from_verbosity(quiet: bool, verbose: u8) -> LevelFilter {
+    if quiet {
+        LevelFilter::Error
+    } else {
+        match verbose {
+            0 => LevelFilter::Info,
+            1 => LevelFilter::Debug,
+            _ => LevelFilter::Trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verbosity_mapping() {
+        assert_eq!(level_from_verbosity(true, 5), LevelFilter::Error);
+        assert_eq!(level_from_verbosity(false, 0), LevelFilter::Info);
+        assert_eq!(level_from_verbosity(false, 1), LevelFilter::Debug);
+        assert_eq!(level_from_verbosity(false, 2), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init(LevelFilter::Info);
+        init(LevelFilter::Debug);
+        log::info!("logging smoke test");
+    }
+}

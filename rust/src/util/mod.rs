@@ -1,0 +1,59 @@
+//! Shared infrastructure: deterministic PRNG, statistics, JSON/CSV
+//! serialization, logging, and the property-test mini-harness.
+//!
+//! These exist in-tree because the build environment is fully offline and
+//! only the `xla` crate's dependency closure is vendored (see DESIGN.md §6).
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+
+/// Integer ceiling division. Used throughout the tiling math.
+#[inline]
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Human-readable large-number formatting (`12_345_678` → `"12.35M"`).
+pub fn human_count(x: u64) -> String {
+    let xf = x as f64;
+    if xf >= 1e12 {
+        format!("{:.2}T", xf / 1e12)
+    } else if xf >= 1e9 {
+        format!("{:.2}G", xf / 1e9)
+    } else if xf >= 1e6 {
+        format!("{:.2}M", xf / 1e6)
+    } else if xf >= 1e3 {
+        format!("{:.2}k", xf / 1e3)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(8, 4), 2);
+    }
+
+    #[test]
+    fn human_count_scales() {
+        assert_eq!(human_count(17), "17");
+        assert_eq!(human_count(1_500), "1.50k");
+        assert_eq!(human_count(2_000_000), "2.00M");
+        assert_eq!(human_count(3_100_000_000), "3.10G");
+        assert_eq!(human_count(4_200_000_000_000), "4.20T");
+    }
+}

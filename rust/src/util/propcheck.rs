@@ -1,0 +1,156 @@
+//! A small property-based testing harness (the offline build has no
+//! proptest). Tests draw cases from a deterministic [`Rng`], run a checker
+//! returning `Result<(), String>`, and on failure attempt greedy shrinking
+//! of the failing case before reporting.
+//!
+//! Usage:
+//! ```ignore
+//! check(1000, 0xC0FFEE, |rng| Case::random(rng), |case| {
+//!     if bad(case) { Err(format!("violated: {case:?}")) } else { Ok(()) }
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+use std::fmt::Debug;
+
+/// A generated case that knows how to propose smaller versions of itself.
+pub trait Shrink: Sized + Clone {
+    /// Candidate strictly-smaller cases, most aggressive first. Default: none.
+    fn shrink_candidates(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+/// Run `iters` random trials. Panics with the (shrunk) counterexample and
+/// the reproducing seed on failure.
+pub fn check<T, G, F>(iters: usize, seed: u64, mut generate: G, mut property: F)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    F: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case = generate(&mut rng);
+        if let Err(msg) = property(&case) {
+            let (min_case, min_msg, steps) = shrink_loop(case, msg, &mut property);
+            panic!(
+                "property failed (seed={seed}, iter={i}, shrink_steps={steps}):\n  \
+                 case: {min_case:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, F>(mut case: T, mut msg: String, property: &mut F) -> (T, String, usize)
+where
+    T: Shrink + Debug,
+    F: FnMut(&T) -> Result<(), String>,
+{
+    let mut steps = 0;
+    // Bounded greedy descent: take the first still-failing candidate.
+    'outer: for _ in 0..10_000 {
+        for cand in case.shrink_candidates() {
+            if let Err(m) = property(&cand) {
+                case = cand;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (case, msg, steps)
+}
+
+/// Shrinking helper for usize fields: halving ladder toward `lo`.
+pub fn shrink_usize(x: usize, lo: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > lo {
+        out.push(lo);
+        let mid = lo + (x - lo) / 2;
+        if mid != lo && mid != x {
+            out.push(mid);
+        }
+        if x - 1 != lo && x - 1 != mid {
+            out.push(x - 1);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone)]
+    struct Pair {
+        a: usize,
+        b: usize,
+    }
+
+    impl Shrink for Pair {
+        fn shrink_candidates(&self) -> Vec<Self> {
+            let mut cands = Vec::new();
+            for a in shrink_usize(self.a, 0) {
+                cands.push(Pair { a, b: self.b });
+            }
+            for b in shrink_usize(self.b, 0) {
+                cands.push(Pair { a: self.a, b });
+            }
+            cands
+        }
+    }
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            500,
+            1,
+            |rng| Pair {
+                a: rng.range_usize(0, 100),
+                b: rng.range_usize(0, 100),
+            },
+            |p| {
+                if p.a + p.b >= p.a {
+                    Ok(())
+                } else {
+                    Err("impossible".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                500,
+                2,
+                |rng| Pair {
+                    a: rng.range_usize(0, 1000),
+                    b: rng.range_usize(0, 1000),
+                },
+                |p| {
+                    // Fails whenever a >= 100; minimal counterexample a=100.
+                    if p.a < 100 {
+                        Ok(())
+                    } else {
+                        Err(format!("a too big: {}", p.a))
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The greedy shrinker must land on the boundary case a=100.
+        assert!(msg.contains("a: 100"), "unshrunk failure: {msg}");
+    }
+
+    #[test]
+    fn shrink_usize_ladder() {
+        assert_eq!(shrink_usize(0, 0), Vec::<usize>::new());
+        assert_eq!(shrink_usize(1, 0), vec![0]);
+        let c = shrink_usize(100, 1);
+        assert!(c.contains(&1) && c.contains(&50) && c.contains(&99));
+    }
+}

@@ -1,0 +1,134 @@
+//! CLI integration: every subcommand runs end to end through
+//! `camuy::cli::run` on reduced grids, writing into temp directories.
+
+use std::path::PathBuf;
+
+fn run(args: &[&str]) -> i32 {
+    let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    camuy::cli::run(&argv)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("camuy_cli_{name}"));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+#[test]
+fn zoo_lists_models() {
+    assert_eq!(run(&["zoo"]), 0);
+}
+
+#[test]
+fn help_and_errors() {
+    assert_eq!(run(&["--help"]), 0);
+    assert_eq!(run(&[]), 2);
+    assert_eq!(run(&["frobnicate"]), 2);
+    assert_eq!(run(&["sweep"]), 1); // missing --net
+    assert_eq!(run(&["emulate", "--net", "nope"]), 1);
+    assert_eq!(run(&["emulate", "--net", "alexnet", "--height", "0"]), 1);
+    assert_eq!(run(&["sweep", "--net", "alexnet", "--grid", "bogus"]), 1);
+}
+
+#[test]
+fn emulate_variants() {
+    assert_eq!(run(&["emulate", "--net", "alexnet", "--quiet"]), 0);
+    assert_eq!(
+        run(&["emulate", "--net", "alexnet", "--json", "--quiet"]),
+        0
+    );
+    assert_eq!(
+        run(&["emulate", "--net", "alexnet", "--per-layer", "--batch", "4", "--quiet"]),
+        0
+    );
+    assert_eq!(
+        run(&["emulate", "--net", "mobilenetv3l", "--arrays", "4", "--quiet"]),
+        0
+    );
+    assert_eq!(
+        run(&["emulate", "--net", "alexnet", "--dataflow", "os", "--quiet"]),
+        0
+    );
+    assert_eq!(
+        run(&["emulate", "--net", "alexnet", "--energy-model", "dally14nm", "--quiet"]),
+        0
+    );
+}
+
+#[test]
+fn sweep_writes_outputs() {
+    let out = tmp("sweep");
+    assert_eq!(
+        run(&[
+            "sweep", "--net", "alexnet", "--grid", "smoke", "--out",
+            out.to_str().unwrap(), "--quiet"
+        ]),
+        0
+    );
+    assert!(out.join("fig2_alexnet.energy.csv").exists());
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn pareto_and_robust_and_equal_pe() {
+    let out = tmp("pareto");
+    assert_eq!(
+        run(&[
+            "pareto", "--net", "alexnet", "--grid", "smoke", "--out",
+            out.to_str().unwrap(), "--quiet"
+        ]),
+        0
+    );
+    assert!(out.join("fig3_alexnet.energy_pareto.csv").exists());
+
+    assert_eq!(
+        run(&["robust", "--grid", "smoke", "--out", out.to_str().unwrap(), "--quiet"]),
+        0
+    );
+    assert!(out.join("fig5_robust_pareto.csv").exists());
+
+    assert_eq!(
+        run(&[
+            "equal-pe", "--grid", "smoke", "--budget", "4096", "--out",
+            out.to_str().unwrap(), "--quiet"
+        ]),
+        0
+    );
+    assert!(out.join("fig6_equal_pe.csv").exists());
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn figures_produces_the_full_set_on_smoke_grid() {
+    let out = tmp("figures");
+    assert_eq!(
+        run(&["figures", "--grid", "smoke", "--out", out.to_str().unwrap(), "--quiet"]),
+        0
+    );
+    for f in [
+        "fig2_resnet152.energy.csv",
+        "fig3_resnet152.energy_pareto.csv",
+        "fig4_all.txt",
+        "fig5_robust_pareto.csv",
+        "fig6_equal_pe.csv",
+    ] {
+        assert!(out.join(f).exists(), "{f} missing");
+    }
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn memory_reports_spills() {
+    assert_eq!(run(&["memory", "--net", "vgg16", "--quiet"]), 0);
+    assert_eq!(run(&["memory", "--net", "resnet152", "--quiet"]), 0);
+    assert_eq!(run(&["memory", "--quiet"]), 1); // --net required
+}
+
+#[test]
+fn verify_runs_when_artifacts_exist() {
+    if !camuy::runtime::default_artifact_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    assert_eq!(run(&["verify", "--quiet"]), 0);
+}

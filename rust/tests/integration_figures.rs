@@ -1,0 +1,189 @@
+//! Integration over the full figure pipeline on reduced grids: sweeps,
+//! normalization, Pareto extraction, NSGA-II-vs-exhaustive, writers, and
+//! the qualitative paper findings the reproduction stands on.
+
+use camuy::config::{ArrayConfig, EnergyWeights};
+use camuy::nets;
+use camuy::pareto::dominance::pareto_front_indices;
+use camuy::pareto::nsga2::Nsga2Params;
+use camuy::report::figures::{
+    fig2_heatmaps, fig3_pareto, fig5_robust, fig6_equal_pe, FigureContext,
+};
+use camuy::sweep::grid::DimGrid;
+use camuy::sweep::runner::{sweep_network, Workload};
+
+fn ctx() -> FigureContext {
+    let mut c = FigureContext::paper();
+    c.grid = DimGrid::coarse(16, 128, 16); // 8x8 = 64 configs
+    c.threads = 2;
+    c
+}
+
+#[test]
+fn small_arrays_win_on_energy_for_every_paper_model() {
+    // The paper's headline (Section 4.2): data movement cost is minimal
+    // for small arrays across all nine models.
+    let c = ctx();
+    for name in nets::PAPER_MODELS {
+        let d = fig2_heatmaps(name, &c);
+        let (h, w, _) = d.energy.min_cell();
+        assert!(
+            h <= 32 && w <= 48,
+            "{name}: min at ({h}, {w}) — not a small array"
+        );
+    }
+}
+
+#[test]
+fn group_conv_models_prefer_the_smallest_arrays() {
+    // Grouped models' optimum E is at least as small (in PE count) as
+    // plain models' (Section 4.2).
+    let c = ctx();
+    let pe_of_min = |name: &str| {
+        let d = fig2_heatmaps(name, &c);
+        let (h, w, _) = d.energy.min_cell();
+        h * w
+    };
+    let grouped = ["resnext152", "mobilenetv3l", "efficientnetb0"];
+    let plain = ["alexnet", "vgg16", "resnet152"];
+    let max_grouped = grouped.iter().map(|n| pe_of_min(n)).max().unwrap();
+    let min_plain = plain.iter().map(|n| pe_of_min(n)).min().unwrap();
+    assert!(
+        max_grouped <= min_plain,
+        "grouped optima ({max_grouped} PEs) should be <= plain optima ({min_plain} PEs)"
+    );
+}
+
+#[test]
+fn fig3_nsga2_matches_exhaustive_front_exactly_on_small_grid() {
+    let c = ctx();
+    let params = Nsga2Params {
+        population: 60,
+        generations: 60,
+        ..Default::default()
+    };
+    let d = fig3_pareto("resnet152", &c, &params);
+    let mut got: Vec<(usize, usize)> = d.energy_front.iter().map(|s| (s.height, s.width)).collect();
+    let mut want: Vec<(usize, usize)> = d
+        .exhaustive_energy_front
+        .iter()
+        .map(|s| (s.height, s.width))
+        .collect();
+    got.sort_unstable();
+    got.dedup();
+    want.sort_unstable();
+    want.dedup();
+    assert_eq!(got, want, "NSGA-II must recover the exact front on 64 points");
+}
+
+#[test]
+fn fig5_front_is_truly_non_dominated_and_knee_is_tall() {
+    let c = ctx();
+    let d = fig5_robust(&c, &Nsga2Params::default());
+    // Non-domination against the full objective cloud.
+    let all: Vec<Vec<f64>> = (0..d.objectives.len())
+        .map(|i| vec![d.objectives.avg_norm_energy[i], d.objectives.avg_norm_cycles[i]])
+        .collect();
+    let front_idx = pareto_front_indices(&all);
+    let true_front: std::collections::HashSet<(usize, usize)> = front_idx
+        .iter()
+        .map(|&i| (d.objectives.heights[i], d.objectives.widths[i]))
+        .collect();
+    for s in &d.front {
+        assert!(
+            true_front.contains(&(s.height, s.width)),
+            "({}, {}) is dominated",
+            s.height,
+            s.width
+        );
+    }
+    // Robustness finding: most Pareto configurations are height >= width.
+    let tall = d.front.iter().filter(|s| s.height >= s.width).count();
+    assert!(
+        tall * 2 >= d.front.len(),
+        "tall-narrow should dominate the robust front ({tall}/{})",
+        d.front.len()
+    );
+}
+
+#[test]
+fn fig6_extreme_ratios_lose() {
+    // Section 5 / Samajdar et al.: extreme height:width ratios perform
+    // poorly — the ends of the equal-PE curve must be worse than the best
+    // interior point.
+    let c = ctx();
+    for budget in [4096usize, 16384] {
+        let d = fig6_equal_pe(budget, 8, &c);
+        let best = d
+            .average
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        let first = *d.average.first().unwrap();
+        let last = *d.average.last().unwrap();
+        assert!(
+            first > best && last > best,
+            "budget {budget}: extremes ({first:.3}, {last:.3}) vs best {best:.3}"
+        );
+    }
+}
+
+#[test]
+fn power_of_two_widths_have_better_utilization() {
+    // The Fig. 2 observation: power-of-two dims divide the (power-of-two)
+    // channel counts, avoiding ragged tiles.
+    let net = nets::build("resnet152").unwrap();
+    let wl = Workload::of(&net);
+    let u = |h: usize, w: usize| {
+        let cfg = ArrayConfig::new(h, w);
+        wl.eval(&cfg).utilization(cfg.pe_count())
+    };
+    assert!(u(64, 64) > u(64, 72), "64 should beat 72 in width");
+    assert!(u(64, 64) > u(72, 64), "64 should beat 72 in height");
+}
+
+#[test]
+fn tpu_geometry_is_pareto_dominated_for_modern_nets() {
+    // The paper's motivating claim: the commercial 256x256 square is far
+    // from the efficient frontier for modern CNNs.
+    let cfgs: Vec<ArrayConfig> = DimGrid::paper().configs(&ArrayConfig::new(1, 1));
+    let net = nets::build("mobilenetv3l").unwrap();
+    let sweep = sweep_network(&net, &cfgs, &EnergyWeights::paper(), 4);
+    let tpu = sweep
+        .points
+        .iter()
+        .find(|p| p.height == 256 && p.width == 256)
+        .unwrap();
+    let dominators = sweep
+        .points
+        .iter()
+        .filter(|p| {
+            p.energy <= tpu.energy
+                && p.metrics.cycles <= tpu.metrics.cycles
+                && (p.energy < tpu.energy || p.metrics.cycles < tpu.metrics.cycles)
+        })
+        .count();
+    assert!(
+        dominators > 0,
+        "some configuration must dominate the 256x256 TPU point"
+    );
+}
+
+#[test]
+fn writers_roundtrip_csv() {
+    // Figure CSVs parse back with the right arity.
+    let c = ctx();
+    let tmp = std::env::temp_dir().join("camuy_int_fig");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let d = fig2_heatmaps("alexnet", &c);
+    camuy::report::figures::write_fig2(&d, &tmp).unwrap();
+    let text = std::fs::read_to_string(tmp.join("fig2_alexnet.energy.csv")).unwrap();
+    let mut lines = text.lines();
+    assert_eq!(lines.next().unwrap(), "height,width,value");
+    let rows: Vec<&str> = lines.collect();
+    assert_eq!(rows.len(), c.grid.len());
+    for r in rows {
+        assert_eq!(r.split(',').count(), 3);
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}

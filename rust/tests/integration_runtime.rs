@@ -1,0 +1,149 @@
+//! Integration: the PJRT runtime loads every AOT artifact, executes it,
+//! and the three-way verification (reference ⇔ emulator ⇔ artifact)
+//! passes. Requires `make artifacts` to have run; tests announce and skip
+//! (rather than fail) when the artifact directory is absent so `cargo
+//! test` stays meaningful in a fresh checkout.
+
+use camuy::config::ArrayConfig;
+use camuy::coordinator::verify::{verify_gemm_artifact, PJRT_TOL};
+use camuy::runtime::{default_artifact_dir, Manifest, PjrtRuntime};
+use camuy::tensor::Matrix;
+use camuy::util::prng::Rng;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = default_artifact_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(m) = manifest_or_skip() else { return };
+    for name in [
+        "gemm_quickstart",
+        "resnet152_s4_reduce",
+        "mobilenet_pw",
+        "conv3x3_56_64",
+        "bottleneck_56_256",
+        "fc_head",
+    ] {
+        let a = m.find(name).unwrap_or_else(|| panic!("{name} missing"));
+        assert!(a.file.exists(), "{} missing on disk", a.file.display());
+    }
+}
+
+#[test]
+fn every_artifact_compiles_on_pjrt() {
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    for a in &m.artifacts {
+        rt.load(&a.name, &a.file)
+            .unwrap_or_else(|e| panic!("compiling {}: {e:#}", a.name));
+    }
+}
+
+#[test]
+fn quickstart_gemm_executes_with_correct_numerics() {
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let entry = m.find("gemm_quickstart").unwrap();
+    let exe = rt.load(&entry.name, &entry.file).unwrap();
+
+    let mut rng = Rng::new(7);
+    let a = Matrix::random_small_int(128, 128, &mut rng);
+    let w = Matrix::random_small_int(128, 128, &mut rng);
+    let got = exe.run_gemm(&a, &w).unwrap();
+    let want = a.matmul(&w);
+    let d = got.max_abs_diff(&want);
+    assert!(d <= PJRT_TOL, "pjrt diff {d}");
+}
+
+#[test]
+fn three_way_verification_passes_for_all_gemm_artifacts() {
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let cfg = ArrayConfig::new(32, 32);
+    let mut checked = 0;
+    for entry in m.artifacts.iter().filter(|a| a.kind == "gemm") {
+        let report = verify_gemm_artifact(&rt, entry, &cfg, 42).unwrap();
+        println!("{report}");
+        assert!(report.pass, "verification failed: {report}");
+        // Integral fixtures: the emulator must be bit-exact.
+        assert_eq!(report.emulator_vs_reference, 0.0);
+        checked += 1;
+    }
+    assert!(checked >= 3, "expected >=3 gemm artifacts, got {checked}");
+}
+
+#[test]
+fn conv_artifact_matches_emulated_im2col_gemm() {
+    // The conv artifact computes conv(x, w); the emulator computes the
+    // equivalent im2col GEMM. Both must agree with each other.
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let entry = m.find("conv3x3_56_64").unwrap();
+    let exe = rt.load(&entry.name, &entry.file).unwrap();
+
+    let (h, c_in, c_out, k, pad) = (56usize, 64usize, 64usize, 3usize, 1usize);
+    let mut rng = Rng::new(9);
+    // NHWC input and HWIO weights as flat buffers.
+    let x: Vec<f32> = (0..h * h * c_in)
+        .map(|_| (rng.range_usize(0, 8) as i32 - 4) as f32)
+        .collect();
+    let wts: Vec<f32> = (0..k * k * c_in * c_out)
+        .map(|_| (rng.range_usize(0, 8) as i32 - 4) as f32)
+        .collect();
+
+    let out = exe
+        .run_raw(&[
+            (&[1, h as i64, h as i64, c_in as i64], &x),
+            (&[k as i64, k as i64, c_in as i64, c_out as i64], &wts),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), h * h * c_out);
+
+    // Emulator path: im2col in rust, then run the GEMM functionally.
+    let im2col = |x: &[f32]| -> Matrix {
+        let mut a = Matrix::zeros(h * h, k * k * c_in);
+        for oy in 0..h {
+            for ox in 0..h {
+                let row = oy * h + ox;
+                let mut col = 0;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        for c in 0..c_in {
+                            let iy = oy as i64 + ky as i64 - pad as i64;
+                            let ix = ox as i64 + kx as i64 - pad as i64;
+                            let v = if iy < 0 || ix < 0 || iy >= h as i64 || ix >= h as i64 {
+                                0.0
+                            } else {
+                                x[(iy as usize * h + ix as usize) * c_in + c]
+                            };
+                            a[(row, col)] = v;
+                            col += 1;
+                        }
+                    }
+                }
+            }
+        }
+        a
+    };
+    let a = im2col(&x);
+    let wmat = Matrix::from_vec(k * k * c_in, c_out, wts.clone());
+    let emu = camuy::arch::Emulator::new(ArrayConfig::new(64, 64)).unwrap();
+    let res = emu.run_gemm(&a, &wmat, camuy::arch::EmulationMode::Wavefront);
+
+    let mut max_d = 0f32;
+    for (i, &v) in out.iter().enumerate() {
+        let r = i / c_out;
+        let c = i % c_out;
+        max_d = max_d.max((v - res.output[(r, c)]).abs());
+    }
+    assert!(max_d <= PJRT_TOL, "conv vs emulated GEMM diff {max_d}");
+}

@@ -1,0 +1,202 @@
+//! Property tests (DESIGN.md §7): the analytic closed form, the
+//! pass-iterating reference, and the functional emulator (both engines)
+//! must agree *exactly* — counters, cycles, passes — across randomized
+//! GEMM shapes, array geometries and accumulator capacities; and the
+//! emulator's numerics must equal plain matmul.
+
+use camuy::arch::{EmulationMode, Emulator};
+use camuy::config::ArrayConfig;
+use camuy::model::gemm::{os_metrics, ws_metrics, ws_metrics_ref};
+use camuy::model::layer::{Layer, SpatialDims};
+use camuy::model::schedule::GemmShape;
+use camuy::tensor::Matrix;
+use camuy::util::propcheck::{check, shrink_usize, Shrink};
+
+#[derive(Debug, Clone)]
+struct Case {
+    m: usize,
+    k: usize,
+    n: usize,
+    h: usize,
+    w: usize,
+    acc: usize,
+}
+
+impl Shrink for Case {
+    fn shrink_candidates(&self) -> Vec<Case> {
+        let mut out = Vec::new();
+        let fields: [(usize, usize, fn(&Case, usize) -> Case); 6] = [
+            (self.m, 1, |c, v| Case { m: v, ..c.clone() }),
+            (self.k, 1, |c, v| Case { k: v, ..c.clone() }),
+            (self.n, 1, |c, v| Case { n: v, ..c.clone() }),
+            (self.h, 1, |c, v| Case { h: v, ..c.clone() }),
+            (self.w, 1, |c, v| Case { w: v, ..c.clone() }),
+            (self.acc, 1, |c, v| Case { acc: v, ..c.clone() }),
+        ];
+        for (cur, lo, make) in fields {
+            for v in shrink_usize(cur, lo) {
+                out.push(make(self, v));
+            }
+        }
+        out
+    }
+}
+
+fn gen_case(rng: &mut camuy::util::prng::Rng) -> Case {
+    Case {
+        m: rng.range_usize(1, 40),
+        k: rng.range_usize(1, 40),
+        n: rng.range_usize(1, 40),
+        h: rng.range_usize(1, 12),
+        w: rng.range_usize(1, 12),
+        acc: rng.range_usize(1, 64),
+    }
+}
+
+fn cfg_of(c: &Case) -> ArrayConfig {
+    ArrayConfig::new(c.h, c.w).with_acc_capacity(c.acc)
+}
+
+#[test]
+fn closed_form_equals_pass_iteration() {
+    check(600, 0xC0FFEE, gen_case, |c| {
+        let g = GemmShape::new(c.m, c.k, c.n);
+        let fast = ws_metrics(g, &cfg_of(c));
+        let slow = ws_metrics_ref(g, &cfg_of(c));
+        if fast == slow {
+            Ok(())
+        } else {
+            Err(format!("closed {fast:?}\n!= ref {slow:?}"))
+        }
+    });
+}
+
+#[test]
+fn emulator_equals_analytic_model() {
+    let mut data_rng = camuy::util::prng::Rng::new(0xDA7A);
+    check(120, 0xBEEF, gen_case, |c| {
+        let g = GemmShape::new(c.m, c.k, c.n);
+        let cfg = cfg_of(c);
+        let analytic = ws_metrics(g, &cfg);
+        let emu = Emulator::new(cfg.clone()).map_err(|e| e.to_string())?;
+        let a = Matrix::random_small_int(c.m, c.k, &mut data_rng);
+        let w = Matrix::random_small_int(c.k, c.n, &mut data_rng);
+        let res = emu.run_gemm(&a, &w, EmulationMode::Wavefront);
+        if res.metrics != analytic {
+            return Err(format!("emulator {:?}\n!= analytic {analytic:?}", res.metrics));
+        }
+        if res.output != a.matmul(&w) {
+            return Err("numerics mismatch".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cycle_accurate_engine_equals_wavefront() {
+    let mut data_rng = camuy::util::prng::Rng::new(0x51DE);
+    check(40, 0xFACE, gen_case, |c| {
+        // Keep the cycle-stepped engine affordable.
+        let c = Case {
+            m: c.m.min(12),
+            k: c.k.min(12),
+            n: c.n.min(12),
+            ..c.clone()
+        };
+        let cfg = cfg_of(&c);
+        let emu = Emulator::new(cfg).map_err(|e| e.to_string())?;
+        let a = Matrix::random_small_int(c.m, c.k, &mut data_rng);
+        let w = Matrix::random_small_int(c.k, c.n, &mut data_rng);
+        let wf = emu.run_gemm(&a, &w, EmulationMode::Wavefront);
+        let ca = emu.run_gemm(&a, &w, EmulationMode::CycleAccurate);
+        if wf.metrics != ca.metrics {
+            return Err(format!("wavefront {:?} != cycle {:?}", wf.metrics, ca.metrics));
+        }
+        if wf.output != ca.output {
+            return Err("outputs differ between engines".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn invariant_macs_and_outputs_are_conserved() {
+    check(600, 0xAB1E, gen_case, |c| {
+        let g = GemmShape::new(c.m, c.k, c.n);
+        let cfg = cfg_of(c);
+        for m in [ws_metrics(g, &cfg), os_metrics(g, &cfg)] {
+            if m.macs != g.macs() {
+                return Err(format!("MACs {} != {}", m.macs, g.macs()));
+            }
+            let outs = (c.m * c.n) as u64;
+            if m.movements.ub_out_writes != outs {
+                return Err(format!(
+                    "out writes {} != M*N {outs}",
+                    m.movements.ub_out_writes
+                ));
+            }
+            // Every weight is read at least once; activations at least M*K.
+            if m.movements.ub_weight_reads < (c.k * c.n) as u64 {
+                return Err("weights under-read".into());
+            }
+            if m.movements.ub_act_reads < (c.m * c.k) as u64 {
+                return Err("activations under-read".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn invariant_utilization_bounded_and_monotone_macs() {
+    check(600, 0x1111, gen_case, |c| {
+        let g = GemmShape::new(c.m, c.k, c.n);
+        let cfg = cfg_of(c);
+        let m = ws_metrics(g, &cfg);
+        let u = m.utilization(cfg.pe_count());
+        if !(0.0..=1.0).contains(&u) {
+            return Err(format!("utilization {u} out of range"));
+        }
+        // Cycles lower bound: can't beat perfect PE usage.
+        let lower = (g.macs() as f64 / cfg.pe_count() as f64).floor() as u64;
+        if m.cycles < lower {
+            return Err(format!("cycles {} below roofline {lower}", m.cycles));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn invariant_grouped_layer_equals_group_times_single() {
+    check(300, 0x9999, gen_case, |c| {
+        // Build a grouped conv whose per-group GEMM is (m, k, n)-shaped:
+        // use a 1x1 conv with g groups of k in / n out channels on an
+        // m-pixel image (m = s*s when square; use rectangular input).
+        let groups = 1 + c.acc % 5;
+        let layer = Layer {
+            name: "prop".into(),
+            kind: camuy::model::layer::LayerKind::Conv2d {
+                c_in: c.k * groups,
+                c_out: c.n * groups,
+                kernel: (1, 1),
+                stride: (1, 1),
+                padding: (0, 0),
+                dilation: (1, 1),
+                groups,
+            },
+            input: SpatialDims { h: c.m, w: 1 },
+            batch: 1,
+        };
+        let cfg = cfg_of(c);
+        let total = layer.metrics(&cfg);
+        let single = ws_metrics(GemmShape::new(c.m, c.k, c.n), &cfg);
+        let mut expect = camuy::metrics::Metrics::default();
+        for _ in 0..groups {
+            expect += single;
+        }
+        if total != expect {
+            return Err(format!("grouped {total:?} != {groups}x single"));
+        }
+        Ok(())
+    });
+}
