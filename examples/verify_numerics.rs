@@ -12,8 +12,8 @@
 //!
 //! Workload: every artifact in the manifest — real layer shapes from
 //! ResNet-152 and MobileNetV3 — plus a batched request loop over the
-//! quickstart GEMM reporting latency/throughput. Results are recorded in
-//! EXPERIMENTS.md §E2E.
+//! quickstart GEMM reporting latency/throughput. See DESIGN.md §7.4 for
+//! the verification strategy this example exercises.
 //!
 //! Run: `make artifacts && cargo run --release --example verify_numerics`
 

@@ -1,14 +1,22 @@
 //! Micro-benchmarks of the hot paths the §Perf pass optimizes:
 //! closed-form analytic metrics vs the pass-iterating reference, workload
-//! deduplication, network-level evaluation, and NSGA-II machinery.
+//! deduplication, network-level evaluation, NSGA-II machinery — and the
+//! headline number: full-zoo sweep throughput, shape-major vs the naive
+//! config-major baseline, emitted machine-readably to `BENCH_sweep.json`
+//! (override the path with `CAMUY_BENCH_OUT`) so the perf trajectory is
+//! tracked PR over PR.
 
 use camuy::config::{ArrayConfig, EnergyWeights};
 use camuy::model::gemm::{ws_metrics, ws_metrics_ref};
 use camuy::model::schedule::GemmShape;
 use camuy::nets;
 use camuy::pareto::dominance::{fast_non_dominated_sort, pareto_front_indices};
-use camuy::sweep::runner::Workload;
+use camuy::sweep::grid::DimGrid;
+use camuy::sweep::runner::{
+    default_threads, sweep_workload, sweep_workload_config_major, Workload,
+};
 use camuy::util::bench::{bench, throughput, BenchOpts};
+use camuy::util::json::Json;
 use camuy::util::prng::Rng;
 
 fn main() {
@@ -44,12 +52,23 @@ fn main() {
     );
     // Without dedup (per-layer evaluation) for the §Perf comparison.
     let r2 = bench("micro/densenet201_one_config_nodedup", &BenchOpts::default(), || {
-        net.metrics(&cfg)
+        net.layers
+            .iter()
+            .map(|l| l.metrics(&cfg))
+            .fold(camuy::metrics::Metrics::default(), |a, b| a + b)
     });
     println!(
         "   -> dedup speedup {:.1}x",
         r2.seconds.mean / r.seconds.mean
     );
+
+    println!("\n== sweep: full zoo, shape-major vs config-major ==");
+    let sweep_json = bench_full_zoo_sweep();
+    let out_path = std::env::var("CAMUY_BENCH_OUT").unwrap_or_else(|_| "BENCH_sweep.json".into());
+    match std::fs::write(&out_path, sweep_json.to_string_pretty() + "\n") {
+        Ok(()) => println!("   -> wrote {out_path}"),
+        Err(e) => eprintln!("   -> could not write {out_path}: {e}"),
+    }
 
     println!("\n== micro: pareto machinery ==");
     let mut rng = Rng::new(3);
@@ -67,4 +86,67 @@ fn main() {
     let m = ws_metrics(g, &cfg);
     let w = EnergyWeights::paper();
     bench("micro/eq1_energy", &opts, || m.energy(&w));
+}
+
+/// The full paper zoo over the paper's 961-point grid, both sweep cores,
+/// same thread pool — the acceptance number for the shape-major refactor.
+fn bench_full_zoo_sweep() -> Json {
+    let grid = DimGrid::paper();
+    let configs = grid.configs(&ArrayConfig::new(1, 1));
+    let models = nets::paper_models();
+    let workloads: Vec<Workload> = models.iter().map(Workload::of).collect();
+    let threads = default_threads();
+    let weights = EnergyWeights::paper();
+    let total_configs = (configs.len() * workloads.len()) as u64;
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        measure_iters: 5,
+    };
+
+    // Sum energies so the whole evaluation is observably consumed.
+    let naive = bench("sweep/full_zoo_config_major", &opts, || {
+        workloads
+            .iter()
+            .flat_map(|wl| sweep_workload_config_major(wl, &configs, &weights, threads))
+            .map(|p| p.energy)
+            .sum::<f64>()
+    });
+    let shape_major = bench("sweep/full_zoo_shape_major", &opts, || {
+        workloads
+            .iter()
+            .flat_map(|wl| sweep_workload(wl, &configs, &weights, threads))
+            .map(|p| p.energy)
+            .sum::<f64>()
+    });
+
+    let naive_cps = throughput(&naive, total_configs);
+    let fast_cps = throughput(&shape_major, total_configs);
+    let speedup = naive.seconds.mean / shape_major.seconds.mean;
+    println!(
+        "   -> {:.0} configs/s config-major, {:.0} configs/s shape-major ({speedup:.2}x)",
+        naive_cps, fast_cps
+    );
+
+    let variant = |r: &camuy::util::bench::BenchResult, cps: f64| -> Json {
+        Json::obj(vec![
+            ("seconds_mean", Json::num(r.seconds.mean)),
+            ("seconds_min", Json::num(r.seconds.min)),
+            ("seconds_p95", Json::num(r.seconds.p95)),
+            ("configs_per_sec", Json::num(cps)),
+        ])
+    };
+    Json::obj(vec![
+        ("bench", Json::str("full_zoo_sweep")),
+        ("grid_points", Json::num(configs.len() as f64)),
+        ("models", Json::num(workloads.len() as f64)),
+        (
+            "distinct_shapes_total",
+            Json::num(workloads.iter().map(Workload::distinct).sum::<usize>() as f64),
+        ),
+        ("threads", Json::num(threads as f64)),
+        ("network_evals_per_iter", Json::num(total_configs as f64)),
+        ("config_major", variant(&naive, naive_cps)),
+        ("shape_major", variant(&shape_major, fast_cps)),
+        ("speedup_shape_major_over_config_major", Json::num(speedup)),
+    ])
 }

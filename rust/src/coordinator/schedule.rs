@@ -56,8 +56,11 @@ impl Coordinator {
     }
 
     /// Run one inference of `net`, serialized layer by layer (the array
-    /// processes a single layer's GEMMs at a time, as in the paper).
+    /// processes a single layer's GEMMs at a time, as in the paper). The
+    /// timeline stays per-layer, but repeated GEMM shapes are costed once
+    /// through a per-run workload evaluation cache.
     pub fn run_inference(&self, net: &Network) -> InferenceRun {
+        let cache = crate::model::workload::EvalCache::new();
         let mut timeline = Vec::with_capacity(net.layers.len());
         let mut clock: u64 = 0;
         let mut total = Metrics::default();
@@ -66,7 +69,7 @@ impl Coordinator {
             if !crate::model::bandwidth::fits_unified_buffer(layer, &self.config) {
                 ub_violations.push(layer.name.clone());
             }
-            let m = layer.metrics(&self.config);
+            let m = layer.metrics_cached(&self.config, &cache);
             let entry = TimelineEntry {
                 layer: layer.name.clone(),
                 start_cycle: clock,

@@ -2,10 +2,18 @@
 
 fn main() {
     // Restore default SIGPIPE behaviour so `camuy ... | head` terminates
-    // quietly instead of panicking on a closed stdout.
+    // quietly instead of panicking on a closed stdout. Raw syscall shim:
+    // the offline image ships no `libc` crate (DESIGN.md §6).
     #[cfg(unix)]
-    unsafe {
-        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGPIPE: i32 = 13;
+        const SIG_DFL: usize = 0;
+        unsafe {
+            signal(SIGPIPE, SIG_DFL);
+        }
     }
     let argv: Vec<String> = std::env::args().skip(1).collect();
     std::process::exit(camuy::cli::run(&argv));

@@ -1,10 +1,18 @@
 //! Metric types shared by the analytic model (`model/`) and the functional
 //! emulator (`arch/`). Both produce the exact same counter set; property
 //! tests assert bit-exact equality between the two (DESIGN.md §7).
+//!
+//! Both [`MovementCounters`] and [`Metrics`] form a commutative monoid
+//! under `+` with `Default` as identity, and support scalar scaling by a
+//! `u64` multiplicity (`m * 3 == m + m + m`, exactly — all fields are
+//! integer counters). Every aggregation in the crate — layers over groups,
+//! networks over layers, workloads over shape multiplicities — is expressed
+//! through this algebra instead of field-by-field summation (DESIGN.md §2).
 
 use crate::config::EnergyWeights;
 use crate::util::json::Json;
-use std::ops::{Add, AddAssign};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Mul, MulAssign};
 
 /// Every class of data movement the emulator distinguishes. All values are
 /// *access counts* (one word moved = one count); bitwidths convert these to
@@ -101,6 +109,35 @@ impl AddAssign for MovementCounters {
     }
 }
 
+impl Mul<u64> for MovementCounters {
+    type Output = MovementCounters;
+    fn mul(self, s: u64) -> MovementCounters {
+        MovementCounters {
+            ub_act_reads: self.ub_act_reads * s,
+            ub_weight_reads: self.ub_weight_reads * s,
+            ub_out_writes: self.ub_out_writes * s,
+            inter_pe_act: self.inter_pe_act * s,
+            inter_pe_psum: self.inter_pe_psum * s,
+            inter_pe_weight: self.inter_pe_weight * s,
+            intra_pe: self.intra_pe * s,
+            aa_writes: self.aa_writes * s,
+            aa_reads: self.aa_reads * s,
+        }
+    }
+}
+
+impl MulAssign<u64> for MovementCounters {
+    fn mul_assign(&mut self, s: u64) {
+        *self = *self * s;
+    }
+}
+
+impl Sum for MovementCounters {
+    fn sum<I: Iterator<Item = MovementCounters>>(iter: I) -> MovementCounters {
+        iter.fold(MovementCounters::default(), |a, b| a + b)
+    }
+}
+
 /// Complete metric record for one workload (a GEMM, a layer, or a whole
 /// network) on one array configuration.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -158,6 +195,34 @@ impl Add for Metrics {
 impl AddAssign for Metrics {
     fn add_assign(&mut self, rhs: Metrics) {
         *self = *self + rhs;
+    }
+}
+
+/// Scalar scaling by a multiplicity: `k` identical GEMMs run back-to-back
+/// cost exactly `one * k` (cycles serialize, counters add — the identity
+/// the workload IR's deduplicated evaluation relies on).
+impl Mul<u64> for Metrics {
+    type Output = Metrics;
+    fn mul(self, s: u64) -> Metrics {
+        Metrics {
+            cycles: self.cycles * s,
+            stall_cycles: self.stall_cycles * s,
+            macs: self.macs * s,
+            passes: self.passes * s,
+            movements: self.movements * s,
+        }
+    }
+}
+
+impl MulAssign<u64> for Metrics {
+    fn mul_assign(&mut self, s: u64) {
+        *self = *self * s;
+    }
+}
+
+impl Sum for Metrics {
+    fn sum<I: Iterator<Item = Metrics>>(iter: I) -> Metrics {
+        iter.fold(Metrics::default(), |a, b| a + b)
     }
 }
 
@@ -228,5 +293,60 @@ mod tests {
         assert_eq!(s.cycles, 20);
         assert_eq!(s.passes, 4);
         assert_eq!(s.movements.aa_reads, 14);
+    }
+
+    #[test]
+    fn scalar_scaling_equals_repeated_addition() {
+        let m = Metrics {
+            cycles: 10,
+            stall_cycles: 1,
+            macs: 100,
+            passes: 2,
+            movements: sample(),
+        };
+        let mut by_add = Metrics::default();
+        for _ in 0..5 {
+            by_add += m;
+        }
+        assert_eq!(m * 5, by_add);
+        assert_eq!(m * 1, m);
+        assert_eq!(m * 0, Metrics::default());
+        let mut assigned = m;
+        assigned *= 5;
+        assert_eq!(assigned, by_add);
+    }
+
+    #[test]
+    fn scaling_distributes_over_addition() {
+        let a = Metrics {
+            cycles: 3,
+            stall_cycles: 0,
+            macs: 7,
+            passes: 1,
+            movements: sample(),
+        };
+        let b = Metrics {
+            cycles: 11,
+            stall_cycles: 2,
+            macs: 13,
+            passes: 4,
+            movements: sample() + sample(),
+        };
+        assert_eq!((a + b) * 6, a * 6 + b * 6);
+        assert_eq!(a * (4 * 5), (a * 4) * 5);
+    }
+
+    #[test]
+    fn sum_collects_iterators() {
+        let a = Metrics {
+            cycles: 2,
+            macs: 4,
+            ..Default::default()
+        };
+        let total: Metrics = [a, a, a].into_iter().sum();
+        assert_eq!(total, a * 3);
+        let counters: MovementCounters = [sample(), sample()].into_iter().sum();
+        assert_eq!(counters, sample() * 2);
+        assert_eq!(Vec::<Metrics>::new().into_iter().sum::<Metrics>(), Metrics::default());
     }
 }

@@ -8,7 +8,11 @@
 //! * [`ws_metrics`] — closed form, O(1): partial-tile classes are summed
 //!   algebraically. This is what the sweep engine runs (the paper's "fast
 //!   exploration" claim lives here). Verified against the reference by unit
-//!   and property tests, and both against the functional emulator.
+//!   and property tests, and both against the functional emulator. The
+//!   closed form is factored into height-dependent ([`ws_row_factors`]) and
+//!   width/accumulator-dependent ([`ws_col_factors`]) parts combined by
+//!   [`ws_metrics_from_factors`], so the shape-major sweep core can cache
+//!   each part per grid axis (DESIGN.md §4).
 //!
 //! Plus [`os_metrics`], the output-stationary variant (paper §6 future
 //! work) used by the dataflow ablation.
@@ -98,40 +102,131 @@ pub fn ws_metrics_ref(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
     }
 }
 
-/// Closed-form weight-stationary metrics, O(1) in the operand sizes.
-pub fn ws_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
+/// The height-dependent factors of the closed-form WS model for one GEMM
+/// shape: row-tile count, the weight shift-down hop sum of one tile-column
+/// load, and the exposed first-load duration. Computing these once per
+/// (shape, height) and reusing them across every width of a sweep grid is
+/// what makes the shape-major sweep core fast (DESIGN.md §4) — these are
+/// the only places the closed form divides by the array height.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WsRowFactors {
+    /// The array height these factors were derived for — carried along so
+    /// a cached entry can never be combined under a different height.
+    pub height: usize,
+    /// Row tiles over K.
+    pub tr: u64,
+    /// Σ over row-tiles of k_t·(k_t−1)/2.
+    pub s_kk: u64,
+    /// Exposed initial weight load, k_t(0) = min(K, h).
+    pub k0: u64,
+}
+
+/// One col-tile class of the closed form: its active width, how many such
+/// col-tiles exist, and the accumulator M-chunk count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WsColClass {
+    pub nt: u64,
+    pub count: u64,
+    pub chunks: u64,
+}
+
+/// The width/accumulator-dependent factors: (tc−1) full-width col-tiles
+/// plus one tail class. The only divisions by width and accumulator
+/// capacity in the closed form happen here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WsColFactors {
+    /// The array width these factors were derived for (see
+    /// [`WsRowFactors::height`]).
+    pub width: usize,
+    pub classes: [WsColClass; 2],
+}
+
+/// Compute [`WsRowFactors`] for one (shape, array height) pair.
+pub fn ws_row_factors(gemm: GemmShape, height: usize) -> WsRowFactors {
     if gemm.is_empty() {
-        return Metrics::default();
+        return WsRowFactors {
+            height,
+            tr: 0,
+            s_kk: 0,
+            k0: 0,
+        };
     }
-    let (big_m, big_k, big_n) = (gemm.m as u64, gemm.k as u64, gemm.n as u64);
-    let h = cfg.height as u64;
-    let w = cfg.width as u64;
-    let acc = cfg.acc_capacity as u64;
-
-    let tr = ceil_div(gemm.k, cfg.height) as u64;
-    let tc = ceil_div(gemm.n, cfg.width) as u64;
+    let big_k = gemm.k as u64;
+    let h = height as u64;
+    let tr = ceil_div(gemm.k, height) as u64;
     let k_tail = big_k - (tr - 1) * h; // == h when divisible
-    let k0 = big_k.min(h); // k_t(0)
-
     // Sum over row-tiles of k_t*(k_t-1)/2 — the weight shift-down hops of
     // one tile-column load.
     let s_kk = (tr - 1) * (h * (h - 1) / 2) + k_tail * (k_tail - 1) / 2;
+    WsRowFactors {
+        height,
+        tr,
+        s_kk,
+        k0: big_k.min(h),
+    }
+}
 
-    // Col-tile classes: (tc - 1) full tiles of width w, one tail of n_tail.
+/// Compute [`WsColFactors`] for one (shape, array width, accumulator
+/// capacity) triple.
+pub fn ws_col_factors(gemm: GemmShape, width: usize, acc_capacity: usize) -> WsColFactors {
+    let empty = WsColClass {
+        nt: 0,
+        count: 0,
+        chunks: 0,
+    };
+    if gemm.is_empty() {
+        return WsColFactors {
+            width,
+            classes: [empty; 2],
+        };
+    }
+    let big_n = gemm.n as u64;
+    let w = width as u64;
+    let acc = acc_capacity as u64;
+    let tc = ceil_div(gemm.n, width) as u64;
     let n_tail = big_n - (tc - 1) * w;
-    // (width extent, number of such col-tiles)
-    let classes: [(u64, u64); 2] = [(w, tc - 1), (n_tail, 1)];
+    let class = |nt: u64, count: u64| -> WsColClass {
+        if count == 0 || nt == 0 {
+            return empty;
+        }
+        let r = (acc / nt).max(1); // accumulator row budget
+        WsColClass {
+            nt,
+            count,
+            chunks: ceil_div(gemm.m, r as usize) as u64,
+        }
+    };
+    // Col-tile classes: (tc - 1) full tiles of width w, one tail of n_tail.
+    WsColFactors {
+        width,
+        classes: [class(w, tc - 1), class(n_tail, 1)],
+    }
+}
+
+/// Assemble closed-form WS metrics from precomputed factors. This is the
+/// single implementation of the closed form: [`ws_metrics`] routes through
+/// it, and the shape-major sweep core calls it with factors cached per
+/// (shape, grid axis) — both paths are byte-identical by construction.
+/// The array dimensions come from the factor structs themselves, so
+/// mismatched (factors, geometry) pairings are unrepresentable.
+pub fn ws_metrics_from_factors(gemm: GemmShape, row: &WsRowFactors, col: &WsColFactors) -> Metrics {
+    if gemm.is_empty() {
+        return Metrics::default();
+    }
+    let (big_m, big_k) = (gemm.m as u64, gemm.k as u64);
+    let h = row.height as u64;
+    let w = col.width as u64;
+    let WsRowFactors { tr, s_kk, k0, .. } = *row;
 
     let mut mv = MovementCounters::default();
     let mut passes = 0u64;
     let mut sum_compute = 0u64; // sum of D_p over all passes
 
-    for &(nt, count) in &classes {
+    for &WsColClass { nt, count, chunks } in &col.classes {
         if count == 0 || nt == 0 {
             continue;
         }
-        let r = (acc / nt).max(1); // row budget
-        let c = ceil_div(gemm.m, r as usize) as u64; // chunks
+        let c = chunks;
 
         // --- movement counters, per single col-tile of this class ---
         let ub_act = big_m * big_k;
@@ -167,7 +262,6 @@ pub fn ws_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
     // loads except the very first (k0). Stalls are structurally impossible
     // in the WS schedule (the bandwidth report still flags the exposure
     // via stall_cycles for the other dataflows/baselines).
-    let _ = k_tail;
     let cycles = k0 + sum_compute;
 
     Metrics {
@@ -177,6 +271,18 @@ pub fn ws_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
         passes,
         movements: mv,
     }
+}
+
+/// Closed-form weight-stationary metrics, O(1) in the operand sizes.
+pub fn ws_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
+    if gemm.is_empty() {
+        return Metrics::default();
+    }
+    ws_metrics_from_factors(
+        gemm,
+        &ws_row_factors(gemm, cfg.height),
+        &ws_col_factors(gemm, cfg.width, cfg.acc_capacity),
+    )
 }
 
 /// Output-stationary metrics (closed form). The array pins an (mt x nt)
@@ -303,6 +409,41 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn factor_reuse_across_a_grid_matches_direct_evaluation() {
+        // The shape-major sweep caches row factors per height and col
+        // factors per width; combining cached factors must be identical to
+        // calling ws_metrics per cell.
+        let shapes = [
+            GemmShape::new(196, 1152, 256),
+            GemmShape::new(3136, 64, 64),
+            GemmShape::new(1, 9, 1),
+            GemmShape::new(7, 33, 129),
+        ];
+        let heights = [1usize, 3, 8, 16, 96];
+        let widths = [1usize, 2, 7, 48, 64];
+        for g in shapes {
+            for &h in &heights {
+                let row = ws_row_factors(g, h);
+                for &w in &widths {
+                    let col = ws_col_factors(g, w, 4096);
+                    let combined = ws_metrics_from_factors(g, &row, &col);
+                    let direct = ws_metrics(g, &cfg(h, w, 4096));
+                    assert_eq!(combined, direct, "mismatch for {g:?} at ({h}, {w})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn factors_of_empty_shape_are_inert() {
+        let g = GemmShape::new(0, 8, 8);
+        assert_eq!(ws_row_factors(g, 4).tr, 0);
+        assert_eq!(ws_col_factors(g, 4, 64).classes[0].count, 0);
+        let m = ws_metrics_from_factors(g, &ws_row_factors(g, 4), &ws_col_factors(g, 4, 64));
+        assert_eq!(m, Metrics::default());
     }
 
     #[test]

@@ -178,16 +178,23 @@ impl Layer {
     }
 
     /// Analytic metrics of this layer on the given array: the per-group
-    /// GEMM serialized `groups` times.
+    /// GEMM serialized `groups` times (scalar scaling in the metrics
+    /// algebra — identical counters, serialized cycles).
     pub fn metrics(&self, cfg: &ArrayConfig) -> Metrics {
         let (gemm, groups) = self.gemm();
-        let one = gemm_metrics(gemm, cfg);
-        let mut total = Metrics::default();
-        // Groups are identical GEMMs run back-to-back; scalar multiply.
-        for _ in 0..groups {
-            total += one;
-        }
-        total
+        gemm_metrics(gemm, cfg) * groups as u64
+    }
+
+    /// Like [`Layer::metrics`], with the per-group GEMM memoized in
+    /// `cache` — repeated layer shapes across a network cost one
+    /// closed-form evaluation.
+    pub fn metrics_cached(
+        &self,
+        cfg: &ArrayConfig,
+        cache: &crate::model::workload::EvalCache,
+    ) -> Metrics {
+        let (gemm, groups) = self.gemm();
+        cache.gemm_metrics(gemm, cfg) * groups as u64
     }
 }
 
@@ -310,6 +317,17 @@ mod tests {
         let upm1 = m1.cycles as f64 / m1.macs as f64;
         let upm4 = m4.cycles as f64 / m4.macs as f64;
         assert!(upm4 > upm1, "grouped should cost more cycles per MAC");
+    }
+
+    #[test]
+    fn cached_metrics_match_direct() {
+        let cfg = ArrayConfig::new(8, 8);
+        let cache = crate::model::workload::EvalCache::new();
+        let l = Layer::conv("g4", SpatialDims::square(7), 16, 16, 3, 1, 1, 4);
+        assert_eq!(l.metrics_cached(&cfg, &cache), l.metrics(&cfg));
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(l.metrics_cached(&cfg, &cache), l.metrics(&cfg));
+        assert_eq!(cache.hits(), 1);
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! `schedule` defines the tile schedule shared with the functional emulator
 //! (`crate::arch`); `gemm` turns a schedule into closed-form metrics;
 //! `layer` lowers convolution variants to GEMM operands; `network`
-//! aggregates layers; `bandwidth` derives byte-bandwidth requirements.
+//! aggregates layers; `workload` deduplicates a network into the GEMM-shape
+//! histogram every evaluating layer consumes (DESIGN.md §2); `bandwidth`
+//! derives byte-bandwidth requirements.
 
 pub mod bandwidth;
 pub mod gemm;
@@ -13,12 +15,17 @@ pub mod multi;
 pub mod network;
 pub mod roofline;
 pub mod schedule;
+pub mod workload;
 
 pub use bandwidth::BandwidthReport;
-pub use gemm::{gemm_metrics, os_metrics, ws_metrics, ws_metrics_ref};
+pub use gemm::{
+    gemm_metrics, os_metrics, ws_col_factors, ws_metrics, ws_metrics_from_factors, ws_metrics_ref,
+    ws_row_factors, WsColClass, WsColFactors, WsRowFactors,
+};
 pub use layer::{Layer, LayerKind, SpatialDims};
 pub use memory::{MemoryAnalysis, DRAM_COST};
 pub use multi::{layer_metrics_multi, network_metrics_multi, MultiArrayConfig, MultiMetrics};
 pub use network::{LayerReport, Network};
 pub use roofline::{layer_roofline, machine_balance, network_roofline, Bound, LayerRoofline};
 pub use schedule::{GemmShape, Pass, WsSchedule};
+pub use workload::{EvalCache, Workload};

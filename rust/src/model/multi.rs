@@ -79,16 +79,13 @@ impl std::ops::Add for MultiMetrics {
 pub fn layer_metrics_multi(layer: &Layer, cfg: &MultiArrayConfig) -> MultiMetrics {
     let (gemm, groups) = layer.gemm();
     if groups >= cfg.arrays && groups > 1 {
-        // Round-robin the per-group GEMMs; all groups are identical.
+        // Round-robin the per-group GEMMs; all groups are identical, so
+        // total work is a scalar scaling of one GEMM's metrics.
         let one = gemm_metrics(gemm, &cfg.array);
         let rounds = ceil_div(groups, cfg.arrays) as u64;
-        let mut total = Metrics::default();
-        for _ in 0..groups {
-            total += one;
-        }
         MultiMetrics {
             makespan_cycles: rounds * one.cycles,
-            total,
+            total: one * groups as u64,
         }
     } else {
         // Split M across the bank (each split still runs `groups` GEMMs
@@ -108,10 +105,8 @@ pub fn layer_metrics_multi(layer: &Layer, cfg: &MultiArrayConfig) -> MultiMetric
                 crate::model::schedule::GemmShape::new(m_here, gemm.k, gemm.n),
                 &cfg.array,
             );
-            let mut array_total = Metrics::default();
-            for _ in 0..groups {
-                array_total += part;
-            }
+            // Each split's array runs its `groups` GEMM slices serially.
+            let array_total = part * groups as u64;
             makespan = makespan.max(array_total.cycles);
             total += array_total;
         }

@@ -1,12 +1,16 @@
 //! Network-level aggregation: a `Network` is an ordered list of layers (the
 //! GEMM-bearing operators only — pooling/activation are metric-neutral in
 //! the paper's model) plus metadata. Network metrics are the serialized sum
-//! of layer metrics, exactly as the emulator would run inference.
+//! of layer metrics, exactly as the emulator would run inference; the sum
+//! is evaluated through the deduplicated workload IR
+//! ([`crate::model::workload::Workload`]) — identical by the metrics
+//! algebra, and each distinct GEMM shape is costed once.
 
 use crate::config::ArrayConfig;
 use crate::metrics::Metrics;
 use crate::model::layer::Layer;
 use crate::util::json::Json;
+use std::collections::HashMap;
 
 /// A named DNN as the emulator sees it.
 #[derive(Debug, Clone)]
@@ -50,13 +54,12 @@ impl Network {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
-    /// Serialized inference metrics on one array configuration.
+    /// Serialized inference metrics on one array configuration, evaluated
+    /// shape-deduplicated: Σ over layers of layer metrics equals Σ over
+    /// distinct shapes of multiplicity × per-shape metrics exactly (u64
+    /// counters are associative/commutative, cycles serialize).
     pub fn metrics(&self, cfg: &ArrayConfig) -> Metrics {
-        let mut total = Metrics::default();
-        for l in &self.layers {
-            total += l.metrics(cfg);
-        }
-        total
+        crate::model::workload::Workload::of(self).eval(cfg)
     }
 
     /// Per-layer breakdown (for the `camuy emulate --per-layer` report).
@@ -71,16 +74,20 @@ impl Network {
     }
 
     /// Distinct GEMM shapes with multiplicity — the operand-diversity
-    /// histogram the paper discusses per architecture family.
+    /// histogram the paper discusses per architecture family. Linear in the
+    /// layer count (HashMap-indexed), first-seen order preserved.
     pub fn gemm_histogram(&self) -> Vec<(crate::model::schedule::GemmShape, usize, usize)> {
         // (shape, groups, occurrence count)
         let mut hist: Vec<(crate::model::schedule::GemmShape, usize, usize)> = Vec::new();
+        let mut index: HashMap<(crate::model::schedule::GemmShape, usize), usize> = HashMap::new();
         for l in &self.layers {
             let (g, groups) = l.gemm();
-            if let Some(e) = hist.iter_mut().find(|(s, gr, _)| *s == g && *gr == groups) {
-                e.2 += 1;
-            } else {
-                hist.push((g, groups, 1));
+            match index.get(&(g, groups)) {
+                Some(&i) => hist[i].2 += 1,
+                None => {
+                    index.insert((g, groups), hist.len());
+                    hist.push((g, groups, 1));
+                }
             }
         }
         hist

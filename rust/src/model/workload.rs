@@ -1,0 +1,276 @@
+//! The workload IR: the deduplicated GEMM-shape histogram every evaluating
+//! layer of CAMUY consumes (DESIGN.md §2).
+//!
+//! A [`Workload`] reduces a network to its distinct [`GemmShape`]s with
+//! multiplicities (groups × occurrences). DenseNet-201's 201 layers
+//! collapse to ~120 distinct GEMMs, ResNet-152's 156 to ~40 — and because
+//! per-shape metrics are configuration-deterministic, evaluating the
+//! histogram and scaling by multiplicity (the [`Metrics`] algebra's scalar
+//! `Mul`) is *exactly* equal to evaluating layer by layer. The network
+//! model, the sweep engine, NSGA-II, the coordinator and the figure
+//! pipeline all route through this one representation.
+//!
+//! [`EvalCache`] adds a thread-safe memo table over (shape, configuration)
+//! pairs, so overlapping evaluations — NSGA-II generations revisiting grid
+//! points, the two Pareto objectives of Figure 3, repeated layers inside
+//! one inference — pay for each distinct GEMM once.
+
+use crate::config::{ArrayConfig, Dataflow};
+use crate::metrics::Metrics;
+use crate::model::gemm::gemm_metrics;
+use crate::model::network::Network;
+use crate::model::schedule::GemmShape;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// The deduplicated workload of a network: distinct shapes with
+/// multiplicity, in deterministic first-seen layer order.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    /// (shape, groups × occurrences) — first-seen order over the layers.
+    pub shapes: Vec<(GemmShape, u64)>,
+    /// Total useful MACs of one inference.
+    pub macs: u64,
+}
+
+impl Workload {
+    /// Deduplicate a network's GEMMs. Linear in the layer count: the
+    /// histogram is keyed on [`GemmShape`] through a `HashMap` index while
+    /// the output vector preserves first-seen order. (`net.macs()` equals
+    /// the recomputed Σ shape.macs() × multiplicity exactly, since
+    /// `layer.macs() == gemm.macs() * groups`.)
+    pub fn of(net: &Network) -> Workload {
+        Workload::from_shapes(
+            net.name.clone(),
+            net.gemm_histogram()
+                .into_iter()
+                .map(|(shape, groups, count)| (shape, (groups * count) as u64))
+                .collect(),
+        )
+    }
+
+    /// Build directly from (shape, multiplicity) pairs (tests, synthetic
+    /// workloads). Pairs are deduplicated preserving first-seen order.
+    pub fn from_shapes(name: impl Into<String>, pairs: Vec<(GemmShape, u64)>) -> Workload {
+        let mut shapes: Vec<(GemmShape, u64)> = Vec::new();
+        let mut index: HashMap<GemmShape, usize> = HashMap::new();
+        let mut macs = 0u64;
+        for (shape, mult) in pairs {
+            macs += shape.macs() * mult;
+            match index.get(&shape) {
+                Some(&i) => shapes[i].1 += mult,
+                None => {
+                    index.insert(shape, shapes.len());
+                    shapes.push((shape, mult));
+                }
+            }
+        }
+        Workload {
+            name: name.into(),
+            shapes,
+            macs,
+        }
+    }
+
+    /// Number of distinct GEMM shapes.
+    pub fn distinct(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// Total GEMM invocations (Σ multiplicities).
+    pub fn total_gemms(&self) -> u64 {
+        self.shapes.iter().map(|&(_, m)| m).sum()
+    }
+
+    /// Evaluate on one configuration: Σ multiplicity × per-shape metrics.
+    pub fn eval(&self, cfg: &ArrayConfig) -> Metrics {
+        self.shapes
+            .iter()
+            .map(|&(shape, mult)| gemm_metrics(shape, cfg) * mult)
+            .sum()
+    }
+
+    /// Like [`Workload::eval`], but per-shape metrics are memoized in
+    /// `cache` and reused across calls (and across workloads sharing the
+    /// cache).
+    pub fn eval_cached(&self, cfg: &ArrayConfig, cache: &EvalCache) -> Metrics {
+        self.shapes
+            .iter()
+            .map(|&(shape, mult)| cache.gemm_metrics(shape, cfg) * mult)
+            .sum()
+    }
+}
+
+/// The configuration fields that determine [`Metrics`] (bitwidths and UB
+/// provisioning scale bandwidth reports, not access counts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct CfgKey {
+    height: usize,
+    width: usize,
+    acc_capacity: usize,
+    dataflow: Dataflow,
+}
+
+impl CfgKey {
+    fn of(cfg: &ArrayConfig) -> CfgKey {
+        CfgKey {
+            height: cfg.height,
+            width: cfg.width,
+            acc_capacity: cfg.acc_capacity,
+            dataflow: cfg.dataflow,
+        }
+    }
+}
+
+/// A thread-safe memo table of per-(shape, configuration) metrics. Shared
+/// by NSGA-II across generations and objectives, and by the coordinator
+/// across repeated layers of one inference.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: RwLock<HashMap<(GemmShape, CfgKey), Metrics>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// Memoized [`gemm_metrics`].
+    pub fn gemm_metrics(&self, shape: GemmShape, cfg: &ArrayConfig) -> Metrics {
+        let key = (shape, CfgKey::of(cfg));
+        if let Some(m) = self.map.read().expect("eval cache poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *m;
+        }
+        let m = gemm_metrics(shape, cfg);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map
+            .write()
+            .expect("eval cache poisoned")
+            .insert(key, m);
+        m
+    }
+
+    /// Distinct (shape, configuration) pairs evaluated so far.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("eval cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from the memo table.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to evaluate the closed form.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Layer, SpatialDims};
+
+    fn small_net() -> Network {
+        Network::new(
+            "s",
+            vec![
+                Layer::conv("c1", SpatialDims::square(14), 16, 32, 3, 1, 1, 1),
+                Layer::conv("c2", SpatialDims::square(14), 32, 32, 3, 1, 1, 1),
+                Layer::conv("c3", SpatialDims::square(14), 32, 32, 3, 1, 1, 1), // dup of c2
+                Layer::conv("g", SpatialDims::square(14), 32, 32, 3, 1, 1, 4),
+            ],
+        )
+    }
+
+    #[test]
+    fn workload_deduplicates() {
+        let w = Workload::of(&small_net());
+        // c2 and c3 share a shape; the grouped layer is distinct.
+        assert_eq!(w.distinct(), 3);
+        let dup = w.shapes.iter().find(|(s, _)| s.k == 32 * 9).unwrap();
+        assert_eq!(dup.1, 2);
+        let grouped = w.shapes.iter().find(|(s, _)| s.k == 8 * 9).unwrap();
+        assert_eq!(grouped.1, 4);
+        assert_eq!(w.total_gemms(), 1 + 2 + 4);
+        assert_eq!(w.macs, small_net().macs());
+    }
+
+    #[test]
+    fn dedup_preserves_first_seen_order() {
+        let w = Workload::of(&small_net());
+        // c1's shape first, then the shared c2/c3 shape, then the grouped.
+        assert_eq!(w.shapes[0].0.k, 16 * 9);
+        assert_eq!(w.shapes[1].0.k, 32 * 9);
+        assert_eq!(w.shapes[2].0.k, 8 * 9);
+    }
+
+    #[test]
+    fn workload_eval_equals_network_metrics() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        let cfg = ArrayConfig::new(16, 8);
+        assert_eq!(w.eval(&cfg), net.metrics(&cfg));
+    }
+
+    #[test]
+    fn from_shapes_merges_duplicates() {
+        let a = GemmShape::new(4, 8, 16);
+        let b = GemmShape::new(2, 2, 2);
+        let w = Workload::from_shapes("syn", vec![(a, 3), (b, 1), (a, 2)]);
+        assert_eq!(w.shapes, vec![(a, 5), (b, 1)]);
+        assert_eq!(w.macs, a.macs() * 5 + b.macs());
+    }
+
+    #[test]
+    fn eval_is_linear_in_multiplicity() {
+        let a = GemmShape::new(5, 17, 9);
+        let once = Workload::from_shapes("x1", vec![(a, 1)]);
+        let thrice = Workload::from_shapes("x3", vec![(a, 3)]);
+        let cfg = ArrayConfig::new(8, 4).with_acc_capacity(32);
+        assert_eq!(thrice.eval(&cfg), once.eval(&cfg) * 3);
+    }
+
+    #[test]
+    fn cache_returns_identical_metrics_and_counts_hits() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        let cache = EvalCache::new();
+        let cfg_a = ArrayConfig::new(16, 8);
+        let cfg_b = ArrayConfig::new(8, 16);
+        assert_eq!(w.eval_cached(&cfg_a, &cache), w.eval(&cfg_a));
+        assert_eq!(cache.misses(), w.distinct() as u64);
+        assert_eq!(cache.hits(), 0);
+        // Second evaluation of the same config is served entirely from the
+        // memo table; a different geometry misses again.
+        assert_eq!(w.eval_cached(&cfg_a, &cache), w.eval(&cfg_a));
+        assert_eq!(cache.hits(), w.distinct() as u64);
+        assert_eq!(w.eval_cached(&cfg_b, &cache), w.eval(&cfg_b));
+        assert_eq!(cache.len(), 2 * w.distinct());
+    }
+
+    #[test]
+    fn cache_distinguishes_metric_relevant_config_fields() {
+        let shape = GemmShape::new(10, 20, 30);
+        let cache = EvalCache::new();
+        let base = ArrayConfig::new(8, 8);
+        let small_acc = ArrayConfig::new(8, 8).with_acc_capacity(8);
+        let m1 = cache.gemm_metrics(shape, &base);
+        let m2 = cache.gemm_metrics(shape, &small_acc);
+        assert_ne!(m1, m2);
+        assert_eq!(cache.len(), 2);
+        // Bitwidths do not affect access counts: same cache entry.
+        let rebit = ArrayConfig::new(8, 8).with_bits(16, 16, 32);
+        assert_eq!(cache.gemm_metrics(shape, &rebit), m1);
+        assert_eq!(cache.len(), 2);
+    }
+}

@@ -8,6 +8,8 @@
 //! only 961 points, the exhaustive front is computable and the tests
 //! require NSGA-II to recover it exactly.
 
+use crate::config::{ArrayConfig, EnergyWeights};
+use crate::model::workload::{EvalCache, Workload};
 use crate::pareto::dominance::{crowding_distance, fast_non_dominated_sort};
 use crate::sweep::grid::DimGrid;
 use crate::util::prng::Rng;
@@ -196,6 +198,42 @@ pub fn nsga2(
     out
 }
 
+/// Objective pairs selectable for workload-driven runs, both minimized:
+/// Figure 3's (E, cycles) and (1 − utilization, cycles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadObjective {
+    EnergyCycles,
+    InverseUtilizationCycles,
+}
+
+/// Run NSGA-II directly over a [`Workload`]: each genome's configuration
+/// is evaluated through the shared [`EvalCache`], so per-(shape, config)
+/// metrics are computed once across all generations — and across *runs*
+/// when callers reuse the cache for several objective pairs on the same
+/// workload (as Figure 3 does).
+pub fn nsga2_workload(
+    grid: &DimGrid,
+    params: &Nsga2Params,
+    workload: &Workload,
+    template: &ArrayConfig,
+    weights: &EnergyWeights,
+    cache: &EvalCache,
+    objective: WorkloadObjective,
+) -> Vec<Solution> {
+    nsga2(grid, params, |h, w| {
+        let mut cfg = template.clone();
+        cfg.height = h;
+        cfg.width = w;
+        let m = workload.eval_cached(&cfg, cache);
+        match objective {
+            WorkloadObjective::EnergyCycles => vec![m.energy(weights), m.cycles as f64],
+            WorkloadObjective::InverseUtilizationCycles => {
+                vec![1.0 - m.utilization(cfg.pe_count()), m.cycles as f64]
+            }
+        }
+    })
+}
+
 /// Rank + crowding of a whole point set (used once, for generation 0).
 fn rank_and_crowd(objs: &[&[f64]]) -> (Vec<usize>, Vec<f64>) {
     let fronts = fast_non_dominated_sort(objs);
@@ -307,6 +345,67 @@ mod tests {
         let sols = nsga2(&grid, &Nsga2Params::default(), toy_eval);
         for w in sols.windows(2) {
             assert!(w[0].objectives[0] <= w[1].objectives[0]);
+        }
+    }
+
+    #[test]
+    fn workload_runs_share_the_eval_cache_across_objectives() {
+        use crate::model::layer::{Layer, SpatialDims};
+        use crate::model::network::Network;
+        let net = Network::new(
+            "n",
+            vec![
+                Layer::conv("c1", SpatialDims::square(14), 16, 32, 3, 1, 1, 1),
+                Layer::conv("c2", SpatialDims::square(14), 32, 32, 3, 1, 1, 1),
+            ],
+        );
+        let wl = Workload::of(&net);
+        let grid = DimGrid::coarse(8, 32, 8);
+        let template = ArrayConfig::new(1, 1);
+        let weights = EnergyWeights::paper();
+        let cache = EvalCache::new();
+        let params = Nsga2Params {
+            population: 16,
+            generations: 10,
+            ..Default::default()
+        };
+        let energy_front = nsga2_workload(
+            &grid,
+            &params,
+            &wl,
+            &template,
+            &weights,
+            &cache,
+            WorkloadObjective::EnergyCycles,
+        );
+        assert!(!energy_front.is_empty());
+        // The cache can never hold more than shapes x grid points…
+        let ceiling = (wl.distinct() * grid.len()) as u64;
+        assert!(cache.len() as u64 <= ceiling);
+        // …and a second objective over the same workload is served from the
+        // shared memo table wherever the first run already visited (the
+        // identical seed makes generation 0 a guaranteed overlap).
+        let hits_before = cache.hits();
+        let util_front = nsga2_workload(
+            &grid,
+            &params,
+            &wl,
+            &template,
+            &weights,
+            &cache,
+            WorkloadObjective::InverseUtilizationCycles,
+        );
+        assert!(!util_front.is_empty());
+        assert!(cache.hits() > hits_before);
+        assert!(cache.misses() <= ceiling);
+        // Objectives agree with a direct evaluation.
+        for s in &energy_front {
+            let mut cfg = template.clone();
+            cfg.height = s.height;
+            cfg.width = s.width;
+            let m = wl.eval(&cfg);
+            assert_eq!(s.objectives[0], m.energy(&weights));
+            assert_eq!(s.objectives[1], m.cycles as f64);
         }
     }
 

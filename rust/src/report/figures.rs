@@ -5,14 +5,15 @@
 //! through here, so the paper pipeline has exactly one implementation.
 
 use crate::config::{ArrayConfig, EnergyWeights};
+use crate::model::workload::{EvalCache, Workload};
 use crate::nets;
 use crate::pareto::dominance::pareto_front_indices;
-use crate::pareto::nsga2::{nsga2, Nsga2Params, Solution};
+use crate::pareto::nsga2::{nsga2, nsga2_workload, Nsga2Params, Solution, WorkloadObjective};
 use crate::report::heatmap::Heatmap;
 use crate::report::table::{pareto_csv, pareto_table};
 use crate::sweep::grid::{equal_pe_factorizations, DimGrid};
 use crate::sweep::normalize::RobustObjectives;
-use crate::sweep::runner::{sweep_network, SweepResult};
+use crate::sweep::runner::{sweep_network, sweep_workload, SweepResult};
 use crate::util::csv::{fmt_f64, CsvTable};
 use crate::util::stats::min_max_normalize;
 use std::collections::HashMap;
@@ -116,37 +117,19 @@ pub struct Fig3Data {
 }
 
 pub fn fig3_pareto(net_name: &str, ctx: &FigureContext, params: &Nsga2Params) -> Fig3Data {
-    let data = fig2_heatmaps(net_name, ctx);
-    // Lookup table (h, w) -> (energy, cycles, utilization).
-    let lut: HashMap<(usize, usize), (f64, f64, f64)> = data
-        .sweep
-        .points
-        .iter()
-        .map(|p| {
-            (
-                (p.height, p.width),
-                (p.energy, p.metrics.cycles as f64, p.utilization),
-            )
-        })
-        .collect();
+    let net = nets::build(net_name).unwrap_or_else(|| panic!("unknown network {net_name}"));
+    let workload = Workload::of(&net);
 
-    let eval_energy = |h: usize, w: usize| -> Vec<f64> {
-        let (e, c, _) = lut[&(h, w)];
-        vec![e, c]
-    };
-    let eval_util = |h: usize, w: usize| -> Vec<f64> {
-        let (_, c, u) = lut[&(h, w)];
-        vec![1.0 - u, c]
-    };
-
-    let exhaustive = |objs: &dyn Fn(usize, usize) -> Vec<f64>| -> Vec<Solution> {
-        let pairs = ctx.grid.pairs();
-        let points: Vec<Vec<f64>> = pairs.iter().map(|&(h, w)| objs(h, w)).collect();
+    // Exhaustive validation fronts from the full shape-major sweep; the
+    // grid's config order is pairs() order, so points align with pairs.
+    let sweep_points = sweep_workload(&workload, &ctx.configs(), &ctx.weights, ctx.threads);
+    let exhaustive = |objs: &dyn Fn(&crate::sweep::runner::SweepPoint) -> Vec<f64>| -> Vec<Solution> {
+        let points: Vec<Vec<f64>> = sweep_points.iter().map(objs).collect();
         let mut sols: Vec<Solution> = pareto_front_indices(&points)
             .into_iter()
             .map(|i| Solution {
-                height: pairs[i].0,
-                width: pairs[i].1,
+                height: sweep_points[i].height,
+                width: sweep_points[i].width,
                 objectives: points[i].clone(),
             })
             .collect();
@@ -154,12 +137,29 @@ pub fn fig3_pareto(net_name: &str, ctx: &FigureContext, params: &Nsga2Params) ->
         sols
     };
 
+    // NSGA-II consumes the workload IR directly; both objective runs share
+    // one per-(shape, config) evaluation cache across all generations.
+    let cache = EvalCache::new();
+    let front_of = |objective: WorkloadObjective| -> Vec<Solution> {
+        nsga2_workload(
+            &ctx.grid,
+            params,
+            &workload,
+            &ctx.template,
+            &ctx.weights,
+            &cache,
+            objective,
+        )
+    };
+
     Fig3Data {
         network: net_name.to_string(),
-        energy_front: nsga2(&ctx.grid, params, eval_energy),
-        utilization_front: nsga2(&ctx.grid, params, eval_util),
-        exhaustive_energy_front: exhaustive(&eval_energy),
-        exhaustive_utilization_front: exhaustive(&eval_util),
+        energy_front: front_of(WorkloadObjective::EnergyCycles),
+        utilization_front: front_of(WorkloadObjective::InverseUtilizationCycles),
+        exhaustive_energy_front: exhaustive(&|p| vec![p.energy, p.metrics.cycles as f64]),
+        exhaustive_utilization_front: exhaustive(&|p| {
+            vec![1.0 - p.utilization, p.metrics.cycles as f64]
+        }),
     }
 }
 

@@ -2,87 +2,145 @@
 //! the CPU PJRT client, and execute them from the Rust hot path. Python is
 //! never invoked here — the artifacts are self-contained.
 //!
+//! The bridge needs the vendored `xla` crate, which the offline build image
+//! does not ship; it is therefore gated behind the `pjrt` cargo feature.
+//! Without the feature the same public API compiles to an explicit stub
+//! whose constructor reports the missing backend, so every caller (CLI
+//! `verify`, examples, the e2e bench) degrades gracefully instead of
+//! breaking the build (DESIGN.md §6).
+//!
 //! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! (text interchange — the 0.5.1 xla_extension rejects jax>=0.5 serialized
 //! protos) → `XlaComputation::from_proto` → `client.compile` → `execute`,
 //! unwrapping the 1-tuple the exporter emits.
 
-use crate::tensor::Matrix;
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::tensor::Matrix;
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-/// A PJRT CPU runtime holding compiled executables.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-/// One compiled artifact ready to run.
-pub struct CompiledArtifact {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime { client })
+    /// A PJRT CPU runtime holding compiled executables.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One compiled artifact ready to run.
+    pub struct CompiledArtifact {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
 
-    /// Load + compile an HLO-text artifact.
-    pub fn load(&self, name: &str, path: &Path) -> Result<CompiledArtifact> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact '{name}'"))?;
-        Ok(CompiledArtifact {
-            exe,
-            name: name.to_string(),
-        })
-    }
-}
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtRuntime { client })
+        }
 
-impl CompiledArtifact {
-    /// Execute with rank-N f32 inputs given as (shape, data) pairs; returns
-    /// the flat f32 payload of the single tuple output.
-    pub fn run_raw(&self, inputs: &[(&[i64], &[f32])]) -> Result<Vec<f32>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(shape, data)| {
-                let lit = xla::Literal::vec1(data);
-                lit.reshape(shape)
-                    .with_context(|| format!("reshape input to {shape:?}"))
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn load(&self, name: &str, path: &Path) -> Result<CompiledArtifact> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            Ok(CompiledArtifact {
+                exe,
+                name: name.to_string(),
             })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing '{}'", self.name))?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
-        Ok(out.to_vec::<f32>()?)
+        }
     }
 
-    /// Execute a 2-input GEMM-shaped artifact on matrices.
-    pub fn run_gemm(&self, a: &Matrix, w: &Matrix) -> Result<Matrix> {
-        let out = self.run_raw(&[
-            (&[a.rows as i64, a.cols as i64], a.data()),
-            (&[w.rows as i64, w.cols as i64], w.data()),
-        ])?;
-        anyhow::ensure!(
-            out.len() == a.rows * w.cols,
-            "output length {} != {}x{}",
-            out.len(),
-            a.rows,
-            w.cols
-        );
-        Ok(Matrix::from_vec(a.rows, w.cols, out))
+    impl CompiledArtifact {
+        /// Execute with rank-N f32 inputs given as (shape, data) pairs; returns
+        /// the flat f32 payload of the single tuple output.
+        pub fn run_raw(&self, inputs: &[(&[i64], &[f32])]) -> Result<Vec<f32>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(shape, data)| {
+                    let lit = xla::Literal::vec1(data);
+                    lit.reshape(shape)
+                        .with_context(|| format!("reshape input to {shape:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing '{}'", self.name))?[0][0]
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True.
+            let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        /// Execute a 2-input GEMM-shaped artifact on matrices.
+        pub fn run_gemm(&self, a: &Matrix, w: &Matrix) -> Result<Matrix> {
+            let out = self.run_raw(&[
+                (&[a.rows as i64, a.cols as i64], a.data()),
+                (&[w.rows as i64, w.cols as i64], w.data()),
+            ])?;
+            anyhow::ensure!(
+                out.len() == a.rows * w.cols,
+                "output length {} != {}x{}",
+                out.len(),
+                a.rows,
+                w.cols
+            );
+            Ok(Matrix::from_vec(a.rows, w.cols, out))
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::tensor::Matrix;
+    use anyhow::Result;
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "CAMUY was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` in an environment that vendors the `xla` crate to execute \
+         AOT artifacts";
+
+    /// Stub runtime: same API surface, constructor reports the missing
+    /// backend.
+    pub struct PjrtRuntime {
+        _private: (),
+    }
+
+    /// Stub compiled artifact (never constructed — `load` always errors).
+    pub struct CompiledArtifact {
+        pub name: String,
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            anyhow::bail!("{}", UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-unavailable".to_string()
+        }
+
+        pub fn load(&self, _name: &str, _path: &Path) -> Result<CompiledArtifact> {
+            anyhow::bail!("{}", UNAVAILABLE)
+        }
+    }
+
+    impl CompiledArtifact {
+        pub fn run_raw(&self, _inputs: &[(&[i64], &[f32])]) -> Result<Vec<f32>> {
+            anyhow::bail!("{}", UNAVAILABLE)
+        }
+
+        pub fn run_gemm(&self, _a: &Matrix, _w: &Matrix) -> Result<Matrix> {
+            anyhow::bail!("{}", UNAVAILABLE)
+        }
+    }
+}
+
+pub use imp::{CompiledArtifact, PjrtRuntime};

@@ -1,6 +1,6 @@
-//! Design-space exploration: configuration grids, the parallel sweep
-//! engine, cross-model normalization (Section 5) and the equal-PE-count
-//! aspect-ratio space (Figure 6).
+//! Design-space exploration: configuration grids, the shape-major parallel
+//! sweep engine (DESIGN.md §4), cross-model normalization (Section 5) and
+//! the equal-PE-count aspect-ratio space (Figure 6).
 
 pub mod grid;
 pub mod normalize;
@@ -8,4 +8,7 @@ pub mod runner;
 
 pub use grid::{equal_pe_factorizations, DimGrid};
 pub use normalize::RobustObjectives;
-pub use runner::{default_threads, sweep_network, sweep_workload, SweepPoint, SweepResult, Workload};
+pub use runner::{
+    default_threads, sweep_network, sweep_workload, sweep_workload_config_major, SweepPoint,
+    SweepResult, Workload,
+};

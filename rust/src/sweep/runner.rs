@@ -1,17 +1,30 @@
-//! The sweep engine: evaluates a network (or several) over a configuration
-//! grid, in parallel across OS threads (the offline environment has no
-//! rayon; `std::thread::scope` over chunks does the job).
+//! The sweep engine: evaluates a workload (the deduplicated GEMM-shape IR
+//! of [`crate::model::workload`]) over a configuration grid, in parallel
+//! across OS threads (the offline environment has no rayon; a scoped
+//! work-stealing pool over an atomic index does the job).
 //!
-//! The hot path deduplicates GEMM shapes first: a network is reduced to its
-//! shape histogram once, then each configuration evaluates each *distinct*
-//! shape exactly once and scales by multiplicity — DenseNet-201's 201
-//! layers collapse to ~120 distinct GEMMs, ResNet-152's 156 to ~40.
+//! The hot loop is **shape-major** (DESIGN.md §4): the closed-form WS model
+//! factors into height-dependent row factors and width/accumulator-
+//! dependent col factors ([`crate::model::gemm`]), and the sweep computes
+//! each factor once per (shape, grid axis) instead of once per (shape,
+//! configuration). All tiling divisions thus leave the per-cell loop; a
+//! grid of H heights × W widths pays O(S·(H+W)) divisions instead of
+//! O(S·H·W). [`sweep_workload_config_major`] keeps the naive config-major
+//! path alive as the property-test oracle and the bench baseline — the two
+//! are byte-identical by construction because both assemble metrics through
+//! [`ws_metrics_from_factors`].
 
-use crate::config::{ArrayConfig, EnergyWeights};
+use crate::config::{ArrayConfig, Dataflow, EnergyWeights};
 use crate::metrics::Metrics;
-use crate::model::gemm::gemm_metrics;
+use crate::model::gemm::{
+    gemm_metrics, ws_col_factors, ws_metrics_from_factors, ws_row_factors, WsColFactors,
+    WsRowFactors,
+};
+pub use crate::model::workload::Workload;
 use crate::model::network::Network;
-use crate::model::schedule::GemmShape;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// One evaluated grid point.
 #[derive(Debug, Clone)]
@@ -52,53 +65,123 @@ impl SweepResult {
     }
 }
 
-/// The deduplicated workload of a network: distinct (shape, groups) with
-/// multiplicity.
-#[derive(Debug, Clone)]
-pub struct Workload {
-    pub name: String,
-    pub shapes: Vec<(GemmShape, u64)>, // (shape, groups * occurrences)
-    pub macs: u64,
+/// The shape-major evaluation plan for one (workload, config list) pair:
+/// WS tiling factors cached per (shape, height) and per (shape, width,
+/// accumulator capacity), plus per-config indices into those tables.
+/// Configs running a non-WS dataflow fall back to direct per-shape
+/// evaluation.
+struct ShapeMajorPlan<'a> {
+    workload: &'a Workload,
+    /// Flat factor tables; each distinct axis value owns a contiguous
+    /// `workload.distinct()`-sized block.
+    rows: Vec<WsRowFactors>,
+    cols: Vec<WsColFactors>,
+    /// Per config: block starts into `rows`/`cols`, or `None` for the
+    /// fallback path.
+    blocks: Vec<Option<(usize, usize)>>,
 }
 
-impl Workload {
-    pub fn of(net: &Network) -> Workload {
-        let mut shapes: Vec<(GemmShape, u64)> = Vec::new();
-        for (shape, groups, count) in net.gemm_histogram() {
-            let mult = (groups * count) as u64;
-            if let Some(e) = shapes.iter_mut().find(|(s, _)| *s == shape) {
-                e.1 += mult;
-            } else {
-                shapes.push((shape, mult));
+impl<'a> ShapeMajorPlan<'a> {
+    fn new(workload: &'a Workload, configs: &[ArrayConfig]) -> ShapeMajorPlan<'a> {
+        let mut rows: Vec<WsRowFactors> = Vec::new();
+        let mut cols: Vec<WsColFactors> = Vec::new();
+        let mut row_start: HashMap<usize, usize> = HashMap::new();
+        let mut col_start: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut blocks = Vec::with_capacity(configs.len());
+        for cfg in configs {
+            if cfg.dataflow != Dataflow::WeightStationary {
+                blocks.push(None);
+                continue;
             }
+            let rs = match row_start.get(&cfg.height) {
+                Some(&s) => s,
+                None => {
+                    let s = rows.len();
+                    for &(shape, _) in &workload.shapes {
+                        rows.push(ws_row_factors(shape, cfg.height));
+                    }
+                    row_start.insert(cfg.height, s);
+                    s
+                }
+            };
+            let ck = (cfg.width, cfg.acc_capacity);
+            let cs = match col_start.get(&ck) {
+                Some(&s) => s,
+                None => {
+                    let s = cols.len();
+                    for &(shape, _) in &workload.shapes {
+                        cols.push(ws_col_factors(shape, cfg.width, cfg.acc_capacity));
+                    }
+                    col_start.insert(ck, s);
+                    s
+                }
+            };
+            blocks.push(Some((rs, cs)));
         }
-        Workload {
-            name: net.name.clone(),
-            shapes,
-            macs: net.macs(),
+        ShapeMajorPlan {
+            workload,
+            rows,
+            cols,
+            blocks,
         }
     }
 
-    /// Evaluate on one configuration: Σ multiplicity × per-shape metrics.
-    pub fn eval(&self, cfg: &ArrayConfig) -> Metrics {
-        let mut total = Metrics::default();
-        for &(shape, mult) in &self.shapes {
-            let one = gemm_metrics(shape, cfg);
-            total.cycles += one.cycles * mult;
-            total.stall_cycles += one.stall_cycles * mult;
-            total.macs += one.macs * mult;
-            total.passes += one.passes * mult;
-            total.movements.ub_act_reads += one.movements.ub_act_reads * mult;
-            total.movements.ub_weight_reads += one.movements.ub_weight_reads * mult;
-            total.movements.ub_out_writes += one.movements.ub_out_writes * mult;
-            total.movements.inter_pe_act += one.movements.inter_pe_act * mult;
-            total.movements.inter_pe_psum += one.movements.inter_pe_psum * mult;
-            total.movements.inter_pe_weight += one.movements.inter_pe_weight * mult;
-            total.movements.intra_pe += one.movements.intra_pe * mult;
-            total.movements.aa_writes += one.movements.aa_writes * mult;
-            total.movements.aa_reads += one.movements.aa_reads * mult;
+    /// Evaluate config `i`: Σ multiplicity × per-shape metrics, assembled
+    /// from the cached factors (or the direct path for non-WS dataflows).
+    fn eval(&self, i: usize, cfg: &ArrayConfig) -> Metrics {
+        match self.blocks[i] {
+            None => self.workload.eval(cfg),
+            Some((rs, cs)) => {
+                let mut total = Metrics::default();
+                for (si, &(shape, mult)) in self.workload.shapes.iter().enumerate() {
+                    let m =
+                        ws_metrics_from_factors(shape, &self.rows[rs + si], &self.cols[cs + si]);
+                    total += m * mult;
+                }
+                total
+            }
         }
-        total
+    }
+}
+
+/// Run `eval(i)` for every index in `0..n` across `threads` workers that
+/// steal indices from a shared atomic counter — no static chunking, so a
+/// straggler config (large shape count, slow cell) cannot idle the pool.
+fn parallel_points(
+    n: usize,
+    threads: usize,
+    eval: impl Fn(usize) -> SweepPoint + Sync,
+) -> Vec<SweepPoint> {
+    let workers = threads.max(1).min(n);
+    if workers <= 1 {
+        return (0..n).map(eval).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<OnceLock<SweepPoint>> = (0..n).map(|_| OnceLock::new()).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let _ = slots[i].set(eval(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("all slots filled"))
+        .collect()
+}
+
+fn point_of(cfg: &ArrayConfig, m: Metrics, weights: &EnergyWeights) -> SweepPoint {
+    SweepPoint {
+        height: cfg.height,
+        width: cfg.width,
+        metrics: m,
+        energy: m.energy(weights),
+        utilization: m.utilization(cfg.pe_count()),
     }
 }
 
@@ -117,41 +200,38 @@ pub fn sweep_network(
     }
 }
 
-/// Sweep a prepared workload (used by benches to skip re-deduplication).
+/// Sweep a prepared workload shape-major: tiling factors are computed once
+/// per (shape, grid axis) and reused across the whole config list.
 pub fn sweep_workload(
     workload: &Workload,
     configs: &[ArrayConfig],
     weights: &EnergyWeights,
     threads: usize,
 ) -> Vec<SweepPoint> {
-    let threads = threads.max(1);
-    let eval_one = |cfg: &ArrayConfig| -> SweepPoint {
-        let m = workload.eval(cfg);
-        SweepPoint {
-            height: cfg.height,
-            width: cfg.width,
-            metrics: m,
-            energy: m.energy(weights),
-            utilization: m.utilization(cfg.pe_count()),
-        }
-    };
+    let plan = ShapeMajorPlan::new(workload, configs);
+    parallel_points(configs.len(), threads, |i| {
+        point_of(&configs[i], plan.eval(i, &configs[i]), weights)
+    })
+}
 
-    if threads == 1 || configs.len() < 2 * threads {
-        return configs.iter().map(eval_one).collect();
-    }
-
-    let chunk = configs.len().div_ceil(threads);
-    let mut points: Vec<Option<SweepPoint>> = vec![None; configs.len()];
-    std::thread::scope(|scope| {
-        for (slot_chunk, cfg_chunk) in points.chunks_mut(chunk).zip(configs.chunks(chunk)) {
-            scope.spawn(move || {
-                for (slot, cfg) in slot_chunk.iter_mut().zip(cfg_chunk) {
-                    *slot = Some(eval_one(cfg));
-                }
-            });
-        }
-    });
-    points.into_iter().map(|p| p.expect("all slots filled")).collect()
+/// The naive config-major path: every (shape, config) cell recomputes its
+/// tiling from scratch. Kept as the property-test oracle and the bench
+/// baseline the shape-major core is measured against.
+pub fn sweep_workload_config_major(
+    workload: &Workload,
+    configs: &[ArrayConfig],
+    weights: &EnergyWeights,
+    threads: usize,
+) -> Vec<SweepPoint> {
+    parallel_points(configs.len(), threads, |i| {
+        let cfg = &configs[i];
+        let m: Metrics = workload
+            .shapes
+            .iter()
+            .map(|&(shape, mult)| gemm_metrics(shape, cfg) * mult)
+            .sum();
+        point_of(cfg, m, weights)
+    })
 }
 
 /// Default parallelism: available cores.
@@ -180,22 +260,46 @@ mod tests {
     }
 
     #[test]
-    fn workload_deduplicates() {
-        let w = Workload::of(&small_net());
-        // c2 and c3 share a shape; the grouped layer is distinct.
-        assert_eq!(w.shapes.len(), 3);
-        let dup = w.shapes.iter().find(|(s, _)| s.k == 32 * 9).unwrap();
-        assert_eq!(dup.1, 2);
-        let grouped = w.shapes.iter().find(|(s, _)| s.k == 8 * 9).unwrap();
-        assert_eq!(grouped.1, 4);
-    }
-
-    #[test]
     fn workload_eval_equals_network_metrics() {
         let net = small_net();
         let w = Workload::of(&net);
         let cfg = ArrayConfig::new(16, 8);
         assert_eq!(w.eval(&cfg), net.metrics(&cfg));
+    }
+
+    #[test]
+    fn shape_major_equals_config_major() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        let cfgs = DimGrid::coarse(4, 32, 4).configs(&ArrayConfig::new(1, 1).with_acc_capacity(64));
+        let ew = EnergyWeights::paper();
+        let fast = sweep_workload(&w, &cfgs, &ew, 1);
+        let naive = sweep_workload_config_major(&w, &cfgs, &ew, 1);
+        assert_eq!(fast.len(), naive.len());
+        for (a, b) in fast.iter().zip(&naive) {
+            assert_eq!((a.height, a.width), (b.height, b.width));
+            assert_eq!(a.metrics, b.metrics);
+            assert_eq!(a.energy, b.energy);
+            assert_eq!(a.utilization, b.utilization);
+        }
+    }
+
+    #[test]
+    fn non_ws_dataflow_falls_back_and_matches() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        // A mixed config list: WS and OS entries interleaved.
+        let mut cfgs = DimGrid::coarse(8, 24, 8).configs(&ArrayConfig::new(1, 1));
+        let os: Vec<ArrayConfig> = cfgs
+            .iter()
+            .map(|c| c.clone().with_dataflow(crate::config::Dataflow::OutputStationary))
+            .collect();
+        cfgs.extend(os);
+        let ew = EnergyWeights::paper();
+        let fast = sweep_workload(&w, &cfgs, &ew, 2);
+        for (p, cfg) in fast.iter().zip(&cfgs) {
+            assert_eq!(p.metrics, w.eval(cfg));
+        }
     }
 
     #[test]
@@ -210,6 +314,18 @@ mod tests {
             assert_eq!((a.height, a.width), (b.height, b.width));
             assert_eq!(a.metrics, b.metrics);
             assert_eq!(a.energy, b.energy);
+        }
+    }
+
+    #[test]
+    fn more_workers_than_configs_degrades_gracefully() {
+        let net = small_net();
+        let cfgs = DimGrid::coarse(8, 16, 8).configs(&ArrayConfig::new(1, 1));
+        let res = sweep_network(&net, &cfgs, &EnergyWeights::paper(), 64);
+        assert_eq!(res.points.len(), cfgs.len());
+        let serial = sweep_network(&net, &cfgs, &EnergyWeights::paper(), 1);
+        for (a, b) in res.points.iter().zip(&serial.points) {
+            assert_eq!(a.metrics, b.metrics);
         }
     }
 

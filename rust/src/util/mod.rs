@@ -1,8 +1,9 @@
 //! Shared infrastructure: deterministic PRNG, statistics, JSON/CSV
 //! serialization, logging, and the property-test mini-harness.
 //!
-//! These exist in-tree because the build environment is fully offline and
-//! only the `xla` crate's dependency closure is vendored (see DESIGN.md §6).
+//! These exist in-tree because the build environment is fully offline:
+//! only minimal `anyhow`/`log` shims are vendored under `rust/vendor/`,
+//! and the `xla`-backed PJRT bridge is feature-gated (see DESIGN.md §6).
 
 pub mod bench;
 pub mod csv;

@@ -1,15 +1,23 @@
 //! Property tests (DESIGN.md §7): the analytic closed form, the
 //! pass-iterating reference, and the functional emulator (both engines)
 //! must agree *exactly* — counters, cycles, passes — across randomized
-//! GEMM shapes, array geometries and accumulator capacities; and the
-//! emulator's numerics must equal plain matmul.
+//! GEMM shapes, array geometries and accumulator capacities; the
+//! emulator's numerics must equal plain matmul; the shape-major sweep core
+//! must be byte-identical to naive config-major evaluation on random
+//! networks and grids; and the metrics algebra must satisfy its monoid /
+//! scaling laws.
 
 use camuy::arch::{EmulationMode, Emulator};
-use camuy::config::ArrayConfig;
+use camuy::config::{ArrayConfig, Dataflow, EnergyWeights};
+use camuy::metrics::{Metrics, MovementCounters};
 use camuy::model::gemm::{os_metrics, ws_metrics, ws_metrics_ref};
 use camuy::model::layer::{Layer, SpatialDims};
+use camuy::model::network::Network;
 use camuy::model::schedule::GemmShape;
+use camuy::model::workload::Workload;
+use camuy::sweep::runner::{sweep_workload, sweep_workload_config_major};
 use camuy::tensor::Matrix;
+use camuy::util::prng::Rng;
 use camuy::util::propcheck::{check, shrink_usize, Shrink};
 
 #[derive(Debug, Clone)]
@@ -161,6 +169,224 @@ fn invariant_utilization_bounded_and_monotone_macs() {
         let lower = (g.macs() as f64 / cfg.pe_count() as f64).floor() as u64;
         if m.cycles < lower {
             return Err(format!("cycles {} below roofline {lower}", m.cycles));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- algebra
+
+#[derive(Debug, Clone)]
+struct AlgebraCase {
+    a: Metrics,
+    b: Metrics,
+    c: Metrics,
+    s: u64,
+    t: u64,
+}
+
+impl Shrink for AlgebraCase {}
+
+fn gen_movements(rng: &mut Rng) -> MovementCounters {
+    MovementCounters {
+        ub_act_reads: rng.range_usize(0, 1000) as u64,
+        ub_weight_reads: rng.range_usize(0, 1000) as u64,
+        ub_out_writes: rng.range_usize(0, 1000) as u64,
+        inter_pe_act: rng.range_usize(0, 1000) as u64,
+        inter_pe_psum: rng.range_usize(0, 1000) as u64,
+        inter_pe_weight: rng.range_usize(0, 1000) as u64,
+        intra_pe: rng.range_usize(0, 1000) as u64,
+        aa_writes: rng.range_usize(0, 1000) as u64,
+        aa_reads: rng.range_usize(0, 1000) as u64,
+    }
+}
+
+fn gen_metrics(rng: &mut Rng) -> Metrics {
+    Metrics {
+        cycles: rng.range_usize(0, 100_000) as u64,
+        stall_cycles: rng.range_usize(0, 100) as u64,
+        macs: rng.range_usize(0, 1_000_000) as u64,
+        passes: rng.range_usize(0, 500) as u64,
+        movements: gen_movements(rng),
+    }
+}
+
+#[test]
+fn metrics_algebra_laws() {
+    check(
+        600,
+        0xA16EB8A,
+        |rng| AlgebraCase {
+            a: gen_metrics(rng),
+            b: gen_metrics(rng),
+            c: gen_metrics(rng),
+            s: rng.range_usize(0, 64) as u64,
+            t: rng.range_usize(0, 64) as u64,
+        },
+        |case| {
+            let AlgebraCase { a, b, c, s, t } = case.clone();
+            if (a + b) + c != a + (b + c) {
+                return Err("addition is not associative".into());
+            }
+            if a + b != b + a {
+                return Err("addition is not commutative".into());
+            }
+            if a + Metrics::default() != a {
+                return Err("default is not the additive identity".into());
+            }
+            if a * 1 != a {
+                return Err("m * 1 != m".into());
+            }
+            if a * 0 != Metrics::default() {
+                return Err("m * 0 != identity".into());
+            }
+            if (a + b) * s != a * s + b * s {
+                return Err("scaling does not distribute over addition".into());
+            }
+            if a * (s * t) != (a * s) * t {
+                return Err("scalar multiplication is not associative".into());
+            }
+            let mut repeated = Metrics::default();
+            for _ in 0..s {
+                repeated += a;
+            }
+            if a * s != repeated {
+                return Err(format!("m * {s} != {s}-fold addition"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn workload_eval_is_linear_in_multiplicity() {
+    check(300, 0x11EA_12, gen_case, |c| {
+        let shape = GemmShape::new(c.m, c.k, c.n);
+        let cfg = cfg_of(c);
+        let mult = 1 + (c.acc % 7) as u64;
+        let base = Workload::from_shapes("x1", vec![(shape, 1)]);
+        let scaled = Workload::from_shapes("xn", vec![(shape, mult)]);
+        if scaled.eval(&cfg) != base.eval(&cfg) * mult {
+            return Err(format!("eval not linear at multiplicity {mult}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- shape-major sweep core
+
+#[derive(Debug, Clone)]
+struct SweepCase {
+    net: Network,
+    configs: Vec<ArrayConfig>,
+    threads: usize,
+}
+
+impl Shrink for SweepCase {}
+
+fn gen_layer(rng: &mut Rng, index: usize) -> Layer {
+    if rng.chance(0.25) {
+        Layer::linear(
+            format!("fc{index}"),
+            rng.range_usize(1, 64),
+            rng.range_usize(1, 32),
+        )
+        .with_batch(rng.range_usize(1, 4))
+    } else {
+        let groups = [1, 1, 2, 4][rng.range_usize(0, 3)];
+        let kernel = [1, 3][rng.range_usize(0, 1)];
+        Layer::conv(
+            format!("c{index}"),
+            SpatialDims::square(rng.range_usize(2, 14)),
+            groups * rng.range_usize(1, 12),
+            groups * rng.range_usize(1, 12),
+            kernel,
+            1,
+            kernel / 2,
+            groups,
+        )
+    }
+}
+
+fn gen_sweep_case(rng: &mut Rng) -> SweepCase {
+    let mut layers = Vec::new();
+    for i in 0..rng.range_usize(1, 6) {
+        layers.push(gen_layer(rng, i));
+        // Duplicate some layers so dedup multiplicities exceed one.
+        if rng.chance(0.3) {
+            let mut dup = layers[rng.range_usize(0, layers.len() - 1)].clone();
+            dup.name = format!("dup{i}");
+            layers.push(dup);
+        }
+    }
+    // A random rectangular grid with a random accumulator provisioning,
+    // optionally mixing in output-stationary configs (fallback path).
+    let mut configs = Vec::new();
+    let heights: Vec<usize> = (0..rng.range_usize(1, 3)).map(|_| rng.range_usize(1, 12)).collect();
+    let widths: Vec<usize> = (0..rng.range_usize(1, 3)).map(|_| rng.range_usize(1, 12)).collect();
+    let acc = rng.range_usize(1, 64);
+    for &h in &heights {
+        for &w in &widths {
+            let cfg = ArrayConfig::new(h, w).with_acc_capacity(acc);
+            if rng.chance(0.15) {
+                configs.push(cfg.clone().with_dataflow(Dataflow::OutputStationary));
+            }
+            configs.push(cfg);
+        }
+    }
+    SweepCase {
+        net: Network::new("prop", layers),
+        configs,
+        threads: rng.range_usize(1, 3),
+    }
+}
+
+#[test]
+fn shape_major_sweep_equals_config_major_on_random_networks() {
+    check(150, 0x5EEE_D0, gen_sweep_case, |case| {
+        let workload = Workload::of(&case.net);
+        let weights = EnergyWeights::paper();
+        let fast = sweep_workload(&workload, &case.configs, &weights, case.threads);
+        let naive = sweep_workload_config_major(&workload, &case.configs, &weights, case.threads);
+        if fast.len() != naive.len() || fast.len() != case.configs.len() {
+            return Err("point count mismatch".into());
+        }
+        for (i, (a, b)) in fast.iter().zip(&naive).enumerate() {
+            let cfg = &case.configs[i];
+            if (a.height, a.width) != (cfg.height, cfg.width) {
+                return Err(format!("config order broken at {i}"));
+            }
+            if a.metrics != b.metrics {
+                return Err(format!(
+                    "metrics diverge at {cfg}: shape-major {:?} != config-major {:?}",
+                    a.metrics, b.metrics
+                ));
+            }
+            // f64 derivations must also be bit-identical (same inputs,
+            // same expression).
+            if a.energy != b.energy || a.utilization != b.utilization {
+                return Err(format!("derived objectives diverge at {cfg}"));
+            }
+            // And both equal the layer-serialized network evaluation.
+            let direct = workload.eval(cfg);
+            if a.metrics != direct {
+                return Err(format!("sweep point != direct workload eval at {cfg}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn workload_eval_equals_layer_serialized_network_metrics() {
+    check(150, 0xDE0D_1, gen_sweep_case, |case| {
+        let workload = Workload::of(&case.net);
+        for cfg in &case.configs {
+            // The layer-by-layer serialization the coordinator performs.
+            let by_layer: Metrics = case.net.layers.iter().map(|l| l.metrics(cfg)).sum();
+            if workload.eval(cfg) != by_layer {
+                return Err(format!("dedup eval != per-layer serialization at {cfg}"));
+            }
         }
         Ok(())
     });
