@@ -1,0 +1,94 @@
+//! Serving-path benchmarks: the request throughput `camuy serve` sees
+//! through the `api::Engine` — cold engine vs memo-hot engine vs the
+//! batched shape-major dispatch path — emitted machine-readably to
+//! `BENCH_api.json` (override with `CAMUY_BENCH_API_OUT`) so the serving
+//! trajectory is tracked PR over PR alongside `BENCH_sweep.json`.
+
+use camuy::api::{Engine, EvalRequest};
+use camuy::config::ArrayConfig;
+use camuy::sweep::runner::default_threads;
+use camuy::util::bench::{bench, throughput, BenchOpts, BenchResult};
+use camuy::util::json::Json;
+
+/// A serving-shaped request mix: one hot model queried across a spread of
+/// geometries (what a design-space-exploration client sends).
+fn requests() -> Vec<EvalRequest> {
+    let mut out = Vec::new();
+    for h in (16..=64).step_by(8) {
+        for w in (16..=64).step_by(8) {
+            out.push(EvalRequest::new("resnet152", ArrayConfig::new(h, w)));
+        }
+    }
+    out
+}
+
+fn main() {
+    let reqs = requests();
+    let n = reqs.len() as u64;
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        measure_iters: 5,
+    };
+
+    println!("== api: engine eval throughput ({n} requests/iter) ==");
+    let cold = bench("api/eval_sequential_cold", &opts, || {
+        let engine = Engine::new();
+        reqs.iter()
+            .map(|r| engine.eval(r).unwrap().total().cycles)
+            .sum::<u64>()
+    });
+    let batched = bench("api/eval_batched_cold", &opts, || {
+        let engine = Engine::new();
+        engine
+            .eval_batch(&reqs, default_threads())
+            .into_iter()
+            .map(|r| r.unwrap().total().cycles)
+            .sum::<u64>()
+    });
+    let warm_engine = Engine::new();
+    let _ = warm_engine.eval_batch(&reqs, default_threads());
+    let hot = bench("api/eval_memo_hot", &opts, || {
+        reqs.iter()
+            .map(|r| warm_engine.eval(r).unwrap().total().cycles)
+            .sum::<u64>()
+    });
+    println!(
+        "   -> {:.0} req/s sequential-cold, {:.0} req/s batched-cold, {:.0} req/s memo-hot",
+        throughput(&cold, n),
+        throughput(&batched, n),
+        throughput(&hot, n),
+    );
+    println!(
+        "   -> cache after warmup: {} entries, {} hits / {} misses",
+        warm_engine.cache().len(),
+        warm_engine.cache().hits(),
+        warm_engine.cache().misses(),
+    );
+
+    let variant = |r: &BenchResult| -> Json {
+        Json::obj(vec![
+            ("seconds_mean", Json::num(r.seconds.mean)),
+            ("seconds_min", Json::num(r.seconds.min)),
+            ("seconds_p95", Json::num(r.seconds.p95)),
+            ("requests_per_sec", Json::num(throughput(r, n))),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::str("api_engine_eval")),
+        ("requests_per_iter", Json::num(n as f64)),
+        ("network", Json::str("resnet152")),
+        ("sequential_cold", variant(&cold)),
+        ("batched_cold", variant(&batched)),
+        ("memo_hot", variant(&hot)),
+        (
+            "speedup_hot_over_cold",
+            Json::num(cold.seconds.mean / hot.seconds.mean),
+        ),
+    ]);
+    let out =
+        std::env::var("CAMUY_BENCH_API_OUT").unwrap_or_else(|_| "BENCH_api.json".to_string());
+    match std::fs::write(&out, doc.to_string_pretty() + "\n") {
+        Ok(()) => println!("   -> wrote {out}"),
+        Err(e) => eprintln!("   -> could not write {out}: {e}"),
+    }
+}

@@ -1,0 +1,328 @@
+//! The long-lived engine behind every CLI subcommand and `camuy serve`.
+//!
+//! An [`Engine`] owns the three pieces of state a request needs:
+//!
+//! * the built-in network registry ([`crate::nets`]),
+//! * the user-network store (arbitrary models ingested from layer-list
+//!   JSON via [`Engine::register_network_json`]),
+//! * the shared per-(shape, configuration) [`EvalCache`], so repeated
+//!   queries — the same network on the same geometry, overlapping sweep
+//!   cells, revisited NSGA-II grid points — hit the memo table instead of
+//!   recomputing the closed form.
+//!
+//! All methods take `&self`; the engine is `Sync` and one instance serves
+//! concurrent requests (the serve loop fans out over it directly).
+
+use super::error::ApiError;
+use super::request::{
+    check_config, check_nsga2, EqualPeRequest, EvalRequest, MemoryRequest, ParetoRequest,
+    SweepRequest, SweepSpec,
+};
+use super::response::{
+    EvalResponse, MemoryResponse, NetworkEntry, NetworkSource, PerLayerReport, RegisterResponse,
+};
+use crate::config::ArrayConfig;
+use crate::coordinator::Coordinator;
+use crate::model::memory::MemoryAnalysis;
+use crate::model::multi::{network_metrics_multi, MultiArrayConfig};
+use crate::model::network::Network;
+use crate::model::roofline;
+use crate::model::workload::{EvalCache, Workload};
+use crate::nets;
+use crate::pareto::nsga2::Nsga2Params;
+use crate::report::figures::{self, Fig2Data, Fig3Data, Fig5Data, Fig6Data};
+use crate::sweep::runner::{parallel_map, seed_workload};
+use crate::util::json::Json;
+use std::collections::{HashMap, HashSet};
+use std::sync::{OnceLock, RwLock};
+
+/// Most user networks a long-lived engine will hold — registration past
+/// this (under fresh names) is rejected so untrusted serve clients cannot
+/// grow the store without bound. Re-registering an existing name always
+/// succeeds.
+pub const MAX_USER_NETWORKS: usize = 256;
+
+/// The long-lived query engine. See the module docs.
+#[derive(Debug, Default)]
+pub struct Engine {
+    user_nets: RwLock<HashMap<String, Network>>,
+    /// Zoo networks built once per engine; resolving a built-in model is a
+    /// clone, not a reconstruction (the serving hot path).
+    zoo: OnceLock<HashMap<String, Network>>,
+    cache: EvalCache,
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine::default()
+    }
+
+    /// The shared per-(shape, configuration) memo table.
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+
+    fn zoo(&self) -> &HashMap<String, Network> {
+        self.zoo.get_or_init(|| {
+            nets::ALL_MODELS
+                .iter()
+                .map(|name| (name.to_string(), nets::build(name).expect("registered")))
+                .collect()
+        })
+    }
+
+    /// Resolve a network by name — user store first, then the zoo — and
+    /// optionally re-batch it.
+    pub fn resolve(&self, name: &str, batch: Option<usize>) -> Result<Network, ApiError> {
+        if batch == Some(0) {
+            return Err(ApiError::BadRequest("batch must be positive".into()));
+        }
+        if let Some(b) = batch {
+            if b > super::request::MAX_BATCH {
+                return Err(ApiError::BadRequest(format!(
+                    "batch {b} exceeds the limit {}",
+                    super::request::MAX_BATCH
+                )));
+            }
+        }
+        let net = {
+            let store = self.user_nets.read().expect("user-network store poisoned");
+            store.get(name).cloned()
+        }
+        .or_else(|| self.zoo().get(name).cloned())
+        .ok_or_else(|| ApiError::UnknownNetwork {
+            name: name.to_string(),
+        })?;
+        match batch {
+            Some(b) => {
+                let net = net.with_batch(b);
+                // Re-batching composes with per-layer sizes; re-check the
+                // work ceilings so the override cannot push the lowered
+                // GEMMs out of exact-arithmetic range.
+                for l in &net.layers {
+                    l.check_work_bounds()
+                        .map_err(|e| ApiError::BadRequest(format!("batch {b}: {e}")))?;
+                }
+                Ok(net)
+            }
+            None => Ok(net),
+        }
+    }
+
+    /// Validate a layer-list JSON document into the workload IR and store
+    /// it under its own name. Zoo names are reserved.
+    pub fn register_network_json(&self, spec: &Json) -> Result<RegisterResponse, ApiError> {
+        let net = Network::from_json_spec(spec).map_err(ApiError::InvalidNetwork)?;
+        if self.zoo().contains_key(&net.name) {
+            return Err(ApiError::InvalidNetwork(format!(
+                "'{}' is a built-in zoo network; pick another name",
+                net.name
+            )));
+        }
+        let resp = RegisterResponse {
+            name: net.name.clone(),
+            layers: net.layers.len(),
+            params: net.params(),
+            macs: net.macs(),
+            distinct_gemms: net.gemm_histogram().len(),
+            replaced: false,
+        };
+        let mut store = self.user_nets.write().expect("user-network store poisoned");
+        if !store.contains_key(&net.name) && store.len() >= MAX_USER_NETWORKS {
+            return Err(ApiError::InvalidNetwork(format!(
+                "user-network store is full ({MAX_USER_NETWORKS} networks); \
+                 re-register an existing name to replace it"
+            )));
+        }
+        let replaced = store.insert(net.name.clone(), net).is_some();
+        Ok(RegisterResponse { replaced, ..resp })
+    }
+
+    /// [`Engine::register_network_json`] from raw JSON text.
+    pub fn register_network_str(&self, text: &str) -> Result<RegisterResponse, ApiError> {
+        let v = Json::parse(text).map_err(ApiError::Json)?;
+        self.register_network_json(&v)
+    }
+
+    /// Every known network: the zoo in registry order, then the user store
+    /// sorted by name.
+    pub fn list_networks(&self) -> Vec<NetworkEntry> {
+        fn entry(net: &Network, source: NetworkSource) -> NetworkEntry {
+            NetworkEntry {
+                name: net.name.clone(),
+                source,
+                params: net.params(),
+                macs: net.macs(),
+                layers: net.layers.len(),
+                distinct_gemms: net.gemm_histogram().len(),
+            }
+        }
+        let zoo = self.zoo();
+        let mut out: Vec<NetworkEntry> = nets::ALL_MODELS
+            .iter()
+            .map(|name| entry(&zoo[*name], NetworkSource::Zoo))
+            .collect();
+        let store = self.user_nets.read().expect("user-network store poisoned");
+        let mut users: Vec<&Network> = store.values().collect();
+        users.sort_by(|a, b| a.name.cmp(&b.name));
+        out.extend(users.into_iter().map(|n| entry(n, NetworkSource::User)));
+        out
+    }
+
+    /// Export any known network as the layer-list JSON schema.
+    pub fn network_spec(&self, name: &str) -> Result<Json, ApiError> {
+        self.resolve(name, None).map(|n| n.to_json_spec())
+    }
+
+    /// Answer one eval request through the shared memo table.
+    pub fn eval(&self, req: &EvalRequest) -> Result<EvalResponse, ApiError> {
+        check_config(&req.config)?;
+        if req.arrays == 0 {
+            return Err(ApiError::BadRequest("arrays must be positive".into()));
+        }
+        if req.arrays > super::request::MAX_ARRAYS {
+            return Err(ApiError::BadRequest(format!(
+                "arrays {} exceeds the limit {}",
+                req.arrays,
+                super::request::MAX_ARRAYS
+            )));
+        }
+        let net = self.resolve(&req.net, req.batch)?;
+        if req.arrays > 1 {
+            let config = MultiArrayConfig::new(req.arrays, req.config.clone());
+            let metrics = network_metrics_multi(&net, &config);
+            return Ok(EvalResponse::Multi {
+                network: net.name.clone(),
+                utilization: metrics.utilization(&config),
+                energy: metrics.energy(&req.weights),
+                config,
+                metrics,
+            });
+        }
+        let coord = Coordinator::new(req.config.clone())
+            .map_err(ApiError::Config)?
+            .with_weights(req.weights);
+        let run = coord.run_inference_cached(&net, &self.cache);
+        let per_layer = if req.per_layer {
+            let (rooflines, memory_bound_share) = roofline::network_roofline(&net, &req.config);
+            Some(PerLayerReport {
+                rooflines,
+                memory_bound_share,
+                machine_balance: roofline::machine_balance(&req.config),
+            })
+        } else {
+            None
+        };
+        Ok(EvalResponse::Single {
+            energy: run.energy(&req.weights),
+            run,
+            per_layer,
+        })
+    }
+
+    /// Answer a batch of eval requests: requests are grouped by workload
+    /// and their distinct configurations run through the shape-major sweep
+    /// core once ([`seed_workload`]) across `threads` workers,
+    /// seeding the shared memo table; each request is then answered from
+    /// the hot cache. Results align with the input order and equal
+    /// [`Engine::eval`] exactly.
+    pub fn eval_batch(
+        &self,
+        reqs: &[EvalRequest],
+        threads: usize,
+    ) -> Vec<Result<EvalResponse, ApiError>> {
+        let mut groups: HashMap<(String, Option<usize>), Vec<ArrayConfig>> = HashMap::new();
+        for r in reqs {
+            if r.arrays == 1 && r.batch != Some(0) && check_config(&r.config).is_ok() {
+                groups
+                    .entry((r.net.clone(), r.batch))
+                    .or_default()
+                    .push(r.config.clone());
+            }
+        }
+        for ((name, batch), mut cfgs) in groups {
+            let Ok(net) = self.resolve(&name, batch) else {
+                continue; // the per-request pass reports the error
+            };
+            let mut seen: HashSet<ArrayConfig> = HashSet::with_capacity(cfgs.len());
+            cfgs.retain(|c| seen.insert(c.clone()));
+            let workload = Workload::of(&net);
+            // A config whose every shape is already memoized needs no
+            // sweep — steady-state repeat batches are pure cache hits.
+            cfgs.retain(|c| {
+                !workload
+                    .shapes
+                    .iter()
+                    .all(|&(shape, _)| self.cache.contains(shape, c))
+            });
+            if cfgs.is_empty() {
+                continue;
+            }
+            seed_workload(&workload, &cfgs, threads, &self.cache);
+        }
+        // Answer from the hot cache, fanned out so the requests the
+        // seeding pass could not cover (multi-array banks, per-layer
+        // reports) still use the pool.
+        parallel_map(reqs.len(), threads, |i| self.eval(&reqs[i]))
+    }
+
+    /// Figure-2 heatmaps for one network over a grid.
+    pub fn sweep(&self, req: &SweepRequest) -> Result<Fig2Data, ApiError> {
+        req.spec.validate()?;
+        let net = self.resolve(&req.net, None)?;
+        Ok(figures::fig2_heatmaps_for(&net, &req.spec))
+    }
+
+    /// Figure-3 NSGA-II Pareto fronts for one network.
+    pub fn pareto(&self, req: &ParetoRequest) -> Result<Fig3Data, ApiError> {
+        req.spec.validate()?;
+        check_nsga2(&req.params)?;
+        let net = self.resolve(&req.net, None)?;
+        Ok(figures::fig3_pareto_for(
+            &net,
+            &req.spec,
+            &req.params,
+        ))
+    }
+
+    /// Figure-4 heatmaps for all paper models.
+    pub fn heatmaps(&self, spec: &SweepSpec) -> Result<Vec<Fig2Data>, ApiError> {
+        spec.validate()?;
+        Ok(figures::fig4_heatmaps(spec))
+    }
+
+    /// Figure-5 robust Pareto across all paper models.
+    pub fn robust(&self, spec: &SweepSpec, params: &Nsga2Params) -> Result<Fig5Data, ApiError> {
+        spec.validate()?;
+        check_nsga2(params)?;
+        Ok(figures::fig5_robust(spec, params))
+    }
+
+    /// Figure-6 equal-PE aspect-ratio study, one entry per budget.
+    pub fn equal_pe(&self, req: &EqualPeRequest) -> Result<Vec<Fig6Data>, ApiError> {
+        req.spec.validate()?;
+        req.validate()?;
+        let ctx = &req.spec;
+        Ok(req
+            .budgets
+            .iter()
+            .map(|&b| figures::fig6_equal_pe(b, req.min_dim, ctx))
+            .collect())
+    }
+
+    /// Per-layer UB working sets, spills and the corrected Eq.1 energy.
+    pub fn memory(&self, req: &MemoryRequest) -> Result<MemoryResponse, ApiError> {
+        check_config(&req.config)?;
+        let net = self.resolve(&req.net, req.batch)?;
+        let analysis = MemoryAnalysis::of(&net, &req.config);
+        let base_energy = net.metrics(&req.config).energy(&req.weights);
+        let corrected_energy = analysis.corrected_energy(&net, &req.config, &req.weights);
+        Ok(MemoryResponse {
+            network: net.name.clone(),
+            config: req.config.clone(),
+            analysis,
+            base_energy,
+            corrected_energy,
+        })
+    }
+}

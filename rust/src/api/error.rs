@@ -1,0 +1,100 @@
+//! The structured error type of the typed query API. Every failure a
+//! request can produce maps to a stable machine-readable `kind` plus a
+//! human-readable message, so `camuy serve` clients can branch without
+//! string-matching and the CLI can print the same error it would have
+//! produced before the engine existed.
+
+use crate::config::ConfigError;
+use crate::util::json::{Json, JsonError};
+use std::fmt;
+
+/// Everything that can go wrong answering an API request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// The request named a network neither the zoo nor the user-network
+    /// store knows.
+    UnknownNetwork { name: String },
+    /// The array configuration violates a structural invariant
+    /// (zero height/width/accumulator capacity, bad bitwidth, …).
+    Config(ConfigError),
+    /// The request document is not valid JSON at all.
+    Json(JsonError),
+    /// The request parsed as JSON but is malformed (missing fields, wrong
+    /// types, out-of-range values, unknown request type, …).
+    BadRequest(String),
+    /// A network spec failed validation during registration.
+    InvalidNetwork(String),
+}
+
+impl ApiError {
+    /// Stable machine-readable discriminator for the wire format.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ApiError::UnknownNetwork { .. } => "unknown_network",
+            ApiError::Config(_) => "invalid_config",
+            ApiError::Json(_) => "bad_json",
+            ApiError::BadRequest(_) => "bad_request",
+            ApiError::InvalidNetwork(_) => "invalid_network",
+        }
+    }
+
+    /// The structured error object embedded in a serve response:
+    /// `{"kind": ..., "message": ...}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind())),
+            ("message", Json::str(self.to_string())),
+        ])
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::UnknownNetwork { name } => {
+                write!(f, "unknown network '{name}' (see `camuy zoo`)")
+            }
+            ApiError::Config(e) => write!(f, "invalid array configuration: {e}"),
+            ApiError::Json(e) => write!(f, "{e}"),
+            ApiError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            ApiError::InvalidNetwork(msg) => write!(f, "invalid network spec: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<ConfigError> for ApiError {
+    fn from(e: ConfigError) -> ApiError {
+        ApiError::Config(e)
+    }
+}
+
+impl From<JsonError> for ApiError {
+    fn from(e: JsonError) -> ApiError {
+        ApiError::Json(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_stable_and_json_is_structured() {
+        let e = ApiError::UnknownNetwork {
+            name: "lenet-9000".into(),
+        };
+        assert_eq!(e.kind(), "unknown_network");
+        let j = e.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("unknown_network"));
+        assert!(j.get("message").unwrap().as_str().unwrap().contains("lenet-9000"));
+    }
+
+    #[test]
+    fn config_errors_convert() {
+        let e: ApiError = ConfigError::ZeroHeight.into();
+        assert_eq!(e.kind(), "invalid_config");
+        assert!(e.to_string().contains("height"));
+    }
+}

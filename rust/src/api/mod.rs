@@ -1,0 +1,48 @@
+//! The typed query API: request/response structs, structured errors, the
+//! long-lived [`Engine`], and the batched JSON-lines server.
+//!
+//! The paper positions CAMUY as a library other ML stacks embed; this
+//! module is that embedding surface. Construct an [`Engine`] once, keep it
+//! alive, and issue typed requests against it:
+//!
+//! ```
+//! use camuy::api::{Engine, EvalRequest};
+//! use camuy::config::ArrayConfig;
+//!
+//! let engine = Engine::new();
+//! let resp = engine
+//!     .eval(&EvalRequest::new("alexnet", ArrayConfig::new(64, 32)))
+//!     .unwrap();
+//! assert!(resp.total().cycles > 0);
+//! ```
+//!
+//! The engine owns the network registry (zoo + user store) and the shared
+//! per-(shape, configuration) evaluation cache, so repeated queries hit
+//! the memo table. Arbitrary user models enter through JSON network
+//! ingestion ([`Engine::register_network_json`]) — a layer-list document
+//! validated into the `model::workload` IR — and become first-class
+//! workloads for every request kind. `camuy serve` wraps the same engine
+//! in a JSON-lines request/response loop (stdin or TCP) with adaptive
+//! request batching onto the shape-major sweep core ([`serve`]).
+//!
+//! Every CLI subcommand is a thin adapter over this module: it builds a
+//! request struct, calls the engine, and formats the typed response.
+//! Request schema and wire format are documented in DESIGN.md §8.
+
+mod engine;
+mod error;
+mod request;
+mod response;
+mod serve;
+
+pub use engine::{Engine, MAX_USER_NETWORKS};
+pub use error::ApiError;
+pub use request::{
+    ApiRequest, EqualPeRequest, EvalRequest, MemoryRequest, ParetoRequest, RegisterRequest,
+    SweepRequest, SweepSpec,
+};
+pub use response::{
+    equal_pe_json, pareto_json, sweep_json, zoo_json, EvalResponse, MemoryResponse, NetworkEntry,
+    NetworkSource, PerLayerReport, RegisterResponse,
+};
+pub use serve::{serve, serve_tcp, ServeOptions, ServeStats};

@@ -1,0 +1,543 @@
+//! Typed request structs and their JSON wire format.
+//!
+//! Every request is a JSON object with a `"type"` discriminator plus an
+//! optional `"id"` the server echoes back (see [`ApiRequest::parse_line`]).
+//! Request construction validates eagerly — a malformed document never
+//! reaches the engine, and configuration violations surface as the typed
+//! [`crate::config::ConfigError`] through [`ApiError::Config`].
+
+use super::error::ApiError;
+use crate::config::{ArrayConfig, EnergyWeights};
+use crate::pareto::nsga2::Nsga2Params;
+use crate::report::figures::FigureContext;
+use crate::sweep::grid::DimGrid;
+use crate::util::json::Json;
+
+/// Evaluate one network on one array configuration (CLI: `camuy emulate`).
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    pub net: String,
+    /// Re-batch every layer; `None` keeps the batch the network was
+    /// registered (or built) with.
+    pub batch: Option<usize>,
+    /// Multi-array bank size; 1 = a single array.
+    pub arrays: usize,
+    pub config: ArrayConfig,
+    pub weights: EnergyWeights,
+    /// Attach the per-layer roofline report to the response.
+    pub per_layer: bool,
+}
+
+impl EvalRequest {
+    pub fn new(net: impl Into<String>, config: ArrayConfig) -> EvalRequest {
+        EvalRequest {
+            net: net.into(),
+            batch: None,
+            arrays: 1,
+            config,
+            weights: EnergyWeights::paper(),
+            per_layer: false,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<EvalRequest, ApiError> {
+        let arrays = opt_positive(v, "arrays")?.unwrap_or(1);
+        if arrays > MAX_ARRAYS {
+            return Err(ApiError::BadRequest(format!(
+                "arrays {arrays} exceeds the limit {MAX_ARRAYS}"
+            )));
+        }
+        Ok(EvalRequest {
+            net: req_str(v, "net")?,
+            batch: opt_positive(v, "batch")?,
+            arrays,
+            config: parse_config(v.get("config"), ArrayConfig::new(128, 128))?,
+            weights: parse_weights(v)?,
+            per_layer: v.get("per_layer").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// Most arrays a multi-array bank request may ask for. Together with the
+/// wire-side geometry cap in [`parse_config`] this keeps `pe_count()`
+/// arithmetic (arrays × height × width) far from usize overflow.
+pub const MAX_ARRAYS: usize = 1 << 16;
+
+/// Most a request (or a registered spec) may re-batch a network by —
+/// matches the per-layer ingestion ceiling, so a batch override can never
+/// push the GEMM lowering (`m = batch × oh × ow`) out of exact range.
+/// Enforced at [`crate::api::Engine::resolve`], the choke point every
+/// resolution path goes through (the re-check runs there too).
+pub const MAX_BATCH: usize = 1 << 20;
+
+/// Largest array edge any configuration may have — keeps `pe_count()`
+/// (height × width, and × arrays for banks) far from usize overflow.
+/// Enforced both at JSON parse time ([`parse_config`]) and at the engine
+/// for programmatic and CLI callers.
+pub const MAX_GEOMETRY: usize = 1 << 20;
+
+/// Shared sweep parameters: the grid, the per-cell template configuration,
+/// the Equation-1 weights and the worker count. This *is* the figure
+/// pipeline's [`FigureContext`] — one definition, so the CLI's `--smoke`
+/// and the API's `"grid": "smoke"` can never drift apart. The JSON and
+/// validation surface lives here; construction defaults live in
+/// [`crate::report::figures`].
+pub type SweepSpec = FigureContext;
+
+impl FigureContext {
+    /// Parse the flattened spec fields of a request document: `"grid"`
+    /// (`"paper"`, `"smoke"` or `{"lo", "hi", "step"}`), `"template"`,
+    /// `"energy_model"`, `"threads"`.
+    pub fn from_json(v: &Json) -> Result<SweepSpec, ApiError> {
+        let grid = match v.get("grid") {
+            None => DimGrid::paper(),
+            Some(g) => match g.as_str() {
+                Some("paper") => DimGrid::paper(),
+                Some("smoke") => SweepSpec::smoke().grid,
+                Some(other) => {
+                    return Err(ApiError::BadRequest(format!(
+                        "unknown grid '{other}' (paper|smoke or {{lo, hi, step}})"
+                    )))
+                }
+                None => {
+                    // Wire-surface bounds, checked before materializing
+                    // anything. The grid is square (axis × axis points),
+                    // so the axis cap bounds the sweep at 65536 cells —
+                    // ~68 paper grids — and the response at a few MB.
+                    const MAX_GRID_DIM: usize = 1 << 20;
+                    const MAX_GRID_AXIS: usize = 256;
+                    let lo = req_positive(g, "lo")?;
+                    let hi = req_positive(g, "hi")?;
+                    let step = req_positive(g, "step")?;
+                    if lo > hi {
+                        return Err(ApiError::BadRequest(format!(
+                            "grid lo {lo} exceeds hi {hi}"
+                        )));
+                    }
+                    if hi > MAX_GRID_DIM {
+                        return Err(ApiError::BadRequest(format!(
+                            "grid hi {hi} exceeds the limit {MAX_GRID_DIM}"
+                        )));
+                    }
+                    let axis = (hi - lo) / step + 1;
+                    if axis > MAX_GRID_AXIS {
+                        return Err(ApiError::BadRequest(format!(
+                            "grid axis has {axis} points; the limit is {MAX_GRID_AXIS}"
+                        )));
+                    }
+                    DimGrid::coarse(lo, hi, step)
+                }
+            },
+        };
+        // `threads` is a hint, not semantics: clamp wire requests to the
+        // host's core count so the product (connections × batch fan-out ×
+        // per-request workers) cannot multiply into thread exhaustion.
+        let cores = crate::sweep::runner::default_threads().max(1);
+        let threads = opt_positive(v, "threads")?.unwrap_or(cores).min(cores);
+        let spec = SweepSpec {
+            grid,
+            template: parse_config(v.get("template"), ArrayConfig::new(1, 1))?,
+            weights: parse_weights(v)?,
+            threads,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural checks shared by the JSON and the programmatic path.
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.grid.is_empty() {
+            return Err(ApiError::BadRequest("sweep grid is empty".into()));
+        }
+        self.template.validate().map_err(ApiError::Config)?;
+        Ok(())
+    }
+}
+
+/// Figure-2 heatmaps for one network (CLI: `camuy sweep`).
+#[derive(Debug, Clone)]
+pub struct SweepRequest {
+    pub net: String,
+    pub spec: SweepSpec,
+}
+
+impl SweepRequest {
+    pub fn from_json(v: &Json) -> Result<SweepRequest, ApiError> {
+        Ok(SweepRequest {
+            net: req_str(v, "net")?,
+            spec: SweepSpec::from_json(v)?,
+        })
+    }
+}
+
+/// Figure-3 NSGA-II Pareto fronts for one network (CLI: `camuy pareto`).
+#[derive(Debug, Clone)]
+pub struct ParetoRequest {
+    pub net: String,
+    pub spec: SweepSpec,
+    pub params: Nsga2Params,
+}
+
+impl ParetoRequest {
+    pub fn from_json(v: &Json) -> Result<ParetoRequest, ApiError> {
+        let mut params = Nsga2Params::default();
+        if let Some(seed) = opt_usize(v, "seed")? {
+            params.seed = seed as u64;
+        }
+        if let Some(p) = opt_positive(v, "population")? {
+            params.population = p;
+        }
+        if let Some(g) = opt_positive(v, "generations")? {
+            params.generations = g;
+        }
+        check_nsga2(&params)?;
+        Ok(ParetoRequest {
+            net: req_str(v, "net")?,
+            spec: SweepSpec::from_json(v)?,
+            params,
+        })
+    }
+}
+
+/// The optimizer parameters must satisfy the NSGA-II preconditions before
+/// the run starts (the core asserts them).
+pub(crate) fn check_nsga2(params: &Nsga2Params) -> Result<(), ApiError> {
+    params.check().map_err(ApiError::BadRequest)
+}
+
+/// Figure-6 equal-PE aspect-ratio study (CLI: `camuy equal-pe`).
+#[derive(Debug, Clone)]
+pub struct EqualPeRequest {
+    pub budgets: Vec<usize>,
+    pub min_dim: usize,
+    pub spec: SweepSpec,
+}
+
+impl EqualPeRequest {
+    /// The paper's Figure-6 budgets — the default study everywhere (CLI
+    /// fallback, `camuy figures`, and the serve API share this one list).
+    pub const DEFAULT_BUDGETS: [usize; 3] = [4096, 16384, 65536];
+
+    pub fn from_json(v: &Json) -> Result<EqualPeRequest, ApiError> {
+        let budgets = match v.get("budgets") {
+            None => Self::DEFAULT_BUDGETS.to_vec(),
+            Some(j) => {
+                let arr = j.as_arr().ok_or_else(|| {
+                    ApiError::BadRequest("field 'budgets' must be an array".into())
+                })?;
+                let mut out = Vec::with_capacity(arr.len());
+                for b in arr {
+                    out.push(b.as_usize().filter(|&b| b > 0).ok_or_else(|| {
+                        ApiError::BadRequest("budgets must be positive integers".into())
+                    })?);
+                }
+                out
+            }
+        };
+        let req = EqualPeRequest {
+            budgets,
+            min_dim: opt_positive(v, "min_dim")?.unwrap_or(8),
+            spec: SweepSpec::from_json(v)?,
+        };
+        req.validate()?;
+        Ok(req)
+    }
+
+    /// Most PEs one equal-PE budget may ask for — 256x the TPUv1's 65536,
+    /// and small enough that every factorized geometry stays within the
+    /// closed form's exact u64 range.
+    pub const MAX_PE_BUDGET: usize = 1 << 24;
+
+    /// Most budget entries per request — each one is a full nine-model
+    /// study, so the list length bounds the request's total compute.
+    pub const MAX_BUDGETS: usize = 16;
+
+    /// The factorization enumeration asserts power-of-two budgets; check
+    /// here so a request can never trip an assert (or demand unbounded
+    /// geometry or unbounded repetition).
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.budgets.is_empty() {
+            return Err(ApiError::BadRequest("budgets must be non-empty".into()));
+        }
+        if self.budgets.len() > Self::MAX_BUDGETS {
+            return Err(ApiError::BadRequest(format!(
+                "{} budgets requested; the limit is {}",
+                self.budgets.len(),
+                Self::MAX_BUDGETS
+            )));
+        }
+        if !self.min_dim.is_power_of_two() {
+            return Err(ApiError::BadRequest(format!(
+                "min_dim must be a power of two, got {}",
+                self.min_dim
+            )));
+        }
+        if self.min_dim > 1 << 12 {
+            return Err(ApiError::BadRequest(format!(
+                "min_dim {} exceeds the limit {}",
+                self.min_dim,
+                1 << 12
+            )));
+        }
+        for &b in &self.budgets {
+            if !b.is_power_of_two() {
+                return Err(ApiError::BadRequest(format!(
+                    "PE budget must be a power of two, got {b}"
+                )));
+            }
+            if b > Self::MAX_PE_BUDGET {
+                return Err(ApiError::BadRequest(format!(
+                    "PE budget {b} exceeds the limit {}",
+                    Self::MAX_PE_BUDGET
+                )));
+            }
+            if b < self.min_dim * self.min_dim {
+                return Err(ApiError::BadRequest(format!(
+                    "PE budget {b} is smaller than min_dim^2 = {}",
+                    self.min_dim * self.min_dim
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-layer UB working sets, spills and DRAM overhead (CLI: `camuy memory`).
+#[derive(Debug, Clone)]
+pub struct MemoryRequest {
+    pub net: String,
+    pub batch: Option<usize>,
+    pub config: ArrayConfig,
+    pub weights: EnergyWeights,
+}
+
+impl MemoryRequest {
+    pub fn from_json(v: &Json) -> Result<MemoryRequest, ApiError> {
+        Ok(MemoryRequest {
+            net: req_str(v, "net")?,
+            batch: opt_positive(v, "batch")?,
+            config: parse_config(v.get("config"), ArrayConfig::new(128, 128))?,
+            weights: parse_weights(v)?,
+        })
+    }
+}
+
+/// Register a user network from a layer-list JSON document.
+#[derive(Debug, Clone)]
+pub struct RegisterRequest {
+    /// The network document (see DESIGN.md §8 for the schema); parsed and
+    /// validated by the engine at registration time.
+    pub spec: Json,
+}
+
+impl RegisterRequest {
+    pub fn from_json(v: &Json) -> Result<RegisterRequest, ApiError> {
+        let spec = v.get("network").cloned().ok_or_else(|| {
+            ApiError::BadRequest("register needs a 'network' object".into())
+        })?;
+        Ok(RegisterRequest { spec })
+    }
+}
+
+/// One decoded request.
+#[derive(Debug, Clone)]
+pub enum ApiRequest {
+    Eval(EvalRequest),
+    Sweep(SweepRequest),
+    Pareto(ParetoRequest),
+    EqualPe(EqualPeRequest),
+    Memory(MemoryRequest),
+    Register(RegisterRequest),
+    /// List every known network (zoo + user store).
+    Zoo,
+}
+
+impl ApiRequest {
+    /// Decode a parsed JSON document by its `"type"` discriminator.
+    pub fn from_json(v: &Json) -> Result<ApiRequest, ApiError> {
+        let kind = req_str(v, "type")?;
+        match kind.as_str() {
+            "eval" => EvalRequest::from_json(v).map(ApiRequest::Eval),
+            "sweep" => SweepRequest::from_json(v).map(ApiRequest::Sweep),
+            "pareto" => ParetoRequest::from_json(v).map(ApiRequest::Pareto),
+            "equal_pe" | "equal-pe" => EqualPeRequest::from_json(v).map(ApiRequest::EqualPe),
+            "memory" => MemoryRequest::from_json(v).map(ApiRequest::Memory),
+            "register" => RegisterRequest::from_json(v).map(ApiRequest::Register),
+            "zoo" | "networks" => Ok(ApiRequest::Zoo),
+            other => Err(ApiError::BadRequest(format!(
+                "unknown request type '{other}' \
+                 (eval|sweep|pareto|equal_pe|memory|register|zoo)"
+            ))),
+        }
+    }
+
+    /// Decode one JSON-lines request. Returns the request's `"id"` (echoed
+    /// back in the response envelope) alongside the decode result; a line
+    /// that is not JSON at all has no recoverable id.
+    pub fn parse_line(line: &str) -> (Option<Json>, Result<ApiRequest, ApiError>) {
+        match Json::parse(line) {
+            Err(e) => (None, Err(ApiError::Json(e))),
+            Ok(v) => (v.get("id").cloned(), ApiRequest::from_json(&v)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn req_str(v: &Json, key: &str) -> Result<String, ApiError> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| ApiError::BadRequest(format!("missing or invalid string field '{key}'")))
+}
+
+fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>, ApiError> {
+    v.opt_usize_field(key).map_err(ApiError::BadRequest)
+}
+
+fn opt_positive(v: &Json, key: &str) -> Result<Option<usize>, ApiError> {
+    match opt_usize(v, key)? {
+        Some(0) => Err(ApiError::BadRequest(format!(
+            "field '{key}' must be positive"
+        ))),
+        other => Ok(other),
+    }
+}
+
+fn req_positive(v: &Json, key: &str) -> Result<usize, ApiError> {
+    opt_positive(v, key)?
+        .ok_or_else(|| ApiError::BadRequest(format!("missing positive integer field '{key}'")))
+}
+
+/// Parse an optional configuration object, falling back to `default`, and
+/// run the shared structural + geometry checks — violations surface typed.
+fn parse_config(v: Option<&Json>, default: ArrayConfig) -> Result<ArrayConfig, ApiError> {
+    let cfg = match v {
+        None => default,
+        Some(j) => ArrayConfig::from_json(j).map_err(ApiError::BadRequest)?,
+    };
+    check_config(&cfg)?;
+    Ok(cfg)
+}
+
+/// The configuration checks every entry path shares: structural
+/// invariants (typed [`crate::config::ConfigError`]) plus the
+/// [`MAX_GEOMETRY`] cap, so `pe_count()` cannot overflow no matter
+/// whether a config arrived over the wire, from the CLI, or from a
+/// library caller.
+pub(crate) fn check_config(cfg: &ArrayConfig) -> Result<(), ApiError> {
+    cfg.validate().map_err(ApiError::Config)?;
+    if cfg.height > MAX_GEOMETRY || cfg.width > MAX_GEOMETRY {
+        return Err(ApiError::BadRequest(format!(
+            "array geometry {}x{} exceeds the limit {MAX_GEOMETRY}",
+            cfg.height, cfg.width
+        )));
+    }
+    Ok(())
+}
+
+fn parse_weights(v: &Json) -> Result<EnergyWeights, ApiError> {
+    match v.get("energy_model").and_then(Json::as_str) {
+        None | Some("paper") => Ok(EnergyWeights::paper()),
+        Some("dally14nm") => Ok(EnergyWeights::dally_14nm()),
+        Some(other) => Err(ApiError::BadRequest(format!(
+            "unknown energy model '{other}' (paper|dally14nm)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_request_parses_with_defaults() {
+        let v = Json::parse(r#"{"type":"eval","net":"alexnet"}"#).unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Eval(r) => {
+                assert_eq!(r.net, "alexnet");
+                assert_eq!(r.batch, None);
+                assert_eq!(r.arrays, 1);
+                assert_eq!((r.config.height, r.config.width), (128, 128));
+                assert!(!r.per_layer);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eval_request_rejects_zero_geometry_typed() {
+        let v = Json::parse(r#"{"type":"eval","net":"alexnet","config":{"height":0,"width":8}}"#)
+            .unwrap();
+        match ApiRequest::from_json(&v) {
+            Err(ApiError::Config(crate::config::ConfigError::ZeroHeight)) => {}
+            other => panic!("expected typed config error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_type_and_missing_fields_are_bad_requests() {
+        for bad in [
+            r#"{"type":"frobnicate"}"#,
+            r#"{"net":"alexnet"}"#,
+            r#"{"type":"eval"}"#,
+            r#"{"type":"eval","net":"alexnet","batch":0}"#,
+            r#"{"type":"register"}"#,
+            r#"{"type":"sweep","net":"alexnet","grid":"bogus"}"#,
+            r#"{"type":"equal_pe","budgets":[1000]}"#,
+            r#"{"type":"pareto","net":"alexnet","population":3}"#,
+            // resource-bound rejections: arrays, geometry, grid, threads,
+            // optimizer size
+            r#"{"type":"eval","net":"alexnet","arrays":1000000000000000000}"#,
+            r#"{"type":"eval","net":"alexnet","config":{"height":2000000,"width":8}}"#,
+            r#"{"type":"sweep","net":"alexnet","grid":{"lo":1,"hi":4000000000,"step":1}}"#,
+            r#"{"type":"sweep","net":"alexnet","grid":{"lo":1,"hi":1000000,"step":1}}"#,
+            r#"{"type":"pareto","net":"alexnet","generations":1000000000000}"#,
+            r#"{"type":"equal_pe","budgets":[4611686018427387904]}"#,
+            r#"{"type":"equal_pe","budgets":[4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096]}"#,
+            r#"{"type":"equal_pe","budgets":[]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(
+                matches!(ApiRequest::from_json(&v), Err(ApiError::BadRequest(_))),
+                "not rejected as bad request: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_spec_parses_custom_grid() {
+        let v = Json::parse(
+            r#"{"type":"sweep","net":"alexnet","grid":{"lo":8,"hi":24,"step":8},"threads":1}"#,
+        )
+        .unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Sweep(r) => {
+                assert_eq!(r.spec.grid.heights, vec![8, 16, 24]);
+                assert_eq!(r.spec.threads, 1);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_threads_clamp_to_host_cores() {
+        let v = Json::parse(r#"{"type":"sweep","net":"alexnet","threads":1000000}"#).unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Sweep(r) => {
+                assert!(r.spec.threads <= crate::sweep::runner::default_threads().max(1));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_line_recovers_id() {
+        let (id, req) = ApiRequest::parse_line(r#"{"id":42,"type":"zoo"}"#);
+        assert_eq!(id.unwrap().as_usize(), Some(42));
+        assert!(matches!(req, Ok(ApiRequest::Zoo)));
+        let (id, req) = ApiRequest::parse_line("not json");
+        assert!(id.is_none());
+        assert!(matches!(req, Err(ApiError::Json(_))));
+    }
+}

@@ -1,0 +1,327 @@
+//! Typed responses and their JSON wire format.
+//!
+//! An eval response serializes to exactly the document `camuy emulate
+//! --json` prints (it *is* the [`InferenceRun`] summary), so a serve client
+//! and the CLI agree byte-for-byte on the same query.
+
+use crate::config::ArrayConfig;
+use crate::coordinator::InferenceRun;
+use crate::metrics::Metrics;
+use crate::model::memory::MemoryAnalysis;
+use crate::model::multi::{MultiArrayConfig, MultiMetrics};
+use crate::model::roofline::LayerRoofline;
+use crate::pareto::nsga2::Solution;
+use crate::report::figures::{Fig2Data, Fig3Data, Fig6Data};
+use crate::util::json::Json;
+
+/// Per-layer roofline context attached when [`super::EvalRequest::per_layer`]
+/// is set.
+#[derive(Debug, Clone)]
+pub struct PerLayerReport {
+    pub rooflines: Vec<LayerRoofline>,
+    /// Fraction of layers that are memory-bound on this configuration.
+    pub memory_bound_share: f64,
+    /// Peak MACs/cycle over peak UB bytes/cycle.
+    pub machine_balance: f64,
+}
+
+impl PerLayerReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("machine_balance", Json::num(self.machine_balance)),
+            ("memory_bound_share", Json::num(self.memory_bound_share)),
+            (
+                "layers",
+                Json::arr(self.rooflines.iter().map(|r| {
+                    Json::obj(vec![
+                        ("layer", Json::str(r.layer.clone())),
+                        ("intensity", Json::num(r.intensity)),
+                        ("achieved_of_peak", Json::num(r.achieved_of_peak)),
+                        (
+                            "bound",
+                            Json::str(match r.bound {
+                                crate::model::roofline::Bound::Compute => "compute",
+                                crate::model::roofline::Bound::Memory => "memory",
+                            }),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Result of an [`super::EvalRequest`].
+#[derive(Debug, Clone)]
+pub enum EvalResponse {
+    /// One array: the full inference run (timeline, bandwidth, spills).
+    Single {
+        run: InferenceRun,
+        /// Eq.1 energy under the request's weights (the run's own JSON
+        /// always reports paper weights).
+        energy: f64,
+        per_layer: Option<PerLayerReport>,
+    },
+    /// A multi-array bank (`arrays > 1`).
+    Multi {
+        network: String,
+        config: MultiArrayConfig,
+        metrics: MultiMetrics,
+        utilization: f64,
+        energy: f64,
+    },
+}
+
+impl EvalResponse {
+    /// The aggregate metrics, whichever execution model answered.
+    pub fn total(&self) -> &Metrics {
+        match self {
+            EvalResponse::Single { run, .. } => &run.total,
+            EvalResponse::Multi { metrics, .. } => &metrics.total,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            // The `camuy emulate --json` document, with the energy field
+            // reflecting the *request's* weights (the run's own JSON always
+            // assumes paper weights; under paper weights the two are
+            // identical, so CLI/serve parity holds) and the roofline report
+            // attached when the request asked for it.
+            EvalResponse::Single {
+                run,
+                energy,
+                per_layer,
+            } => {
+                let mut j = run.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("energy".to_string(), Json::num(*energy));
+                    if let Some(pl) = per_layer {
+                        m.insert("roofline".to_string(), pl.to_json());
+                    }
+                }
+                j
+            }
+            EvalResponse::Multi {
+                network,
+                config,
+                metrics,
+                utilization,
+                energy,
+            } => Json::obj(vec![
+                ("network", Json::str(network.clone())),
+                ("arrays", Json::num(config.arrays as f64)),
+                ("config", config.array.to_json()),
+                ("makespan_cycles", Json::num(metrics.makespan_cycles as f64)),
+                ("total", metrics.total.to_json()),
+                ("utilization", Json::num(*utilization)),
+                ("energy", Json::num(*energy)),
+            ]),
+        }
+    }
+}
+
+/// Result of registering a user network.
+#[derive(Debug, Clone)]
+pub struct RegisterResponse {
+    pub name: String,
+    pub layers: usize,
+    pub params: u64,
+    pub macs: u64,
+    pub distinct_gemms: usize,
+    /// An earlier registration under the same name was replaced.
+    pub replaced: bool,
+}
+
+impl RegisterResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("layers", Json::num(self.layers as f64)),
+            ("params", Json::num(self.params as f64)),
+            ("macs", Json::num(self.macs as f64)),
+            ("distinct_gemms", Json::num(self.distinct_gemms as f64)),
+            ("replaced", Json::Bool(self.replaced)),
+        ])
+    }
+}
+
+/// Where a listed network comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetworkSource {
+    Zoo,
+    User,
+}
+
+impl NetworkSource {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NetworkSource::Zoo => "zoo",
+            NetworkSource::User => "user",
+        }
+    }
+}
+
+/// One row of the network listing.
+#[derive(Debug, Clone)]
+pub struct NetworkEntry {
+    pub name: String,
+    pub source: NetworkSource,
+    pub params: u64,
+    pub macs: u64,
+    pub layers: usize,
+    pub distinct_gemms: usize,
+}
+
+impl NetworkEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("source", Json::str(self.source.as_str())),
+            ("params", Json::num(self.params as f64)),
+            ("macs", Json::num(self.macs as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("distinct_gemms", Json::num(self.distinct_gemms as f64)),
+        ])
+    }
+}
+
+/// Result of a [`super::MemoryRequest`].
+#[derive(Debug, Clone)]
+pub struct MemoryResponse {
+    pub network: String,
+    pub config: ArrayConfig,
+    pub analysis: MemoryAnalysis,
+    /// Eq.1 energy assuming everything stays on chip.
+    pub base_energy: f64,
+    /// Eq.1 energy plus the DRAM spill overhead.
+    pub corrected_energy: f64,
+}
+
+impl MemoryResponse {
+    /// Spilling layers, largest working set first.
+    pub fn spillers(&self) -> Vec<&crate::model::memory::LayerMemory> {
+        let mut out: Vec<_> = self.analysis.layers.iter().filter(|l| !l.fits).collect();
+        out.sort_by(|a, b| b.working_set_bytes.cmp(&a.working_set_bytes));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("network", Json::str(self.network.clone())),
+            ("config", self.config.to_json()),
+            (
+                "peak_working_set_bytes",
+                Json::num(self.analysis.peak_working_set_bytes as f64),
+            ),
+            ("layers", Json::num(self.analysis.layers.len() as f64)),
+            (
+                "spilling_layers",
+                Json::num(self.analysis.spilling_layers as f64),
+            ),
+            (
+                "total_dram_words",
+                Json::num(self.analysis.total_dram_words as f64),
+            ),
+            ("base_energy", Json::num(self.base_energy)),
+            ("corrected_energy", Json::num(self.corrected_energy)),
+            (
+                "spillers",
+                Json::arr(self.spillers().into_iter().take(10).map(|l| {
+                    Json::obj(vec![
+                        ("layer", Json::str(l.layer.clone())),
+                        ("working_set_bytes", Json::num(l.working_set_bytes as f64)),
+                        ("dram_words", Json::num(l.dram_words as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+// ------------------------------------------------ figure-data wire formats
+
+fn solution_json(s: &Solution) -> Json {
+    Json::obj(vec![
+        ("height", Json::num(s.height as f64)),
+        ("width", Json::num(s.width as f64)),
+        (
+            "objectives",
+            Json::arr(s.objectives.iter().map(|&x| Json::num(x))),
+        ),
+    ])
+}
+
+/// Serve response for a network listing.
+pub fn zoo_json(entries: &[NetworkEntry]) -> Json {
+    Json::obj(vec![(
+        "networks",
+        Json::arr(entries.iter().map(NetworkEntry::to_json)),
+    )])
+}
+
+/// Serve response for a sweep: the full point cloud plus the argmin cell.
+pub fn sweep_json(d: &Fig2Data) -> Json {
+    let best = d.sweep.argmin(|p| p.energy);
+    Json::obj(vec![
+        ("network", Json::str(d.network.clone())),
+        (
+            "points",
+            Json::arr(d.sweep.points.iter().map(|p| {
+                Json::obj(vec![
+                    ("height", Json::num(p.height as f64)),
+                    ("width", Json::num(p.width as f64)),
+                    ("energy", Json::num(p.energy)),
+                    ("cycles", Json::num(p.metrics.cycles as f64)),
+                    ("utilization", Json::num(p.utilization)),
+                ])
+            })),
+        ),
+        (
+            "best_energy",
+            Json::obj(vec![
+                ("height", Json::num(best.height as f64)),
+                ("width", Json::num(best.width as f64)),
+                ("energy", Json::num(best.energy)),
+            ]),
+        ),
+    ])
+}
+
+/// Serve response for a Pareto run: NSGA-II fronts for both objective
+/// pairs, plus the exhaustive fronts for validation.
+pub fn pareto_json(d: &Fig3Data) -> Json {
+    let front = |sols: &[Solution]| Json::arr(sols.iter().map(solution_json));
+    Json::obj(vec![
+        ("network", Json::str(d.network.clone())),
+        ("energy_front", front(&d.energy_front)),
+        ("utilization_front", front(&d.utilization_front)),
+        ("exhaustive_energy_front", front(&d.exhaustive_energy_front)),
+        (
+            "exhaustive_utilization_front",
+            front(&d.exhaustive_utilization_front),
+        ),
+    ])
+}
+
+/// Serve response for the equal-PE study.
+pub fn equal_pe_json(data: &[Fig6Data]) -> Json {
+    Json::obj(vec![(
+        "budgets",
+        Json::arr(data.iter().map(|d| {
+            Json::obj(vec![
+                ("pe_budget", Json::num(d.pe_budget as f64)),
+                (
+                    "shapes",
+                    Json::arr(d.shapes.iter().map(|&(h, w)| {
+                        Json::arr(vec![Json::num(h as f64), Json::num(w as f64)])
+                    })),
+                ),
+                (
+                    "average_norm_energy",
+                    Json::arr(d.average.iter().map(|&x| Json::num(x))),
+                ),
+            ])
+        })),
+    )])
+}

@@ -1,0 +1,371 @@
+//! The batched JSON-lines server behind `camuy serve`.
+//!
+//! One request per input line, one response per output line, in input
+//! order. The loop blocks for the first request, then drains whatever else
+//! has already arrived (up to `batch_max`) into one batch — adaptive
+//! batching: an interactive client sees single-request latency, a piped
+//! request file rides the batched path. Within a batch:
+//!
+//! * eval requests go through [`Engine::eval_batch`], which groups them by
+//!   workload and runs their distinct configurations through the
+//!   shape-major sweep core once, seeding the engine's shared memo table;
+//! * every other request kind runs sequentially per connection — each is
+//!   already parallel inside (the sweep cores fan out across the host),
+//!   so an outer pool would only multiply thread counts;
+//! * `register` requests are ordering barriers — everything before one is
+//!   answered first, so a register-then-eval pipeline behaves like the
+//!   sequential program it reads as.
+//!
+//! Responses are envelopes: `{"id": ..., "ok": true, "result": {...}}` or
+//! `{"id": ..., "ok": false, "error": {"kind": ..., "message": ...}}`.
+
+use super::engine::Engine;
+use super::error::ApiError;
+use super::request::ApiRequest;
+use super::response::{equal_pe_json, pareto_json, sweep_json, zoo_json};
+use crate::util::json::Json;
+use std::io::{self, BufRead, Read, Write};
+use std::sync::mpsc;
+
+/// Serve-loop knobs.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker pool size for non-eval requests within a batch.
+    pub threads: usize,
+    /// Most requests drained into one batch.
+    pub batch_max: usize,
+    /// TCP only: stop accepting after this many connections (`None` =
+    /// serve forever). The stdin path ignores it.
+    pub max_connections: Option<usize>,
+    /// TCP only: most connections served *simultaneously*; one scoped
+    /// thread exists per live connection, so this bounds the server's
+    /// worst-case thread count at roughly `max_concurrent × host cores`
+    /// (each connection runs at most one internally-parallel request at a
+    /// time). Excess connections are closed immediately.
+    pub max_concurrent: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            threads: crate::sweep::runner::default_threads(),
+            batch_max: 64,
+            max_connections: None,
+            max_concurrent: 64,
+        }
+    }
+}
+
+/// Counters reported when a serve loop ends.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub errors: u64,
+    pub batches: u64,
+}
+
+/// Serve JSON-lines requests from `input` until EOF, writing one response
+/// line per request to `out`. Blank lines are skipped.
+pub fn serve<R, W>(
+    engine: &Engine,
+    input: R,
+    out: &mut W,
+    opts: &ServeOptions,
+) -> io::Result<ServeStats>
+where
+    R: BufRead + Send,
+    W: Write,
+{
+    let mut stats = ServeStats::default();
+    let batch_max = opts.batch_max.max(1);
+    let (tx, rx) = mpsc::sync_channel::<String>(batch_max);
+    std::thread::scope(|scope| -> io::Result<()> {
+        let rx = rx;
+        scope.spawn(move || {
+            // One request per line, each at most this long — a client
+            // streaming bytes without a newline cannot grow memory
+            // without bound.
+            const MAX_LINE_BYTES: u64 = 4 << 20;
+            let mut reader = input;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match reader.by_ref().take(MAX_LINE_BYTES + 1).read_line(&mut line) {
+                    Ok(0) => break,
+                    Ok(_) => {
+                        if line.len() as u64 > MAX_LINE_BYTES {
+                            log::warn!(
+                                "serve: request line exceeds {MAX_LINE_BYTES} bytes, \
+                                 closing input"
+                            );
+                            break;
+                        }
+                        let trimmed = line.trim();
+                        if trimmed.is_empty() {
+                            continue;
+                        }
+                        if tx.send(trimmed.to_string()).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        log::warn!("serve: read error, closing input: {e}");
+                        break;
+                    }
+                }
+            }
+        });
+        // On a write error we cannot return yet — thread::scope would
+        // block joining the reader, which may sit in a blocking read.
+        // Instead keep draining input (answering nothing) until the reader
+        // reaches EOF, then surface the stored error.
+        let mut write_err: Option<io::Error> = None;
+        loop {
+            // Block for the first request of a batch, then drain whatever
+            // is already queued.
+            let first = match rx.recv() {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            let mut lines = vec![first];
+            while lines.len() < batch_max {
+                match rx.try_recv() {
+                    Ok(l) => lines.push(l),
+                    Err(_) => break,
+                }
+            }
+            if write_err.is_none() {
+                if let Err(e) = process_batch(engine, &lines, out, opts, &mut stats) {
+                    log::warn!("serve: output error, draining remaining input: {e}");
+                    write_err = Some(e);
+                }
+            }
+        }
+        match write_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })?;
+    Ok(stats)
+}
+
+/// Accept TCP connections and run [`serve`] per connection, concurrently,
+/// against one shared engine (connections see each other's registered
+/// networks and share the memo table).
+pub fn serve_tcp(
+    engine: &Engine,
+    listener: std::net::TcpListener,
+    opts: &ServeOptions,
+) -> io::Result<()> {
+    // The CLI restores default SIGPIPE so `camuy ... | head` exits quietly,
+    // but a server must not die because one client closed its socket before
+    // reading the response: ignore SIGPIPE for the server's lifetime so the
+    // write fails with EPIPE and only that connection's loop ends. Raw
+    // syscall shim — the offline image ships no `libc` crate (DESIGN.md §6).
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGPIPE: i32 = 13;
+        const SIG_IGN: usize = 1;
+        unsafe {
+            signal(SIGPIPE, SIG_IGN);
+        }
+    }
+    let mut accepted = 0usize;
+    let live = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for conn in listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    log::warn!("serve: accept failed: {e}");
+                    continue;
+                }
+            };
+            // A scoped thread lives per connection; refuse beyond the
+            // concurrency cap instead of growing the thread count without
+            // bound. (Dropping the stream closes it.)
+            let live_now = live.load(std::sync::atomic::Ordering::Acquire);
+            if live_now >= opts.max_concurrent.max(1) {
+                log::warn!(
+                    "serve: refusing connection, {live_now} already live (cap {})",
+                    opts.max_concurrent
+                );
+                continue;
+            }
+            live.fetch_add(1, std::sync::atomic::Ordering::AcqRel);
+            let conn_opts = opts.clone();
+            let live_ref = &live;
+            scope.spawn(move || {
+                let peer = stream
+                    .peer_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| "?".to_string());
+                let reader = match stream.try_clone() {
+                    Ok(s) => Some(io::BufReader::new(s)),
+                    Err(e) => {
+                        log::warn!("serve: {peer}: could not clone stream: {e}");
+                        None
+                    }
+                };
+                if let Some(reader) = reader {
+                    let mut writer = stream;
+                    match serve(engine, reader, &mut writer, &conn_opts) {
+                        Ok(stats) => log::info!(
+                            "serve: {peer}: {} request(s), {} error(s), {} batch(es)",
+                            stats.requests,
+                            stats.errors,
+                            stats.batches
+                        ),
+                        Err(e) => log::warn!("serve: {peer}: {e}"),
+                    }
+                }
+                live_ref.fetch_sub(1, std::sync::atomic::Ordering::AcqRel);
+            });
+            accepted += 1;
+            if let Some(max) = opts.max_connections {
+                if accepted >= max {
+                    break;
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Answer one batch of request lines, writing responses in input order.
+fn process_batch<W: Write>(
+    engine: &Engine,
+    lines: &[String],
+    out: &mut W,
+    opts: &ServeOptions,
+    stats: &mut ServeStats,
+) -> io::Result<()> {
+    let n = lines.len();
+    let parsed: Vec<(Option<Json>, Result<ApiRequest, ApiError>)> =
+        lines.iter().map(|l| ApiRequest::parse_line(l)).collect();
+    let mut responses: Vec<Option<Json>> = vec![None; n];
+    let mut pending: Vec<usize> = Vec::new();
+    for i in 0..n {
+        match &parsed[i].1 {
+            // Decode failures answer immediately; nothing to compute.
+            Err(e) => {
+                stats.errors += 1;
+                responses[i] = Some(envelope(parsed[i].0.clone(), Err(e.clone())));
+            }
+            // Registration is an ordering barrier.
+            Ok(ApiRequest::Register(r)) => {
+                flush_pending(engine, &parsed, &mut pending, &mut responses, opts, stats);
+                let res = engine
+                    .register_network_json(&r.spec)
+                    .map(|resp| resp.to_json());
+                if res.is_err() {
+                    stats.errors += 1;
+                }
+                responses[i] = Some(envelope(parsed[i].0.clone(), res));
+            }
+            Ok(_) => pending.push(i),
+        }
+    }
+    flush_pending(engine, &parsed, &mut pending, &mut responses, opts, stats);
+    for r in &responses {
+        let json = r.as_ref().expect("every request answered");
+        writeln!(out, "{}", json.to_string_compact())?;
+    }
+    out.flush()?;
+    stats.requests += n as u64;
+    stats.batches += 1;
+    Ok(())
+}
+
+/// Answer the gathered non-register requests: evals through the engine's
+/// batched shape-major path, the rest over a scoped worker pool.
+fn flush_pending(
+    engine: &Engine,
+    parsed: &[(Option<Json>, Result<ApiRequest, ApiError>)],
+    pending: &mut Vec<usize>,
+    responses: &mut [Option<Json>],
+    opts: &ServeOptions,
+    stats: &mut ServeStats,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let mut eval_idx = Vec::new();
+    let mut eval_reqs = Vec::new();
+    let mut rest = Vec::new();
+    for &i in pending.iter() {
+        match &parsed[i].1 {
+            Ok(ApiRequest::Eval(r)) => {
+                eval_idx.push(i);
+                eval_reqs.push(r.clone());
+            }
+            _ => rest.push(i),
+        }
+    }
+    for (i, res) in eval_idx
+        .iter()
+        .copied()
+        .zip(engine.eval_batch(&eval_reqs, opts.threads))
+    {
+        if res.is_err() {
+            stats.errors += 1;
+        }
+        responses[i] = Some(envelope(parsed[i].0.clone(), res.map(|r| r.to_json())));
+    }
+    // Sweep/pareto/equal-pe/memory requests are already parallel *inside*
+    // (the sweep cores fan out across the host's cores), so they run
+    // sequentially here — an outer fan-out would multiply thread counts
+    // (connections × dispatch workers × sweep workers) without adding
+    // throughput on a core-saturated sweep.
+    for &i in &rest {
+        let res = dispatch(engine, &parsed[i].1);
+        if res.is_err() {
+            stats.errors += 1;
+        }
+        responses[i] = Some(envelope(parsed[i].0.clone(), res));
+    }
+    pending.clear();
+}
+
+/// Route one decoded request to the engine.
+fn dispatch(engine: &Engine, req: &Result<ApiRequest, ApiError>) -> Result<Json, ApiError> {
+    match req {
+        Err(e) => Err(e.clone()),
+        Ok(ApiRequest::Eval(r)) => engine.eval(r).map(|x| x.to_json()),
+        // Never reached from the serve loop — process_batch answers
+        // registers inline as ordering barriers before anything is fanned
+        // out. Kept correct for completeness should a future caller
+        // dispatch one directly.
+        Ok(ApiRequest::Register(r)) => {
+            engine.register_network_json(&r.spec).map(|x| x.to_json())
+        }
+        Ok(ApiRequest::Zoo) => Ok(zoo_json(&engine.list_networks())),
+        Ok(ApiRequest::Sweep(r)) => engine.sweep(r).map(|d| sweep_json(&d)),
+        Ok(ApiRequest::Pareto(r)) => engine.pareto(r).map(|d| pareto_json(&d)),
+        Ok(ApiRequest::EqualPe(r)) => engine.equal_pe(r).map(|d| equal_pe_json(&d)),
+        Ok(ApiRequest::Memory(r)) => engine.memory(r).map(|x| x.to_json()),
+    }
+}
+
+/// The response envelope: the echoed id, the ok flag, and either the
+/// result document or the structured error.
+fn envelope(id: Option<Json>, result: Result<Json, ApiError>) -> Json {
+    let mut pairs = Vec::with_capacity(3);
+    if let Some(id) = id {
+        pairs.push(("id", id));
+    }
+    match result {
+        Ok(v) => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("result", v));
+        }
+        Err(e) => {
+            pairs.push(("ok", Json::Bool(false)));
+            pairs.push(("error", e.to_json()));
+        }
+    }
+    Json::obj(pairs)
+}

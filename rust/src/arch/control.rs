@@ -46,7 +46,7 @@ pub struct Emulator {
 
 impl Emulator {
     pub fn new(cfg: ArrayConfig) -> Result<Emulator, String> {
-        cfg.validate()?;
+        cfg.validate().map_err(|e| e.to_string())?;
         if cfg.dataflow != Dataflow::WeightStationary {
             return Err(format!(
                 "functional emulation implements weight-stationary only (got {}); \

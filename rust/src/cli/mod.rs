@@ -1,7 +1,9 @@
-//! The `camuy` command-line interface.
+//! The `camuy` command-line interface — a thin adapter over the typed
+//! query API: every subcommand builds a request struct, calls the
+//! long-lived [`crate::api::Engine`], and formats the typed response.
 //!
 //! ```text
-//! camuy zoo                         list networks (params, MACs, shapes)
+//! camuy zoo [--net NAME]            list networks / dump one as JSON spec
 //! camuy emulate --net resnet152 --height 128 --width 64 [--per-layer] [--json]
 //! camuy sweep   --net resnet152 [--grid paper|smoke] [--out DIR]   (Fig 2)
 //! camuy pareto  --net resnet152 [--out DIR]                        (Fig 3)
@@ -9,16 +11,21 @@
 //! camuy robust  [--out DIR]                                        (Fig 5)
 //! camuy equal-pe [--budget N]... [--out DIR]                       (Fig 6)
 //! camuy figures --out DIR          regenerate every paper figure
+//! camuy memory  --net vgg16        per-layer UB working sets and spills
+//! camuy serve   [--listen ADDR]    batched JSON-lines request server
 //! camuy verify  [--artifacts DIR]  three-way artifact verification
+//! camuy --version                  print the crate version
 //! ```
 
 pub mod args;
 
+use crate::api::{
+    Engine, EqualPeRequest, EvalRequest, EvalResponse, MemoryRequest, ParetoRequest,
+    ServeOptions, SweepRequest, SweepSpec,
+};
 use crate::config::{ArrayConfig, Dataflow, EnergyWeights};
-use crate::coordinator::Coordinator;
-use crate::nets;
 use crate::pareto::nsga2::Nsga2Params;
-use crate::report::figures::{self, FigureContext};
+use crate::report::figures;
 use crate::report::{kv_block, pareto_table};
 use crate::runtime::{Manifest, PjrtRuntime};
 use crate::util::human_count;
@@ -27,10 +34,10 @@ use std::path::{Path, PathBuf};
 
 const SCHEMA: Schema = Schema {
     options: &[
-        "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "threads", "artifacts",
-        "dataflow", "seed", "energy-model",
+        "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "min-dim",
+        "threads", "artifacts", "dataflow", "seed", "energy-model", "listen", "batch-max",
     ],
-    flags: &["json", "per-layer", "smoke", "help", "quiet", "verbose"],
+    flags: &["json", "per-layer", "smoke", "help", "quiet", "verbose", "version"],
 };
 
 pub fn usage() -> &'static str {
@@ -39,7 +46,7 @@ pub fn usage() -> &'static str {
 USAGE: camuy <command> [options]
 
 COMMANDS:
-  zoo                 list registered networks
+  zoo                 list registered networks (--net NAME dumps its JSON spec)
   emulate             run one network on one array configuration
   sweep               Fig 2: heatmaps for one network over the grid
   pareto              Fig 3: NSGA-II Pareto sets for one network
@@ -48,6 +55,7 @@ COMMANDS:
   equal-pe            Fig 6: equal-PE-count aspect-ratio study
   figures             regenerate every paper figure into --out
   memory              per-layer UB working sets, spills, DRAM overhead
+  serve               batched JSON-lines request server (stdin, or --listen)
   verify              three-way check: reference = emulator = PJRT artifact
 
 OPTIONS:
@@ -59,10 +67,13 @@ OPTIONS:
   --energy-model paper|dally14nm  Equation-1 weights
   --grid paper|smoke  sweep grid (961-point paper grid or 4x4 smoke)
   --budget N          equal-PE budget (repeatable; default 4096 16384 65536)
+  --min-dim N         equal-PE minimum edge length (default 8)
   --out DIR           output directory for CSV/PGM/TXT (default results/)
-  --threads N         sweep parallelism (default: cores)
+  --threads N         sweep / serve parallelism (default: cores)
+  --listen ADDR       serve on a TCP address instead of stdin/stdout
+  --batch-max N       serve: most requests coalesced per batch (default 64)
   --artifacts DIR     AOT artifact directory (default artifacts/)
-  --per-layer --json --smoke --quiet --verbose --help
+  --per-layer --json --smoke --quiet --verbose --version --help
 "
 }
 
@@ -79,21 +90,27 @@ pub fn run(argv: &[String]) -> i32 {
         args.flag("quiet"),
         if args.flag("verbose") { 1 } else { 0 },
     ));
+    if args.flag("version") {
+        println!("camuy {}", env!("CARGO_PKG_VERSION"));
+        return 0;
+    }
     if args.flag("help") || args.command.is_none() {
         println!("{}", usage());
         return if args.command.is_none() && !args.flag("help") { 2 } else { 0 };
     }
+    let engine = Engine::new();
     let cmd = args.command.clone().unwrap();
     let result = match cmd.as_str() {
-        "zoo" => cmd_zoo(),
-        "emulate" => cmd_emulate(&args),
-        "sweep" => cmd_sweep(&args),
-        "pareto" => cmd_pareto(&args),
-        "heatmaps" => cmd_heatmaps(&args),
-        "robust" => cmd_robust(&args),
-        "equal-pe" => cmd_equal_pe(&args),
-        "figures" => cmd_figures(&args),
-        "memory" => cmd_memory(&args),
+        "zoo" => cmd_zoo(&engine, &args),
+        "emulate" => cmd_emulate(&engine, &args),
+        "sweep" => cmd_sweep(&engine, &args),
+        "pareto" => cmd_pareto(&engine, &args),
+        "heatmaps" => cmd_heatmaps(&engine, &args),
+        "robust" => cmd_robust(&engine, &args),
+        "equal-pe" => cmd_equal_pe(&engine, &args),
+        "figures" => cmd_figures(&engine, &args),
+        "memory" => cmd_memory(&engine, &args),
+        "serve" => cmd_serve(&engine, &args),
         "verify" => cmd_verify(&args),
         other => {
             eprintln!("unknown command '{other}'\n\n{}", usage());
@@ -109,23 +126,10 @@ pub fn run(argv: &[String]) -> i32 {
     }
 }
 
+// ------------------------------------------------------- request builders
+
 fn out_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.opt("out").unwrap_or("results"))
-}
-
-fn context(args: &Args) -> anyhow::Result<FigureContext> {
-    let mut ctx = match args.opt("grid").unwrap_or("paper") {
-        "paper" => FigureContext::paper(),
-        "smoke" => FigureContext::smoke(),
-        g => anyhow::bail!("unknown grid '{g}' (paper|smoke)"),
-    };
-    if args.flag("smoke") {
-        ctx.grid = FigureContext::smoke().grid;
-    }
-    ctx.template = template_config(args, 1, 1)?;
-    ctx.threads = args.opt_usize("threads", ctx.threads)?;
-    ctx.weights = energy_weights(args)?;
-    Ok(ctx)
 }
 
 fn energy_weights(args: &Args) -> anyhow::Result<EnergyWeights> {
@@ -146,7 +150,7 @@ fn template_config(args: &Args, def_h: usize, def_w: usize) -> anyhow::Result<Ar
         cfg.dataflow =
             Dataflow::parse(df).ok_or_else(|| anyhow::anyhow!("unknown dataflow '{df}'"))?;
     }
-    cfg.validate().map_err(anyhow::Error::msg)?;
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -156,129 +160,166 @@ fn require_net(args: &Args) -> anyhow::Result<String> {
         .ok_or_else(|| anyhow::anyhow!("--net is required (see `camuy zoo`)"))
 }
 
-fn cmd_zoo() -> anyhow::Result<()> {
+fn sweep_spec(args: &Args) -> anyhow::Result<SweepSpec> {
+    let mut spec = match args.opt("grid").unwrap_or("paper") {
+        "paper" => SweepSpec::default(),
+        "smoke" => SweepSpec::smoke(),
+        g => anyhow::bail!("unknown grid '{g}' (paper|smoke)"),
+    };
+    if args.flag("smoke") {
+        spec.grid = SweepSpec::smoke().grid;
+    }
+    spec.template = template_config(args, 1, 1)?;
+    spec.threads = args.opt_usize("threads", spec.threads)?;
+    spec.weights = energy_weights(args)?;
+    Ok(spec)
+}
+
+/// `--batch N` if given (`None` keeps the network's registered batch).
+fn opt_batch(args: &Args) -> anyhow::Result<Option<usize>> {
+    match args.opt("batch") {
+        None => Ok(None),
+        Some(_) => Ok(Some(args.opt_usize("batch", 1)?)),
+    }
+}
+
+fn eval_request(args: &Args) -> anyhow::Result<EvalRequest> {
+    Ok(EvalRequest {
+        net: require_net(args)?,
+        batch: opt_batch(args)?,
+        arrays: args.opt_usize("arrays", 1)?,
+        config: template_config(args, 128, 128)?,
+        weights: energy_weights(args)?,
+        per_layer: args.flag("per-layer"),
+    })
+}
+
+// ------------------------------------------------------------ subcommands
+
+fn cmd_zoo(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    if let Some(name) = args.opt("net") {
+        println!("{}", engine.network_spec(name)?.to_string_pretty());
+        return Ok(());
+    }
     println!(
-        "{:<18} {:>10} {:>10} {:>8} {:>15}",
-        "network", "params", "MACs", "layers", "distinct GEMMs"
+        "{:<18} {:>6} {:>10} {:>10} {:>8} {:>15}",
+        "network", "source", "params", "MACs", "layers", "distinct GEMMs"
     );
-    for name in nets::ALL_MODELS {
-        let net = nets::build(name).unwrap();
+    for e in engine.list_networks() {
         println!(
-            "{:<18} {:>10} {:>10} {:>8} {:>15}",
-            name,
-            human_count(net.params()),
-            human_count(net.macs()),
-            net.layers.len(),
-            net.gemm_histogram().len(),
+            "{:<18} {:>6} {:>10} {:>10} {:>8} {:>15}",
+            e.name,
+            e.source.as_str(),
+            human_count(e.params),
+            human_count(e.macs),
+            e.layers,
+            e.distinct_gemms,
         );
     }
     Ok(())
 }
 
-fn cmd_emulate(args: &Args) -> anyhow::Result<()> {
-    let name = require_net(args)?;
-    let net = nets::build(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown network '{name}'"))?
-        .with_batch(args.opt_usize("batch", 1)?);
-    let cfg = template_config(args, 128, 128)?;
-    let coord = Coordinator::new(cfg.clone())
-        .map_err(anyhow::Error::msg)?
-        .with_weights(energy_weights(args)?);
-    let arrays = args.opt_usize("arrays", 1)?;
-    if arrays > 1 {
-        let mcfg = crate::model::multi::MultiArrayConfig::new(arrays, cfg.clone());
-        let m = crate::model::multi::network_metrics_multi(&net, &mcfg);
-        println!(
-            "{}",
-            kv_block(
-                &format!("{name} on {arrays}x [{cfg}]"),
-                &[
-                    ("makespan cycles", human_count(m.makespan_cycles)),
-                    ("busy cycles (sum)", human_count(m.total.cycles)),
-                    ("MACs", human_count(m.total.macs)),
-                    ("bank utilization", format!("{:.4}", m.utilization(&mcfg))),
-                    (
-                        "energy (Eq.1)",
-                        format!("{:.4e}", m.energy(&energy_weights(args)?))
-                    ),
-                    ("M_UB", human_count(m.total.movements.m_ub())),
-                ]
-            )
-        );
-        return Ok(());
-    }
-    let run = coord.run_inference(&net);
-
+fn cmd_emulate(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let req = eval_request(args)?;
+    let resp = engine.eval(&req)?;
     if args.flag("json") {
-        println!("{}", run.to_json().to_string_pretty());
+        println!("{}", resp.to_json().to_string_pretty());
         return Ok(());
     }
-    println!(
-        "{}",
-        kv_block(
-            &format!("{name} on {cfg}"),
-            &[
-                ("cycles", human_count(run.total.cycles)),
-                ("stall cycles", human_count(run.total.stall_cycles)),
-                ("MACs", human_count(run.total.macs)),
-                ("passes", human_count(run.total.passes)),
-                ("utilization", format!("{:.4}", run.utilization())),
-                (
-                    "energy (Eq.1)",
-                    format!("{:.4e}", run.energy(&coord.weights))
-                ),
-                ("M_UB", human_count(run.total.movements.m_ub())),
-                ("M_INTER_PE", human_count(run.total.movements.m_inter_pe())),
-                ("M_AA", human_count(run.total.movements.m_aa())),
-                ("M_INTRA_PE", human_count(run.total.movements.m_intra_pe())),
-                (
-                    "UB bandwidth (B/cy)",
-                    format!("{:.2}", run.bandwidth.ub_total())
-                ),
-                (
-                    "UB spills",
-                    if run.ub_violations.is_empty() {
-                        "none".to_string()
-                    } else {
-                        format!("{} layers exceed the UB", run.ub_violations.len())
-                    }
-                ),
-            ]
-        )
-    );
-    if args.flag("per-layer") {
-        let (rooflines, mem_share) = crate::model::roofline::network_roofline(&net, &cfg);
-        println!(
-            "top layers by cycles (machine balance {:.1} MACs/B; {:.0}% of layers memory-bound):",
-            crate::model::roofline::machine_balance(&cfg),
-            100.0 * mem_share
-        );
-        let roofline_of = |name: &str| rooflines.iter().find(|r| r.layer == name);
-        for t in run.top_layers_by_cycles(15) {
-            let rl = roofline_of(&t.layer);
+    match resp {
+        EvalResponse::Multi {
+            network,
+            config,
+            metrics,
+            utilization,
+            energy,
+        } => {
             println!(
-                "  {:<40} {:>12} cycles  util {:.3}  E {:.3e}  {} ({:.1} MACs/B)",
-                t.layer,
-                human_count(t.metrics.cycles),
-                t.utilization,
-                t.energy,
-                rl.map(|r| match r.bound {
-                    crate::model::roofline::Bound::Compute => "compute-bound",
-                    crate::model::roofline::Bound::Memory => "memory-bound",
-                })
-                .unwrap_or("?"),
-                rl.map(|r| r.intensity).unwrap_or(0.0),
+                "{}",
+                kv_block(
+                    &format!("{network} on {}x [{}]", config.arrays, config.array),
+                    &[
+                        ("makespan cycles", human_count(metrics.makespan_cycles)),
+                        ("busy cycles (sum)", human_count(metrics.total.cycles)),
+                        ("MACs", human_count(metrics.total.macs)),
+                        ("bank utilization", format!("{utilization:.4}")),
+                        ("energy (Eq.1)", format!("{energy:.4e}")),
+                        ("M_UB", human_count(metrics.total.movements.m_ub())),
+                    ]
+                )
             );
+        }
+        EvalResponse::Single {
+            run,
+            energy,
+            per_layer,
+        } => {
+            println!(
+                "{}",
+                kv_block(
+                    &format!("{} on {}", run.network, run.config),
+                    &[
+                        ("cycles", human_count(run.total.cycles)),
+                        ("stall cycles", human_count(run.total.stall_cycles)),
+                        ("MACs", human_count(run.total.macs)),
+                        ("passes", human_count(run.total.passes)),
+                        ("utilization", format!("{:.4}", run.utilization())),
+                        ("energy (Eq.1)", format!("{energy:.4e}")),
+                        ("M_UB", human_count(run.total.movements.m_ub())),
+                        ("M_INTER_PE", human_count(run.total.movements.m_inter_pe())),
+                        ("M_AA", human_count(run.total.movements.m_aa())),
+                        ("M_INTRA_PE", human_count(run.total.movements.m_intra_pe())),
+                        (
+                            "UB bandwidth (B/cy)",
+                            format!("{:.2}", run.bandwidth.ub_total())
+                        ),
+                        (
+                            "UB spills",
+                            if run.ub_violations.is_empty() {
+                                "none".to_string()
+                            } else {
+                                format!("{} layers exceed the UB", run.ub_violations.len())
+                            }
+                        ),
+                    ]
+                )
+            );
+            if let Some(pl) = per_layer {
+                println!(
+                    "top layers by cycles (machine balance {:.1} MACs/B; {:.0}% of layers memory-bound):",
+                    pl.machine_balance,
+                    100.0 * pl.memory_bound_share
+                );
+                let roofline_of = |name: &str| pl.rooflines.iter().find(|r| r.layer == name);
+                for t in run.top_layers_by_cycles(15) {
+                    let rl = roofline_of(&t.layer);
+                    println!(
+                        "  {:<40} {:>12} cycles  util {:.3}  E {:.3e}  {} ({:.1} MACs/B)",
+                        t.layer,
+                        human_count(t.metrics.cycles),
+                        t.utilization,
+                        t.energy,
+                        rl.map(|r| match r.bound {
+                            crate::model::roofline::Bound::Compute => "compute-bound",
+                            crate::model::roofline::Bound::Memory => "memory-bound",
+                        })
+                        .unwrap_or("?"),
+                        rl.map(|r| r.intensity).unwrap_or(0.0),
+                    );
+                }
+            }
         }
     }
     Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    let name = require_net(args)?;
-    let ctx = context(args)?;
-    log::info!("sweeping {name} over {} configs", ctx.grid.len());
-    let data = figures::fig2_heatmaps(&name, &ctx);
+fn cmd_sweep(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let req = SweepRequest {
+        net: require_net(args)?,
+        spec: sweep_spec(args)?,
+    };
+    log::info!("sweeping {} over {} configs", req.net, req.spec.grid.len());
+    let data = engine.sweep(&req)?;
     let dir = out_dir(args);
     figures::write_fig2(&data, &dir)?;
     println!("{}", data.energy.ascii());
@@ -287,20 +328,22 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
-    let name = require_net(args)?;
-    let ctx = context(args)?;
-    let params = Nsga2Params {
-        seed: args.opt_usize("seed", 0xCA_0001)? as u64,
-        ..Default::default()
+fn cmd_pareto(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let req = ParetoRequest {
+        net: require_net(args)?,
+        spec: sweep_spec(args)?,
+        params: Nsga2Params {
+            seed: args.opt_usize("seed", 0xCA_0001)? as u64,
+            ..Default::default()
+        },
     };
-    let data = figures::fig3_pareto(&name, &ctx, &params);
+    let data = engine.pareto(&req)?;
     let dir = out_dir(args);
     figures::write_fig3(&data, &dir)?;
     println!(
         "{}",
         pareto_table(
-            &format!("{name}: Pareto set (E, cycles) — NSGA-II"),
+            &format!("{}: Pareto set (E, cycles) — NSGA-II", req.net),
             &["energy", "cycles"],
             &data.energy_front
         )
@@ -314,9 +357,8 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_heatmaps(args: &Args) -> anyhow::Result<()> {
-    let ctx = context(args)?;
-    let data = figures::fig4_heatmaps(&ctx);
+fn cmd_heatmaps(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let data = engine.heatmaps(&sweep_spec(args)?)?;
     let dir = out_dir(args);
     figures::write_fig4(&data, &dir)?;
     for d in &data {
@@ -327,10 +369,8 @@ fn cmd_heatmaps(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_robust(args: &Args) -> anyhow::Result<()> {
-    let ctx = context(args)?;
-    let params = Nsga2Params::default();
-    let data = figures::fig5_robust(&ctx, &params);
+fn cmd_robust(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let data = engine.robust(&sweep_spec(args)?, &Nsga2Params::default())?;
     let dir = out_dir(args);
     figures::write_fig5(&data, &dir)?;
     println!(
@@ -345,12 +385,11 @@ fn cmd_robust(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_equal_pe(args: &Args) -> anyhow::Result<()> {
-    let ctx = context(args)?;
+fn equal_pe_request(args: &Args) -> anyhow::Result<EqualPeRequest> {
     let budgets: Vec<usize> = {
         let given = args.opt_list("budget");
         if given.is_empty() {
-            vec![4096, 16384, 65536]
+            EqualPeRequest::DEFAULT_BUDGETS.to_vec()
         } else {
             given
                 .iter()
@@ -358,10 +397,17 @@ fn cmd_equal_pe(args: &Args) -> anyhow::Result<()> {
                 .collect::<anyhow::Result<_>>()?
         }
     };
-    let data: Vec<_> = budgets
-        .iter()
-        .map(|&b| figures::fig6_equal_pe(b, 8, &ctx))
-        .collect();
+    let req = EqualPeRequest {
+        budgets,
+        min_dim: args.opt_usize("min-dim", 8)?,
+        spec: sweep_spec(args)?,
+    };
+    req.validate()?;
+    Ok(req)
+}
+
+fn cmd_equal_pe(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let data = engine.equal_pe(&equal_pe_request(args)?)?;
     let dir = out_dir(args);
     figures::write_fig6(&data, &dir)?;
     for d in &data {
@@ -374,62 +420,97 @@ fn cmd_equal_pe(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_figures(args: &Args) -> anyhow::Result<()> {
-    let ctx = context(args)?;
+fn cmd_figures(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let spec = sweep_spec(args)?;
     let dir = out_dir(args);
     let params = Nsga2Params::default();
 
     log::info!("Fig 2 (ResNet-152 heatmaps)…");
-    figures::write_fig2(&figures::fig2_heatmaps("resnet152", &ctx), &dir)?;
+    let f2 = engine.sweep(&SweepRequest {
+        net: "resnet152".to_string(),
+        spec: spec.clone(),
+    })?;
+    figures::write_fig2(&f2, &dir)?;
     log::info!("Fig 3 (ResNet-152 Pareto)…");
-    figures::write_fig3(&figures::fig3_pareto("resnet152", &ctx, &params), &dir)?;
+    let f3 = engine.pareto(&ParetoRequest {
+        net: "resnet152".to_string(),
+        spec: spec.clone(),
+        params: params.clone(),
+    })?;
+    figures::write_fig3(&f3, &dir)?;
     log::info!("Fig 4 (all-model heatmaps)…");
-    figures::write_fig4(&figures::fig4_heatmaps(&ctx), &dir)?;
+    figures::write_fig4(&engine.heatmaps(&spec)?, &dir)?;
     log::info!("Fig 5 (robust Pareto)…");
-    figures::write_fig5(&figures::fig5_robust(&ctx, &params), &dir)?;
+    figures::write_fig5(&engine.robust(&spec, &params)?, &dir)?;
     log::info!("Fig 6 (equal-PE aspect ratios)…");
-    let f6: Vec<_> = [4096usize, 16384, 65536]
-        .iter()
-        .map(|&b| figures::fig6_equal_pe(b, 8, &ctx))
-        .collect();
+    let f6 = engine.equal_pe(&EqualPeRequest {
+        budgets: EqualPeRequest::DEFAULT_BUDGETS.to_vec(),
+        min_dim: 8,
+        spec,
+    })?;
     figures::write_fig6(&f6, &dir)?;
     println!("all figures written to {}", dir.display());
     Ok(())
 }
 
-fn cmd_memory(args: &Args) -> anyhow::Result<()> {
-    let name = require_net(args)?;
-    let net = nets::build(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown network '{name}'"))?
-        .with_batch(args.opt_usize("batch", 1)?);
-    let cfg = template_config(args, 128, 128)?;
-    let analysis = crate::model::memory::MemoryAnalysis::of(&net, &cfg);
+fn cmd_memory(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let req = MemoryRequest {
+        net: require_net(args)?,
+        batch: opt_batch(args)?,
+        config: template_config(args, 128, 128)?,
+        weights: energy_weights(args)?,
+    };
+    let resp = engine.memory(&req)?;
     println!(
-        "{name} on {cfg} (UB {} MiB):",
-        cfg.ub_bytes >> 20
+        "{} on {} (UB {} MiB):",
+        resp.network,
+        resp.config,
+        resp.config.ub_bytes >> 20
     );
     println!(
         "  peak working set {:.2} MiB; {} of {} layers spill; DRAM words {}",
-        analysis.peak_working_set_bytes as f64 / (1 << 20) as f64,
-        analysis.spilling_layers,
-        analysis.layers.len(),
-        human_count(analysis.total_dram_words)
+        resp.analysis.peak_working_set_bytes as f64 / (1 << 20) as f64,
+        resp.analysis.spilling_layers,
+        resp.analysis.layers.len(),
+        human_count(resp.analysis.total_dram_words)
     );
-    let w = energy_weights(args)?;
-    let base = net.metrics(&cfg).energy(&w);
-    let corrected = analysis.corrected_energy(&net, &cfg, &w);
     println!(
-        "  Eq.1 energy {base:.4e}; with DRAM spills {corrected:.4e} ({:+.1}%)",
-        100.0 * (corrected / base - 1.0)
+        "  Eq.1 energy {:.4e}; with DRAM spills {:.4e} ({:+.1}%)",
+        resp.base_energy,
+        resp.corrected_energy,
+        100.0 * (resp.corrected_energy / resp.base_energy - 1.0)
     );
-    let mut spillers: Vec<_> = analysis.layers.iter().filter(|l| !l.fits).collect();
-    spillers.sort_by(|a, b| b.working_set_bytes.cmp(&a.working_set_bytes));
-    for l in spillers.iter().take(10) {
+    for l in resp.spillers().into_iter().take(10) {
         println!(
             "    {:<40} {:.2} MiB working set, {} DRAM words",
             l.layer,
             l.working_set_bytes as f64 / (1 << 20) as f64,
             human_count(l.dram_words)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let opts = ServeOptions {
+        threads: args.opt_usize("threads", ServeOptions::default().threads)?,
+        batch_max: args.opt_usize("batch-max", 64)?,
+        ..ServeOptions::default()
+    };
+    anyhow::ensure!(opts.batch_max > 0, "--batch-max must be positive");
+    if let Some(addr) = args.opt("listen") {
+        let listener = std::net::TcpListener::bind(addr)?;
+        log::info!("serving on {}", listener.local_addr()?);
+        crate::api::serve_tcp(engine, listener, &opts)?;
+    } else {
+        let stdin = std::io::BufReader::new(std::io::stdin());
+        let stdout = std::io::stdout();
+        let stats = crate::api::serve(engine, stdin, &mut stdout.lock(), &opts)?;
+        log::info!(
+            "served {} request(s) ({} error(s)) in {} batch(es)",
+            stats.requests,
+            stats.errors,
+            stats.batches
         );
     }
     Ok(())
@@ -459,4 +540,44 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(failures == 0, "{failures} artifact verification(s) failed");
     println!("verification PASSED");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn version_flag_parses_and_exits_zero() {
+        let a = Args::parse(&argv(&["--version"]), &SCHEMA).unwrap();
+        assert!(a.flag("version"));
+        assert_eq!(run(&argv(&["--version"])), 0);
+        // The flag wins even alongside a command.
+        assert_eq!(run(&argv(&["zoo", "--version"])), 0);
+    }
+
+    #[test]
+    fn usage_lists_every_dispatched_command() {
+        for cmd in [
+            "zoo", "emulate", "sweep", "pareto", "heatmaps", "robust", "equal-pe", "figures",
+            "memory", "serve", "verify",
+        ] {
+            assert!(usage().contains(cmd), "usage() missing {cmd}");
+        }
+        assert!(usage().contains("--version"));
+    }
+
+    #[test]
+    fn serve_options_parse() {
+        let a = Args::parse(
+            &argv(&["serve", "--batch-max", "16", "--threads", "2"]),
+            &SCHEMA,
+        )
+        .unwrap();
+        assert_eq!(a.opt_usize("batch-max", 64).unwrap(), 16);
+        assert_eq!(a.opt_usize("threads", 0).unwrap(), 2);
+    }
 }

@@ -42,6 +42,36 @@ impl fmt::Display for Dataflow {
     }
 }
 
+/// Structural violation of an [`ArrayConfig`] invariant — the typed error
+/// the validation path (and the `camuy::api` request surface) reports
+/// instead of letting a zero dimension reach a division downstream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigError {
+    ZeroHeight,
+    ZeroWidth,
+    ZeroAccCapacity,
+    ZeroUnifiedBuffer,
+    BadBitwidth { field: &'static str, bits: u32 },
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::ZeroHeight => write!(f, "array height must be positive"),
+            ConfigError::ZeroWidth => write!(f, "array width must be positive"),
+            ConfigError::ZeroAccCapacity => write!(f, "accumulator capacity must be positive"),
+            ConfigError::ZeroUnifiedBuffer => {
+                write!(f, "unified buffer capacity must be positive")
+            }
+            ConfigError::BadBitwidth { field, bits } => {
+                write!(f, "{field} must be in 1..=64, got {bits}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// Geometry and provisioning of one emulated processor array instance.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ArrayConfig {
@@ -85,6 +115,15 @@ impl ArrayConfig {
         }
     }
 
+    /// Validated construction: [`ArrayConfig::new`] defaults with the
+    /// geometry checked up front, so a degenerate array never reaches the
+    /// tiling math.
+    pub fn try_new(height: usize, width: usize) -> Result<Self, ConfigError> {
+        let cfg = Self::new(height, width);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     /// The commercially deployed TPUv1 geometry the paper compares against.
     pub fn tpu_v1() -> Self {
         Self::new(256, 256)
@@ -117,16 +156,19 @@ impl ArrayConfig {
         self.height * self.width
     }
 
-    /// Validate invariants; returns a human-readable error on violation.
-    pub fn validate(&self) -> Result<(), String> {
-        if self.height == 0 || self.width == 0 {
-            return Err("array dimensions must be positive".into());
+    /// Validate invariants; returns a typed [`ConfigError`] on violation.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.height == 0 {
+            return Err(ConfigError::ZeroHeight);
+        }
+        if self.width == 0 {
+            return Err(ConfigError::ZeroWidth);
         }
         if self.acc_capacity == 0 {
-            return Err("accumulator capacity must be positive".into());
+            return Err(ConfigError::ZeroAccCapacity);
         }
         if self.ub_bytes == 0 {
-            return Err("unified buffer capacity must be positive".into());
+            return Err(ConfigError::ZeroUnifiedBuffer);
         }
         for (name, bits) in [
             ("weight_bits", self.weight_bits),
@@ -134,7 +176,7 @@ impl ArrayConfig {
             ("out_bits", self.out_bits),
         ] {
             if bits == 0 || bits > 64 {
-                return Err(format!("{name} must be in 1..=64, got {bits}"));
+                return Err(ConfigError::BadBitwidth { field: name, bits });
             }
         }
         Ok(())
@@ -153,20 +195,36 @@ impl ArrayConfig {
         ])
     }
 
+    /// Parse the JSON object form. Optional fields default when *absent*
+    /// but error when present and malformed — this is a wire surface, and
+    /// silently substituting a default for a typo'd field would answer a
+    /// question the client did not ask. Structural parsing only — callers
+    /// run [`ArrayConfig::validate`] to get the typed [`ConfigError`] (the
+    /// `camuy::api` request path does exactly that).
     pub fn from_json(v: &Json) -> Result<Self, String> {
-        let get_usize = |k: &str| -> Result<usize, String> {
+        let req_usize = |k: &str| -> Result<usize, String> {
             v.get(k)
                 .and_then(Json::as_usize)
                 .ok_or_else(|| format!("missing or invalid field '{k}'"))
         };
+        let opt_usize = |k: &str, default: usize| -> Result<usize, String> {
+            Ok(v.opt_usize_field(k)?.unwrap_or(default))
+        };
+        let opt_bits = |k: &str, default: u32| -> Result<u32, String> {
+            match v.opt_usize_field(k)? {
+                None => Ok(default),
+                Some(x) => u32::try_from(x)
+                    .map_err(|_| format!("field '{k}' must be a small non-negative integer")),
+            }
+        };
         let cfg = Self {
-            height: get_usize("height")?,
-            width: get_usize("width")?,
-            acc_capacity: get_usize("acc_capacity").unwrap_or(4096),
-            ub_bytes: get_usize("ub_bytes").unwrap_or(24 * 1024 * 1024),
-            weight_bits: get_usize("weight_bits").unwrap_or(8) as u32,
-            act_bits: get_usize("act_bits").unwrap_or(8) as u32,
-            out_bits: get_usize("out_bits").unwrap_or(32) as u32,
+            height: req_usize("height")?,
+            width: req_usize("width")?,
+            acc_capacity: opt_usize("acc_capacity", 4096)?,
+            ub_bytes: opt_usize("ub_bytes", 24 * 1024 * 1024)?,
+            weight_bits: opt_bits("weight_bits", 8)?,
+            act_bits: opt_bits("act_bits", 8)?,
+            out_bits: opt_bits("out_bits", 32)?,
             dataflow: v
                 .get("dataflow")
                 .and_then(Json::as_str)
@@ -174,7 +232,6 @@ impl ArrayConfig {
                 .transpose()?
                 .unwrap_or(Dataflow::WeightStationary),
         };
-        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -268,6 +325,30 @@ mod tests {
     }
 
     #[test]
+    fn validation_errors_are_typed() {
+        assert_eq!(ArrayConfig::new(0, 8).validate(), Err(ConfigError::ZeroHeight));
+        assert_eq!(ArrayConfig::new(8, 0).validate(), Err(ConfigError::ZeroWidth));
+        assert_eq!(
+            ArrayConfig::new(8, 8).with_acc_capacity(0).validate(),
+            Err(ConfigError::ZeroAccCapacity)
+        );
+        assert_eq!(
+            ArrayConfig::new(8, 8).with_ub_bytes(0).validate(),
+            Err(ConfigError::ZeroUnifiedBuffer)
+        );
+        assert_eq!(
+            ArrayConfig::new(8, 8).with_bits(8, 0, 32).validate(),
+            Err(ConfigError::BadBitwidth { field: "act_bits", bits: 0 })
+        );
+    }
+
+    #[test]
+    fn try_new_validates_up_front() {
+        assert_eq!(ArrayConfig::try_new(0, 8), Err(ConfigError::ZeroHeight));
+        assert_eq!(ArrayConfig::try_new(16, 8).unwrap(), ArrayConfig::new(16, 8));
+    }
+
+    #[test]
     fn json_roundtrip() {
         let c = ArrayConfig::new(48, 96)
             .with_acc_capacity(2048)
@@ -283,6 +364,21 @@ mod tests {
         let c = ArrayConfig::from_json(&v).unwrap();
         assert_eq!((c.height, c.width), (32, 16));
         assert_eq!(c.acc_capacity, 4096);
+    }
+
+    #[test]
+    fn json_rejects_present_but_malformed_optional_fields() {
+        // A typo'd optional field must error, not silently take the default.
+        for bad in [
+            r#"{"height":32,"width":32,"ub_bytes":"1048576"}"#,
+            r#"{"height":32,"width":32,"acc_capacity":-4}"#,
+            r#"{"height":32,"width":32,"acc_capacity":2.5}"#,
+            r#"{"height":32,"width":32,"act_bits":4294967296}"#,
+            r#"{"height":32,"width":32,"dataflow":"sideways"}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(ArrayConfig::from_json(&v).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

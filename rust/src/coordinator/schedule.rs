@@ -4,7 +4,7 @@
 //! requirements, and aggregate results. Optionally spot-checks layer
 //! numerics against AOT artifacts (see `verify.rs`).
 
-use crate::config::{ArrayConfig, EnergyWeights};
+use crate::config::{ArrayConfig, ConfigError, EnergyWeights};
 use crate::metrics::Metrics;
 use crate::model::bandwidth::BandwidthReport;
 use crate::model::network::Network;
@@ -42,7 +42,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(config: ArrayConfig) -> Result<Coordinator, String> {
+    pub fn new(config: ArrayConfig) -> Result<Coordinator, ConfigError> {
         config.validate()?;
         Ok(Coordinator {
             config,
@@ -60,7 +60,18 @@ impl Coordinator {
     /// timeline stays per-layer, but repeated GEMM shapes are costed once
     /// through a per-run workload evaluation cache.
     pub fn run_inference(&self, net: &Network) -> InferenceRun {
-        let cache = crate::model::workload::EvalCache::new();
+        self.run_inference_cached(net, &crate::model::workload::EvalCache::new())
+    }
+
+    /// Like [`Coordinator::run_inference`], with per-(shape, configuration)
+    /// metrics memoized in a caller-owned cache. The long-lived
+    /// [`crate::api::Engine`] shares one cache across requests so repeated
+    /// queries hit the memo table instead of recomputing.
+    pub fn run_inference_cached(
+        &self,
+        net: &Network,
+        cache: &crate::model::workload::EvalCache,
+    ) -> InferenceRun {
         let mut timeline = Vec::with_capacity(net.layers.len());
         let mut clock: u64 = 0;
         let mut total = Metrics::default();
@@ -69,7 +80,7 @@ impl Coordinator {
             if !crate::model::bandwidth::fits_unified_buffer(layer, &self.config) {
                 ub_violations.push(layer.name.clone());
             }
-            let m = layer.metrics_cached(&self.config, &cache);
+            let m = layer.metrics_cached(&self.config, cache);
             let entry = TimelineEntry {
                 layer: layer.name.clone(),
                 start_cycle: clock,
@@ -190,7 +201,24 @@ mod tests {
 
     #[test]
     fn rejects_invalid_config() {
-        assert!(Coordinator::new(ArrayConfig::new(0, 8)).is_err());
+        assert_eq!(
+            Coordinator::new(ArrayConfig::new(0, 8)).unwrap_err(),
+            crate::config::ConfigError::ZeroHeight
+        );
+    }
+
+    #[test]
+    fn shared_cache_run_matches_fresh_run() {
+        let c = Coordinator::new(ArrayConfig::new(16, 16)).unwrap();
+        let cache = crate::model::workload::EvalCache::new();
+        let a = c.run_inference_cached(&net(), &cache);
+        let misses = cache.misses();
+        // A second run over the same network is served from the memo table.
+        let b = c.run_inference_cached(&net(), &cache);
+        assert_eq!(cache.misses(), misses);
+        assert!(cache.hits() >= misses);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.total, c.run_inference(&net()).total);
     }
 
     #[test]

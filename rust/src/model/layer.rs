@@ -10,6 +10,7 @@ use crate::config::ArrayConfig;
 use crate::metrics::Metrics;
 use crate::model::gemm::gemm_metrics;
 use crate::model::schedule::GemmShape;
+use crate::util::json::Json;
 use std::fmt;
 
 /// Spatial input geometry of a layer invocation.
@@ -196,6 +197,321 @@ impl Layer {
         let (gemm, groups) = self.gemm();
         cache.gemm_metrics(gemm, cfg) * groups as u64
     }
+
+    /// Re-check the lowered-GEMM work ceilings (the ones [`Layer::from_json`]
+    /// enforces) against the layer's *current* batch. Callers that re-batch
+    /// an already-validated layer (`with_batch` overrides from a request or
+    /// a network-level spec field) run this so the ingestion bounds compose
+    /// instead of multiplying past the exact-arithmetic range.
+    pub fn check_work_bounds(&self) -> Result<(), String> {
+        match &self.kind {
+            LayerKind::Conv2d {
+                c_in,
+                c_out,
+                kernel,
+                groups,
+                ..
+            } => {
+                let out = self.output_dims();
+                let m = checked_product(&[self.batch as u128, out.h as u128, out.w as u128]);
+                let k = checked_product(&[
+                    (c_in / groups) as u128,
+                    kernel.0 as u128,
+                    kernel.1 as u128,
+                ]);
+                check_work(&self.name, m, k, (c_out / groups) as u128, *groups as u128)
+            }
+            LayerKind::Linear {
+                in_features,
+                out_features,
+            } => check_work(
+                &self.name,
+                self.batch as u128,
+                *in_features as u128,
+                *out_features as u128,
+                1,
+            ),
+        }
+    }
+
+    /// Serialize to the layer-list JSON schema the network-ingestion API
+    /// consumes (see DESIGN.md §8).
+    pub fn to_json(&self) -> Json {
+        match &self.kind {
+            LayerKind::Conv2d {
+                c_in,
+                c_out,
+                kernel,
+                stride,
+                padding,
+                dilation,
+                groups,
+            } => Json::obj(vec![
+                ("op", Json::str("conv2d")),
+                ("name", Json::str(self.name.clone())),
+                (
+                    "input",
+                    Json::obj(vec![
+                        ("h", Json::num(self.input.h as f64)),
+                        ("w", Json::num(self.input.w as f64)),
+                    ]),
+                ),
+                ("batch", Json::num(self.batch as f64)),
+                ("c_in", Json::num(*c_in as f64)),
+                ("c_out", Json::num(*c_out as f64)),
+                ("kernel", pair_json(*kernel)),
+                ("stride", pair_json(*stride)),
+                ("padding", pair_json(*padding)),
+                ("dilation", pair_json(*dilation)),
+                ("groups", Json::num(*groups as f64)),
+            ]),
+            LayerKind::Linear {
+                in_features,
+                out_features,
+            } => Json::obj(vec![
+                ("op", Json::str("linear")),
+                ("name", Json::str(self.name.clone())),
+                ("batch", Json::num(self.batch as f64)),
+                ("in_features", Json::num(*in_features as f64)),
+                ("out_features", Json::num(*out_features as f64)),
+            ]),
+        }
+    }
+
+    /// Parse one layer of the JSON schema, validating every structural
+    /// invariant (`gemm()` may assert; nothing a request sends should ever
+    /// reach an assert). Scalar shorthand is accepted wherever a pair is
+    /// expected: `"kernel": 3` means `[3, 3]`.
+    pub fn from_json(v: &Json) -> Result<Layer, String> {
+        let op = spec_str(v, "op")?;
+        let name = spec_str(v, "name")?;
+        let batch = spec_usize(v, "batch", Some(1))?;
+        if batch == 0 {
+            return Err(format!("layer '{name}': batch must be positive"));
+        }
+        match op.as_str() {
+            "conv2d" | "conv" => {
+                let input = spec_input(v, &name)?;
+                let c_in = spec_positive(v, "c_in", None, &name)?;
+                let c_out = spec_positive(v, "c_out", None, &name)?;
+                let kernel = spec_pair(v, "kernel", None, &name)?;
+                let stride = spec_pair(v, "stride", Some((1, 1)), &name)?;
+                let padding = spec_pair_allow_zero(v, "padding", Some((0, 0)), &name)?;
+                let dilation = spec_pair(v, "dilation", Some((1, 1)), &name)?;
+                let groups = spec_positive(v, "groups", Some(1), &name)?;
+                if kernel.0 == 0 || kernel.1 == 0 || stride.0 == 0 || stride.1 == 0 {
+                    return Err(format!("layer '{name}': kernel and stride must be positive"));
+                }
+                if dilation.0 == 0 || dilation.1 == 0 {
+                    return Err(format!("layer '{name}': dilation must be positive"));
+                }
+                if c_in % groups != 0 || c_out % groups != 0 {
+                    return Err(format!(
+                        "layer '{name}': channels {c_in}->{c_out} not divisible by groups {groups}"
+                    ));
+                }
+                // Bound every raw field first: with all of them <= 2^20 no
+                // later usize expression (padded input, effective kernel,
+                // pass counts) can overflow, in debug or release.
+                const FIELD_LIMIT: usize = 1 << 20;
+                for (field, val) in [
+                    ("input.h", input.h),
+                    ("input.w", input.w),
+                    ("c_in", c_in),
+                    ("c_out", c_out),
+                    ("kernel", kernel.0.max(kernel.1)),
+                    ("stride", stride.0.max(stride.1)),
+                    ("padding", padding.0.max(padding.1)),
+                    ("dilation", dilation.0.max(dilation.1)),
+                    ("groups", groups),
+                    ("batch", batch),
+                ] {
+                    if val > FIELD_LIMIT {
+                        return Err(format!(
+                            "layer '{name}': {field} = {val} exceeds the \
+                             ingestion limit {FIELD_LIMIT}"
+                        ));
+                    }
+                }
+                // Check the lowered GEMM in 128-bit arithmetic before the
+                // layer exists: hostile magnitudes and kernels that exceed
+                // the padded input are rejected here instead of overflowing
+                // (or silently saturating) the usize/u64 math downstream.
+                let ph = input.h as u128 + 2 * padding.0 as u128;
+                let pw = input.w as u128 + 2 * padding.1 as u128;
+                let ekh = dilation.0 as u128 * (kernel.0 as u128 - 1) + 1;
+                let ekw = dilation.1 as u128 * (kernel.1 as u128 - 1) + 1;
+                if ekh > ph || ekw > pw {
+                    return Err(format!(
+                        "layer '{name}': effective kernel {ekh}x{ekw} exceeds \
+                         padded input {ph}x{pw}"
+                    ));
+                }
+                let oh = (ph - ekh) / stride.0 as u128 + 1;
+                let ow = (pw - ekw) / stride.1 as u128 + 1;
+                let m = checked_product(&[batch as u128, oh, ow]);
+                let k = checked_product(&[
+                    (c_in / groups) as u128,
+                    kernel.0 as u128,
+                    kernel.1 as u128,
+                ]);
+                check_work(&name, m, k, (c_out / groups) as u128, groups as u128)?;
+                Ok(Layer {
+                    name,
+                    kind: LayerKind::Conv2d {
+                        c_in,
+                        c_out,
+                        kernel,
+                        stride,
+                        padding,
+                        dilation,
+                        groups,
+                    },
+                    input,
+                    batch,
+                })
+            }
+            "linear" | "fc" => {
+                let in_features = spec_positive(v, "in_features", None, &name)?;
+                let out_features = spec_positive(v, "out_features", None, &name)?;
+                check_work(
+                    &name,
+                    batch as u128,
+                    in_features as u128,
+                    out_features as u128,
+                    1,
+                )?;
+                Ok(Layer {
+                    name,
+                    kind: LayerKind::Linear {
+                        in_features,
+                        out_features,
+                    },
+                    input: SpatialDims { h: 1, w: 1 },
+                    batch,
+                })
+            }
+            other => Err(format!("layer '{name}': unknown op '{other}' (conv2d|linear)")),
+        }
+    }
+}
+
+fn pair_json((a, b): (usize, usize)) -> Json {
+    Json::arr(vec![Json::num(a as f64), Json::num(b as f64)])
+}
+
+/// Per-GEMM-dimension ceiling for ingested layers — generous for any real
+/// network, small enough that every downstream usize/u64 computation
+/// (tiling, pass counts, movement totals) stays exact.
+const DIM_LIMIT: u128 = u32::MAX as u128;
+/// Total-work ceiling (MACs) per ingested layer.
+const MAC_LIMIT: u128 = 1 << 62;
+
+/// Overflow-free product; saturates to `u128::MAX`, which then fails the
+/// limit check in [`check_work`].
+fn checked_product(factors: &[u128]) -> u128 {
+    factors
+        .iter()
+        .try_fold(1u128, |acc, &f| acc.checked_mul(f))
+        .unwrap_or(u128::MAX)
+}
+
+/// Reject a lowered GEMM whose dimensions or total work exceed the limits
+/// the analytic model's integer math is exact for.
+fn check_work(layer: &str, m: u128, k: u128, n: u128, groups: u128) -> Result<(), String> {
+    let macs = checked_product(&[m, k, n, groups]);
+    if m > DIM_LIMIT || k > DIM_LIMIT || n > DIM_LIMIT || macs > MAC_LIMIT {
+        return Err(format!(
+            "layer '{layer}': lowered GEMM is too large (m={m}, k={k}, n={n}, groups={groups})"
+        ));
+    }
+    Ok(())
+}
+
+fn spec_str(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("layer missing string field '{key}'"))
+}
+
+fn spec_usize(v: &Json, key: &str, default: Option<usize>) -> Result<usize, String> {
+    match v.opt_usize_field(key).map_err(|e| format!("layer {e}"))? {
+        Some(x) => Ok(x),
+        None => default.ok_or_else(|| format!("layer missing field '{key}'")),
+    }
+}
+
+fn spec_positive(
+    v: &Json,
+    key: &str,
+    default: Option<usize>,
+    layer: &str,
+) -> Result<usize, String> {
+    let x = spec_usize(v, key, default).map_err(|e| format!("layer '{layer}': {e}"))?;
+    if x == 0 {
+        return Err(format!("layer '{layer}': field '{key}' must be positive"));
+    }
+    Ok(x)
+}
+
+/// A (a, b) pair value: scalar shorthand or a two-element array.
+fn pair_value(j: &Json, layer: &str, key: &str) -> Result<(usize, usize), String> {
+    let bad = || format!("layer '{layer}': field '{key}' must be an integer or a pair");
+    if let Some(s) = j.as_usize() {
+        return Ok((s, s));
+    }
+    let arr = j.as_arr().ok_or_else(bad)?;
+    if arr.len() != 2 {
+        return Err(bad());
+    }
+    let a = arr[0].as_usize().ok_or_else(bad)?;
+    let b = arr[1].as_usize().ok_or_else(bad)?;
+    Ok((a, b))
+}
+
+/// A (h, w) pair field given either as a scalar or a two-element array.
+fn spec_pair_allow_zero(
+    v: &Json,
+    key: &str,
+    default: Option<(usize, usize)>,
+    layer: &str,
+) -> Result<(usize, usize), String> {
+    match v.get(key) {
+        None => default.ok_or_else(|| format!("layer '{layer}': missing field '{key}'")),
+        Some(j) => pair_value(j, layer, key),
+    }
+}
+
+fn spec_pair(
+    v: &Json,
+    key: &str,
+    default: Option<(usize, usize)>,
+    layer: &str,
+) -> Result<(usize, usize), String> {
+    let p = spec_pair_allow_zero(v, key, default, layer)?;
+    if p.0 == 0 || p.1 == 0 {
+        return Err(format!("layer '{layer}': field '{key}' must be positive"));
+    }
+    Ok(p)
+}
+
+/// Input geometry: `{"h": H, "w": W}`, `[H, W]` or a scalar for square.
+fn spec_input(v: &Json, layer: &str) -> Result<SpatialDims, String> {
+    let j = v
+        .get("input")
+        .ok_or_else(|| format!("layer '{layer}': missing field 'input'"))?;
+    let (h, w) = match (
+        j.get("h").and_then(Json::as_usize),
+        j.get("w").and_then(Json::as_usize),
+    ) {
+        (Some(h), Some(w)) => (h, w),
+        _ => pair_value(j, layer, "input")?,
+    };
+    if h == 0 || w == 0 {
+        return Err(format!("layer '{layer}': input dims must be positive"));
+    }
+    Ok(SpatialDims { h, w })
 }
 
 impl fmt::Display for Layer {
@@ -335,5 +651,52 @@ mod tests {
     fn bad_groups_panic() {
         let l = Layer::conv("bad", SpatialDims::square(8), 6, 8, 3, 1, 1, 4);
         let _ = l.gemm();
+    }
+
+    #[test]
+    fn json_roundtrip_conv_and_linear() {
+        let mut conv = Layer::conv("c", SpatialDims { h: 12, w: 9 }, 8, 16, 3, 2, 1, 2).with_batch(3);
+        if let LayerKind::Conv2d { dilation, .. } = &mut conv.kind {
+            *dilation = (2, 2);
+        }
+        let back = Layer::from_json(&conv.to_json()).unwrap();
+        assert_eq!(back, conv);
+        let fc = Layer::linear("fc", 512, 10).with_batch(4);
+        assert_eq!(Layer::from_json(&fc.to_json()).unwrap(), fc);
+    }
+
+    #[test]
+    fn json_scalar_shorthand_and_defaults() {
+        let v = Json::parse(
+            r#"{"op":"conv2d","name":"c1","input":{"h":16,"w":16},"c_in":3,"c_out":8,"kernel":3,"padding":1}"#,
+        )
+        .unwrap();
+        let l = Layer::from_json(&v).unwrap();
+        assert_eq!(l, Layer::conv("c1", SpatialDims::square(16), 3, 8, 3, 1, 1, 1));
+    }
+
+    #[test]
+    fn json_rejects_malformed_layers() {
+        for bad in [
+            r#"{"op":"conv2d","name":"x","input":{"h":8,"w":8},"c_in":6,"c_out":8,"kernel":3,"groups":4}"#,
+            r#"{"op":"conv2d","name":"x","input":{"h":8,"w":8},"c_in":0,"c_out":8,"kernel":3}"#,
+            r#"{"op":"conv2d","name":"x","input":{"h":8,"w":8},"c_in":4,"c_out":8,"kernel":3,"stride":0}"#,
+            r#"{"op":"linear","name":"x","in_features":0,"out_features":10}"#,
+            r#"{"op":"pool","name":"x"}"#,
+            r#"{"name":"x"}"#,
+            // effective kernel exceeds the (padded) input
+            r#"{"op":"conv2d","name":"x","input":{"h":2,"w":2},"c_in":4,"c_out":4,"kernel":7}"#,
+            // hostile magnitudes must be rejected, not wrap or saturate
+            r#"{"op":"conv2d","name":"x","input":{"h":8,"w":8},"c_in":4,"c_out":4,"kernel":3,"padding":100000000000000000}"#,
+            r#"{"op":"linear","name":"x","in_features":5000000000,"out_features":5000000000}"#,
+            r#"{"op":"conv2d","name":"x","input":{"h":8,"w":8},"c_in":4,"c_out":4,"kernel":3,"batch":10000000000000000000}"#,
+            // raw-field magnitudes that would overflow output_dims()'s
+            // usize math must never construct a Layer at all
+            r#"{"op":"conv2d","name":"x","input":{"h":8,"w":8},"c_in":4,"c_out":4,"kernel":3,"padding":9223372036854775808,"stride":9223372036854775808}"#,
+            r#"{"op":"conv2d","name":"x","input":{"h":8,"w":8},"c_in":4,"c_out":4,"kernel":3,"dilation":9007199254740992}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(Layer::from_json(&v).is_err(), "accepted: {bad}");
+        }
     }
 }

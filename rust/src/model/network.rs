@@ -93,6 +93,70 @@ impl Network {
         hist
     }
 
+    /// Serialize the architecture as the layer-list JSON document the
+    /// ingestion API accepts (dump a zoo model, tweak it, re-register it).
+    pub fn to_json_spec(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("layers", Json::arr(self.layers.iter().map(Layer::to_json))),
+        ])
+    }
+
+    /// Parse and validate a layer-list JSON document into a `Network`
+    /// (the `camuy::api` ingestion path; see DESIGN.md §8). Every layer is
+    /// structurally validated, so the resulting network can be lowered to
+    /// the workload IR without panicking.
+    pub fn from_json_spec(v: &Json) -> Result<Network, String> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::trim)
+            .ok_or_else(|| "network spec missing string field 'name'".to_string())?;
+        if name.is_empty() {
+            return Err("network name must be non-empty".to_string());
+        }
+        let layers_json = v
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "network spec missing array field 'layers'".to_string())?;
+        if layers_json.is_empty() {
+            return Err("network must have at least one layer".to_string());
+        }
+        // An ingestion bound, not a model limit: the deepest zoo model has
+        // ~200 layers, so this is generous while keeping untrusted
+        // documents from materializing unbounded layer lists.
+        const MAX_SPEC_LAYERS: usize = 4096;
+        if layers_json.len() > MAX_SPEC_LAYERS {
+            return Err(format!(
+                "network has {} layers; the ingestion limit is {MAX_SPEC_LAYERS}",
+                layers_json.len()
+            ));
+        }
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (i, lj) in layers_json.iter().enumerate() {
+            layers.push(Layer::from_json(lj).map_err(|e| format!("layer {i}: {e}"))?);
+        }
+        let mut net = Network::new(name, layers);
+        if let Some(b) = v.get("batch") {
+            // Same ceiling the per-layer batch field gets, so the network-
+            // level override cannot bypass the ingestion bounds.
+            const MAX_SPEC_BATCH: usize = 1 << 20;
+            let b = b
+                .as_usize()
+                .filter(|&b| b > 0 && b <= MAX_SPEC_BATCH)
+                .ok_or_else(|| {
+                    format!("network batch must be in 1..={MAX_SPEC_BATCH}")
+                })?;
+            net = net.with_batch(b);
+            // The override composes with per-layer sizes; re-check the
+            // work ceilings at the new batch.
+            for l in &net.layers {
+                l.check_work_bounds().map_err(|e| format!("batch {b}: {e}"))?;
+            }
+        }
+        Ok(net)
+    }
+
     pub fn summary_json(&self, cfg: &ArrayConfig) -> Json {
         let m = self.metrics(cfg);
         Json::obj(vec![
@@ -178,6 +242,32 @@ mod tests {
         assert_eq!(b4.params(), net.params()); // weights unchanged
         let cfg = ArrayConfig::new(8, 8);
         assert!(b4.metrics(&cfg).cycles > net.metrics(&cfg).cycles);
+    }
+
+    #[test]
+    fn spec_json_roundtrips_exactly() {
+        let net = tiny_net().with_batch(2);
+        let back = Network::from_json_spec(&net.to_json_spec()).unwrap();
+        assert_eq!(back.name, net.name);
+        assert_eq!(back.layers, net.layers);
+        let cfg = ArrayConfig::new(16, 8);
+        assert_eq!(back.metrics(&cfg), net.metrics(&cfg));
+    }
+
+    #[test]
+    fn spec_json_rejects_malformed_documents() {
+        for bad in [
+            r#"{"layers":[]}"#,
+            r#"{"name":"x","layers":[]}"#,
+            r#"{"name":"","layers":[{"op":"linear","name":"fc","in_features":4,"out_features":2}]}"#,
+            r#"{"name":"x"}"#,
+            r#"{"name":"x","layers":[{"op":"linear","name":"fc"}],"batch":2}"#,
+            r#"{"name":"x","layers":[{"op":"linear","name":"fc","in_features":4,"out_features":2}],"batch":0}"#,
+            r#"{"name":"x","layers":[{"op":"linear","name":"fc","in_features":4,"out_features":2}],"batch":10000000000}"#,
+        ] {
+            let v = crate::util::json::Json::parse(bad).unwrap();
+            assert!(Network::from_json_spec(&v).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

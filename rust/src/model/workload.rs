@@ -125,14 +125,21 @@ impl CfgKey {
 }
 
 /// A thread-safe memo table of per-(shape, configuration) metrics. Shared
-/// by NSGA-II across generations and objectives, and by the coordinator
-/// across repeated layers of one inference.
+/// by NSGA-II across generations and objectives, by the coordinator
+/// across repeated layers of one inference, and by the long-lived API
+/// engine across requests.
 #[derive(Debug, Default)]
 pub struct EvalCache {
     map: RwLock<HashMap<(GemmShape, CfgKey), Metrics>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
+
+/// Entry cap for [`EvalCache`]. On overflow the table is flushed wholesale
+/// — it is a memo table, not state, so a flush only costs recomputation.
+/// This bounds a long-lived server's memory even against a client that
+/// iterates arbitrary (shape, configuration) pairs forever.
+pub const EVAL_CACHE_CAPACITY: usize = 1 << 18;
 
 impl EvalCache {
     pub fn new() -> EvalCache {
@@ -148,11 +155,33 @@ impl EvalCache {
         }
         let m = gemm_metrics(shape, cfg);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.map
-            .write()
-            .expect("eval cache poisoned")
-            .insert(key, m);
+        let mut map = self.map.write().expect("eval cache poisoned");
+        if map.len() >= EVAL_CACHE_CAPACITY {
+            map.clear();
+        }
+        map.insert(key, m);
         m
+    }
+
+    /// Insert a precomputed per-(shape, configuration) result. The
+    /// shape-major sweep core seeds batch results through this
+    /// ([`crate::sweep::runner::seed_workload`]) so follow-up
+    /// per-request evaluations are pure memo-table hits. Counts as neither
+    /// a hit nor a miss.
+    pub fn seed(&self, shape: GemmShape, cfg: &ArrayConfig, m: Metrics) {
+        let mut map = self.map.write().expect("eval cache poisoned");
+        if map.len() >= EVAL_CACHE_CAPACITY {
+            map.clear();
+        }
+        map.insert((shape, CfgKey::of(cfg)), m);
+    }
+
+    /// Whether a per-(shape, configuration) entry is currently memoized.
+    pub fn contains(&self, shape: GemmShape, cfg: &ArrayConfig) -> bool {
+        self.map
+            .read()
+            .expect("eval cache poisoned")
+            .contains_key(&(shape, CfgKey::of(cfg)))
     }
 
     /// Distinct (shape, configuration) pairs evaluated so far.
@@ -256,6 +285,36 @@ mod tests {
         assert_eq!(cache.hits(), w.distinct() as u64);
         assert_eq!(w.eval_cached(&cfg_b, &cache), w.eval(&cfg_b));
         assert_eq!(cache.len(), 2 * w.distinct());
+    }
+
+    #[test]
+    fn seeded_entries_serve_as_hits() {
+        let shape = GemmShape::new(7, 13, 5);
+        let cfg = ArrayConfig::new(8, 4);
+        let cache = EvalCache::new();
+        let m = crate::model::gemm::gemm_metrics(shape, &cfg);
+        cache.seed(shape, &cfg, m);
+        assert_eq!(cache.len(), 1);
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+        assert_eq!(cache.gemm_metrics(shape, &cfg), m);
+        assert_eq!((cache.hits(), cache.misses()), (1, 0));
+    }
+
+    #[test]
+    fn cache_capacity_is_bounded() {
+        let cache = EvalCache::new();
+        let cfg = ArrayConfig::new(8, 8);
+        let m = crate::model::gemm::gemm_metrics(GemmShape::new(1, 1, 1), &cfg);
+        for i in 1..=EVAL_CACHE_CAPACITY + 10 {
+            cache.seed(GemmShape::new(i, 1, 1), &cfg, m);
+        }
+        assert!(cache.len() <= EVAL_CACHE_CAPACITY);
+        // The flushed cache still answers correctly (recomputes on miss).
+        let shape = GemmShape::new(1, 1, 1);
+        assert_eq!(
+            cache.gemm_metrics(shape, &cfg),
+            crate::model::gemm::gemm_metrics(shape, &cfg)
+        );
     }
 
     #[test]

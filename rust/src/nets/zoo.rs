@@ -66,6 +66,13 @@ pub fn build(name: &str) -> Option<Network> {
     })
 }
 
+/// Export a zoo network as the layer-list JSON document the `camuy::api`
+/// ingestion path consumes — dump a built-in model, tweak it, re-register
+/// it under a new name (`camuy zoo --net NAME`).
+pub fn spec_json(name: &str) -> Option<crate::util::json::Json> {
+    build(name).map(|n| n.to_json_spec())
+}
+
 /// The paper's nine evaluation models.
 pub fn paper_models() -> Vec<Network> {
     PAPER_MODELS
@@ -91,6 +98,22 @@ mod tests {
     #[test]
     fn unknown_name_is_none() {
         assert!(build("lenet-9000").is_none());
+        assert!(spec_json("lenet-9000").is_none());
+    }
+
+    #[test]
+    fn spec_json_reconstructs_every_model() {
+        // The JSON export is lossless: params, MACs and the GEMM histogram
+        // survive a dump → parse round trip for the entire registry.
+        for name in ALL_MODELS {
+            let orig = build(name).unwrap();
+            let back =
+                crate::model::network::Network::from_json_spec(&spec_json(name).unwrap())
+                    .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(back.params(), orig.params(), "{name} params");
+            assert_eq!(back.macs(), orig.macs(), "{name} macs");
+            assert_eq!(back.gemm_histogram(), orig.gemm_histogram(), "{name} histogram");
+        }
     }
 
     #[test]

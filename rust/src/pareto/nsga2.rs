@@ -36,6 +36,45 @@ impl Default for Nsga2Params {
     }
 }
 
+impl Nsga2Params {
+    /// Ceilings for wire-supplied parameters: far above any useful setting
+    /// on a 961-point space, small enough that one request cannot demand
+    /// unbounded compute.
+    pub const MAX_POPULATION: usize = 8192;
+    pub const MAX_GENERATIONS: usize = 16384;
+
+    /// The preconditions [`nsga2`] asserts — plus the resource ceilings —
+    /// as a checkable result. The API engine validates request parameters
+    /// with this so a malformed request can never trip an assert (or pin a
+    /// serve worker indefinitely).
+    pub fn check(&self) -> Result<(), String> {
+        if self.population < 4 || self.population % 2 != 0 {
+            return Err(format!(
+                "population must be an even number >= 4, got {}",
+                self.population
+            ));
+        }
+        if self.population > Self::MAX_POPULATION {
+            return Err(format!(
+                "population {} exceeds the limit {}",
+                self.population,
+                Self::MAX_POPULATION
+            ));
+        }
+        if self.generations == 0 {
+            return Err("generations must be positive".to_string());
+        }
+        if self.generations > Self::MAX_GENERATIONS {
+            return Err(format!(
+                "generations {} exceeds the limit {}",
+                self.generations,
+                Self::MAX_GENERATIONS
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// A returned non-dominated solution.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Solution {
@@ -418,5 +457,19 @@ mod tests {
             ..Default::default()
         };
         let _ = nsga2(&grid, &params, toy_eval);
+    }
+
+    #[test]
+    fn check_mirrors_the_asserted_preconditions() {
+        assert!(Nsga2Params::default().check().is_ok());
+        for bad in [
+            Nsga2Params { population: 5, ..Default::default() },
+            Nsga2Params { population: 2, ..Default::default() },
+            Nsga2Params { generations: 0, ..Default::default() },
+            Nsga2Params { population: Nsga2Params::MAX_POPULATION + 2, ..Default::default() },
+            Nsga2Params { generations: Nsga2Params::MAX_GENERATIONS + 1, ..Default::default() },
+        ] {
+            assert!(bad.check().is_err());
+        }
     }
 }

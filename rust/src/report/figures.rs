@@ -5,6 +5,7 @@
 //! through here, so the paper pipeline has exactly one implementation.
 
 use crate::config::{ArrayConfig, EnergyWeights};
+use crate::model::network::Network;
 use crate::model::workload::{EvalCache, Workload};
 use crate::nets;
 use crate::pareto::dominance::pareto_front_indices;
@@ -53,6 +54,13 @@ impl FigureContext {
     }
 }
 
+impl Default for FigureContext {
+    /// The paper's setup ([`FigureContext::paper`]).
+    fn default() -> FigureContext {
+        FigureContext::paper()
+    }
+}
+
 // ---------------------------------------------------------------- Figure 2
 
 /// Figure 2: data-movement-cost and utilization heatmaps for one network.
@@ -66,21 +74,27 @@ pub struct Fig2Data {
 
 pub fn fig2_heatmaps(net_name: &str, ctx: &FigureContext) -> Fig2Data {
     let net = nets::build(net_name).unwrap_or_else(|| panic!("unknown network {net_name}"));
-    let sweep = sweep_network(&net, &ctx.configs(), &ctx.weights, ctx.threads);
+    fig2_heatmaps_for(&net, ctx)
+}
+
+/// [`fig2_heatmaps`] for an already-resolved network — the `camuy::api`
+/// engine path, where user-registered networks sweep exactly like zoo ones.
+pub fn fig2_heatmaps_for(net: &Network, ctx: &FigureContext) -> Fig2Data {
+    let sweep = sweep_network(net, &ctx.configs(), &ctx.weights, ctx.threads);
     let energy = Heatmap::from_grid(
-        format!("{net_name}: data movement cost E"),
+        format!("{}: data movement cost E", net.name),
         ctx.grid.heights.clone(),
         ctx.grid.widths.clone(),
         sweep.energies(),
     );
     let utilization = Heatmap::from_grid(
-        format!("{net_name}: PE utilization"),
+        format!("{}: PE utilization", net.name),
         ctx.grid.heights.clone(),
         ctx.grid.widths.clone(),
         sweep.utilizations(),
     );
     Fig2Data {
-        network: net_name.to_string(),
+        network: net.name.clone(),
         energy,
         utilization,
         sweep,
@@ -118,7 +132,13 @@ pub struct Fig3Data {
 
 pub fn fig3_pareto(net_name: &str, ctx: &FigureContext, params: &Nsga2Params) -> Fig3Data {
     let net = nets::build(net_name).unwrap_or_else(|| panic!("unknown network {net_name}"));
-    let workload = Workload::of(&net);
+    fig3_pareto_for(&net, ctx, params)
+}
+
+/// [`fig3_pareto`] for an already-resolved network (the `camuy::api`
+/// engine path).
+pub fn fig3_pareto_for(net: &Network, ctx: &FigureContext, params: &Nsga2Params) -> Fig3Data {
+    let workload = Workload::of(net);
 
     // Exhaustive validation fronts from the full shape-major sweep; the
     // grid's config order is pairs() order, so points align with pairs.
@@ -153,7 +173,7 @@ pub fn fig3_pareto(net_name: &str, ctx: &FigureContext, params: &Nsga2Params) ->
     };
 
     Fig3Data {
-        network: net_name.to_string(),
+        network: net.name.clone(),
         energy_front: front_of(WorkloadObjective::EnergyCycles),
         utilization_front: front_of(WorkloadObjective::InverseUtilizationCycles),
         exhaustive_energy_front: exhaustive(&|p| vec![p.energy, p.metrics.cycles as f64]),

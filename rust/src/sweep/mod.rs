@@ -9,6 +9,6 @@ pub mod runner;
 pub use grid::{equal_pe_factorizations, DimGrid};
 pub use normalize::RobustObjectives;
 pub use runner::{
-    default_threads, sweep_network, sweep_workload, sweep_workload_config_major, SweepPoint,
-    SweepResult, Workload,
+    default_threads, parallel_map, seed_workload, sweep_network, sweep_workload,
+    sweep_workload_config_major, SweepPoint, SweepResult, Workload,
 };

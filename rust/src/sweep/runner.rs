@@ -22,6 +22,7 @@ use crate::model::gemm::{
 };
 pub use crate::model::workload::Workload;
 use crate::model::network::Network;
+use crate::model::workload::EvalCache;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -128,14 +129,22 @@ impl<'a> ShapeMajorPlan<'a> {
 
     /// Evaluate config `i`: Σ multiplicity × per-shape metrics, assembled
     /// from the cached factors (or the direct path for non-WS dataflows).
-    fn eval(&self, i: usize, cfg: &ArrayConfig) -> Metrics {
+    /// With `seed`, every per-shape result is also written into the memo
+    /// table, so later per-(shape, config) lookups hit.
+    fn eval(&self, i: usize, cfg: &ArrayConfig, seed: Option<&EvalCache>) -> Metrics {
         match self.blocks[i] {
-            None => self.workload.eval(cfg),
+            None => match seed {
+                None => self.workload.eval(cfg),
+                Some(cache) => self.workload.eval_cached(cfg, cache),
+            },
             Some((rs, cs)) => {
                 let mut total = Metrics::default();
                 for (si, &(shape, mult)) in self.workload.shapes.iter().enumerate() {
                     let m =
                         ws_metrics_from_factors(shape, &self.rows[rs + si], &self.cols[cs + si]);
+                    if let Some(cache) = seed {
+                        cache.seed(shape, cfg, m);
+                    }
                     total += m * mult;
                 }
                 total
@@ -144,20 +153,22 @@ impl<'a> ShapeMajorPlan<'a> {
     }
 }
 
-/// Run `eval(i)` for every index in `0..n` across `threads` workers that
+/// Run `f(i)` for every index in `0..n` across `threads` workers that
 /// steal indices from a shared atomic counter — no static chunking, so a
-/// straggler config (large shape count, slow cell) cannot idle the pool.
-fn parallel_points(
+/// straggler task (large shape count, slow cell, heavy request) cannot
+/// idle the pool. Shared by the sweep cores and the serve loop's request
+/// fan-out.
+pub fn parallel_map<T: Send + Sync>(
     n: usize,
     threads: usize,
-    eval: impl Fn(usize) -> SweepPoint + Sync,
-) -> Vec<SweepPoint> {
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
     let workers = threads.max(1).min(n);
     if workers <= 1 {
-        return (0..n).map(eval).collect();
+        return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<OnceLock<SweepPoint>> = (0..n).map(|_| OnceLock::new()).collect();
+    let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -165,7 +176,7 @@ fn parallel_points(
                 if i >= n {
                     break;
                 }
-                let _ = slots[i].set(eval(i));
+                let _ = slots[i].set(f(i));
             });
         }
     });
@@ -209,9 +220,28 @@ pub fn sweep_workload(
     threads: usize,
 ) -> Vec<SweepPoint> {
     let plan = ShapeMajorPlan::new(workload, configs);
-    parallel_points(configs.len(), threads, |i| {
-        point_of(&configs[i], plan.eval(i, &configs[i]), weights)
+    parallel_map(configs.len(), threads, |i| {
+        point_of(&configs[i], plan.eval(i, &configs[i], None), weights)
     })
+}
+
+/// Seed `cache` with the per-(shape, configuration) metrics of every
+/// cell, shape-major, without assembling sweep points (no energy or
+/// utilization is computed — the caller reads the memo table). This is
+/// the batched serving path: `camuy serve` groups concurrent eval
+/// requests by workload, runs their distinct configurations through the
+/// shape-major core once, and answers each request from the now-hot memo
+/// table.
+pub fn seed_workload(
+    workload: &Workload,
+    configs: &[ArrayConfig],
+    threads: usize,
+    cache: &EvalCache,
+) {
+    let plan = ShapeMajorPlan::new(workload, configs);
+    parallel_map(configs.len(), threads, |i| {
+        plan.eval(i, &configs[i], Some(cache));
+    });
 }
 
 /// The naive config-major path: every (shape, config) cell recomputes its
@@ -223,7 +253,7 @@ pub fn sweep_workload_config_major(
     weights: &EnergyWeights,
     threads: usize,
 ) -> Vec<SweepPoint> {
-    parallel_points(configs.len(), threads, |i| {
+    parallel_map(configs.len(), threads, |i| {
         let cfg = &configs[i];
         let m: Metrics = workload
             .shapes
@@ -282,6 +312,23 @@ mod tests {
             assert_eq!(a.energy, b.energy);
             assert_eq!(a.utilization, b.utilization);
         }
+    }
+
+    #[test]
+    fn seeding_fills_the_cache_with_exact_metrics() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        let cfgs = DimGrid::coarse(8, 24, 8).configs(&ArrayConfig::new(1, 1));
+        let cache = EvalCache::new();
+        seed_workload(&w, &cfgs, 2, &cache);
+        // Every (shape, config) cell was seeded; evaluating through the
+        // cache is now hit-only and byte-identical to the direct path.
+        assert_eq!(cache.len(), w.distinct() * cfgs.len());
+        let misses = cache.misses();
+        for cfg in &cfgs {
+            assert_eq!(w.eval_cached(cfg, &cache), w.eval(cfg));
+        }
+        assert_eq!(cache.misses(), misses);
     }
 
     #[test]

@@ -81,6 +81,20 @@ impl Json {
         }
     }
 
+    /// Optional non-negative integer field: `Ok(None)` when absent, an
+    /// error naming the key when present but malformed (a wire surface
+    /// must not silently substitute defaults for typo'd fields). The one
+    /// optional-field parser every ingestion path shares.
+    pub fn opt_usize_field(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(j) => j
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| format!("field '{key}' must be a non-negative integer")),
+        }
+    }
+
     /// Serialize compactly.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
@@ -142,10 +156,13 @@ impl Json {
     }
 
     /// Parse a complete JSON document (trailing whitespace allowed).
+    /// Nesting is bounded (128 levels) so untrusted input cannot overflow
+    /// the stack of the recursive-descent parser.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -206,9 +223,14 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Most container levels a document may nest; recursion depth is bounded
+/// by this, keeping hostile `[[[[…` input from overflowing the stack.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -217,6 +239,14 @@ impl<'a> Parser<'a> {
             pos: self.pos,
             msg: msg.to_string(),
         }
+    }
+
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting depth exceeds the limit"));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -269,6 +299,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let r = self.array_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn array_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         self.skip_ws();
         let mut items = Vec::new();
@@ -288,6 +325,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let r = self.object_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn object_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         self.skip_ws();
         let mut map = BTreeMap::new();
@@ -472,12 +516,38 @@ mod tests {
     }
 
     #[test]
+    fn nesting_depth_is_bounded() {
+        // A hostile megabyte of '[' must error, not overflow the stack.
+        let hostile = "[".repeat(1 << 20);
+        assert!(Json::parse(&hostile).is_err());
+        // Exactly at the limit parses; one past it does not.
+        let ok = format!("{}{}", "[".repeat(128), "]".repeat(128));
+        assert!(Json::parse(&ok).is_ok());
+        let too_deep = format!("{}{}", "[".repeat(129), "]".repeat(129));
+        assert!(Json::parse(&too_deep).is_err());
+        // Depth is nesting, not total container count: wide-and-shallow
+        // documents of any length are fine.
+        let wide = format!("[{}]", vec!["[1]"; 10_000].join(","));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
     fn accessors() {
         let v = Json::parse(r#"{"n": 3, "s": "x", "a": [1,2]}"#).unwrap();
         assert_eq!(v.get("n").unwrap().as_usize().unwrap(), 3);
         assert_eq!(v.get("s").unwrap().as_str().unwrap(), "x");
         assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
         assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn opt_usize_field_defaults_absent_but_rejects_malformed() {
+        let v = Json::parse(r#"{"n": 3, "s": "x", "f": 2.5, "neg": -1}"#).unwrap();
+        assert_eq!(v.opt_usize_field("n").unwrap(), Some(3));
+        assert_eq!(v.opt_usize_field("missing").unwrap(), None);
+        for present_but_bad in ["s", "f", "neg"] {
+            assert!(v.opt_usize_field(present_but_bad).is_err());
+        }
     }
 
     #[test]

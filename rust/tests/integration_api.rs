@@ -1,0 +1,387 @@
+//! End-to-end coverage of the typed query API: JSON network ingestion,
+//! the long-lived engine's shared memo table, batched evaluation, and the
+//! JSON-lines serve loop (stdin-shaped and TCP).
+
+use camuy::api::{ApiError, Engine, EvalRequest, EvalResponse, ServeOptions};
+use camuy::config::{ArrayConfig, ConfigError};
+use camuy::coordinator::Coordinator;
+use camuy::model::layer::{Layer, SpatialDims};
+use camuy::model::network::Network;
+use camuy::model::workload::Workload;
+use camuy::util::json::Json;
+
+/// A 16x16 conv stack plus a classifier head: 8*16*16 = 2048 features.
+const TINY_SPEC: &str = r#"{
+  "name": "tinynet",
+  "layers": [
+    {"op": "conv2d", "name": "c1", "input": {"h": 16, "w": 16},
+     "c_in": 3, "c_out": 8, "kernel": 3, "stride": 1, "padding": 1},
+    {"op": "conv2d", "name": "c2", "input": {"h": 16, "w": 16},
+     "c_in": 8, "c_out": 8, "kernel": [3, 3], "padding": [1, 1], "groups": 2},
+    {"op": "linear", "name": "fc", "in_features": 2048, "out_features": 10}
+  ]
+}"#;
+
+/// The same network built programmatically.
+fn tiny_programmatic() -> Network {
+    Network::new(
+        "tinynet",
+        vec![
+            Layer::conv("c1", SpatialDims::square(16), 3, 8, 3, 1, 1, 1),
+            Layer::conv("c2", SpatialDims::square(16), 8, 8, 3, 1, 1, 2),
+            Layer::linear("fc", 2048, 10),
+        ],
+    )
+}
+
+/// Run the serve loop over a request string, returning parsed responses.
+fn serve_str(engine: &Engine, input: &str, opts: &ServeOptions) -> Vec<Json> {
+    let mut out: Vec<u8> = Vec::new();
+    camuy::api::serve(engine, input.as_bytes(), &mut out, opts).unwrap();
+    String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect()
+}
+
+#[test]
+fn registered_json_network_matches_programmatic_workload() {
+    let engine = Engine::new();
+    let reg = engine.register_network_str(TINY_SPEC).unwrap();
+    assert_eq!(reg.name, "tinynet");
+    assert_eq!(reg.layers, 3);
+    assert!(!reg.replaced);
+
+    let reference = tiny_programmatic();
+    assert_eq!(reg.params, reference.params());
+    assert_eq!(reg.macs, reference.macs());
+
+    // Identical workload IR…
+    let registered = engine.resolve("tinynet", None).unwrap();
+    assert_eq!(
+        Workload::of(&registered).shapes,
+        Workload::of(&reference).shapes
+    );
+
+    // …and identical metrics through the engine.
+    let cfg = ArrayConfig::new(32, 16);
+    let resp = engine
+        .eval(&EvalRequest::new("tinynet", cfg.clone()))
+        .unwrap();
+    assert_eq!(*resp.total(), reference.metrics(&cfg));
+
+    // Re-registering the same name reports the replacement.
+    assert!(engine.register_network_str(TINY_SPEC).unwrap().replaced);
+    // Zoo names are reserved.
+    let clash = TINY_SPEC.replace("tinynet", "alexnet");
+    assert!(matches!(
+        engine.register_network_str(&clash),
+        Err(ApiError::InvalidNetwork(_))
+    ));
+}
+
+#[test]
+fn user_network_store_is_bounded() {
+    let engine = Engine::new();
+    for i in 0..camuy::api::MAX_USER_NETWORKS {
+        let spec = TINY_SPEC.replace("tinynet", &format!("n{i}"));
+        engine.register_network_str(&spec).unwrap();
+    }
+    let overflow = TINY_SPEC.replace("tinynet", "one-too-many");
+    assert!(matches!(
+        engine.register_network_str(&overflow),
+        Err(ApiError::InvalidNetwork(_))
+    ));
+    // Replacing an existing name is still allowed at capacity.
+    let again = TINY_SPEC.replace("tinynet", "n0");
+    assert!(engine.register_network_str(&again).unwrap().replaced);
+}
+
+#[test]
+fn engine_cache_is_shared_across_requests() {
+    let engine = Engine::new();
+    let req = EvalRequest::new("alexnet", ArrayConfig::new(32, 32));
+    let a = engine.eval(&req).unwrap();
+    let misses = engine.cache().misses();
+    let hits = engine.cache().hits();
+    assert!(misses > 0);
+    let b = engine.eval(&req).unwrap();
+    assert_eq!(engine.cache().misses(), misses, "repeat query recomputed");
+    assert!(engine.cache().hits() > hits);
+    assert_eq!(a.total(), b.total());
+}
+
+#[test]
+fn eval_batch_matches_individual_and_seeds_the_cache() {
+    let engine = Engine::new();
+    let reqs: Vec<EvalRequest> = [16usize, 24, 32, 16]
+        .iter()
+        .map(|&h| EvalRequest::new("mobilenetv3l", ArrayConfig::new(h, 16)))
+        .collect();
+    let batch = engine.eval_batch(&reqs, 2);
+    assert_eq!(batch.len(), reqs.len());
+    let fresh = Engine::new();
+    for (res, req) in batch.iter().zip(&reqs) {
+        let single = fresh.eval(req).unwrap();
+        assert_eq!(res.as_ref().unwrap().total(), single.total());
+    }
+    // The batch pass seeded (shape, config) entries the per-request pass
+    // then consumed as hits.
+    assert!(engine.cache().len() > 0);
+    assert!(engine.cache().hits() > 0);
+    // A repeat batch is answered entirely from the memo table.
+    let misses = engine.cache().misses();
+    let len = engine.cache().len();
+    let again = engine.eval_batch(&reqs, 2);
+    assert_eq!(engine.cache().misses(), misses);
+    assert_eq!(engine.cache().len(), len);
+    for (a, b) in again.iter().zip(&batch) {
+        assert_eq!(a.as_ref().unwrap().total(), b.as_ref().unwrap().total());
+    }
+}
+
+#[test]
+fn typed_errors_surface_through_engine_and_wire() {
+    let engine = Engine::new();
+    match engine.eval(&EvalRequest::new("alexnet", ArrayConfig::new(0, 8))) {
+        Err(ApiError::Config(ConfigError::ZeroHeight)) => {}
+        other => panic!("expected typed config error, got {other:?}"),
+    }
+    match engine.eval(&EvalRequest::new("lenet-9000", ArrayConfig::new(8, 8))) {
+        Err(ApiError::UnknownNetwork { name }) => assert_eq!(name, "lenet-9000"),
+        other => panic!("expected unknown-network error, got {other:?}"),
+    }
+    // Batch overrides are bounded at the resolve choke point.
+    let mut big = EvalRequest::new("alexnet", ArrayConfig::new(8, 8));
+    big.batch = Some(1 << 30);
+    assert!(matches!(engine.eval(&big), Err(ApiError::BadRequest(_))));
+
+    let resps = serve_str(
+        &engine,
+        concat!(
+            "{\"id\":1,\"type\":\"eval\",\"net\":\"alexnet\",\"config\":{\"height\":0,\"width\":8}}\n",
+            "{\"id\":2,\"type\":\"eval\",\"net\":\"lenet-9000\"}\n",
+            "this is not json\n",
+            "{\"id\":4,\"type\":\"frobnicate\"}\n",
+        ),
+        &ServeOptions::default(),
+    );
+    assert_eq!(resps.len(), 4);
+    let kind = |r: &Json| {
+        r.get("error")
+            .unwrap()
+            .get("kind")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string()
+    };
+    for r in &resps {
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    }
+    assert_eq!(kind(&resps[0]), "invalid_config");
+    assert_eq!(kind(&resps[1]), "unknown_network");
+    assert_eq!(kind(&resps[2]), "bad_json");
+    assert_eq!(kind(&resps[3]), "bad_request");
+    // ids echo where recoverable.
+    assert_eq!(resps[0].get("id").unwrap().as_usize(), Some(1));
+    assert!(resps[2].get("id").is_none());
+}
+
+#[test]
+fn serve_eval_response_equals_emulate_json() {
+    // The acceptance contract: `echo <EvalRequest> | camuy serve` returns
+    // the same document `camuy emulate --json` prints.
+    let engine = Engine::new();
+    let resps = serve_str(
+        &engine,
+        "{\"id\":1,\"type\":\"eval\",\"net\":\"alexnet\",\"config\":{\"height\":48,\"width\":24}}\n",
+        &ServeOptions::default(),
+    );
+    assert_eq!(resps.len(), 1);
+    assert_eq!(resps[0].get("ok").unwrap().as_bool(), Some(true));
+
+    let coord = Coordinator::new(ArrayConfig::new(48, 24)).unwrap();
+    let expected = coord
+        .run_inference(&camuy::nets::build("alexnet").unwrap())
+        .to_json();
+    assert_eq!(*resps[0].get("result").unwrap(), expected);
+}
+
+#[test]
+fn serve_preserves_order_and_register_is_a_barrier() {
+    let engine = Engine::new();
+    let mut input = String::new();
+    // An eval of a name that only exists after the register must fail;
+    // after the register barrier the same request succeeds.
+    input.push_str("{\"id\":0,\"type\":\"eval\",\"net\":\"tinynet\"}\n");
+    input.push_str(&format!(
+        "{{\"id\":1,\"type\":\"register\",\"network\":{}}}\n",
+        TINY_SPEC.replace('\n', " ")
+    ));
+    input.push_str("{\"id\":2,\"type\":\"eval\",\"net\":\"tinynet\"}\n");
+    input.push_str("{\"id\":3,\"type\":\"zoo\"}\n");
+    for i in 4..10 {
+        input.push_str(&format!(
+            "{{\"id\":{i},\"type\":\"eval\",\"net\":\"mobilenetv3l\",\
+             \"config\":{{\"height\":{h},\"width\":16}}}}\n",
+            h = 16 + 8 * (i % 3)
+        ));
+    }
+    let resps = serve_str(
+        &engine,
+        &input,
+        &ServeOptions {
+            threads: 4,
+            batch_max: 64,
+            ..ServeOptions::default()
+        },
+    );
+    assert_eq!(resps.len(), 10);
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.get("id").unwrap().as_usize(), Some(i), "order broken");
+    }
+    assert_eq!(resps[0].get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(resps[1].get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resps[2].get("ok").unwrap().as_bool(), Some(true));
+    let nets = resps[3]
+        .get("result")
+        .unwrap()
+        .get("networks")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert!(nets
+        .iter()
+        .any(|n| n.get("name").unwrap().as_str() == Some("tinynet")));
+    for r in &resps[4..] {
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    }
+}
+
+#[test]
+fn serve_handles_sweep_memory_and_equal_pe() {
+    let engine = Engine::new();
+    let input = concat!(
+        "{\"id\":\"s\",\"type\":\"sweep\",\"net\":\"alexnet\",\"grid\":\"smoke\",\"threads\":2}\n",
+        "{\"id\":\"m\",\"type\":\"memory\",\"net\":\"vgg16\"}\n",
+        "{\"id\":\"e\",\"type\":\"equal_pe\",\"budgets\":[4096],\"min_dim\":16,\"threads\":2}\n",
+    );
+    let resps = serve_str(
+        &engine,
+        input,
+        &ServeOptions {
+            threads: 2,
+            batch_max: 8,
+            ..ServeOptions::default()
+        },
+    );
+    assert_eq!(resps.len(), 3);
+    for r in &resps {
+        assert_eq!(
+            r.get("ok").unwrap().as_bool(),
+            Some(true),
+            "{}",
+            r.to_string_compact()
+        );
+    }
+    let sweep = resps[0].get("result").unwrap();
+    assert_eq!(sweep.get("points").unwrap().as_arr().unwrap().len(), 16);
+    assert!(sweep.get("best_energy").unwrap().get("height").is_some());
+    let memory = resps[1].get("result").unwrap();
+    assert!(memory.get("spilling_layers").unwrap().as_usize().unwrap() >= 1);
+    let budgets = resps[2]
+        .get("result")
+        .unwrap()
+        .get("budgets")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(budgets.len(), 1);
+    assert_eq!(budgets[0].get("pe_budget").unwrap().as_usize(), Some(4096));
+}
+
+#[test]
+fn serve_tcp_answers_a_connection() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 2,
+        batch_max: 8,
+        max_connections: Some(1),
+        ..ServeOptions::default()
+    };
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(
+                b"{\"id\":7,\"type\":\"eval\",\"net\":\"alexnet\",\
+                  \"config\":{\"height\":16,\"width\":16}}\n",
+            )
+            .unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(7));
+    });
+}
+
+#[test]
+fn multi_array_and_per_layer_requests() {
+    let engine = Engine::new();
+    let mut req = EvalRequest::new("mobilenetv3l", ArrayConfig::new(32, 32));
+    req.arrays = 4;
+    match engine.eval(&req).unwrap() {
+        EvalResponse::Multi {
+            config, metrics, ..
+        } => {
+            assert_eq!(config.arrays, 4);
+            assert!(metrics.makespan_cycles > 0);
+        }
+        other => panic!("expected multi response, got {other:?}"),
+    }
+
+    let mut req = EvalRequest::new("alexnet", ArrayConfig::new(32, 32));
+    req.per_layer = true;
+    match engine.eval(&req).unwrap() {
+        EvalResponse::Single { run, per_layer, .. } => {
+            let pl = per_layer.expect("per-layer report");
+            assert_eq!(pl.rooflines.len(), run.timeline.len());
+            assert!(pl.machine_balance > 0.0);
+        }
+        other => panic!("expected single response, got {other:?}"),
+    }
+    // The roofline report reaches the wire format too.
+    let json = engine.eval(&req).unwrap().to_json();
+    let roofline = json.get("roofline").expect("roofline in JSON");
+    assert!(!roofline.get("layers").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn network_spec_export_roundtrips_through_registration() {
+    // Dump a zoo model, rename it, re-register it: a first-class workflow.
+    let engine = Engine::new();
+    let spec = engine.network_spec("alexnet").unwrap();
+    let renamed = match spec {
+        Json::Obj(mut m) => {
+            m.insert("name".to_string(), Json::str("my-alexnet"));
+            Json::Obj(m)
+        }
+        _ => panic!("spec must be an object"),
+    };
+    let reg = engine.register_network_json(&renamed).unwrap();
+    assert_eq!(reg.name, "my-alexnet");
+    let cfg = ArrayConfig::new(64, 32);
+    let mine = engine
+        .eval(&EvalRequest::new("my-alexnet", cfg.clone()))
+        .unwrap();
+    let zoo = engine.eval(&EvalRequest::new("alexnet", cfg)).unwrap();
+    assert_eq!(mine.total(), zoo.total());
+}

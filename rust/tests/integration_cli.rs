@@ -20,6 +20,17 @@ fn zoo_lists_models() {
 }
 
 #[test]
+fn zoo_exports_a_network_spec() {
+    assert_eq!(run(&["zoo", "--net", "alexnet", "--quiet"]), 0);
+    assert_eq!(run(&["zoo", "--net", "lenet-9000", "--quiet"]), 1);
+}
+
+#[test]
+fn version_flag_exits_zero() {
+    assert_eq!(run(&["--version"]), 0);
+}
+
+#[test]
 fn help_and_errors() {
     assert_eq!(run(&["--help"]), 0);
     assert_eq!(run(&[]), 2);
