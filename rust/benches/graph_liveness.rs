@@ -1,0 +1,112 @@
+//! Graph-IR benchmarks (DESIGN.md §9), emitted machine-readably to
+//! `BENCH_graph.json` (override the path with `CAMUY_GRAPH_BENCH_OUT`):
+//!
+//! * chain-lowering overhead — evaluating a zoo model through the DAG IR
+//!   vs the flat `Vec<Layer>` path (must be near-free);
+//! * liveness-pass throughput over the full registry (graphs/s, nodes/s);
+//! * branch-parallel makespans on 1/2/4-array banks for GoogLeNet and
+//!   DenseNet-201, against the serialized baseline.
+
+use camuy::config::ArrayConfig;
+use camuy::model::graph::NetworkGraph;
+use camuy::model::multi::MultiArrayConfig;
+use camuy::model::workload::EvalCache;
+use camuy::nets;
+use camuy::util::bench::{bench, throughput, BenchOpts};
+use camuy::util::json::Json;
+
+fn main() {
+    let cfg = ArrayConfig::new(128, 128);
+    let opts = BenchOpts {
+        warmup_iters: 3,
+        measure_iters: 20,
+    };
+
+    println!("== graph: chain-lowering overhead ==");
+    let net = nets::build("densenet201").unwrap();
+    let flat = bench("graph/flat_eval_densenet201", &opts, || net.metrics(&cfg));
+    let chain = NetworkGraph::chain(&net);
+    let lowered = bench("graph/chain_lowered_eval_densenet201", &opts, || {
+        chain.metrics(&cfg)
+    });
+    let overhead = lowered.seconds.mean / flat.seconds.mean;
+    println!("   -> chain lowering costs {overhead:.2}x the flat evaluation");
+
+    println!("\n== graph: liveness pass over the full zoo ==");
+    let graphs: Vec<NetworkGraph> = nets::ALL_MODELS
+        .iter()
+        .map(|n| nets::build_graph(n).expect("registered"))
+        .collect();
+    let total_nodes: u64 = graphs.iter().map(|g| g.len() as u64).sum();
+    let live = bench("graph/liveness_full_zoo", &opts, || {
+        graphs
+            .iter()
+            .map(|g| g.liveness(&cfg).peak_bytes)
+            .sum::<u64>()
+    });
+    let graphs_per_sec = throughput(&live, graphs.len() as u64);
+    let nodes_per_sec = throughput(&live, total_nodes);
+    println!(
+        "   -> {graphs_per_sec:.0} liveness passes/s ({nodes_per_sec:.0} nodes/s over {} graphs, {total_nodes} nodes)",
+        graphs.len()
+    );
+
+    println!("\n== graph: branch-parallel makespan (googlenet, densenet201) ==");
+    let cache = EvalCache::new();
+    let mut sched_json: Vec<Json> = Vec::new();
+    for name in ["googlenet", "densenet201"] {
+        let g = nets::build_graph(name).unwrap();
+        for arrays in [1usize, 2, 4] {
+            let bank = MultiArrayConfig::new(arrays, cfg.clone());
+            let r = bench(
+                &format!("graph/schedule_{name}_{arrays}arrays"),
+                &opts,
+                || g.schedule(&bank, &cache).makespan_cycles,
+            );
+            let s = g.schedule(&bank, &cache);
+            println!(
+                "   -> {name} on {arrays} array(s): makespan {} / serialized {} (speedup {:.2}x, critical path {})",
+                s.makespan_cycles,
+                s.serialized_cycles,
+                s.speedup(),
+                s.critical_path_cycles
+            );
+            sched_json.push(Json::obj(vec![
+                ("network", Json::str(name)),
+                ("arrays", Json::num(arrays as f64)),
+                ("makespan_cycles", Json::num(s.makespan_cycles as f64)),
+                ("serialized_cycles", Json::num(s.serialized_cycles as f64)),
+                (
+                    "critical_path_cycles",
+                    Json::num(s.critical_path_cycles as f64),
+                ),
+                ("speedup", Json::num(s.speedup())),
+                ("seconds_mean", Json::num(r.seconds.mean)),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("graph_liveness")),
+        ("models", Json::num(graphs.len() as f64)),
+        ("total_nodes", Json::num(total_nodes as f64)),
+        (
+            "chain_lowering_overhead_x",
+            Json::num(overhead),
+        ),
+        ("flat_eval_seconds_mean", Json::num(flat.seconds.mean)),
+        (
+            "chain_eval_seconds_mean",
+            Json::num(lowered.seconds.mean),
+        ),
+        ("liveness_passes_per_sec", Json::num(graphs_per_sec)),
+        ("liveness_nodes_per_sec", Json::num(nodes_per_sec)),
+        ("schedules", Json::arr(sched_json)),
+    ]);
+    let out_path =
+        std::env::var("CAMUY_GRAPH_BENCH_OUT").unwrap_or_else(|_| "BENCH_graph.json".into());
+    match std::fs::write(&out_path, doc.to_string_pretty() + "\n") {
+        Ok(()) => println!("\n   -> wrote {out_path}"),
+        Err(e) => eprintln!("\n   -> could not write {out_path}: {e}"),
+    }
+}

@@ -15,14 +15,16 @@
 
 use super::error::ApiError;
 use super::request::{
-    check_config, check_nsga2, EqualPeRequest, EvalRequest, MemoryRequest, ParetoRequest,
-    SweepRequest, SweepSpec,
+    check_arrays, check_config, check_nsga2, EqualPeRequest, EvalRequest, GraphRequest,
+    MemoryRequest, ParetoRequest, SweepRequest, SweepSpec,
 };
 use super::response::{
-    EvalResponse, MemoryResponse, NetworkEntry, NetworkSource, PerLayerReport, RegisterResponse,
+    EvalResponse, GraphResponse, MemoryResponse, NetworkEntry, NetworkSource, PerLayerReport,
+    RegisterResponse,
 };
 use crate::config::ArrayConfig;
 use crate::coordinator::Coordinator;
+use crate::model::graph::NetworkGraph;
 use crate::model::memory::MemoryAnalysis;
 use crate::model::multi::{network_metrics_multi, MultiArrayConfig};
 use crate::model::network::Network;
@@ -46,6 +48,10 @@ pub const MAX_USER_NETWORKS: usize = 256;
 #[derive(Debug, Default)]
 pub struct Engine {
     user_nets: RwLock<HashMap<String, Network>>,
+    /// DAG forms of user networks registered with an `edges` section.
+    /// Every entry's name also exists in `user_nets` (as the chain
+    /// lowering), so the store bound covers both.
+    user_graphs: RwLock<HashMap<String, NetworkGraph>>,
     /// Zoo networks built once per engine; resolving a built-in model is a
     /// clone, not a reconstruction (the serving hot path).
     zoo: OnceLock<HashMap<String, Network>>,
@@ -109,10 +115,23 @@ impl Engine {
         }
     }
 
-    /// Validate a layer-list JSON document into the workload IR and store
-    /// it under its own name. Zoo names are reserved.
+    /// Validate a network JSON document into the workload IR and store it
+    /// under its own name. Zoo names are reserved. A document with an
+    /// `edges` section is parsed as a [`NetworkGraph`] (DESIGN.md §9) and
+    /// additionally stored in DAG form, so graph requests see its real
+    /// connectivity; its chain lowering serves every other request kind.
     pub fn register_network_json(&self, spec: &Json) -> Result<RegisterResponse, ApiError> {
-        let net = Network::from_json_spec(spec).map_err(ApiError::InvalidNetwork)?;
+        // `junctions` without `edges` must reach the graph parser so it is
+        // rejected loudly instead of silently dropping the junctions.
+        let graph = if spec.get("edges").is_some() || spec.get("junctions").is_some() {
+            Some(NetworkGraph::from_json_spec(spec).map_err(ApiError::InvalidNetwork)?)
+        } else {
+            None
+        };
+        let net = match &graph {
+            Some(g) => g.to_network(),
+            None => Network::from_json_spec(spec).map_err(ApiError::InvalidNetwork)?,
+        };
         if self.zoo().contains_key(&net.name) {
             return Err(ApiError::InvalidNetwork(format!(
                 "'{}' is a built-in zoo network; pick another name",
@@ -134,7 +153,22 @@ impl Engine {
                  re-register an existing name to replace it"
             )));
         }
+        // Take both stores before mutating either, so concurrent
+        // re-registrations of one name can never leave its chain and DAG
+        // forms out of sync. This is the only place both locks are held
+        // (readers take them one at a time), so the nets→graphs order
+        // cannot deadlock.
+        let mut graphs = self.user_graphs.write().expect("user-graph store poisoned");
         let replaced = store.insert(net.name.clone(), net).is_some();
+        match graph {
+            Some(g) => {
+                graphs.insert(resp.name.clone(), g);
+            }
+            None => {
+                // A chain re-registration drops any stale graph form.
+                graphs.remove(&resp.name);
+            }
+        }
         Ok(RegisterResponse { replaced, ..resp })
     }
 
@@ -177,16 +211,7 @@ impl Engine {
     /// Answer one eval request through the shared memo table.
     pub fn eval(&self, req: &EvalRequest) -> Result<EvalResponse, ApiError> {
         check_config(&req.config)?;
-        if req.arrays == 0 {
-            return Err(ApiError::BadRequest("arrays must be positive".into()));
-        }
-        if req.arrays > super::request::MAX_ARRAYS {
-            return Err(ApiError::BadRequest(format!(
-                "arrays {} exceeds the limit {}",
-                req.arrays,
-                super::request::MAX_ARRAYS
-            )));
-        }
+        check_arrays(req.arrays)?;
         let net = self.resolve(&req.net, req.batch)?;
         if req.arrays > 1 {
             let config = MultiArrayConfig::new(req.arrays, req.config.clone());
@@ -311,18 +336,118 @@ impl Engine {
     }
 
     /// Per-layer UB working sets, spills and the corrected Eq.1 energy.
+    /// With `graph: true` the graph-aware liveness pass runs too, and the
+    /// corrected energy additionally charges long-lived edge spills.
     pub fn memory(&self, req: &MemoryRequest) -> Result<MemoryResponse, ApiError> {
         check_config(&req.config)?;
         let net = self.resolve(&req.net, req.batch)?;
         let analysis = MemoryAnalysis::of(&net, &req.config);
         let base_energy = net.metrics(&req.config).energy(&req.weights);
-        let corrected_energy = analysis.corrected_energy(&net, &req.config, &req.weights);
+        let mut corrected_energy = analysis.corrected_energy(&net, &req.config, &req.weights);
+        let liveness = if req.graph {
+            let g = self.resolve_graph(&req.net, req.batch)?;
+            let live = g.liveness(&req.config);
+            corrected_energy += live.dram_energy();
+            Some(live)
+        } else {
+            None
+        };
         Ok(MemoryResponse {
             network: net.name.clone(),
             config: req.config.clone(),
             analysis,
             base_energy,
             corrected_energy,
+            liveness,
+        })
+    }
+
+    /// Resolve the DAG form of a network: user-registered graphs first,
+    /// then the zoo graph builders (residual/dense/branch families get
+    /// real junctions; everything else the trivial chain), then the chain
+    /// lowering of any other resolvable user network.
+    pub fn resolve_graph(&self, name: &str, batch: Option<usize>) -> Result<NetworkGraph, ApiError> {
+        let g = {
+            let store = self.user_graphs.read().expect("user-graph store poisoned");
+            store.get(name).cloned()
+        };
+        let g = match g {
+            Some(g) => g,
+            None => {
+                // Zoo names never shadow user networks: graph builders
+                // cover exactly the zoo registry, so check the user store
+                // first via the plain resolution path.
+                let user_chain = {
+                    let store = self.user_nets.read().expect("user-network store poisoned");
+                    store.get(name).map(NetworkGraph::chain)
+                };
+                match user_chain {
+                    Some(g) => g,
+                    None => match nets::build_graph(name) {
+                        Some(g) => g,
+                        None => {
+                            return Err(ApiError::UnknownNetwork {
+                                name: name.to_string(),
+                            })
+                        }
+                    },
+                }
+            }
+        };
+        match batch {
+            None => Ok(g),
+            Some(b) => {
+                if b == 0 || b > super::request::MAX_BATCH {
+                    return Err(ApiError::BadRequest(format!(
+                        "batch must be in 1..={}",
+                        super::request::MAX_BATCH
+                    )));
+                }
+                let g = g.with_batch(b).map_err(ApiError::BadRequest)?;
+                // Check the layer nodes in place — no need to clone the
+                // whole layer list into a Network just for the bounds.
+                for nd in g.nodes() {
+                    if let crate::model::graph::NodeOp::Layer(l) = &nd.op {
+                        l.check_work_bounds()
+                            .map_err(|e| ApiError::BadRequest(format!("batch {b}: {e}")))?;
+                    }
+                }
+                Ok(g)
+            }
+        }
+    }
+
+    /// Graph-connectivity analysis: DAG statistics, tensor liveness with
+    /// the liveness-corrected energy, and the branch-parallel multi-array
+    /// schedule (DESIGN.md §9).
+    pub fn graph(&self, req: &GraphRequest) -> Result<GraphResponse, ApiError> {
+        check_config(&req.config)?;
+        check_arrays(req.arrays)?;
+        let g = self.resolve_graph(&req.net, req.batch)?;
+        let net = g.to_network();
+        let metrics = Workload::of(&net).eval_cached(&req.config, &self.cache);
+        let base_energy = metrics.energy(&req.weights);
+        let liveness = g.liveness(&req.config);
+        let layer_mem = MemoryAnalysis::of(&net, &req.config);
+        let corrected_energy = base_energy + layer_mem.dram_energy() + liveness.dram_energy();
+        let schedule = g.schedule(
+            &MultiArrayConfig::new(req.arrays, req.config.clone()),
+            &self.cache,
+        );
+        Ok(GraphResponse {
+            network: g.name.clone(),
+            config: req.config.clone(),
+            nodes: g.len(),
+            layers: g.layer_count(),
+            junctions: g.junction_count(),
+            edges: g.edge_count(),
+            is_chain: g.is_chain(),
+            metrics,
+            base_energy,
+            liveness,
+            layer_dram_words: layer_mem.total_dram_words,
+            corrected_energy,
+            schedule,
         })
     }
 }

@@ -38,11 +38,11 @@ mod serve;
 pub use engine::{Engine, MAX_USER_NETWORKS};
 pub use error::ApiError;
 pub use request::{
-    ApiRequest, EqualPeRequest, EvalRequest, MemoryRequest, ParetoRequest, RegisterRequest,
-    SweepRequest, SweepSpec,
+    ApiRequest, EqualPeRequest, EvalRequest, GraphRequest, MemoryRequest, ParetoRequest,
+    RegisterRequest, SweepRequest, SweepSpec,
 };
 pub use response::{
-    equal_pe_json, pareto_json, sweep_json, zoo_json, EvalResponse, MemoryResponse, NetworkEntry,
-    NetworkSource, PerLayerReport, RegisterResponse,
+    equal_pe_json, liveness_json, pareto_json, schedule_json, sweep_json, zoo_json, EvalResponse,
+    GraphResponse, MemoryResponse, NetworkEntry, NetworkSource, PerLayerReport, RegisterResponse,
 };
 pub use serve::{serve, serve_tcp, ServeOptions, ServeStats};

@@ -42,11 +42,7 @@ impl EvalRequest {
 
     pub fn from_json(v: &Json) -> Result<EvalRequest, ApiError> {
         let arrays = opt_positive(v, "arrays")?.unwrap_or(1);
-        if arrays > MAX_ARRAYS {
-            return Err(ApiError::BadRequest(format!(
-                "arrays {arrays} exceeds the limit {MAX_ARRAYS}"
-            )));
-        }
+        check_arrays(arrays)?;
         Ok(EvalRequest {
             net: req_str(v, "net")?,
             batch: opt_positive(v, "batch")?,
@@ -62,6 +58,20 @@ impl EvalRequest {
 /// wire-side geometry cap in [`parse_config`] this keeps `pe_count()`
 /// arithmetic (arrays × height × width) far from usize overflow.
 pub const MAX_ARRAYS: usize = 1 << 16;
+
+/// The bank-size bounds every multi-array entry path shares (wire parsing
+/// and the engine's programmatic surface).
+pub(crate) fn check_arrays(arrays: usize) -> Result<(), ApiError> {
+    if arrays == 0 {
+        return Err(ApiError::BadRequest("arrays must be positive".into()));
+    }
+    if arrays > MAX_ARRAYS {
+        return Err(ApiError::BadRequest(format!(
+            "arrays {arrays} exceeds the limit {MAX_ARRAYS}"
+        )));
+    }
+    Ok(())
+}
 
 /// Most a request (or a registered spec) may re-batch a network by —
 /// matches the per-layer ingestion ceiling, so a batch override can never
@@ -309,6 +319,9 @@ pub struct MemoryRequest {
     pub batch: Option<usize>,
     pub config: ArrayConfig,
     pub weights: EnergyWeights,
+    /// Also run the graph-aware tensor-liveness pass (true peak residency
+    /// instead of the linear-chain estimate) and attach it to the response.
+    pub graph: bool,
 }
 
 impl MemoryRequest {
@@ -316,6 +329,46 @@ impl MemoryRequest {
         Ok(MemoryRequest {
             net: req_str(v, "net")?,
             batch: opt_positive(v, "batch")?,
+            config: parse_config(v.get("config"), ArrayConfig::new(128, 128))?,
+            weights: parse_weights(v)?,
+            graph: v.get("graph").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// Graph-connectivity analysis of one network: DAG statistics, tensor
+/// liveness with liveness-corrected energy, and the branch-parallel
+/// multi-array schedule (CLI: `camuy graph`).
+#[derive(Debug, Clone)]
+pub struct GraphRequest {
+    pub net: String,
+    /// Re-batch every layer; `None` keeps the registered batch.
+    pub batch: Option<usize>,
+    /// Bank size for the branch-parallel schedule (1 = the serialized
+    /// baseline).
+    pub arrays: usize,
+    pub config: ArrayConfig,
+    pub weights: EnergyWeights,
+}
+
+impl GraphRequest {
+    pub fn new(net: impl Into<String>, config: ArrayConfig) -> GraphRequest {
+        GraphRequest {
+            net: net.into(),
+            batch: None,
+            arrays: 1,
+            config,
+            weights: EnergyWeights::paper(),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<GraphRequest, ApiError> {
+        let arrays = opt_positive(v, "arrays")?.unwrap_or(1);
+        check_arrays(arrays)?;
+        Ok(GraphRequest {
+            net: req_str(v, "net")?,
+            batch: opt_positive(v, "batch")?,
+            arrays,
             config: parse_config(v.get("config"), ArrayConfig::new(128, 128))?,
             weights: parse_weights(v)?,
         })
@@ -347,6 +400,7 @@ pub enum ApiRequest {
     Pareto(ParetoRequest),
     EqualPe(EqualPeRequest),
     Memory(MemoryRequest),
+    Graph(GraphRequest),
     Register(RegisterRequest),
     /// List every known network (zoo + user store).
     Zoo,
@@ -362,11 +416,12 @@ impl ApiRequest {
             "pareto" => ParetoRequest::from_json(v).map(ApiRequest::Pareto),
             "equal_pe" | "equal-pe" => EqualPeRequest::from_json(v).map(ApiRequest::EqualPe),
             "memory" => MemoryRequest::from_json(v).map(ApiRequest::Memory),
+            "graph" => GraphRequest::from_json(v).map(ApiRequest::Graph),
             "register" => RegisterRequest::from_json(v).map(ApiRequest::Register),
             "zoo" | "networks" => Ok(ApiRequest::Zoo),
             other => Err(ApiError::BadRequest(format!(
                 "unknown request type '{other}' \
-                 (eval|sweep|pareto|equal_pe|memory|register|zoo)"
+                 (eval|sweep|pareto|equal_pe|memory|graph|register|zoo)"
             ))),
         }
     }
@@ -489,6 +544,9 @@ mod tests {
             // resource-bound rejections: arrays, geometry, grid, threads,
             // optimizer size
             r#"{"type":"eval","net":"alexnet","arrays":1000000000000000000}"#,
+            r#"{"type":"graph"}"#,
+            r#"{"type":"graph","net":"alexnet","arrays":0}"#,
+            r#"{"type":"graph","net":"alexnet","arrays":1000000000000000000}"#,
             r#"{"type":"eval","net":"alexnet","config":{"height":2000000,"width":8}}"#,
             r#"{"type":"sweep","net":"alexnet","grid":{"lo":1,"hi":4000000000,"step":1}}"#,
             r#"{"type":"sweep","net":"alexnet","grid":{"lo":1,"hi":1000000,"step":1}}"#,
@@ -502,6 +560,25 @@ mod tests {
                 matches!(ApiRequest::from_json(&v), Err(ApiError::BadRequest(_))),
                 "not rejected as bad request: {bad}"
             );
+        }
+    }
+
+    #[test]
+    fn graph_request_parses_with_defaults() {
+        let v = Json::parse(r#"{"type":"graph","net":"resnet50","arrays":4}"#).unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Graph(r) => {
+                assert_eq!(r.net, "resnet50");
+                assert_eq!(r.arrays, 4);
+                assert_eq!(r.batch, None);
+                assert_eq!((r.config.height, r.config.width), (128, 128));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        let v = Json::parse(r#"{"type":"memory","net":"resnet50","graph":true}"#).unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Memory(r) => assert!(r.graph),
+            other => panic!("wrong request: {other:?}"),
         }
     }
 

@@ -7,6 +7,7 @@
 use crate::config::ArrayConfig;
 use crate::coordinator::InferenceRun;
 use crate::metrics::Metrics;
+use crate::model::graph::{GraphLiveness, GraphSchedule};
 use crate::model::memory::MemoryAnalysis;
 use crate::model::multi::{MultiArrayConfig, MultiMetrics};
 use crate::model::roofline::LayerRoofline;
@@ -194,8 +195,13 @@ pub struct MemoryResponse {
     pub analysis: MemoryAnalysis,
     /// Eq.1 energy assuming everything stays on chip.
     pub base_energy: f64,
-    /// Eq.1 energy plus the DRAM spill overhead.
+    /// Eq.1 energy plus the DRAM spill overhead (per-layer spills, plus
+    /// edge spills when the liveness pass ran).
     pub corrected_energy: f64,
+    /// Graph-aware tensor liveness, attached when the request set
+    /// `graph: true`: true peak UB residency instead of the linear-chain
+    /// estimate, and DRAM traffic for long-lived skip/concat tensors.
+    pub liveness: Option<GraphLiveness>,
 }
 
 impl MemoryResponse {
@@ -207,7 +213,7 @@ impl MemoryResponse {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("network", Json::str(self.network.clone())),
             ("config", self.config.to_json()),
             (
@@ -235,8 +241,104 @@ impl MemoryResponse {
                     ])
                 })),
             ),
+        ];
+        if let Some(live) = &self.liveness {
+            pairs.push(("liveness", liveness_json(live)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Result of a [`super::GraphRequest`]: DAG statistics, the serialized
+/// metrics (byte-identical to the flat path), tensor liveness with the
+/// corrected energy, and the branch-parallel schedule.
+#[derive(Debug, Clone)]
+pub struct GraphResponse {
+    pub network: String,
+    pub config: ArrayConfig,
+    pub nodes: usize,
+    pub layers: usize,
+    pub junctions: usize,
+    pub edges: usize,
+    pub is_chain: bool,
+    /// Serialized single-array totals — identical to the flat evaluation.
+    pub metrics: Metrics,
+    pub base_energy: f64,
+    pub liveness: GraphLiveness,
+    /// DRAM words from layers whose own working set exceeds the UB.
+    pub layer_dram_words: u64,
+    /// Eq.1 energy plus DRAM overhead from layer *and* edge spills.
+    pub corrected_energy: f64,
+    pub schedule: GraphSchedule,
+}
+
+impl GraphResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("network", Json::str(self.network.clone())),
+            ("config", self.config.to_json()),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("junctions", Json::num(self.junctions as f64)),
+            ("edges", Json::num(self.edges as f64)),
+            ("is_chain", Json::Bool(self.is_chain)),
+            ("metrics", self.metrics.to_json()),
+            ("base_energy", Json::num(self.base_energy)),
+            ("liveness", liveness_json(&self.liveness)),
+            ("layer_dram_words", Json::num(self.layer_dram_words as f64)),
+            ("corrected_energy", Json::num(self.corrected_energy)),
+            ("schedule", schedule_json(&self.schedule)),
         ])
     }
+}
+
+/// The liveness summary embedded in graph and memory responses: peak
+/// residency vs the linear-chain estimate, spill totals, and the ten
+/// heaviest steps.
+pub fn liveness_json(l: &GraphLiveness) -> Json {
+    Json::obj(vec![
+        ("peak_residency_bytes", Json::num(l.peak_bytes as f64)),
+        ("chain_peak_bytes", Json::num(l.chain_peak_bytes as f64)),
+        ("inflation", Json::num(l.inflation())),
+        ("spilled_tensors", Json::num(l.spilled_tensors as f64)),
+        ("edge_dram_words", Json::num(l.edge_dram_words as f64)),
+        (
+            "top_steps",
+            Json::arr(l.top_steps(10).into_iter().map(|s| {
+                Json::obj(vec![
+                    ("node", Json::str(s.name.clone())),
+                    ("own_bytes", Json::num(s.own_bytes as f64)),
+                    ("held_bytes", Json::num(s.held_bytes as f64)),
+                    ("total_bytes", Json::num(s.total_bytes as f64)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// The branch-parallel schedule summary of a graph response.
+pub fn schedule_json(s: &GraphSchedule) -> Json {
+    // Per-array busy cycles, so a client can see the load balance without
+    // the full assignment list.
+    let mut busy = vec![0u64; s.arrays];
+    for a in &s.assignments {
+        busy[a.array] += a.end_cycle - a.start_cycle;
+    }
+    Json::obj(vec![
+        ("arrays", Json::num(s.arrays as f64)),
+        ("makespan_cycles", Json::num(s.makespan_cycles as f64)),
+        ("serialized_cycles", Json::num(s.serialized_cycles as f64)),
+        (
+            "critical_path_cycles",
+            Json::num(s.critical_path_cycles as f64),
+        ),
+        ("speedup", Json::num(s.speedup())),
+        (
+            "busy_cycles_per_array",
+            Json::arr(busy.iter().map(|&b| Json::num(b as f64))),
+        ),
+        ("scheduled_layers", Json::num(s.assignments.len() as f64)),
+    ])
 }
 
 // ------------------------------------------------ figure-data wire formats

@@ -347,6 +347,7 @@ fn dispatch(engine: &Engine, req: &Result<ApiRequest, ApiError>) -> Result<Json,
         Ok(ApiRequest::Pareto(r)) => engine.pareto(r).map(|d| pareto_json(&d)),
         Ok(ApiRequest::EqualPe(r)) => engine.equal_pe(r).map(|d| equal_pe_json(&d)),
         Ok(ApiRequest::Memory(r)) => engine.memory(r).map(|x| x.to_json()),
+        Ok(ApiRequest::Graph(r)) => engine.graph(r).map(|x| x.to_json()),
     }
 }
 

@@ -11,7 +11,8 @@
 //! camuy robust  [--out DIR]                                        (Fig 5)
 //! camuy equal-pe [--budget N]... [--out DIR]                       (Fig 6)
 //! camuy figures --out DIR          regenerate every paper figure
-//! camuy memory  --net vgg16        per-layer UB working sets and spills
+//! camuy memory  --net vgg16 [--graph]  per-layer UB working sets and spills
+//! camuy graph   --net resnet50 [--arrays N]  DAG stats, liveness, schedule
 //! camuy serve   [--listen ADDR]    batched JSON-lines request server
 //! camuy verify  [--artifacts DIR]  three-way artifact verification
 //! camuy --version                  print the crate version
@@ -20,8 +21,8 @@
 pub mod args;
 
 use crate::api::{
-    Engine, EqualPeRequest, EvalRequest, EvalResponse, MemoryRequest, ParetoRequest,
-    ServeOptions, SweepRequest, SweepSpec,
+    Engine, EqualPeRequest, EvalRequest, EvalResponse, GraphRequest, MemoryRequest,
+    ParetoRequest, ServeOptions, SweepRequest, SweepSpec,
 };
 use crate::config::{ArrayConfig, Dataflow, EnergyWeights};
 use crate::pareto::nsga2::Nsga2Params;
@@ -37,7 +38,7 @@ const SCHEMA: Schema = Schema {
         "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "min-dim",
         "threads", "artifacts", "dataflow", "seed", "energy-model", "listen", "batch-max",
     ],
-    flags: &["json", "per-layer", "smoke", "help", "quiet", "verbose", "version"],
+    flags: &["json", "per-layer", "smoke", "help", "quiet", "verbose", "version", "graph"],
 };
 
 pub fn usage() -> &'static str {
@@ -55,13 +56,16 @@ COMMANDS:
   equal-pe            Fig 6: equal-PE-count aspect-ratio study
   figures             regenerate every paper figure into --out
   memory              per-layer UB working sets, spills, DRAM overhead
+  graph               DAG connectivity: liveness-true residency + branch-
+                      parallel multi-array schedule (see DESIGN.md §9)
   serve               batched JSON-lines request server (stdin, or --listen)
   verify              three-way check: reference = emulator = PJRT artifact
 
 OPTIONS:
   --net NAME          network (see `camuy zoo`)
-  --batch N           inference batch size (emulate; default 1)
-  --arrays N          multi-array bank size (emulate; default 1)
+  --batch N           inference batch size (emulate/graph; default 1)
+  --arrays N          multi-array bank size (emulate/graph; default 1)
+  --graph             memory: attach the graph-aware liveness pass
   --height H --width W --acc N   array geometry / accumulator entries
   --dataflow ws|os    dataflow concept (default ws)
   --energy-model paper|dally14nm  Equation-1 weights
@@ -110,6 +114,7 @@ pub fn run(argv: &[String]) -> i32 {
         "equal-pe" => cmd_equal_pe(&engine, &args),
         "figures" => cmd_figures(&engine, &args),
         "memory" => cmd_memory(&engine, &args),
+        "graph" => cmd_graph(&engine, &args),
         "serve" => cmd_serve(&engine, &args),
         "verify" => cmd_verify(&args),
         other => {
@@ -446,9 +451,11 @@ fn cmd_figures(engine: &Engine, args: &Args) -> anyhow::Result<()> {
     let f6 = engine.equal_pe(&EqualPeRequest {
         budgets: EqualPeRequest::DEFAULT_BUDGETS.to_vec(),
         min_dim: 8,
-        spec,
+        spec: spec.clone(),
     })?;
     figures::write_fig6(&f6, &dir)?;
+    log::info!("Fig 7 (liveness-corrected energy)…");
+    figures::write_fig7(&figures::fig7_liveness_energy(&spec), &dir)?;
     println!("all figures written to {}", dir.display());
     Ok(())
 }
@@ -459,6 +466,7 @@ fn cmd_memory(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         batch: opt_batch(args)?,
         config: template_config(args, 128, 128)?,
         weights: energy_weights(args)?,
+        graph: args.flag("graph"),
     };
     let resp = engine.memory(&req)?;
     println!(
@@ -480,6 +488,16 @@ fn cmd_memory(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         resp.corrected_energy,
         100.0 * (resp.corrected_energy / resp.base_energy - 1.0)
     );
+    if let Some(live) = &resp.liveness {
+        println!(
+            "  graph-aware peak residency {:.2} MiB ({:.2}x the linear-chain \
+             estimate); {} long-lived tensors spill, {} edge DRAM words",
+            live.peak_bytes as f64 / (1 << 20) as f64,
+            live.inflation(),
+            live.spilled_tensors,
+            human_count(live.edge_dram_words)
+        );
+    }
     for l in resp.spillers().into_iter().take(10) {
         println!(
             "    {:<40} {:.2} MiB working set, {} DRAM words",
@@ -487,6 +505,84 @@ fn cmd_memory(engine: &Engine, args: &Args) -> anyhow::Result<()> {
             l.working_set_bytes as f64 / (1 << 20) as f64,
             human_count(l.dram_words)
         );
+    }
+    Ok(())
+}
+
+fn cmd_graph(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let req = GraphRequest {
+        net: require_net(args)?,
+        batch: opt_batch(args)?,
+        arrays: args.opt_usize("arrays", 1)?,
+        config: template_config(args, 128, 128)?,
+        weights: energy_weights(args)?,
+    };
+    let resp = engine.graph(&req)?;
+    if args.flag("json") {
+        println!("{}", resp.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let mib = |b: u64| format!("{:.2} MiB", b as f64 / (1 << 20) as f64);
+    println!(
+        "{}",
+        kv_block(
+            &format!("{} graph on {}", resp.network, resp.config),
+            &[
+                (
+                    "topology",
+                    if resp.is_chain { "chain".to_string() } else { "DAG".to_string() }
+                ),
+                (
+                    "nodes",
+                    format!(
+                        "{} ({} layers, {} junctions, {} edges)",
+                        resp.nodes, resp.layers, resp.junctions, resp.edges
+                    )
+                ),
+                ("cycles (serialized)", human_count(resp.metrics.cycles)),
+                ("MACs", human_count(resp.metrics.macs)),
+                ("peak residency", mib(resp.liveness.peak_bytes)),
+                ("linear-chain estimate", mib(resp.liveness.chain_peak_bytes)),
+                (
+                    "liveness inflation",
+                    format!("{:.3}x", resp.liveness.inflation())
+                ),
+                (
+                    "spilled tensors",
+                    format!(
+                        "{} ({} edge DRAM words)",
+                        resp.liveness.spilled_tensors,
+                        human_count(resp.liveness.edge_dram_words)
+                    )
+                ),
+                ("energy (Eq.1)", format!("{:.4e}", resp.base_energy)),
+                ("energy + DRAM", format!("{:.4e}", resp.corrected_energy)),
+            ]
+        )
+    );
+    println!(
+        "schedule on {} array(s): makespan {} cycles (serialized {}, critical path {}, \
+         speedup {:.2}x)",
+        resp.schedule.arrays,
+        human_count(resp.schedule.makespan_cycles),
+        human_count(resp.schedule.serialized_cycles),
+        human_count(resp.schedule.critical_path_cycles),
+        resp.schedule.speedup()
+    );
+    println!("top residency steps:");
+    for s in resp.liveness.top_steps(10) {
+        println!(
+            "  {:<44} own {:>12} held {:>12} total {:>12}",
+            s.name,
+            mib(s.own_bytes),
+            mib(s.held_bytes),
+            mib(s.total_bytes)
+        );
+    }
+    if let Some(out) = args.opt("out") {
+        let dir = PathBuf::from(out);
+        figures::write_graph_liveness(&resp.network, &resp.liveness, &dir)?;
+        println!("wrote liveness table to {}", dir.display());
     }
     Ok(())
 }
@@ -563,7 +659,7 @@ mod tests {
     fn usage_lists_every_dispatched_command() {
         for cmd in [
             "zoo", "emulate", "sweep", "pareto", "heatmaps", "robust", "equal-pe", "figures",
-            "memory", "serve", "verify",
+            "memory", "graph", "serve", "verify",
         ] {
             assert!(usage().contains(cmd), "usage() missing {cmd}");
         }

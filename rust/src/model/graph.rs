@@ -1,0 +1,1381 @@
+//! The graph-connectivity IR: DAG networks with explicit inter-layer
+//! tensors (DESIGN.md §9).
+//!
+//! The paper singles out connectivity — "recent networks extent previously
+//! plain feedforward models by various connectivity, such as in ResNet or
+//! DenseNet" — yet a flat `Vec<Layer>` cannot see it: a skip-add holds its
+//! residual tensor live across a whole block, a dense concat keeps every
+//! previous feature map alive, and Inception branches are data-independent.
+//! A [`NetworkGraph`] makes that structure explicit: nodes are the existing
+//! GEMM-bearing [`Layer`]s plus zero-MAC [`NodeOp::Add`] /
+//! [`NodeOp::Concat`] junctions, and every edge carries the produced
+//! feature-map tensor with its byte size.
+//!
+//! Three analyses consume the IR:
+//!
+//! * **Lowering** ([`NetworkGraph::to_network`] / [`NetworkGraph::metrics`])
+//!   serializes the layer nodes in topological order through the same
+//!   deduplicated workload path as [`Network::metrics`] — byte-identical
+//!   for every graph, so connectivity never changes Equation-1 accounting.
+//! * **Liveness** ([`NetworkGraph::liveness`]) walks the execution order
+//!   tracking which tensors must stay resident in the Unified Buffer,
+//!   replacing the linear-chain assumption of
+//!   [`crate::model::memory::MemoryAnalysis`] (which lets each input die
+//!   immediately) with true peak residency, and charges DRAM round trips
+//!   for long-lived skip/concat tensors that cannot fit.
+//! * **Branch-parallel scheduling** ([`NetworkGraph::schedule`]) places
+//!   data-independent branches concurrently on the arrays of a
+//!   [`MultiArrayConfig`] bank with a non-delay critical-path list
+//!   scheduler — makespan approaches the critical path instead of the full
+//!   serialization that [`crate::model::multi`] charges.
+
+use crate::config::{ArrayConfig, EnergyWeights};
+use crate::metrics::Metrics;
+use crate::model::bandwidth::ub_working_set_bytes;
+use crate::model::layer::{Layer, LayerKind, SpatialDims};
+use crate::model::memory::DRAM_COST;
+use crate::model::multi::MultiArrayConfig;
+use crate::model::network::Network;
+use crate::model::workload::{EvalCache, Workload};
+use crate::util::json::Json;
+use std::collections::{HashMap, HashSet};
+
+/// Index of a node inside its [`NetworkGraph`] (also its execution step:
+/// the node list is topologically ordered).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(pub usize);
+
+/// What a graph node computes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeOp {
+    /// A GEMM-bearing operator — the existing layer model, unchanged.
+    Layer(Layer),
+    /// Element-wise residual addition (ResNet skips). Moves no matrix
+    /// operands and costs zero MACs, but its *inputs* must stay live until
+    /// it executes.
+    Add,
+    /// Channel concatenation (DenseNet, Inception merges). Zero MACs;
+    /// output channels are the sum of the input channels.
+    Concat,
+}
+
+impl NodeOp {
+    pub fn is_layer(&self) -> bool {
+        matches!(self, NodeOp::Layer(_))
+    }
+
+    /// The JSON discriminator of a junction (`None` for layers).
+    pub fn junction_str(&self) -> Option<&'static str> {
+        match self {
+            NodeOp::Layer(_) => None,
+            NodeOp::Add => Some("add"),
+            NodeOp::Concat => Some("concat"),
+        }
+    }
+}
+
+/// One node: a name, an operator, and the producers of its operands.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphNode {
+    pub name: String,
+    pub op: NodeOp,
+    /// Producers of this node's operands; empty = reads the network input.
+    pub inputs: Vec<NodeId>,
+}
+
+/// A feature-map tensor travelling along a graph edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub dims: SpatialDims,
+    pub channels: usize,
+    pub batch: usize,
+}
+
+impl TensorShape {
+    /// Scalar element count of the tensor.
+    pub fn elements(&self) -> u64 {
+        self.batch as u64 * self.dims.h as u64 * self.dims.w as u64 * self.channels as u64
+    }
+
+    /// Resident bytes at the configured activation width.
+    pub fn bytes(&self, act_bits: u32) -> u64 {
+        self.elements() * act_bits as u64 / 8
+    }
+}
+
+/// A validated DAG network. Construction computes every node's output
+/// tensor and the consumer lists, so the analyses below never re-derive
+/// shapes.
+#[derive(Debug, Clone)]
+pub struct NetworkGraph {
+    pub name: String,
+    nodes: Vec<GraphNode>,
+    /// Output tensor of every node.
+    shapes: Vec<TensorShape>,
+    /// Consumer node indices of every node (the edge list, transposed).
+    consumers: Vec<Vec<usize>>,
+}
+
+impl NetworkGraph {
+    /// Validated construction. `nodes` must be topologically ordered
+    /// (every input references an earlier node); junction arity and
+    /// channel compatibility are checked, and every node's output tensor
+    /// is computed. Spatial dims are *not* matched across layer edges —
+    /// pooling is metric-neutral and elided, so a consumer may declare a
+    /// smaller grid than its producer emits.
+    pub fn new(name: impl Into<String>, nodes: Vec<GraphNode>) -> Result<NetworkGraph, String> {
+        NetworkGraph::build(name.into(), nodes, true)
+    }
+
+    /// The degenerate linear-chain lowering of a flat layer-list network:
+    /// layer `i` feeds layer `i + 1` and nothing else. Edge-compatibility
+    /// checks are skipped — the flat zoo models elide pooling, flattening
+    /// and junction semantics, so their consecutive layers need not chain
+    /// shape-wise. Under this lowering every analysis reduces to the
+    /// existing per-layer model exactly.
+    pub fn chain(net: &Network) -> NetworkGraph {
+        let nodes = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| GraphNode {
+                name: l.name.clone(),
+                op: NodeOp::Layer(l.clone()),
+                inputs: if i == 0 { Vec::new() } else { vec![NodeId(i - 1)] },
+            })
+            .collect();
+        NetworkGraph::build(net.name.clone(), nodes, false)
+            .expect("chain lowering is structurally valid")
+    }
+
+    fn build(name: String, nodes: Vec<GraphNode>, strict: bool) -> Result<NetworkGraph, String> {
+        if name.trim().is_empty() {
+            return Err("network name must be non-empty".to_string());
+        }
+        if nodes.is_empty() {
+            return Err("graph must have at least one node".to_string());
+        }
+        let mut seen: HashSet<&str> = HashSet::with_capacity(nodes.len());
+        for nd in &nodes {
+            if nd.name.trim().is_empty() {
+                return Err("node names must be non-empty".to_string());
+            }
+            if !seen.insert(nd.name.as_str()) {
+                return Err(format!("duplicate node name '{}'", nd.name));
+            }
+        }
+        let mut shapes: Vec<TensorShape> = Vec::with_capacity(nodes.len());
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+        let mut layer_count = 0usize;
+        for (i, nd) in nodes.iter().enumerate() {
+            for &NodeId(p) in &nd.inputs {
+                if p >= i {
+                    return Err(format!(
+                        "node '{}' input #{p} does not precede it \
+                         (nodes must be topologically ordered)",
+                        nd.name
+                    ));
+                }
+                consumers[p].push(i);
+            }
+            let shape = match &nd.op {
+                NodeOp::Layer(l) => {
+                    layer_count += 1;
+                    if nd.name != l.name {
+                        return Err(format!(
+                            "layer node '{}' must be named after its layer '{}'",
+                            nd.name, l.name
+                        ));
+                    }
+                    if nd.inputs.len() > 1 {
+                        return Err(format!(
+                            "layer node '{}' must have at most one input, got {}",
+                            nd.name,
+                            nd.inputs.len()
+                        ));
+                    }
+                    if strict {
+                        if let Some(&NodeId(p)) = nd.inputs.first() {
+                            check_layer_edge(l, &nodes[p].name, shapes[p])?;
+                        }
+                    }
+                    TensorShape {
+                        dims: l.output_dims(),
+                        channels: l.c_out(),
+                        batch: l.batch,
+                    }
+                }
+                NodeOp::Add | NodeOp::Concat => {
+                    if nd.inputs.len() < 2 {
+                        return Err(format!(
+                            "junction '{}' needs at least two inputs",
+                            nd.name
+                        ));
+                    }
+                    let ins: Vec<TensorShape> =
+                        nd.inputs.iter().map(|&NodeId(p)| shapes[p]).collect();
+                    let batch = ins[0].batch;
+                    if ins.iter().any(|s| s.batch != batch) {
+                        return Err(format!("junction '{}' mixes batch sizes", nd.name));
+                    }
+                    // Merged spatial extent: elementwise minimum of the
+                    // inputs — an input arriving larger reaches the
+                    // junction through an elided pooling step.
+                    let dims = SpatialDims {
+                        h: ins.iter().map(|s| s.dims.h).min().unwrap(),
+                        w: ins.iter().map(|s| s.dims.w).min().unwrap(),
+                    };
+                    let channels = match nd.op {
+                        NodeOp::Add => {
+                            let c = ins[0].channels;
+                            if ins.iter().any(|s| s.channels != c) {
+                                return Err(format!(
+                                    "add junction '{}' inputs disagree on channels",
+                                    nd.name
+                                ));
+                            }
+                            c
+                        }
+                        NodeOp::Concat => ins.iter().map(|s| s.channels).sum(),
+                        NodeOp::Layer(_) => unreachable!(),
+                    };
+                    TensorShape {
+                        dims,
+                        channels,
+                        batch,
+                    }
+                }
+            };
+            shapes.push(shape);
+        }
+        if layer_count == 0 {
+            return Err("graph has no layer nodes".to_string());
+        }
+        Ok(NetworkGraph {
+            name,
+            nodes,
+            shapes,
+            consumers,
+        })
+    }
+
+    // ------------------------------------------------------------- access
+
+    pub fn nodes(&self) -> &[GraphNode] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Output tensor of node `i`.
+    pub fn out_shape(&self, i: usize) -> TensorShape {
+        self.shapes[i]
+    }
+
+    /// Consumer node indices of node `i`.
+    pub fn consumers_of(&self, i: usize) -> &[usize] {
+        &self.consumers[i]
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_layer()).count()
+    }
+
+    pub fn junction_count(&self) -> usize {
+        self.len() - self.layer_count()
+    }
+
+    /// Total edge count (Σ input arity).
+    pub fn edge_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.inputs.len()).sum()
+    }
+
+    /// Is this the degenerate linear chain (every node a layer feeding the
+    /// next)?
+    pub fn is_chain(&self) -> bool {
+        self.nodes.iter().enumerate().all(|(i, n)| {
+            n.op.is_layer()
+                && match (i, n.inputs.as_slice()) {
+                    (0, []) => true,
+                    (_, [NodeId(p)]) => p + 1 == i,
+                    _ => false,
+                }
+        })
+    }
+
+    /// Lower to the flat layer-list network: the layer nodes in
+    /// topological order. For a graph wired over a zoo model this
+    /// reproduces the original `Vec<Layer>` exactly (tested across the
+    /// registry).
+    pub fn to_network(&self) -> Network {
+        Network::new(
+            self.name.clone(),
+            self.nodes
+                .iter()
+                .filter_map(|n| match &n.op {
+                    NodeOp::Layer(l) => Some(l.clone()),
+                    _ => None,
+                })
+                .collect(),
+        )
+    }
+
+    /// Serialized-inference metrics, evaluated through the same
+    /// deduplicated workload path as [`Network::metrics`] — byte-identical
+    /// to the flat evaluation for every graph (junctions cost nothing in
+    /// the paper's model).
+    pub fn metrics(&self, cfg: &ArrayConfig) -> Metrics {
+        Workload::of(&self.to_network()).eval(cfg)
+    }
+
+    /// Total trainable parameters (layer nodes only).
+    pub fn params(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                NodeOp::Layer(l) => Some(l.params()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Total useful MACs for one inference.
+    pub fn macs(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                NodeOp::Layer(l) => Some(l.macs()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Re-batch every layer node, keeping the wiring. Shapes are
+    /// recomputed; the caller re-checks the per-layer work ceilings.
+    pub fn with_batch(&self, batch: usize) -> Result<NetworkGraph, String> {
+        if batch == 0 {
+            return Err("batch must be positive".to_string());
+        }
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| GraphNode {
+                name: n.name.clone(),
+                op: match &n.op {
+                    NodeOp::Layer(l) => NodeOp::Layer(l.clone().with_batch(batch)),
+                    other => other.clone(),
+                },
+                inputs: n.inputs.clone(),
+            })
+            .collect();
+        NetworkGraph::build(self.name.clone(), nodes, false)
+    }
+
+    // ----------------------------------------------------------- liveness
+
+    /// The tensor-liveness pass: walk the topological execution order and
+    /// compute, for every step, the Unified Buffer residency — the node's
+    /// own operands plus every long-lived tensor held across the step for
+    /// a later consumer. For a pure chain this reduces exactly to the
+    /// per-layer maximum of [`MemoryAnalysis`]; for skip/concat graphs the
+    /// held tensors inflate the true peak.
+    ///
+    /// Tensor widths: a tensor consumed by an `Add` junction is a residual
+    /// operand — the addition happens in the accumulator domain *before*
+    /// requantization (pre-activation residuals), so it is held at
+    /// `out_bits`; every other tensor is a requantized activation held at
+    /// `act_bits`.
+    ///
+    /// A greedy spill pass then marks, step by step, the largest held
+    /// tensors that must move to DRAM whenever residency exceeds
+    /// `cfg.ub_bytes`; each spill costs one store plus one load per
+    /// remaining consumer, at the Eyeriss-style [`DRAM_COST`] per word.
+    ///
+    /// [`MemoryAnalysis`]: crate::model::memory::MemoryAnalysis
+    pub fn liveness(&self, cfg: &ArrayConfig) -> GraphLiveness {
+        let n = self.nodes.len();
+        let bytes: Vec<u64> = (0..n)
+            .map(|t| {
+                let residual = self.consumers[t]
+                    .iter()
+                    .any(|&c| matches!(self.nodes[c].op, NodeOp::Add));
+                let width = if residual { cfg.out_bits } else { cfg.act_bits };
+                self.shapes[t].bytes(width)
+            })
+            .collect();
+        let dies: Vec<usize> = (0..n)
+            .map(|i| self.consumers[i].iter().copied().max().unwrap_or(i))
+            .collect();
+        let own: Vec<u64> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, nd)| match &nd.op {
+                NodeOp::Layer(l) => ub_working_set_bytes(l, cfg),
+                _ => bytes[i],
+            })
+            .collect();
+
+        // Is tensor t live while node i executes? A layer's own input is
+        // already part of its working set (the im2col view), so only
+        // tensors dying strictly later count; a junction reads raw
+        // tensors, so tensors dying at the junction still occupy the
+        // buffer during the step.
+        let live_at = |t: usize, i: usize| -> bool {
+            t < i
+                && if self.nodes[i].op.is_layer() {
+                    dies[t] > i
+                } else {
+                    dies[t] >= i
+                }
+        };
+
+        let mut steps = Vec::with_capacity(n);
+        let mut peak = 0u64;
+        let mut peak_step = 0usize;
+        let mut chain_peak = 0u64;
+        for i in 0..n {
+            let mut held = 0u64;
+            let mut held_tensors = 0usize;
+            for t in 0..i {
+                if live_at(t, i) {
+                    held += bytes[t];
+                    held_tensors += 1;
+                }
+            }
+            let total = own[i] + held;
+            if total > peak {
+                peak = total;
+                peak_step = i;
+            }
+            if self.nodes[i].op.is_layer() {
+                chain_peak = chain_peak.max(own[i]);
+            }
+            steps.push(StepResidency {
+                node: i,
+                name: self.nodes[i].name.clone(),
+                own_bytes: own[i],
+                held_bytes: held,
+                held_tensors,
+                total_bytes: total,
+            });
+        }
+
+        // Greedy spill pass: whenever residency exceeds the UB, evict the
+        // largest held tensors not being read at this step. A spilled
+        // tensor stops counting toward residency except at the steps that
+        // re-fetch it.
+        let ub = cfg.ub_bytes as u64;
+        let mut spilled = vec![false; n];
+        let mut dram_words = vec![0u64; n];
+        for i in 0..n {
+            let consumed_here = |t: usize| self.nodes[i].inputs.contains(&NodeId(t));
+            let mut resident = own[i];
+            let mut evictable: Vec<usize> = Vec::new();
+            for t in 0..i {
+                if !live_at(t, i) {
+                    continue;
+                }
+                if spilled[t] {
+                    if consumed_here(t) {
+                        resident += bytes[t]; // re-fetched for this read
+                    }
+                } else {
+                    resident += bytes[t];
+                    if !consumed_here(t) {
+                        evictable.push(t);
+                    }
+                }
+            }
+            if resident <= ub {
+                continue;
+            }
+            evictable.sort_by(|&a, &b| bytes[b].cmp(&bytes[a]).then(a.cmp(&b)));
+            for t in evictable {
+                spilled[t] = true;
+                let later_reads = self.consumers[t].iter().filter(|&&c| c > i).count() as u64;
+                dram_words[t] = self.shapes[t].elements() * (1 + later_reads);
+                resident -= bytes[t];
+                if resident <= ub {
+                    break;
+                }
+            }
+        }
+
+        let tensors: Vec<TensorLife> = (0..n)
+            .map(|t| TensorLife {
+                producer: t,
+                name: self.nodes[t].name.clone(),
+                bytes: bytes[t],
+                dies: dies[t],
+                spilled: spilled[t],
+                dram_words: dram_words[t],
+            })
+            .collect();
+        let spilled_tensors = spilled.iter().filter(|&&s| s).count();
+        let edge_dram_words: u64 = dram_words.iter().sum();
+        GraphLiveness {
+            steps,
+            tensors,
+            peak_bytes: peak,
+            peak_step,
+            chain_peak_bytes: chain_peak,
+            spilled_tensors,
+            edge_dram_words,
+        }
+    }
+
+    /// Eq.1 energy plus the DRAM overhead from *both* spill sources:
+    /// layers whose own working set exceeds the UB
+    /// ([`crate::model::memory::MemoryAnalysis`]) and long-lived
+    /// skip/concat tensors the liveness pass must push off chip.
+    pub fn corrected_energy(&self, cfg: &ArrayConfig, w: &EnergyWeights) -> f64 {
+        let net = self.to_network();
+        let layer = crate::model::memory::MemoryAnalysis::of(&net, cfg);
+        net.metrics(cfg).energy(w) + layer.dram_energy() + self.liveness(cfg).dram_energy()
+    }
+
+    // --------------------------------------------------------- scheduling
+
+    /// Branch-parallel list scheduling on a multi-array bank: every layer
+    /// node runs whole on ONE array (so weight traffic is *not*
+    /// multiplied, unlike the M-split model of [`crate::model::multi`]),
+    /// junctions are free, and data-independent branches overlap. The
+    /// scheduler is non-delay (no array idles while a ready layer exists),
+    /// breaking ties by longest remaining path — so the makespan never
+    /// exceeds the serialized sum and never beats the critical path, with
+    /// equality to the serial sum on pure chains.
+    pub fn schedule(&self, cfg: &MultiArrayConfig, cache: &EvalCache) -> GraphSchedule {
+        let n = self.nodes.len();
+        let mut dur = vec![0u64; n];
+        let mut total = Metrics::default();
+        for (i, nd) in self.nodes.iter().enumerate() {
+            if let NodeOp::Layer(l) = &nd.op {
+                let m = l.metrics_cached(&cfg.array, cache);
+                dur[i] = m.cycles;
+                total += m;
+            }
+        }
+        // Bottom levels: longest path to a sink, own duration included.
+        let mut bl = vec![0u64; n];
+        for i in (0..n).rev() {
+            let down = self.consumers[i].iter().map(|&c| bl[c]).max().unwrap_or(0);
+            bl[i] = dur[i] + down;
+        }
+        let critical_path_cycles = bl.iter().copied().max().unwrap_or(0);
+
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|nd| nd.inputs.len()).collect();
+        let mut finish = vec![0u64; n];
+        let mut free = vec![0u64; cfg.arrays];
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut assignments: Vec<ScheduledNode> = Vec::with_capacity(self.layer_count());
+        let mut pending = n;
+        while pending > 0 {
+            // Junctions cost nothing: resolve every ready junction first.
+            if let Some(pos) = ready.iter().position(|&i| !self.nodes[i].op.is_layer()) {
+                let i = ready.swap_remove(pos);
+                finish[i] = self.nodes[i]
+                    .inputs
+                    .iter()
+                    .map(|&NodeId(p)| finish[p])
+                    .max()
+                    .unwrap_or(0);
+                for &c in &self.consumers[i] {
+                    indeg[c] -= 1;
+                    if indeg[c] == 0 {
+                        ready.push(c);
+                    }
+                }
+                pending -= 1;
+                continue;
+            }
+            // Among ready layers, pick the one that can start earliest
+            // (non-delay), breaking ties by bottom level then index; place
+            // it on the earliest-free array.
+            let (a, &f) = free
+                .iter()
+                .enumerate()
+                .min_by_key(|&(ai, &fa)| (fa, ai))
+                .expect("bank has at least one array");
+            let mut best: Option<(u64, std::cmp::Reverse<u64>, usize)> = None;
+            for &i in &ready {
+                let rt = self.nodes[i]
+                    .inputs
+                    .iter()
+                    .map(|&NodeId(p)| finish[p])
+                    .max()
+                    .unwrap_or(0);
+                let key = (rt.max(f), std::cmp::Reverse(bl[i]), i);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+            let (start, _, i) = best.expect("a ready layer exists in a non-empty DAG");
+            let end = start + dur[i];
+            free[a] = end;
+            finish[i] = end;
+            assignments.push(ScheduledNode {
+                node: i,
+                name: self.nodes[i].name.clone(),
+                array: a,
+                start_cycle: start,
+                end_cycle: end,
+            });
+            let pos = ready.iter().position(|&r| r == i).expect("chosen node is ready");
+            ready.swap_remove(pos);
+            for &c in &self.consumers[i] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    ready.push(c);
+                }
+            }
+            pending -= 1;
+        }
+        let makespan_cycles = finish.iter().copied().max().unwrap_or(0);
+        GraphSchedule {
+            arrays: cfg.arrays,
+            makespan_cycles,
+            serialized_cycles: total.cycles,
+            critical_path_cycles,
+            assignments,
+            total,
+        }
+    }
+
+    // --------------------------------------------------------------- JSON
+
+    /// Serialize as the graph-spec JSON document: the layer-list schema
+    /// plus `junctions` and `edges` sections (DESIGN.md §9).
+    pub fn to_json_spec(&self) -> Json {
+        let layers: Vec<Json> = self
+            .nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                NodeOp::Layer(l) => Some(l.to_json()),
+                _ => None,
+            })
+            .collect();
+        let junctions: Vec<Json> = self
+            .nodes
+            .iter()
+            .filter_map(|n| {
+                n.op.junction_str().map(|op| {
+                    Json::obj(vec![
+                        ("name", Json::str(n.name.clone())),
+                        ("op", Json::str(op)),
+                    ])
+                })
+            })
+            .collect();
+        let mut edges: Vec<Json> = Vec::with_capacity(self.edge_count());
+        for nd in &self.nodes {
+            for &NodeId(p) in &nd.inputs {
+                edges.push(Json::arr(vec![
+                    Json::str(self.nodes[p].name.clone()),
+                    Json::str(nd.name.clone()),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("layers", Json::arr(layers)),
+            ("junctions", Json::arr(junctions)),
+            ("edges", Json::arr(edges)),
+        ])
+    }
+
+    /// Parse and validate a graph-spec JSON document. A document without
+    /// an `edges` section is the existing pure-chain schema and lowers via
+    /// [`NetworkGraph::chain`]; with `edges`, the named wiring is
+    /// topologically sorted (junctions placed as early as their inputs
+    /// allow, layers kept in declared order) and strictly validated.
+    pub fn from_json_spec(v: &Json) -> Result<NetworkGraph, String> {
+        if v.get("edges").is_none() {
+            if v.get("junctions").is_some() {
+                return Err(
+                    "graph spec has a 'junctions' section but no 'edges' wiring".to_string()
+                );
+            }
+            return Ok(NetworkGraph::chain(&Network::from_json_spec(v)?));
+        }
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::trim)
+            .ok_or_else(|| "graph spec missing string field 'name'".to_string())?;
+        if name.is_empty() {
+            return Err("network name must be non-empty".to_string());
+        }
+        let layers_json = v
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "graph spec missing array field 'layers'".to_string())?;
+        // Ingestion bounds, matching the chain schema's spirit: generous
+        // for any real network, hostile documents stay cheap.
+        const MAX_SPEC_LAYERS: usize = 4096;
+        const MAX_SPEC_JUNCTIONS: usize = 4096;
+        const MAX_SPEC_EDGES: usize = 32768;
+        if layers_json.is_empty() {
+            return Err("graph must have at least one layer".to_string());
+        }
+        if layers_json.len() > MAX_SPEC_LAYERS {
+            return Err(format!(
+                "graph has {} layers; the ingestion limit is {MAX_SPEC_LAYERS}",
+                layers_json.len()
+            ));
+        }
+        // Unordered node table: layers first, then junctions.
+        let mut ops: Vec<(String, NodeOp)> = Vec::new();
+        for (i, lj) in layers_json.iter().enumerate() {
+            let l = Layer::from_json(lj).map_err(|e| format!("layer {i}: {e}"))?;
+            ops.push((l.name.clone(), NodeOp::Layer(l)));
+        }
+        let layer_count = ops.len();
+        if let Some(js) = v.get("junctions") {
+            let arr = js
+                .as_arr()
+                .ok_or_else(|| "field 'junctions' must be an array".to_string())?;
+            if arr.len() > MAX_SPEC_JUNCTIONS {
+                return Err(format!(
+                    "graph has {} junctions; the ingestion limit is {MAX_SPEC_JUNCTIONS}",
+                    arr.len()
+                ));
+            }
+            for (i, jj) in arr.iter().enumerate() {
+                let jname = jj
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("junction {i}: missing string field 'name'"))?;
+                let op = match jj.get("op").and_then(Json::as_str) {
+                    Some("add") => NodeOp::Add,
+                    Some("concat") => NodeOp::Concat,
+                    other => {
+                        return Err(format!(
+                            "junction '{jname}': op must be 'add' or 'concat', got {other:?}"
+                        ))
+                    }
+                };
+                ops.push((jname.to_string(), op));
+            }
+        }
+        let mut index: HashMap<&str, usize> = HashMap::with_capacity(ops.len());
+        for (i, (nname, _)) in ops.iter().enumerate() {
+            if index.insert(nname.as_str(), i).is_some() {
+                return Err(format!("duplicate node name '{nname}'"));
+            }
+        }
+        // Edges by name.
+        let edges_json = v
+            .get("edges")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "field 'edges' must be an array".to_string())?;
+        if edges_json.len() > MAX_SPEC_EDGES {
+            return Err(format!(
+                "graph has {} edges; the ingestion limit is {MAX_SPEC_EDGES}",
+                edges_json.len()
+            ));
+        }
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); ops.len()];
+        let mut seen_edges: HashSet<(usize, usize)> = HashSet::with_capacity(edges_json.len());
+        for (i, ej) in edges_json.iter().enumerate() {
+            let pair = ej
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| format!("edge {i}: must be a [from, to] pair"))?;
+            let from = pair[0]
+                .as_str()
+                .and_then(|s| index.get(s).copied())
+                .ok_or_else(|| format!("edge {i}: unknown 'from' node"))?;
+            let to = pair[1]
+                .as_str()
+                .and_then(|s| index.get(s).copied())
+                .ok_or_else(|| format!("edge {i}: unknown 'to' node"))?;
+            if from == to {
+                return Err(format!("edge {i}: node feeds itself"));
+            }
+            if !seen_edges.insert((from, to)) {
+                return Err(format!("edge {i}: duplicate edge"));
+            }
+            preds[to].push(from);
+            succs[from].push(to);
+        }
+        // Topological schedule: junctions as early as their inputs allow,
+        // layers in declared order (so a spec dumped from a graph
+        // round-trips node for node).
+        let mut indeg: Vec<usize> = preds.iter().map(Vec::len).collect();
+        let mut ready: Vec<usize> = (0..ops.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order: Vec<usize> = Vec::with_capacity(ops.len());
+        let mut new_id = vec![usize::MAX; ops.len()];
+        while !ready.is_empty() {
+            // Prefer the lowest-index ready junction, else the
+            // earliest-declared ready layer.
+            let pick = ready
+                .iter()
+                .copied()
+                .filter(|&i| i >= layer_count)
+                .min()
+                .or_else(|| ready.iter().copied().filter(|&i| i < layer_count).min())
+                .unwrap();
+            let pos = ready.iter().position(|&i| i == pick).unwrap();
+            ready.swap_remove(pos);
+            new_id[pick] = order.len();
+            order.push(pick);
+            for &s in &succs[pick] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(s);
+                }
+            }
+        }
+        if order.len() != ops.len() {
+            return Err("graph has a cycle".to_string());
+        }
+        let nodes: Vec<GraphNode> = order
+            .iter()
+            .map(|&old| GraphNode {
+                name: ops[old].0.clone(),
+                op: ops[old].1.clone(),
+                inputs: preds[old].iter().map(|&p| NodeId(new_id[p])).collect(),
+            })
+            .collect();
+        NetworkGraph::build(name.to_string(), nodes, true)
+    }
+}
+
+/// Strict producer→layer compatibility: channels must line up (concat
+/// sums and residual adds are exactly where connectivity matters); spatial
+/// dims are not matched because pooling is metric-neutral and elided.
+fn check_layer_edge(l: &Layer, producer: &str, from: TensorShape) -> Result<(), String> {
+    if l.batch != from.batch {
+        return Err(format!(
+            "layer '{}' batch {} != producer '{}' batch {}",
+            l.name, l.batch, producer, from.batch
+        ));
+    }
+    match &l.kind {
+        LayerKind::Conv2d { c_in, .. } => {
+            if *c_in != from.channels {
+                return Err(format!(
+                    "layer '{}' expects {} input channels but producer '{}' emits {}",
+                    l.name, c_in, producer, from.channels
+                ));
+            }
+        }
+        LayerKind::Linear { in_features, .. } => {
+            if in_features % from.channels != 0 {
+                return Err(format!(
+                    "layer '{}' in_features {} is not a multiple of producer '{}' \
+                     channels {}",
+                    l.name, in_features, producer, from.channels
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ result types
+
+/// The lifetime of one node-output tensor.
+#[derive(Debug, Clone)]
+pub struct TensorLife {
+    /// Producing node index (== its execution step).
+    pub producer: usize,
+    pub name: String,
+    /// Resident bytes at the held width (`out_bits` for residual-add
+    /// operands, `act_bits` otherwise).
+    pub bytes: u64,
+    /// Execution step of the last consumer (== `producer` when unconsumed).
+    pub dies: usize,
+    /// The greedy spill pass had to push this tensor to DRAM.
+    pub spilled: bool,
+    /// DRAM words the spill streams (one store plus one load per remaining
+    /// consumer); zero when not spilled.
+    pub dram_words: u64,
+}
+
+/// Unified Buffer residency while one node executes.
+#[derive(Debug, Clone)]
+pub struct StepResidency {
+    pub node: usize,
+    pub name: String,
+    /// The node's own operands: a layer's UB working set, a junction's
+    /// output tensor.
+    pub own_bytes: u64,
+    /// Long-lived tensors held across this step for later consumers.
+    pub held_bytes: u64,
+    /// How many distinct tensors are held (DenseNet keeps a whole block's
+    /// growth outputs alive; ResNet one residual).
+    pub held_tensors: usize,
+    pub total_bytes: u64,
+}
+
+/// Result of the tensor-liveness pass ([`NetworkGraph::liveness`]).
+#[derive(Debug, Clone)]
+pub struct GraphLiveness {
+    /// Per-node residency in execution order.
+    pub steps: Vec<StepResidency>,
+    /// Per-node output-tensor lifetimes.
+    pub tensors: Vec<TensorLife>,
+    /// True peak UB residency with every live tensor held on chip.
+    pub peak_bytes: u64,
+    /// Node index where the peak occurs.
+    pub peak_step: usize,
+    /// What the linear-chain assumption reports: the maximum per-layer
+    /// working set ([`crate::model::memory::MemoryAnalysis`]'s peak).
+    pub chain_peak_bytes: u64,
+    /// Tensors the greedy spill pass pushed to DRAM.
+    pub spilled_tensors: usize,
+    /// Total DRAM words those spills stream.
+    pub edge_dram_words: u64,
+}
+
+impl GraphLiveness {
+    /// Energy overhead of the edge spills in Equation-1 units.
+    pub fn dram_energy(&self) -> f64 {
+        self.edge_dram_words as f64 * DRAM_COST
+    }
+
+    /// The `n` heaviest residency steps (total bytes descending, ties by
+    /// execution order) — the one ranking the JSON and CLI surfaces share.
+    pub fn top_steps(&self, n: usize) -> Vec<&StepResidency> {
+        let mut top: Vec<&StepResidency> = self.steps.iter().collect();
+        top.sort_by(|a, b| b.total_bytes.cmp(&a.total_bytes).then(a.node.cmp(&b.node)));
+        top.truncate(n);
+        top
+    }
+
+    /// How much the linear-chain assumption under-reports the peak.
+    pub fn inflation(&self) -> f64 {
+        if self.chain_peak_bytes == 0 {
+            return 1.0;
+        }
+        self.peak_bytes as f64 / self.chain_peak_bytes as f64
+    }
+}
+
+/// One layer placed on one array of the bank.
+#[derive(Debug, Clone)]
+pub struct ScheduledNode {
+    pub node: usize,
+    pub name: String,
+    pub array: usize,
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+}
+
+/// A branch-parallel schedule of a graph on a multi-array bank
+/// ([`NetworkGraph::schedule`]).
+#[derive(Debug, Clone)]
+pub struct GraphSchedule {
+    pub arrays: usize,
+    /// Critical-path-aware list-scheduled makespan.
+    pub makespan_cycles: u64,
+    /// The fully serialized baseline (Σ layer cycles) — what a
+    /// layer-at-a-time bank pays.
+    pub serialized_cycles: u64,
+    /// Longest dependency chain; no schedule can beat this.
+    pub critical_path_cycles: u64,
+    /// Layer placements in scheduling order.
+    pub assignments: Vec<ScheduledNode>,
+    /// Summed metrics over all layers. Each layer runs whole on one
+    /// array, so movements equal the single-array totals — weight traffic
+    /// is not multiplied (`cycles` holds total busy cycles, not the
+    /// makespan).
+    pub total: Metrics,
+}
+
+impl GraphSchedule {
+    /// Serialized-over-parallel latency ratio (≥ 1).
+    pub fn speedup(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 1.0;
+        }
+        self.serialized_cycles as f64 / self.makespan_cycles as f64
+    }
+
+    /// Utilization of the whole bank over the makespan.
+    pub fn utilization(&self, cfg: &MultiArrayConfig) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.total.macs as f64 / (cfg.pe_count() as f64 * self.makespan_cycles as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::memory::MemoryAnalysis;
+
+    fn conv(name: &str, c_in: usize, c_out: usize) -> Layer {
+        Layer::conv(name, SpatialDims::square(8), c_in, c_out, 3, 1, 1, 1)
+    }
+
+    fn chain_net() -> Network {
+        Network::new(
+            "chain",
+            vec![conv("c1", 4, 8), conv("c2", 8, 8), conv("c3", 8, 16)],
+        )
+    }
+
+    /// c1 → c2 → c3 → add(c1, c3): the skip tensor is held across c2/c3.
+    fn skip_graph() -> NetworkGraph {
+        let nodes = vec![
+            GraphNode {
+                name: "c1".into(),
+                op: NodeOp::Layer(conv("c1", 4, 8)),
+                inputs: vec![],
+            },
+            GraphNode {
+                name: "c2".into(),
+                op: NodeOp::Layer(conv("c2", 8, 8)),
+                inputs: vec![NodeId(0)],
+            },
+            GraphNode {
+                name: "c3".into(),
+                op: NodeOp::Layer(conv("c3", 8, 8)),
+                inputs: vec![NodeId(1)],
+            },
+            GraphNode {
+                name: "add".into(),
+                op: NodeOp::Add,
+                inputs: vec![NodeId(0), NodeId(2)],
+            },
+        ];
+        NetworkGraph::new("skip", nodes).unwrap()
+    }
+
+    #[test]
+    fn chain_lowering_round_trips_and_matches_metrics() {
+        let net = chain_net();
+        let g = NetworkGraph::chain(&net);
+        assert!(g.is_chain());
+        assert_eq!(g.layer_count(), 3);
+        assert_eq!(g.junction_count(), 0);
+        assert_eq!(g.edge_count(), 2);
+        assert_eq!(g.to_network().layers, net.layers);
+        let cfg = ArrayConfig::new(8, 8);
+        assert_eq!(g.metrics(&cfg), net.metrics(&cfg));
+        assert_eq!(g.params(), net.params());
+        assert_eq!(g.macs(), net.macs());
+    }
+
+    #[test]
+    fn junction_shapes_propagate() {
+        let g = skip_graph();
+        assert!(!g.is_chain());
+        assert_eq!(g.junction_count(), 1);
+        // The add output matches its inputs: 8x8 spatial, 8 channels.
+        let s = g.out_shape(3);
+        assert_eq!(s.channels, 8);
+        assert_eq!(s.dims, SpatialDims::square(8));
+        assert_eq!(s.elements(), 8 * 8 * 8);
+        assert_eq!(s.bytes(8), 8 * 8 * 8);
+        assert_eq!(s.bytes(16), 2 * 8 * 8 * 8);
+        // Consumers: c1 feeds c2 and the add.
+        assert_eq!(g.consumers_of(0), &[1, 3]);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_graphs() {
+        let l = conv("c1", 4, 8);
+        // Forward reference.
+        assert!(NetworkGraph::new(
+            "bad",
+            vec![GraphNode {
+                name: "c1".into(),
+                op: NodeOp::Layer(l.clone()),
+                inputs: vec![NodeId(0)],
+            }]
+        )
+        .is_err());
+        // Junction with one input.
+        assert!(NetworkGraph::new(
+            "bad",
+            vec![
+                GraphNode {
+                    name: "c1".into(),
+                    op: NodeOp::Layer(l.clone()),
+                    inputs: vec![],
+                },
+                GraphNode {
+                    name: "j".into(),
+                    op: NodeOp::Add,
+                    inputs: vec![NodeId(0)],
+                },
+            ]
+        )
+        .is_err());
+        // Add with mismatched channels.
+        assert!(NetworkGraph::new(
+            "bad",
+            vec![
+                GraphNode {
+                    name: "c1".into(),
+                    op: NodeOp::Layer(conv("c1", 4, 8)),
+                    inputs: vec![],
+                },
+                GraphNode {
+                    name: "c2".into(),
+                    op: NodeOp::Layer(conv("c2", 8, 16)),
+                    inputs: vec![NodeId(0)],
+                },
+                GraphNode {
+                    name: "j".into(),
+                    op: NodeOp::Add,
+                    inputs: vec![NodeId(0), NodeId(1)],
+                },
+            ]
+        )
+        .is_err());
+        // Layer consuming the wrong channel count.
+        assert!(NetworkGraph::new(
+            "bad",
+            vec![
+                GraphNode {
+                    name: "c1".into(),
+                    op: NodeOp::Layer(conv("c1", 4, 8)),
+                    inputs: vec![],
+                },
+                GraphNode {
+                    name: "c2".into(),
+                    op: NodeOp::Layer(conv("c2", 16, 8)),
+                    inputs: vec![NodeId(0)],
+                },
+            ]
+        )
+        .is_err());
+        // Duplicate names.
+        assert!(NetworkGraph::new(
+            "bad",
+            vec![
+                GraphNode {
+                    name: "c1".into(),
+                    op: NodeOp::Layer(conv("c1", 4, 8)),
+                    inputs: vec![],
+                },
+                GraphNode {
+                    name: "c1".into(),
+                    op: NodeOp::Layer(conv("c1", 8, 8)),
+                    inputs: vec![NodeId(0)],
+                },
+            ]
+        )
+        .is_err());
+        // No layers at all.
+        assert!(NetworkGraph::new("bad", vec![]).is_err());
+    }
+
+    #[test]
+    fn chain_liveness_matches_the_linear_assumption() {
+        let net = chain_net();
+        let g = NetworkGraph::chain(&net);
+        let cfg = ArrayConfig::new(8, 8);
+        let live = g.liveness(&cfg);
+        let mem = MemoryAnalysis::of(&net, &cfg);
+        assert_eq!(live.peak_bytes, mem.peak_working_set_bytes);
+        assert_eq!(live.chain_peak_bytes, mem.peak_working_set_bytes);
+        assert_eq!(live.spilled_tensors, 0);
+        assert_eq!(live.edge_dram_words, 0);
+        for s in &live.steps {
+            assert_eq!(s.held_bytes, 0, "{}: chains hold nothing", s.name);
+        }
+        assert!((live.inflation() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skip_graph_holds_the_residual_live() {
+        // Hand-checked: c1's output is 8x8x8 = 512 elements; it feeds the
+        // residual add, so it is held at out_bits (32) = 2048 bytes while
+        // c2 and c3 execute (its last consumer is the add).
+        let g = skip_graph();
+        let cfg = ArrayConfig::new(8, 8);
+        let live = g.liveness(&cfg);
+        let skip_bytes = g.out_shape(0).bytes(cfg.out_bits);
+        assert_eq!(g.out_shape(0).elements(), 512);
+        assert_eq!(skip_bytes, 2048);
+        assert_eq!(live.steps[1].held_bytes, skip_bytes); // during c2
+        assert_eq!(live.steps[2].held_bytes, skip_bytes); // during c3
+        assert_eq!(live.steps[1].held_tensors, 1);
+        assert_eq!(live.steps[0].held_bytes, 0);
+        // The peak strictly exceeds the linear-chain estimate: the max-ws
+        // layer (c2 or c3, identical shapes) runs with the skip held.
+        let ws2 = ub_working_set_bytes(&conv("c2", 8, 8), &cfg);
+        assert_eq!(live.chain_peak_bytes, ws2);
+        assert_eq!(live.peak_bytes, ws2 + skip_bytes);
+        assert!(live.peak_bytes > live.chain_peak_bytes);
+        assert!(live.inflation() > 1.0);
+        assert_eq!(live.spilled_tensors, 0); // 24 MiB UB fits everything
+        // Tensor lifetimes: c1's output dies at the add (step 3).
+        assert_eq!(live.tensors[0].dies, 3);
+        assert_eq!(live.tensors[1].dies, 2);
+    }
+
+    #[test]
+    fn tiny_ub_forces_edge_spills() {
+        let g = skip_graph();
+        // A UB just large enough for the layers' own working sets but not
+        // the held skip tensor.
+        let cfg = ArrayConfig::new(8, 8);
+        let ws = ub_working_set_bytes(&conv("c2", 8, 8), &cfg);
+        let tight = ArrayConfig::new(8, 8).with_ub_bytes(ws as usize + 100);
+        let live = g.liveness(&tight);
+        assert_eq!(live.spilled_tensors, 1);
+        assert!(live.tensors[0].spilled);
+        // One store plus one load (a single remaining consumer, the add).
+        assert_eq!(live.edge_dram_words, 2 * g.out_shape(0).elements());
+        assert!(live.dram_energy() > 0.0);
+        // And the corrected energy strictly exceeds the on-chip figure.
+        let w = EnergyWeights::paper();
+        let base = g.metrics(&tight).energy(&w);
+        assert!(g.corrected_energy(&tight, &w) > base);
+    }
+
+    #[test]
+    fn chain_schedule_serializes_for_any_array_count() {
+        let g = NetworkGraph::chain(&chain_net());
+        let cache = EvalCache::new();
+        for arrays in [1usize, 2, 4] {
+            let cfg = MultiArrayConfig::new(arrays, ArrayConfig::new(8, 8));
+            let s = g.schedule(&cfg, &cache);
+            assert_eq!(s.makespan_cycles, s.serialized_cycles, "{arrays} arrays");
+            assert_eq!(s.makespan_cycles, s.critical_path_cycles);
+            assert!((s.speedup() - 1.0).abs() < 1e-12);
+            assert_eq!(s.assignments.len(), 3);
+        }
+    }
+
+    #[test]
+    fn diamond_schedules_branches_in_parallel() {
+        // src → (b1, b2) → concat: with two arrays the equal branches
+        // overlap completely.
+        let nodes = vec![
+            GraphNode {
+                name: "src".into(),
+                op: NodeOp::Layer(conv("src", 4, 8)),
+                inputs: vec![],
+            },
+            GraphNode {
+                name: "b1".into(),
+                op: NodeOp::Layer(conv("b1", 8, 8)),
+                inputs: vec![NodeId(0)],
+            },
+            GraphNode {
+                name: "b2".into(),
+                op: NodeOp::Layer(conv("b2", 8, 8)),
+                inputs: vec![NodeId(0)],
+            },
+            GraphNode {
+                name: "cat".into(),
+                op: NodeOp::Concat,
+                inputs: vec![NodeId(1), NodeId(2)],
+            },
+        ];
+        let g = NetworkGraph::new("diamond", nodes).unwrap();
+        let cache = EvalCache::new();
+        let cfg1 = MultiArrayConfig::new(1, ArrayConfig::new(8, 8));
+        let cfg2 = MultiArrayConfig::new(2, ArrayConfig::new(8, 8));
+        let s1 = g.schedule(&cfg1, &cache);
+        let s2 = g.schedule(&cfg2, &cache);
+        assert_eq!(s1.makespan_cycles, s1.serialized_cycles);
+        // Two arrays: src, then both branches concurrently.
+        let src = conv("src", 4, 8).metrics(&cfg2.array).cycles;
+        let branch = conv("b1", 8, 8).metrics(&cfg2.array).cycles;
+        assert_eq!(s2.makespan_cycles, src + branch);
+        assert_eq!(s2.critical_path_cycles, src + branch);
+        assert!(s2.makespan_cycles < s1.makespan_cycles);
+        // Movements are conserved: same totals whichever bank size.
+        assert_eq!(s1.total, s2.total);
+        assert!(s2.speedup() > 1.0);
+        assert!(s2.utilization(&cfg2) > 0.0 && s2.utilization(&cfg2) <= 1.0);
+        // The two branches landed on different arrays.
+        let arrays: std::collections::HashSet<usize> = s2
+            .assignments
+            .iter()
+            .filter(|a| a.name.starts_with('b'))
+            .map(|a| a.array)
+            .collect();
+        assert_eq!(arrays.len(), 2);
+    }
+
+    #[test]
+    fn schedule_never_beats_critical_path_or_exceeds_serial() {
+        let g = skip_graph();
+        let cache = EvalCache::new();
+        for arrays in [1usize, 2, 3, 8] {
+            let cfg = MultiArrayConfig::new(arrays, ArrayConfig::new(16, 8));
+            let s = g.schedule(&cfg, &cache);
+            assert!(s.makespan_cycles <= s.serialized_cycles);
+            assert!(s.makespan_cycles >= s.critical_path_cycles);
+        }
+    }
+
+    #[test]
+    fn graph_spec_json_round_trips() {
+        let g = skip_graph();
+        let spec = g.to_json_spec();
+        let back = NetworkGraph::from_json_spec(&spec).unwrap();
+        assert_eq!(
+            back.to_json_spec().to_string_compact(),
+            spec.to_string_compact()
+        );
+        assert_eq!(back.to_network().layers, g.to_network().layers);
+        let cfg = ArrayConfig::new(8, 8);
+        assert_eq!(back.metrics(&cfg), g.metrics(&cfg));
+        assert_eq!(
+            back.liveness(&cfg).peak_bytes,
+            g.liveness(&cfg).peak_bytes
+        );
+    }
+
+    #[test]
+    fn spec_without_edges_is_a_chain() {
+        let net = chain_net();
+        let g = NetworkGraph::from_json_spec(&net.to_json_spec()).unwrap();
+        assert!(g.is_chain());
+        assert_eq!(g.to_network().layers, net.layers);
+    }
+
+    #[test]
+    fn spec_json_rejects_malformed_graphs() {
+        for bad in [
+            // unknown edge endpoint
+            r#"{"name":"x","layers":[{"op":"linear","name":"fc","in_features":4,"out_features":2}],"edges":[["fc","ghost"]]}"#,
+            // self edge
+            r#"{"name":"x","layers":[{"op":"linear","name":"fc","in_features":4,"out_features":2}],"edges":[["fc","fc"]]}"#,
+            // cycle
+            r#"{"name":"x","layers":[{"op":"linear","name":"a","in_features":4,"out_features":4},{"op":"linear","name":"b","in_features":4,"out_features":4}],"edges":[["a","b"],["b","a"]]}"#,
+            // junction with a bogus op
+            r#"{"name":"x","layers":[{"op":"linear","name":"fc","in_features":4,"out_features":2}],"junctions":[{"name":"j","op":"mul"}],"edges":[]}"#,
+            // junctions without the edges wiring must be rejected, not
+            // silently dropped by the chain fallback
+            r#"{"name":"x","layers":[{"op":"linear","name":"fc","in_features":4,"out_features":2}],"junctions":[{"name":"j","op":"add"}]}"#,
+            // junction with a single input
+            r#"{"name":"x","layers":[{"op":"linear","name":"fc","in_features":4,"out_features":2}],"junctions":[{"name":"j","op":"add"}],"edges":[["fc","j"]]}"#,
+            // duplicate edge
+            r#"{"name":"x","layers":[{"op":"linear","name":"a","in_features":4,"out_features":4},{"op":"linear","name":"b","in_features":4,"out_features":4}],"edges":[["a","b"],["a","b"]]}"#,
+            // no layers
+            r#"{"name":"x","layers":[],"edges":[]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(NetworkGraph::from_json_spec(&v).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn with_batch_scales_every_layer_and_tensor() {
+        let g = skip_graph();
+        let b4 = g.with_batch(4).unwrap();
+        assert_eq!(b4.macs(), 4 * g.macs());
+        assert_eq!(b4.out_shape(0).elements(), 4 * g.out_shape(0).elements());
+        assert!(b4.with_batch(0).is_err());
+    }
+}

@@ -3,12 +3,15 @@
 //! `schedule` defines the tile schedule shared with the functional emulator
 //! (`crate::arch`); `gemm` turns a schedule into closed-form metrics;
 //! `layer` lowers convolution variants to GEMM operands; `network`
-//! aggregates layers; `workload` deduplicates a network into the GEMM-shape
-//! histogram every evaluating layer consumes (DESIGN.md §2); `bandwidth`
-//! derives byte-bandwidth requirements.
+//! aggregates layers; `graph` lifts networks to a connectivity-aware DAG
+//! IR with tensor liveness and branch-parallel scheduling (DESIGN.md §9);
+//! `workload` deduplicates a network into the GEMM-shape histogram every
+//! evaluating layer consumes (DESIGN.md §2); `bandwidth` derives
+//! byte-bandwidth requirements.
 
 pub mod bandwidth;
 pub mod gemm;
+pub mod graph;
 pub mod layer;
 pub mod memory;
 pub mod multi;
@@ -18,6 +21,10 @@ pub mod schedule;
 pub mod workload;
 
 pub use bandwidth::BandwidthReport;
+pub use graph::{
+    GraphLiveness, GraphNode, GraphSchedule, NetworkGraph, NodeId, NodeOp, ScheduledNode,
+    StepResidency, TensorLife, TensorShape,
+};
 pub use gemm::{
     gemm_metrics, os_metrics, ws_col_factors, ws_metrics, ws_metrics_from_factors, ws_metrics_ref,
     ws_row_factors, WsColClass, WsColFactors, WsRowFactors,

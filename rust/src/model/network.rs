@@ -13,7 +13,7 @@ use crate::util::json::Json;
 use std::collections::HashMap;
 
 /// A named DNN as the emulator sees it.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Network {
     pub name: String,
     pub layers: Vec<Layer>,

@@ -38,14 +38,23 @@ pub fn densenet(name: &str, growth: usize, block_layers: &[usize]) -> Network {
     Network::new(name.to_string(), s.layers)
 }
 
+/// The standard DenseNet-BC growth rate.
+pub const GROWTH: usize = 32;
+
+/// DenseNet-201's dense-block table.
+pub const DENSENET201_BLOCKS: [usize; 4] = [6, 12, 48, 32];
+
+/// DenseNet-121's dense-block table.
+pub const DENSENET121_BLOCKS: [usize; 4] = [6, 12, 24, 16];
+
 /// DenseNet-201 (growth 32, blocks 6/12/48/32) — the dense representative.
 pub fn densenet201() -> Network {
-    densenet("densenet201", 32, &[6, 12, 48, 32])
+    densenet("densenet201", GROWTH, &DENSENET201_BLOCKS)
 }
 
 /// DenseNet-121 for ablations.
 pub fn densenet121() -> Network {
-    densenet("densenet121", 32, &[6, 12, 24, 16])
+    densenet("densenet121", GROWTH, &DENSENET121_BLOCKS)
 }
 
 #[cfg(test)]

@@ -1,0 +1,394 @@
+//! DAG forms of the zoo networks (DESIGN.md §9).
+//!
+//! The paper's "advanced connectivity" families — residual (ResNet /
+//! ResNeXt), dense (DenseNet) and multi-branch (GoogLeNet / BN-Inception)
+//! — get real [`NetworkGraph`]s with `Add`/`Concat` junction nodes; every
+//! other registry model lowers to the trivial chain. The graph builders
+//! re-walk the same block structure as the flat `Vec<Layer>` builders and
+//! wire connectivity *over the exact layers those builders produce*, so
+//! `build_graph(name).to_network()` reproduces `build(name)` layer for
+//! layer (tested across the registry) and the metrics stay byte-identical.
+
+use crate::model::graph::{GraphNode, NetworkGraph, NodeId, NodeOp};
+use crate::model::layer::Layer;
+use crate::model::network::Network;
+use crate::nets::densenet::{DENSENET121_BLOCKS, DENSENET201_BLOCKS, GROWTH};
+use crate::nets::resnet::{BottleneckSpec, RESNET34_BLOCKS};
+
+/// Construct the DAG form of a registry network. Chain-only architectures
+/// (AlexNet, VGG, MobileNet, EfficientNet, the transformers, CapsNet)
+/// return the degenerate linear lowering; returns `None` for unknown
+/// names.
+pub fn build_graph(name: &str) -> Option<NetworkGraph> {
+    Some(match name {
+        "resnet34" => basic_graph("resnet34", RESNET34_BLOCKS),
+        "resnet50" => bottleneck_graph(&BottleneckSpec::resnet50()),
+        "resnet152" => bottleneck_graph(&BottleneckSpec::resnet152()),
+        "resnext152" => bottleneck_graph(&BottleneckSpec::resnext152()),
+        "densenet121" => densenet_graph("densenet121", GROWTH, &DENSENET121_BLOCKS),
+        "densenet201" => densenet_graph("densenet201", GROWTH, &DENSENET201_BLOCKS),
+        "googlenet" => googlenet_graph(),
+        "bninception" => bn_inception_graph(),
+        other => NetworkGraph::chain(&crate::nets::build(other)?),
+    })
+}
+
+/// Wires connectivity over the layers of an already-built chain network,
+/// consuming them in push order — a graph builder re-walks the same loop
+/// structure as its `Vec<Layer>` builder, so the lowered layer list is
+/// identical by construction.
+struct Assembler {
+    layers: std::vec::IntoIter<Layer>,
+    nodes: Vec<GraphNode>,
+}
+
+impl Assembler {
+    fn new(net: Network) -> Assembler {
+        Assembler {
+            layers: net.layers.into_iter(),
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Append the next chain layer as a node reading `input` (`None` =
+    /// the network input).
+    fn layer(&mut self, input: Option<NodeId>) -> NodeId {
+        let l = self
+            .layers
+            .next()
+            .expect("graph builder consumed more layers than the chain builder produced");
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(GraphNode {
+            name: l.name.clone(),
+            op: NodeOp::Layer(l),
+            inputs: input.into_iter().collect(),
+        });
+        id
+    }
+
+    fn junction(&mut self, name: String, op: NodeOp, inputs: Vec<NodeId>) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(GraphNode { name, op, inputs });
+        id
+    }
+
+    fn add(&mut self, name: String, inputs: Vec<NodeId>) -> NodeId {
+        self.junction(name, NodeOp::Add, inputs)
+    }
+
+    fn concat(&mut self, name: String, inputs: Vec<NodeId>) -> NodeId {
+        self.junction(name, NodeOp::Concat, inputs)
+    }
+
+    fn finish(mut self, name: &str) -> NetworkGraph {
+        assert!(
+            self.layers.next().is_none(),
+            "graph builder left chain layers unwired"
+        );
+        NetworkGraph::new(name, self.nodes).expect("zoo graph wiring is valid")
+    }
+}
+
+/// Bottleneck ResNet/ResNeXt DAG: per block, a projection (first block of
+/// each stage) or identity skip joins the 1x1–3x3–1x1 chain at an `Add`.
+fn bottleneck_graph(spec: &BottleneckSpec) -> NetworkGraph {
+    let net = crate::nets::resnet::bottleneck_net(spec);
+    let name = net.name.clone();
+    let mut a = Assembler::new(net);
+    let mut cursor = a.layer(None); // stem conv (max-pool elided)
+    for (stage, &blocks) in spec.stage_blocks.iter().enumerate() {
+        for b in 0..blocks {
+            let block_in = cursor;
+            let skip = if b == 0 {
+                a.layer(Some(block_in)) // projection shortcut
+            } else {
+                block_in // identity skip
+            };
+            let x = a.layer(Some(block_in)); // 1x1 reduce
+            let x = a.layer(Some(x)); // 3x3 (grouped for ResNeXt)
+            let x = a.layer(Some(x)); // 1x1 expand
+            cursor = a.add(format!("{}.s{}b{}.add", name, stage + 1, b), vec![skip, x]);
+        }
+    }
+    a.layer(Some(cursor)); // classifier (global pool elided)
+    a.finish(&name)
+}
+
+/// Basic-block ResNet DAG (ResNet-18/34 family): two 3x3 convs per block,
+/// projection only where geometry or channels change.
+fn basic_graph(name: &str, stage_blocks: [usize; 4]) -> NetworkGraph {
+    let net = crate::nets::resnet::basic_net(name, stage_blocks);
+    let mut a = Assembler::new(net);
+    let mut cursor = a.layer(None); // stem
+    let mut in_c = 64usize;
+    for (stage, &blocks) in stage_blocks.iter().enumerate() {
+        let out_c = 64 << stage;
+        for b in 0..blocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let block_in = cursor;
+            let skip = if b == 0 && (stride != 1 || in_c != out_c) {
+                a.layer(Some(block_in))
+            } else {
+                block_in
+            };
+            let x = a.layer(Some(block_in));
+            let x = a.layer(Some(x));
+            cursor = a.add(format!("{}.s{}b{}.add", name, stage + 1, b), vec![skip, x]);
+            in_c = out_c;
+        }
+    }
+    a.layer(Some(cursor));
+    a.finish(name)
+}
+
+/// DenseNet-BC DAG with *faithful* dense connectivity: every dense
+/// layer's bottleneck reads the concatenation of the block input and all
+/// previous growth outputs, so each growth tensor stays live until the
+/// block's final concatenation — the structure that makes DenseNet's
+/// memory behaviour interesting.
+fn densenet_graph(name: &str, growth: usize, block_layers: &[usize]) -> NetworkGraph {
+    let net = crate::nets::densenet::densenet(name, growth, block_layers);
+    let mut a = Assembler::new(net);
+    let mut block_in = a.layer(None); // stem conv (max-pool elided)
+    for (bi, &layers) in block_layers.iter().enumerate() {
+        let mut feats: Vec<NodeId> = vec![block_in];
+        for li in 0..layers {
+            let input = if feats.len() == 1 {
+                feats[0]
+            } else {
+                a.concat(
+                    format!("{}.b{}l{}.cat", name, bi + 1, li + 1),
+                    feats.clone(),
+                )
+            };
+            let b = a.layer(Some(input)); // 1x1 bottleneck over the concat
+            let g = a.layer(Some(b)); // 3x3 to `growth`
+            feats.push(g);
+        }
+        let out = a.concat(format!("{}.b{}.out.cat", name, bi + 1), feats);
+        block_in = if bi + 1 < block_layers.len() {
+            a.layer(Some(out)) // transition 1x1 (avg-pool elided)
+        } else {
+            out
+        };
+    }
+    a.layer(Some(block_in)); // classifier
+    a.finish(name)
+}
+
+/// GoogLeNet DAG: each inception module fans the previous concat into four
+/// branches (1x1 / 3x3 / 5x5 / pool-proj) merged by a `Concat`.
+fn googlenet_graph() -> NetworkGraph {
+    let net = crate::nets::inception::googlenet();
+    let mut a = Assembler::new(net);
+    let c = a.layer(None);
+    let c = a.layer(Some(c));
+    let mut cursor = a.layer(Some(c));
+    for tag in ["3a", "3b", "4a", "4b", "4c", "4d", "4e", "5a", "5b"] {
+        let b1 = a.layer(Some(cursor));
+        let b3 = a.layer(Some(cursor));
+        let b3 = a.layer(Some(b3));
+        let b5 = a.layer(Some(cursor));
+        let b5 = a.layer(Some(b5));
+        let bp = a.layer(Some(cursor)); // pool (elided) + 1x1 projection
+        cursor = a.concat(format!("googlenet.{tag}.cat"), vec![b1, b3, b5, bp]);
+    }
+    a.layer(Some(cursor)); // classifier
+    a.finish("googlenet")
+}
+
+/// BN-Inception DAG. Regular modules have four branches (1x1, 3x3,
+/// double-3x3, pool-proj); the stride-2 reduction modules drop the 1x1
+/// branch and pass the *unprojected* pooled input straight into the
+/// concat — a feature-map tensor the flat model cannot represent.
+fn bn_inception_graph() -> NetworkGraph {
+    let net = crate::nets::inception::bn_inception();
+    let mut a = Assembler::new(net);
+    let c = a.layer(None);
+    let c = a.layer(Some(c));
+    let mut cursor = a.layer(Some(c));
+    let modules: [(&str, bool); 10] = [
+        ("3a", false),
+        ("3b", false),
+        ("3c", true),
+        ("4a", false),
+        ("4b", false),
+        ("4c", false),
+        ("4d", false),
+        ("4e", true),
+        ("5a", false),
+        ("5b", false),
+    ];
+    for (tag, reduce) in modules {
+        cursor = if reduce {
+            let b3 = a.layer(Some(cursor));
+            let b3 = a.layer(Some(b3));
+            let bd = a.layer(Some(cursor));
+            let bd = a.layer(Some(bd));
+            let bd = a.layer(Some(bd));
+            // The max-pool branch passes the module input through.
+            a.concat(format!("bninception.{tag}.cat"), vec![b3, bd, cursor])
+        } else {
+            let b1 = a.layer(Some(cursor));
+            let b3 = a.layer(Some(cursor));
+            let b3 = a.layer(Some(b3));
+            let bd = a.layer(Some(cursor));
+            let bd = a.layer(Some(bd));
+            let bd = a.layer(Some(bd));
+            let bp = a.layer(Some(cursor));
+            a.concat(format!("bninception.{tag}.cat"), vec![b1, b3, bd, bp])
+        };
+    }
+    a.layer(Some(cursor)); // classifier
+    a.finish("bninception")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayConfig;
+    use crate::model::memory::MemoryAnalysis;
+    use crate::model::multi::MultiArrayConfig;
+    use crate::model::workload::EvalCache;
+    use crate::nets::{build, ALL_MODELS};
+
+    #[test]
+    fn every_model_has_a_graph_whose_lowering_is_exact() {
+        for name in ALL_MODELS {
+            let g = build_graph(name).unwrap_or_else(|| panic!("{name} missing"));
+            let flat = build(name).unwrap();
+            assert_eq!(g.name, name);
+            assert_eq!(g.to_network().layers, flat.layers, "{name} layer parity");
+            assert_eq!(g.params(), flat.params(), "{name} params");
+            assert_eq!(g.macs(), flat.macs(), "{name} macs");
+        }
+        assert!(build_graph("lenet-9000").is_none());
+    }
+
+    #[test]
+    fn graph_metrics_are_byte_identical_to_the_flat_path() {
+        let cfg = ArrayConfig::new(96, 48);
+        for name in ALL_MODELS {
+            let g = build_graph(name).unwrap();
+            let flat = build(name).unwrap();
+            assert_eq!(g.metrics(&cfg), flat.metrics(&cfg), "{name}");
+        }
+    }
+
+    #[test]
+    fn connectivity_families_have_their_junction_counts() {
+        for (name, junctions) in [
+            ("resnet34", 16),
+            ("resnet50", 16),
+            ("resnet152", 50),
+            ("resnext152", 50),
+            ("densenet121", 58),
+            ("densenet201", 98),
+            ("googlenet", 9),
+            ("bninception", 10),
+        ] {
+            let g = build_graph(name).unwrap();
+            assert_eq!(g.junction_count(), junctions, "{name}");
+            assert!(!g.is_chain(), "{name} should be a DAG");
+        }
+        for name in ["alexnet", "vgg16", "mobilenetv3l", "efficientnetb0", "bertbase-s128"] {
+            assert!(
+                build_graph(name).unwrap().is_chain(),
+                "{name} should lower to a chain"
+            );
+        }
+    }
+
+    #[test]
+    fn resnet50_peak_residency_exceeds_the_linear_estimate() {
+        // Acceptance: skip tensors held across bottleneck blocks push the
+        // true peak strictly above the per-layer maximum.
+        let g = build_graph("resnet50").unwrap();
+        let cfg = ArrayConfig::new(128, 128);
+        let live = g.liveness(&cfg);
+        let linear = MemoryAnalysis::of(&build("resnet50").unwrap(), &cfg);
+        assert_eq!(live.chain_peak_bytes, linear.peak_working_set_bytes);
+        assert!(
+            live.peak_bytes > linear.peak_working_set_bytes,
+            "graph peak {} should exceed linear estimate {}",
+            live.peak_bytes,
+            linear.peak_working_set_bytes
+        );
+    }
+
+    #[test]
+    fn densenet_keeps_a_whole_block_of_growth_tensors_live() {
+        // Dense connectivity holds many small tensors at once (a block's
+        // growth outputs plus its input); residual nets hold one skip.
+        let cfg = ArrayConfig::new(128, 128);
+        let dense = build_graph("densenet121").unwrap().liveness(&cfg);
+        let res = build_graph("resnet50").unwrap().liveness(&cfg);
+        let max_held = |l: &crate::model::graph::GraphLiveness| {
+            l.steps.iter().map(|s| s.held_tensors).max().unwrap()
+        };
+        // Block 3 has 24 dense layers: its tail holds the block input plus
+        // >20 growth tensors; ResNet never holds more than a couple.
+        assert!(max_held(&dense) >= 20, "densenet held {}", max_held(&dense));
+        assert!(max_held(&res) <= 4, "resnet held {}", max_held(&res));
+        // And the dense peak strictly exceeds the linear-chain estimate.
+        assert!(dense.peak_bytes > dense.chain_peak_bytes);
+    }
+
+    #[test]
+    fn zoo_makespans_never_exceed_serialized() {
+        // Acceptance: branch-parallel multi-array makespan ≤ serialized on
+        // every zoo net, with equality on pure chains (and on one array).
+        let cache = EvalCache::new();
+        for name in ALL_MODELS {
+            let g = build_graph(name).unwrap();
+            for arrays in [1usize, 2, 4] {
+                let cfg = MultiArrayConfig::new(arrays, ArrayConfig::new(32, 32));
+                let s = g.schedule(&cfg, &cache);
+                assert!(
+                    s.makespan_cycles <= s.serialized_cycles,
+                    "{name} on {arrays} arrays: {} > {}",
+                    s.makespan_cycles,
+                    s.serialized_cycles
+                );
+                assert!(
+                    s.makespan_cycles >= s.critical_path_cycles,
+                    "{name} on {arrays} arrays beats its critical path"
+                );
+                if arrays == 1 || g.is_chain() {
+                    assert_eq!(
+                        s.makespan_cycles, s.serialized_cycles,
+                        "{name} on {arrays} arrays"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn branch_parallelism_pays_off_on_inception() {
+        // GoogLeNet's four-way branches actually overlap on a bank.
+        let g = build_graph("googlenet").unwrap();
+        let cache = EvalCache::new();
+        let s1 = g.schedule(&MultiArrayConfig::new(1, ArrayConfig::new(32, 32)), &cache);
+        let s4 = g.schedule(&MultiArrayConfig::new(4, ArrayConfig::new(32, 32)), &cache);
+        assert!(s4.makespan_cycles < s1.makespan_cycles);
+        assert!(s4.speedup() > 1.0);
+        // Movements are conserved — no weight duplication.
+        assert_eq!(s1.total, s4.total);
+    }
+
+    #[test]
+    fn dag_specs_round_trip_through_json() {
+        for name in ["resnet50", "densenet121", "googlenet", "bninception", "alexnet"] {
+            let g = build_graph(name).unwrap();
+            let spec = g.to_json_spec();
+            let back = NetworkGraph::from_json_spec(&spec).unwrap();
+            assert_eq!(
+                back.to_json_spec().to_string_compact(),
+                spec.to_string_compact(),
+                "{name}"
+            );
+            assert_eq!(back.to_network().layers, g.to_network().layers, "{name}");
+        }
+    }
+}

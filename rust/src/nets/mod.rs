@@ -13,6 +13,7 @@ pub mod alexnet;
 pub mod capsnet;
 pub mod densenet;
 pub mod efficientnet;
+pub mod graph;
 pub mod inception;
 pub mod mobilenet;
 pub mod ops;
@@ -21,4 +22,5 @@ pub mod transformer;
 pub mod vgg;
 pub mod zoo;
 
+pub use graph::build_graph;
 pub use zoo::{build, paper_models, ALL_MODELS, PAPER_MODELS};

@@ -21,6 +21,41 @@ pub struct BottleneckSpec {
     pub base_width: usize,
 }
 
+impl BottleneckSpec {
+    /// ResNet-50 (blocks [3, 4, 6, 3]).
+    pub fn resnet50() -> BottleneckSpec {
+        BottleneckSpec {
+            name: "resnet50".into(),
+            stage_blocks: [3, 4, 6, 3],
+            cardinality: 1,
+            base_width: 64,
+        }
+    }
+
+    /// ResNet-152 (blocks [3, 8, 36, 3]) — the paper's case study.
+    pub fn resnet152() -> BottleneckSpec {
+        BottleneckSpec {
+            name: "resnet152".into(),
+            stage_blocks: [3, 8, 36, 3],
+            cardinality: 1,
+            base_width: 64,
+        }
+    }
+
+    /// ResNeXt-152 32x4d — the paper's grouped representative.
+    pub fn resnext152() -> BottleneckSpec {
+        BottleneckSpec {
+            name: "resnext152".into(),
+            stage_blocks: [3, 8, 36, 3],
+            cardinality: 32,
+            base_width: 128,
+        }
+    }
+}
+
+/// ResNet-34's basic-block stage table.
+pub const RESNET34_BLOCKS: [usize; 4] = [3, 4, 6, 3];
+
 /// Build a bottleneck network over 224x224 input.
 pub fn bottleneck_net(spec: &BottleneckSpec) -> Network {
     let mut s = Stack::new(spec.name.clone(), SpatialDims::square(224), 3);
@@ -95,38 +130,23 @@ pub fn basic_net(name: &str, stage_blocks: [usize; 4]) -> Network {
 
 /// ResNet-34 (basic blocks [3, 4, 6, 3]).
 pub fn resnet34() -> Network {
-    basic_net("resnet34", [3, 4, 6, 3])
+    basic_net("resnet34", RESNET34_BLOCKS)
 }
 
 /// ResNet-152: the paper's case-study model (Section 4.1).
 pub fn resnet152() -> Network {
-    bottleneck_net(&BottleneckSpec {
-        name: "resnet152".into(),
-        stage_blocks: [3, 8, 36, 3],
-        cardinality: 1,
-        base_width: 64,
-    })
+    bottleneck_net(&BottleneckSpec::resnet152())
 }
 
 /// ResNet-50 (used by ablations; same family).
 pub fn resnet50() -> Network {
-    bottleneck_net(&BottleneckSpec {
-        name: "resnet50".into(),
-        stage_blocks: [3, 4, 6, 3],
-        cardinality: 1,
-        base_width: 64,
-    })
+    bottleneck_net(&BottleneckSpec::resnet50())
 }
 
 /// ResNeXt-152 with cardinality 32 (32x4d widths), the paper's grouped
 /// representative.
 pub fn resnext152() -> Network {
-    bottleneck_net(&BottleneckSpec {
-        name: "resnext152".into(),
-        stage_blocks: [3, 8, 36, 3],
-        cardinality: 32,
-        base_width: 128,
-    })
+    bottleneck_net(&BottleneckSpec::resnext152())
 }
 
 #[cfg(test)]

@@ -117,6 +117,19 @@ mod tests {
     }
 
     #[test]
+    fn spec_json_round_trips_exactly_for_every_model() {
+        // Stronger than the aggregate check above: the round trip must
+        // reproduce every network *structurally* — names, layer order,
+        // kinds, geometry, batch — across the whole registry.
+        for name in ALL_MODELS {
+            let orig = build(name).unwrap();
+            let back = crate::model::network::Network::from_json_spec(&orig.to_json_spec())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(back, orig, "{name} round trip is not exact");
+        }
+    }
+
+    #[test]
     fn paper_set_is_nine() {
         let nets = paper_models();
         assert_eq!(nets.len(), 9);

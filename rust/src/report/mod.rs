@@ -7,8 +7,9 @@ pub mod table;
 
 pub use figures::{
     fig2_heatmaps, fig2_heatmaps_for, fig3_pareto, fig3_pareto_for, fig4_heatmaps, fig5_robust,
-    fig6_equal_pe, write_fig2, write_fig3, write_fig4, write_fig5, write_fig6, Fig2Data,
-    Fig3Data, Fig5Data, Fig6Data, FigureContext,
+    fig6_equal_pe, fig7_liveness_energy, write_fig2, write_fig3, write_fig4, write_fig5,
+    write_fig6, write_fig7, write_graph_liveness, Fig2Data, Fig3Data, Fig5Data, Fig6Data,
+    Fig7Row, FigureContext,
 };
 pub use heatmap::Heatmap;
 pub use table::{kv_block, pareto_csv, pareto_table};

@@ -385,3 +385,107 @@ fn network_spec_export_roundtrips_through_registration() {
     let zoo = engine.eval(&EvalRequest::new("alexnet", cfg)).unwrap();
     assert_eq!(mine.total(), zoo.total());
 }
+
+/// TINY_SPEC's conv stack rewired as a residual block: c1 feeds both c2
+/// and an add junction that c2's output also reaches.
+const TINY_GRAPH_SPEC: &str = r#"{
+  "name": "tinyskip",
+  "layers": [
+    {"op": "conv2d", "name": "c1", "input": {"h": 16, "w": 16},
+     "c_in": 3, "c_out": 8, "kernel": 3, "stride": 1, "padding": 1},
+    {"op": "conv2d", "name": "c2", "input": {"h": 16, "w": 16},
+     "c_in": 8, "c_out": 8, "kernel": 3, "padding": 1},
+    {"op": "linear", "name": "fc", "in_features": 2048, "out_features": 10}
+  ],
+  "junctions": [{"name": "res", "op": "add"}],
+  "edges": [["c1", "c2"], ["c1", "res"], ["c2", "res"], ["res", "fc"]]
+}"#;
+
+#[test]
+fn graph_requests_cover_zoo_and_registered_dags() {
+    use camuy::api::GraphRequest;
+
+    let engine = Engine::new();
+    let cfg = ArrayConfig::new(64, 64);
+
+    // Zoo DAG: the graph metrics equal the flat eval byte for byte.
+    let resp = engine
+        .graph(&GraphRequest::new("resnet50", cfg.clone()))
+        .unwrap();
+    assert!(!resp.is_chain);
+    assert_eq!(resp.junctions, 16);
+    let flat = engine
+        .eval(&EvalRequest::new("resnet50", cfg.clone()))
+        .unwrap();
+    assert_eq!(&resp.metrics, flat.total());
+    assert!(resp.liveness.peak_bytes > resp.liveness.chain_peak_bytes);
+    assert_eq!(resp.schedule.makespan_cycles, resp.schedule.serialized_cycles);
+
+    // Branch parallelism: four arrays beat one on a DAG, and the bank's
+    // makespan never exceeds the serialized baseline.
+    let mut par = GraphRequest::new("resnet50", cfg.clone());
+    par.arrays = 4;
+    let par = engine.graph(&par).unwrap();
+    assert!(par.schedule.makespan_cycles <= par.schedule.serialized_cycles);
+    assert!(par.schedule.makespan_cycles >= par.schedule.critical_path_cycles);
+
+    // A registered graph spec resolves in DAG form…
+    engine.register_network_str(TINY_GRAPH_SPEC).unwrap();
+    let tiny = engine
+        .graph(&GraphRequest::new("tinyskip", cfg.clone()))
+        .unwrap();
+    assert!(!tiny.is_chain);
+    assert_eq!(tiny.junctions, 1);
+    assert_eq!(tiny.layers, 3);
+    // …and its chain lowering serves plain eval requests.
+    assert!(engine.eval(&EvalRequest::new("tinyskip", cfg.clone())).is_ok());
+
+    // Unknown networks surface the typed error.
+    match engine.graph(&GraphRequest::new("lenet-9000", cfg)) {
+        Err(ApiError::UnknownNetwork { name }) => assert_eq!(name, "lenet-9000"),
+        other => panic!("expected UnknownNetwork, got {other:?}"),
+    }
+}
+
+#[test]
+fn serve_answers_graph_requests() {
+    let engine = Engine::new();
+    let input = concat!(
+        "{\"id\":1,\"type\":\"graph\",\"net\":\"googlenet\",\"arrays\":4,",
+        "\"config\":{\"height\":32,\"width\":32}}\n",
+        "{\"id\":2,\"type\":\"memory\",\"net\":\"resnet50\",\"graph\":true}\n",
+        "{\"id\":3,\"type\":\"graph\",\"net\":\"lenet-9000\"}\n",
+    );
+    let resps = serve_str(&engine, input, &ServeOptions::default());
+    assert_eq!(resps.len(), 3);
+
+    assert_eq!(resps[0].get("ok").unwrap().as_bool(), Some(true));
+    let g = resps[0].get("result").unwrap();
+    assert_eq!(g.get("junctions").unwrap().as_usize(), Some(9));
+    assert_eq!(g.get("is_chain").unwrap().as_bool(), Some(false));
+    let sched = g.get("schedule").unwrap();
+    let makespan = sched.get("makespan_cycles").unwrap().as_f64().unwrap();
+    let serial = sched.get("serialized_cycles").unwrap().as_f64().unwrap();
+    assert!(makespan < serial, "branches should overlap on 4 arrays");
+    let live = g.get("liveness").unwrap();
+    assert!(live.get("peak_residency_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(live.get("top_steps").unwrap().as_arr().unwrap().len(), 10);
+
+    assert_eq!(resps[1].get("ok").unwrap().as_bool(), Some(true));
+    let mem = resps[1].get("result").unwrap();
+    let mlive = mem.get("liveness").expect("liveness attached when graph:true");
+    let peak = mlive.get("peak_residency_bytes").unwrap().as_f64().unwrap();
+    let chain = mlive.get("chain_peak_bytes").unwrap().as_f64().unwrap();
+    assert!(peak > chain, "resnet50 holds skip tensors live");
+
+    assert_eq!(resps[2].get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(
+        resps[2]
+            .get("error")
+            .unwrap()
+            .get("kind")
+            .unwrap()
+            .as_str(),
+        Some("unknown_network")
+    );
+}

@@ -122,6 +122,7 @@ fn figures_produces_the_full_set_on_smoke_grid() {
         "fig4_all.txt",
         "fig5_robust_pareto.csv",
         "fig6_equal_pe.csv",
+        "fig7_liveness_energy.csv",
     ] {
         assert!(out.join(f).exists(), "{f} missing");
     }
@@ -132,7 +133,29 @@ fn figures_produces_the_full_set_on_smoke_grid() {
 fn memory_reports_spills() {
     assert_eq!(run(&["memory", "--net", "vgg16", "--quiet"]), 0);
     assert_eq!(run(&["memory", "--net", "resnet152", "--quiet"]), 0);
+    assert_eq!(run(&["memory", "--net", "resnet152", "--graph", "--quiet"]), 0);
     assert_eq!(run(&["memory", "--quiet"]), 1); // --net required
+}
+
+#[test]
+fn graph_reports_connectivity() {
+    assert_eq!(run(&["graph", "--net", "resnet50", "--quiet"]), 0);
+    assert_eq!(
+        run(&["graph", "--net", "googlenet", "--arrays", "4", "--json", "--quiet"]),
+        0
+    );
+    assert_eq!(run(&["graph", "--net", "alexnet", "--batch", "2", "--quiet"]), 0);
+    assert_eq!(run(&["graph", "--net", "lenet-9000", "--quiet"]), 1);
+    assert_eq!(run(&["graph", "--quiet"]), 1); // --net required
+    let out = tmp("graph");
+    assert_eq!(
+        run(&[
+            "graph", "--net", "densenet121", "--out", out.to_str().unwrap(), "--quiet"
+        ]),
+        0
+    );
+    assert!(out.join("graph_densenet121.liveness.csv").exists());
+    let _ = std::fs::remove_dir_all(&out);
 }
 
 #[test]

@@ -378,6 +378,102 @@ fn shape_major_sweep_equals_config_major_on_random_networks() {
 }
 
 #[test]
+fn shape_major_sweep_equals_config_major_on_os_dataflow() {
+    // The WS path has a factored closed form the shape-major core caches;
+    // output-stationary configs take the per-shape fallback. Force *every*
+    // config onto the OS path (`os_metrics` is CLI-reachable via
+    // `--dataflow os`) and demand byte-identical agreement anyway.
+    check(150, 0x05DA_7A0, gen_sweep_case, |case| {
+        let os_configs: Vec<ArrayConfig> = case
+            .configs
+            .iter()
+            .map(|c| c.clone().with_dataflow(Dataflow::OutputStationary))
+            .collect();
+        let workload = Workload::of(&case.net);
+        let weights = EnergyWeights::paper();
+        let fast = sweep_workload(&workload, &os_configs, &weights, case.threads);
+        let naive = sweep_workload_config_major(&workload, &os_configs, &weights, case.threads);
+        if fast.len() != naive.len() || fast.len() != os_configs.len() {
+            return Err("point count mismatch".into());
+        }
+        for (i, (a, b)) in fast.iter().zip(&naive).enumerate() {
+            let cfg = &os_configs[i];
+            if a.metrics != b.metrics {
+                return Err(format!(
+                    "OS metrics diverge at {cfg}: shape-major {:?} != config-major {:?}",
+                    a.metrics, b.metrics
+                ));
+            }
+            if a.energy != b.energy || a.utilization != b.utilization {
+                return Err(format!("OS derived objectives diverge at {cfg}"));
+            }
+            // Both must equal the direct per-shape OS evaluation.
+            let direct: Metrics = workload
+                .shapes
+                .iter()
+                .map(|&(shape, mult)| os_metrics(shape, cfg) * mult)
+                .sum();
+            if a.metrics != direct {
+                return Err(format!("sweep point != direct os_metrics sum at {cfg}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn graph_chain_lowering_is_byte_identical_on_random_networks() {
+    // The DAG IR's degenerate chain lowering must change nothing: metrics,
+    // liveness peak (= the linear-chain memory estimate) and the
+    // branch-parallel schedule (= full serialization) all reduce to the
+    // flat per-layer model exactly.
+    use camuy::model::graph::NetworkGraph;
+    use camuy::model::memory::MemoryAnalysis;
+    use camuy::model::multi::MultiArrayConfig;
+    use camuy::model::workload::EvalCache;
+
+    check(60, 0x6EA9_C4A1, gen_sweep_case, |case| {
+        let g = NetworkGraph::chain(&case.net);
+        if !g.is_chain() {
+            return Err("chain lowering is not a chain".into());
+        }
+        if g.to_network().layers != case.net.layers {
+            return Err("chain lowering reorders layers".into());
+        }
+        for cfg in &case.configs {
+            if g.metrics(cfg) != case.net.metrics(cfg) {
+                return Err(format!("graph metrics diverge at {cfg}"));
+            }
+        }
+        let cfg = &case.configs[0];
+        let live = g.liveness(cfg);
+        let mem = MemoryAnalysis::of(&case.net, cfg);
+        if live.peak_bytes != mem.peak_working_set_bytes
+            || live.chain_peak_bytes != mem.peak_working_set_bytes
+        {
+            return Err(format!(
+                "chain liveness peak {} != linear estimate {}",
+                live.peak_bytes, mem.peak_working_set_bytes
+            ));
+        }
+        let cache = EvalCache::new();
+        for arrays in [1usize, 2, 4] {
+            let s = g.schedule(&MultiArrayConfig::new(arrays, cfg.clone()), &cache);
+            if s.makespan_cycles != s.serialized_cycles {
+                return Err(format!(
+                    "chain schedule on {arrays} arrays: makespan {} != serialized {}",
+                    s.makespan_cycles, s.serialized_cycles
+                ));
+            }
+            if s.total != case.net.metrics(cfg) {
+                return Err("scheduled totals diverge from the flat metrics".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn workload_eval_equals_layer_serialized_network_metrics() {
     check(150, 0xDE0D_1, gen_sweep_case, |case| {
         let workload = Workload::of(&case.net);
