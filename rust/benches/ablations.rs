@@ -55,7 +55,7 @@ fn main() {
         ("dally14nm", EnergyWeights::dally_14nm()),
     ] {
         let sweep = sweep_network(&net, &cfgs, &w, camuy::sweep::runner::default_threads());
-        let best = sweep.argmin(|p| p.energy);
+        let best = sweep.argmin(|p| p.energy).expect("non-empty sweep");
         println!(
             "   {:<10} best (h, w) = ({:>3}, {:>3}), E {:.4e}",
             label, best.height, best.width, best.energy

@@ -1,10 +1,12 @@
 //! Serving-path benchmarks: the request throughput `camuy serve` sees
 //! through the `api::Engine` — cold engine vs memo-hot engine vs the
-//! batched shape-major dispatch path — emitted machine-readably to
-//! `BENCH_api.json` (override with `CAMUY_BENCH_API_OUT`) so the serving
-//! trajectory is tracked PR over PR alongside `BENCH_sweep.json`.
+//! batched segmented dispatch path, plus repeated sweep requests with and
+//! without the engine-level plan cache (DESIGN.md §10) — emitted
+//! machine-readably to `BENCH_api.json` (override with
+//! `CAMUY_BENCH_API_OUT`) so the serving trajectory is tracked PR over PR
+//! alongside `BENCH_sweep.json`.
 
-use camuy::api::{Engine, EvalRequest};
+use camuy::api::{Engine, EvalRequest, SweepRequest, SweepSpec};
 use camuy::config::ArrayConfig;
 use camuy::sweep::runner::default_threads;
 use camuy::util::bench::{bench, throughput, BenchOpts, BenchResult};
@@ -65,12 +67,50 @@ fn main() {
         warm_engine.cache().misses(),
     );
 
+    // --- serve-mode repeated sweeps: segment-table reuse via the
+    // engine-level plan cache (DESIGN.md §10). The same engine answers the
+    // same sweep request over and over; the baseline clears the plan cache
+    // before every request, isolating exactly the table-rebuild cost the
+    // cache removes.
+    println!("\n== api: repeated sweeps through the plan cache ==");
+    let sweep_req = SweepRequest {
+        net: "resnet152".to_string(),
+        spec: SweepSpec::paper(),
+    };
+    let sweep_engine = Engine::new();
+    let _ = sweep_engine.sweep(&sweep_req).unwrap(); // warm zoo + plan
+    let sweep_nocache = bench("api/sweep_repeat_plan_cold", &opts, || {
+        sweep_engine.plans().clear();
+        sweep_engine.sweep(&sweep_req).unwrap().sweep.points.len()
+    });
+    let sweep_cached = bench("api/sweep_repeat_plan_hot", &opts, || {
+        sweep_engine.sweep(&sweep_req).unwrap().sweep.points.len()
+    });
+    let plan_speedup = sweep_nocache.seconds.mean / sweep_cached.seconds.mean;
+    println!(
+        "   -> {:.0} sweeps/s rebuilding plans, {:.0} sweeps/s on plan-cache hits ({plan_speedup:.2}x); \
+         {} plan(s) cached, {} hits / {} misses",
+        throughput(&sweep_nocache, 1),
+        throughput(&sweep_cached, 1),
+        sweep_engine.plans().len(),
+        sweep_engine.plans().hits(),
+        sweep_engine.plans().misses(),
+    );
+
     let variant = |r: &BenchResult| -> Json {
         Json::obj(vec![
             ("seconds_mean", Json::num(r.seconds.mean)),
             ("seconds_min", Json::num(r.seconds.min)),
             ("seconds_p95", Json::num(r.seconds.p95)),
             ("requests_per_sec", Json::num(throughput(r, n))),
+        ])
+    };
+    let sweep_variant = |r: &BenchResult| -> Json {
+        Json::obj(vec![
+            ("seconds_mean", Json::num(r.seconds.mean)),
+            ("seconds_min", Json::num(r.seconds.min)),
+            ("seconds_p95", Json::num(r.seconds.p95)),
+            ("sweeps_per_sec", Json::num(throughput(r, 1))),
         ])
     };
     let doc = Json::obj(vec![
@@ -83,6 +123,20 @@ fn main() {
         (
             "speedup_hot_over_cold",
             Json::num(cold.seconds.mean / hot.seconds.mean),
+        ),
+        ("sweep_repeat_plan_cold", sweep_variant(&sweep_nocache)),
+        ("sweep_repeat_plan_hot", sweep_variant(&sweep_cached)),
+        (
+            "speedup_plan_hot_over_cold",
+            Json::num(plan_speedup),
+        ),
+        (
+            "plan_cache",
+            Json::obj(vec![
+                ("plans", Json::num(sweep_engine.plans().len() as f64)),
+                ("hits", Json::num(sweep_engine.plans().hits() as f64)),
+                ("misses", Json::num(sweep_engine.plans().misses() as f64)),
+            ]),
         ),
     ]);
     let out =

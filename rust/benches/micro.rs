@@ -1,10 +1,16 @@
 //! Micro-benchmarks of the hot paths the §Perf pass optimizes:
 //! closed-form analytic metrics vs the pass-iterating reference, workload
 //! deduplication, network-level evaluation, NSGA-II machinery — and the
-//! headline number: full-zoo sweep throughput, shape-major vs the naive
-//! config-major baseline, emitted machine-readably to `BENCH_sweep.json`
-//! (override the path with `CAMUY_BENCH_OUT`) so the perf trajectory is
-//! tracked PR over PR.
+//! headline number: full-zoo sweep throughput through all three sweep
+//! cores (segmented vs shape-major vs config-major, DESIGN.md §10/§4) on
+//! the paper grid *and* the dense step-1 grid, emitted machine-readably to
+//! `BENCH_sweep.json` (override the path with `CAMUY_BENCH_OUT`) so the
+//! perf trajectory is tracked PR over PR.
+//!
+//! `CAMUY_BENCH_SMOKE=1` runs a reduced CI mode: fewer iterations, the
+//! paper grid only — and the process **fails** (exit 1) if the segmented
+//! core is slower than the shape-major core, so a regression on the sweep
+//! hot path cannot land silently.
 
 use camuy::config::{ArrayConfig, EnergyWeights};
 use camuy::model::gemm::{ws_metrics, ws_metrics_ref};
@@ -13,13 +19,15 @@ use camuy::nets;
 use camuy::pareto::dominance::{fast_non_dominated_sort, pareto_front_indices};
 use camuy::sweep::grid::DimGrid;
 use camuy::sweep::runner::{
-    default_threads, sweep_workload, sweep_workload_config_major, Workload,
+    default_threads, sweep_workload_config_major, sweep_workload_segmented,
+    sweep_workload_shape_major, Workload,
 };
-use camuy::util::bench::{bench, throughput, BenchOpts};
+use camuy::util::bench::{bench, throughput, BenchOpts, BenchResult};
 use camuy::util::json::Json;
 use camuy::util::prng::Rng;
 
 fn main() {
+    let smoke = std::env::var("CAMUY_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
     println!("== micro: analytic model ==");
     // A late-ResNet bottleneck GEMM on a mid grid point.
     let g = GemmShape::new(196, 1152, 256);
@@ -62,8 +70,8 @@ fn main() {
         r2.seconds.mean / r.seconds.mean
     );
 
-    println!("\n== sweep: full zoo, shape-major vs config-major ==");
-    let sweep_json = bench_full_zoo_sweep();
+    println!("\n== sweep: full zoo, segmented vs shape-major vs config-major ==");
+    let sweep_json = bench_zoo_sweeps(smoke);
     let out_path = std::env::var("CAMUY_BENCH_OUT").unwrap_or_else(|_| "BENCH_sweep.json".into());
     match std::fs::write(&out_path, sweep_json.to_string_pretty() + "\n") {
         Ok(()) => println!("   -> wrote {out_path}"),
@@ -86,67 +94,146 @@ fn main() {
     let m = ws_metrics(g, &cfg);
     let w = EnergyWeights::paper();
     bench("micro/eq1_energy", &opts, || m.energy(&w));
+
+    // Smoke mode is the CI gate: the segmented core regressing below the
+    // shape-major baseline on the paper grid fails the run.
+    if smoke {
+        let speedup = sweep_json
+            .get("paper_grid")
+            .and_then(|p| p.get("speedup_segmented_over_shape_major"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if speedup < 1.0 {
+            eprintln!(
+                "FAIL: segmented sweep is {speedup:.2}x the shape-major core \
+                 on the paper grid (must be >= 1.0)"
+            );
+            std::process::exit(1);
+        }
+        println!("smoke gate passed: segmented is {speedup:.2}x shape-major");
+    }
 }
 
-/// The full paper zoo over the paper's 961-point grid, both sweep cores,
-/// same thread pool — the acceptance number for the shape-major refactor.
-fn bench_full_zoo_sweep() -> Json {
-    let grid = DimGrid::paper();
+/// One grid through the three sweep cores over the whole paper zoo, same
+/// thread pool. `include_config_major: false` skips the slow oracle (CI
+/// smoke, dense grid) — the JSON then omits that variant.
+fn bench_grid(
+    label: &str,
+    grid: &DimGrid,
+    workloads: &[Workload],
+    opts: &BenchOpts,
+    include_config_major: bool,
+) -> Json {
     let configs = grid.configs(&ArrayConfig::new(1, 1));
-    let models = nets::paper_models();
-    let workloads: Vec<Workload> = models.iter().map(Workload::of).collect();
     let threads = default_threads();
     let weights = EnergyWeights::paper();
     let total_configs = (configs.len() * workloads.len()) as u64;
-    let opts = BenchOpts {
-        warmup_iters: 1,
-        measure_iters: 5,
-    };
 
     // Sum energies so the whole evaluation is observably consumed.
-    let naive = bench("sweep/full_zoo_config_major", &opts, || {
+    let naive = if include_config_major {
+        Some(bench(&format!("sweep/{label}_config_major"), opts, || {
+            workloads
+                .iter()
+                .flat_map(|wl| sweep_workload_config_major(wl, &configs, &weights, threads))
+                .map(|p| p.energy)
+                .sum::<f64>()
+        }))
+    } else {
+        None
+    };
+    let shape_major = bench(&format!("sweep/{label}_shape_major"), opts, || {
         workloads
             .iter()
-            .flat_map(|wl| sweep_workload_config_major(wl, &configs, &weights, threads))
+            .flat_map(|wl| sweep_workload_shape_major(wl, &configs, &weights, threads))
             .map(|p| p.energy)
             .sum::<f64>()
     });
-    let shape_major = bench("sweep/full_zoo_shape_major", &opts, || {
+    let segmented = bench(&format!("sweep/{label}_segmented"), opts, || {
         workloads
             .iter()
-            .flat_map(|wl| sweep_workload(wl, &configs, &weights, threads))
+            .flat_map(|wl| sweep_workload_segmented(wl, &configs, &weights, threads))
             .map(|p| p.energy)
             .sum::<f64>()
     });
 
-    let naive_cps = throughput(&naive, total_configs);
-    let fast_cps = throughput(&shape_major, total_configs);
-    let speedup = naive.seconds.mean / shape_major.seconds.mean;
+    let seg_speedup = shape_major.seconds.mean / segmented.seconds.mean;
     println!(
-        "   -> {:.0} configs/s config-major, {:.0} configs/s shape-major ({speedup:.2}x)",
-        naive_cps, fast_cps
+        "   -> {label}: {:.0} configs/s shape-major, {:.0} configs/s segmented ({seg_speedup:.2}x)",
+        throughput(&shape_major, total_configs),
+        throughput(&segmented, total_configs),
     );
 
-    let variant = |r: &camuy::util::bench::BenchResult, cps: f64| -> Json {
+    let variant = |r: &BenchResult| -> Json {
         Json::obj(vec![
             ("seconds_mean", Json::num(r.seconds.mean)),
             ("seconds_min", Json::num(r.seconds.min)),
             ("seconds_p95", Json::num(r.seconds.p95)),
-            ("configs_per_sec", Json::num(cps)),
+            ("configs_per_sec", Json::num(throughput(r, total_configs))),
         ])
     };
-    Json::obj(vec![
-        ("bench", Json::str("full_zoo_sweep")),
+    let mut fields = vec![
         ("grid_points", Json::num(configs.len() as f64)),
+        ("network_evals_per_iter", Json::num(total_configs as f64)),
+        ("shape_major", variant(&shape_major)),
+        ("segmented", variant(&segmented)),
+        (
+            "speedup_segmented_over_shape_major",
+            Json::num(seg_speedup),
+        ),
+    ];
+    if let Some(naive) = &naive {
+        fields.push(("config_major", variant(naive)));
+        fields.push((
+            "speedup_shape_major_over_config_major",
+            Json::num(naive.seconds.mean / shape_major.seconds.mean),
+        ));
+        fields.push((
+            "speedup_segmented_over_config_major",
+            Json::num(naive.seconds.mean / segmented.seconds.mean),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// The full paper zoo through all three sweep cores — the acceptance
+/// numbers for the segmented refactor: the paper's 961-point grid, and
+/// (full mode) the dense step-1 grid where the axis collapse shines.
+fn bench_zoo_sweeps(smoke: bool) -> Json {
+    let models = nets::paper_models();
+    let workloads: Vec<Workload> = models.iter().map(Workload::of).collect();
+    let opts = if smoke {
+        BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 2,
+        }
+    } else {
+        BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 5,
+        }
+    };
+
+    let paper = bench_grid("full_zoo_paper", &DimGrid::paper(), &workloads, &opts, !smoke);
+    let mut fields = vec![
+        ("bench", Json::str("full_zoo_sweep")),
+        ("smoke", Json::Bool(smoke)),
         ("models", Json::num(workloads.len() as f64)),
         (
             "distinct_shapes_total",
             Json::num(workloads.iter().map(Workload::distinct).sum::<usize>() as f64),
         ),
-        ("threads", Json::num(threads as f64)),
-        ("network_evals_per_iter", Json::num(total_configs as f64)),
-        ("config_major", variant(&naive, naive_cps)),
-        ("shape_major", variant(&shape_major, fast_cps)),
-        ("speedup_shape_major_over_config_major", Json::num(speedup)),
-    ])
+        ("threads", Json::num(default_threads() as f64)),
+        ("paper_grid", paper),
+    ];
+    if !smoke {
+        let dense_opts = BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 2,
+        };
+        fields.push((
+            "dense_grid",
+            bench_grid("full_zoo_dense", &DimGrid::dense(), &workloads, &dense_opts, true),
+        ));
+    }
+    Json::obj(fields)
 }

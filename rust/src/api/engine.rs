@@ -33,7 +33,8 @@ use crate::model::workload::{EvalCache, Workload};
 use crate::nets;
 use crate::pareto::nsga2::Nsga2Params;
 use crate::report::figures::{self, Fig2Data, Fig3Data, Fig5Data, Fig6Data};
-use crate::sweep::runner::{parallel_map, seed_workload};
+use crate::sweep::plan::PlanCache;
+use crate::sweep::runner::{parallel_map, seed_workload_planned};
 use crate::util::json::Json;
 use std::collections::{HashMap, HashSet};
 use std::sync::{OnceLock, RwLock};
@@ -56,6 +57,17 @@ pub struct Engine {
     /// clone, not a reconstruction (the serving hot path).
     zoo: OnceLock<HashMap<String, Network>>,
     cache: EvalCache,
+    /// Segmented sweep plans memoized per (workload fingerprint, grid
+    /// axes, accumulator capacity) — see [`PlanCache`] for the key
+    /// semantics. Sweep, Pareto, equal-PE and figure requests that replay
+    /// a (workload, grid) reuse its segment tables instead of re-deriving
+    /// them (DESIGN.md §10); batched eval seeding deliberately stays
+    /// ephemeral so ad-hoc batch geometries cannot pollute the cache.
+    /// Because the key embeds the exact shape histogram,
+    /// [`Engine::register_network_json`] needs no invalidation hook: a
+    /// re-registered network stops matching the old entries, which age
+    /// out via the capacity bounds.
+    plans: PlanCache,
 }
 
 impl Engine {
@@ -66,6 +78,11 @@ impl Engine {
     /// The shared per-(shape, configuration) memo table.
     pub fn cache(&self) -> &EvalCache {
         &self.cache
+    }
+
+    /// The shared segmented-sweep plan cache.
+    pub fn plans(&self) -> &PlanCache {
+        &self.plans
     }
 
     fn zoo(&self) -> &HashMap<String, Network> {
@@ -246,8 +263,8 @@ impl Engine {
     }
 
     /// Answer a batch of eval requests: requests are grouped by workload
-    /// and their distinct configurations run through the shape-major sweep
-    /// core once ([`seed_workload`]) across `threads` workers,
+    /// and their distinct configurations run through the segmented sweep
+    /// core once ([`seed_workload_planned`]) across `threads` workers,
     /// seeding the shared memo table; each request is then answered from
     /// the hot cache. Results align with the input order and equal
     /// [`Engine::eval`] exactly.
@@ -283,7 +300,13 @@ impl Engine {
             if cfgs.is_empty() {
                 continue;
             }
-            seed_workload(&workload, &cfgs, threads, &self.cache);
+            // Ephemeral plans on purpose: a batch's ad-hoc geometry set
+            // rarely recurs as a plan key (steady-state repeat batches are
+            // already pure memo-table hits and skip seeding entirely via
+            // the retain above), so inserting per-batch plans would only
+            // pollute the shared cache and evict the long-lived sweep
+            // plans it exists to retain.
+            seed_workload_planned(&workload, &cfgs, threads, &self.cache, None);
         }
         // Answer from the hot cache, fanned out so the requests the
         // seeding pass could not cover (multi-array banks, per-layer
@@ -291,36 +314,41 @@ impl Engine {
         parallel_map(reqs.len(), threads, |i| self.eval(&reqs[i]))
     }
 
-    /// Figure-2 heatmaps for one network over a grid.
+    /// Figure-2 heatmaps for one network over a grid, through the shared
+    /// plan cache: a repeated sweep of the same (workload, grid) reuses
+    /// its segment tables.
     pub fn sweep(&self, req: &SweepRequest) -> Result<Fig2Data, ApiError> {
         req.spec.validate()?;
         let net = self.resolve(&req.net, None)?;
-        Ok(figures::fig2_heatmaps_for(&net, &req.spec))
+        Ok(figures::fig2_heatmaps_planned(&net, &req.spec, Some(&self.plans)))
     }
 
-    /// Figure-3 NSGA-II Pareto fronts for one network.
+    /// Figure-3 NSGA-II Pareto fronts for one network; genome probes run
+    /// through the cached segmented plan (two binary searches plus the
+    /// SoA combine — no divisions).
     pub fn pareto(&self, req: &ParetoRequest) -> Result<Fig3Data, ApiError> {
         req.spec.validate()?;
         check_nsga2(&req.params)?;
         let net = self.resolve(&req.net, None)?;
-        Ok(figures::fig3_pareto_for(
+        Ok(figures::fig3_pareto_planned(
             &net,
             &req.spec,
             &req.params,
+            Some(&self.plans),
         ))
     }
 
     /// Figure-4 heatmaps for all paper models.
     pub fn heatmaps(&self, spec: &SweepSpec) -> Result<Vec<Fig2Data>, ApiError> {
         spec.validate()?;
-        Ok(figures::fig4_heatmaps(spec))
+        Ok(figures::fig4_heatmaps_planned(spec, Some(&self.plans)))
     }
 
     /// Figure-5 robust Pareto across all paper models.
     pub fn robust(&self, spec: &SweepSpec, params: &Nsga2Params) -> Result<Fig5Data, ApiError> {
         spec.validate()?;
         check_nsga2(params)?;
-        Ok(figures::fig5_robust(spec, params))
+        Ok(figures::fig5_robust_planned(spec, params, Some(&self.plans)))
     }
 
     /// Figure-6 equal-PE aspect-ratio study, one entry per budget.
@@ -331,7 +359,7 @@ impl Engine {
         Ok(req
             .budgets
             .iter()
-            .map(|&b| figures::fig6_equal_pe(b, req.min_dim, ctx))
+            .map(|&b| figures::fig6_equal_pe_planned(b, req.min_dim, ctx, Some(&self.plans)))
             .collect())
     }
 

@@ -23,7 +23,7 @@
 //! validated into the `model::workload` IR — and become first-class
 //! workloads for every request kind. `camuy serve` wraps the same engine
 //! in a JSON-lines request/response loop (stdin or TCP) with adaptive
-//! request batching onto the shape-major sweep core ([`serve`]).
+//! request batching onto the segmented sweep core ([`serve`]).
 //!
 //! Every CLI subcommand is a thin adapter over this module: it builds a
 //! request struct, calls the engine, and formats the typed response.

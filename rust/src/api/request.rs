@@ -104,9 +104,10 @@ impl FigureContext {
             Some(g) => match g.as_str() {
                 Some("paper") => DimGrid::paper(),
                 Some("smoke") => SweepSpec::smoke().grid,
+                Some("dense") => DimGrid::dense(),
                 Some(other) => {
                     return Err(ApiError::BadRequest(format!(
-                        "unknown grid '{other}' (paper|smoke or {{lo, hi, step}})"
+                        "unknown grid '{other}' (paper|smoke|dense or {{lo, hi, step}})"
                     )))
                 }
                 None => {
@@ -592,6 +593,19 @@ mod tests {
             ApiRequest::Sweep(r) => {
                 assert_eq!(r.spec.grid.heights, vec![8, 16, 24]);
                 assert_eq!(r.spec.threads, 1);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_spec_parses_dense_grid() {
+        let v = Json::parse(r#"{"type":"sweep","net":"alexnet","grid":"dense","threads":1}"#)
+            .unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Sweep(r) => {
+                assert_eq!(r.spec.grid.heights.len(), 241);
+                assert_eq!(r.spec.grid.heights[0], 16);
             }
             other => panic!("wrong request: {other:?}"),
         }

@@ -363,8 +363,17 @@ pub fn zoo_json(entries: &[NetworkEntry]) -> Json {
 }
 
 /// Serve response for a sweep: the full point cloud plus the argmin cell.
+/// Request validation rejects empty grids, so a sweep response always has
+/// an argmin; `Json::Null` covers the defensive corner anyway.
 pub fn sweep_json(d: &Fig2Data) -> Json {
-    let best = d.sweep.argmin(|p| p.energy);
+    let best = match d.sweep.argmin(|p| p.energy) {
+        Some(best) => Json::obj(vec![
+            ("height", Json::num(best.height as f64)),
+            ("width", Json::num(best.width as f64)),
+            ("energy", Json::num(best.energy)),
+        ]),
+        None => Json::Null,
+    };
     Json::obj(vec![
         ("network", Json::str(d.network.clone())),
         (
@@ -379,14 +388,7 @@ pub fn sweep_json(d: &Fig2Data) -> Json {
                 ])
             })),
         ),
-        (
-            "best_energy",
-            Json::obj(vec![
-                ("height", Json::num(best.height as f64)),
-                ("width", Json::num(best.width as f64)),
-                ("energy", Json::num(best.energy)),
-            ]),
-        ),
+        ("best_energy", best),
     ])
 }
 

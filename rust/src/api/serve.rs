@@ -8,7 +8,7 @@
 //!
 //! * eval requests go through [`Engine::eval_batch`], which groups them by
 //!   workload and runs their distinct configurations through the
-//!   shape-major sweep core once, seeding the engine's shared memo table;
+//!   segmented sweep core once, seeding the engine's shared memo table;
 //! * every other request kind runs sequentially per connection — each is
 //!   already parallel inside (the sweep cores fan out across the host),
 //!   so an outer pool would only multiply thread counts;
@@ -281,7 +281,7 @@ fn process_batch<W: Write>(
 }
 
 /// Answer the gathered non-register requests: evals through the engine's
-/// batched shape-major path, the rest over a scoped worker pool.
+/// batched segmented path, the rest over a scoped worker pool.
 fn flush_pending(
     engine: &Engine,
     parsed: &[(Option<Json>, Result<ApiRequest, ApiError>)],

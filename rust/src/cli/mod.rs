@@ -38,7 +38,9 @@ const SCHEMA: Schema = Schema {
         "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "min-dim",
         "threads", "artifacts", "dataflow", "seed", "energy-model", "listen", "batch-max",
     ],
-    flags: &["json", "per-layer", "smoke", "help", "quiet", "verbose", "version", "graph"],
+    flags: &[
+        "json", "per-layer", "smoke", "dense", "help", "quiet", "verbose", "version", "graph",
+    ],
 };
 
 pub fn usage() -> &'static str {
@@ -69,7 +71,8 @@ OPTIONS:
   --height H --width W --acc N   array geometry / accumulator entries
   --dataflow ws|os    dataflow concept (default ws)
   --energy-model paper|dally14nm  Equation-1 weights
-  --grid paper|smoke  sweep grid (961-point paper grid or 4x4 smoke)
+  --grid paper|smoke|dense  sweep grid (961-point paper, 4x4 smoke, or the
+                      58081-cell step-1 dense grid; --dense is shorthand)
   --budget N          equal-PE budget (repeatable; default 4096 16384 65536)
   --min-dim N         equal-PE minimum edge length (default 8)
   --out DIR           output directory for CSV/PGM/TXT (default results/)
@@ -169,10 +172,14 @@ fn sweep_spec(args: &Args) -> anyhow::Result<SweepSpec> {
     let mut spec = match args.opt("grid").unwrap_or("paper") {
         "paper" => SweepSpec::default(),
         "smoke" => SweepSpec::smoke(),
-        g => anyhow::bail!("unknown grid '{g}' (paper|smoke)"),
+        "dense" => SweepSpec::dense(),
+        g => anyhow::bail!("unknown grid '{g}' (paper|smoke|dense)"),
     };
     if args.flag("smoke") {
         spec.grid = SweepSpec::smoke().grid;
+    }
+    if args.flag("dense") {
+        spec.grid = crate::sweep::grid::DimGrid::dense();
     }
     spec.template = template_config(args, 1, 1)?;
     spec.threads = args.opt_usize("threads", spec.threads)?;

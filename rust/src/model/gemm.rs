@@ -12,7 +12,11 @@
 //!   closed form is factored into height-dependent ([`ws_row_factors`]) and
 //!   width/accumulator-dependent ([`ws_col_factors`]) parts combined by
 //!   [`ws_metrics_from_factors`], so the shape-major sweep core can cache
-//!   each part per grid axis (DESIGN.md §4).
+//!   each part per grid axis (DESIGN.md §4); the col-tile classes further
+//!   collapse into the [`WsColScalars`] aggregates consumed by
+//!   [`ws_metrics_from_scalars`] and the segmented sweep plan, whose axis
+//!   runs come from [`ceil_div_segments`]/[`floor_div_segments`]
+//!   (DESIGN.md §10).
 //!
 //! Plus [`os_metrics`], the output-stationary variant (paper §6 future
 //! work) used by the dataflow ablation.
@@ -203,12 +207,183 @@ pub fn ws_col_factors(gemm: GemmShape, width: usize, acc_capacity: usize) -> WsC
     }
 }
 
+/// The collapsed ("tile-class-summed") form of [`WsColFactors`]: the four
+/// aggregates over col-tile classes that the closed form actually
+/// consumes. Every per-class metric term is linear in one of these, so
+/// summing the classes once here turns the per-cell combine into a fixed
+/// set of scalar multiply-adds — the algebraic step behind the segmented
+/// sweep plan (DESIGN.md §10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WsColScalars {
+    /// The array width these aggregates were derived for.
+    pub width: usize,
+    /// Σ count — the col-tile count `tc` for a well-formed factor set.
+    pub s_cnt: u64,
+    /// Σ count·nt — equals `N` for a well-formed factor set.
+    pub s_n: u64,
+    /// Σ count·chunks·nt.
+    pub s_c: u64,
+    /// Σ count·chunks.
+    pub s_cc: u64,
+}
+
+impl WsColFactors {
+    /// Sum the tile classes into [`WsColScalars`]. Classes zeroed by the
+    /// [`ws_col_factors`] constructor contribute nothing, exactly as they
+    /// are skipped by [`ws_metrics_from_factors`].
+    pub fn collapse(&self) -> WsColScalars {
+        let mut s = WsColScalars {
+            width: self.width,
+            s_cnt: 0,
+            s_n: 0,
+            s_c: 0,
+            s_cc: 0,
+        };
+        for &WsColClass { nt, count, chunks } in &self.classes {
+            if count == 0 || nt == 0 {
+                continue;
+            }
+            s.s_cnt += count;
+            s.s_n += count * nt;
+            s.s_c += count * chunks * nt;
+            s.s_cc += count * chunks;
+        }
+        s
+    }
+}
+
+/// [`ws_col_factors`] collapsed to its class aggregates.
+pub fn ws_col_scalars(gemm: GemmShape, width: usize, acc_capacity: usize) -> WsColScalars {
+    ws_col_factors(gemm, width, acc_capacity).collapse()
+}
+
+/// Assemble closed-form WS metrics from collapsed class aggregates —
+/// byte-identical to [`ws_metrics_from_factors`] by pure reassociation of
+/// the exact integer sums (verified by unit and property tests). This is
+/// the per-cell kernel of the segmented sweep plan: no divisions, no
+/// branches, no per-class loop.
+pub fn ws_metrics_from_scalars(gemm: GemmShape, row: &WsRowFactors, col: &WsColScalars) -> Metrics {
+    if gemm.is_empty() {
+        return Metrics::default();
+    }
+    let (big_m, big_k) = (gemm.m as u64, gemm.k as u64);
+    let h = row.height as u64;
+    let w = col.width as u64;
+    let WsRowFactors { tr, s_kk, k0, .. } = *row;
+    let WsColScalars {
+        s_cnt, s_n, s_c, s_cc, ..
+    } = *col;
+
+    // Per-class sums of ws_metrics_from_factors, distributed over the
+    // aggregates. `M·s_cnt + h·s_cc + s_c >= 2·s_cc` always (chunks <= M
+    // and nt >= 1 per counted class), so the compute-sum rearrangement
+    // cannot underflow.
+    let sum_compute = tr * (big_m * s_cnt + h * s_cc + s_c - 2 * s_cc);
+    Metrics {
+        cycles: k0 + sum_compute,
+        stall_cycles: 0,
+        macs: gemm.macs(),
+        passes: tr * s_cc,
+        movements: MovementCounters {
+            ub_act_reads: big_m * big_k * s_cnt,
+            ub_weight_reads: big_k * s_c,
+            ub_out_writes: big_m * s_n,
+            inter_pe_act: big_m * big_k * (w - 1) * s_cnt,
+            inter_pe_psum: big_m * (h - 1) * tr * s_n,
+            inter_pe_weight: s_kk * s_c,
+            intra_pe: 5 * big_m * big_k * s_n + 2 * big_k * s_c,
+            aa_writes: big_m * tr * s_n,
+            aa_reads: big_m * s_n,
+        },
+    }
+}
+
+/// One maximal run of a tiling step function over a sorted axis:
+/// `axis[start..end]` all map to the same `value` (a tile count for
+/// [`ceil_div_segments`], a row budget for [`floor_div_segments`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxisSegment {
+    pub start: usize,
+    /// Exclusive end index.
+    pub end: usize,
+    pub value: u64,
+}
+
+/// Maximal runs of constant `ceil(dim / a)` over a sorted, deduplicated
+/// axis of positive values — the piecewise-constant ("hyperbolic")
+/// decomposition of the tile-count step function. `ceil(dim/a) = t` holds
+/// exactly for `a ∈ [ceil(dim/t), ceil(dim/(t−1)) − 1]`, so each segment
+/// end is found by one division and a binary search instead of dividing
+/// per axis value; a dense axis collapses into O(√dim) segments.
+pub fn ceil_div_segments(dim: usize, axis: &[usize]) -> Vec<AxisSegment> {
+    let mut out = Vec::new();
+    if axis.is_empty() {
+        return out;
+    }
+    if dim == 0 {
+        out.push(AxisSegment {
+            start: 0,
+            end: axis.len(),
+            value: 0,
+        });
+        return out;
+    }
+    let mut i = 0;
+    while i < axis.len() {
+        let t = ceil_div(dim, axis[i]) as u64;
+        let end = if t <= 1 {
+            axis.len() // every larger value also covers dim in one tile
+        } else {
+            let hi = ceil_div(dim, t as usize - 1) - 1;
+            i + axis[i..].partition_point(|&a| a <= hi)
+        };
+        out.push(AxisSegment {
+            start: i,
+            end,
+            value: t,
+        });
+        i = end;
+    }
+    out
+}
+
+/// Maximal runs of constant `floor(num / a)` over a sorted, deduplicated
+/// axis of positive values — the accumulator row-budget step function.
+/// `floor(num/a) = q ≥ 1` holds exactly for
+/// `a ∈ [floor(num/(q+1)) + 1, floor(num/q)]`; values past `num` share the
+/// terminal `q = 0` segment.
+pub fn floor_div_segments(num: usize, axis: &[usize]) -> Vec<AxisSegment> {
+    let mut out = Vec::new();
+    if axis.is_empty() {
+        return out;
+    }
+    let mut i = 0;
+    while i < axis.len() {
+        let q = (num / axis[i]) as u64;
+        let end = if q == 0 {
+            axis.len() // axis[i] > num, and the axis only grows
+        } else {
+            let hi = num / q as usize;
+            i + axis[i..].partition_point(|&a| a <= hi)
+        };
+        out.push(AxisSegment {
+            start: i,
+            end,
+            value: q,
+        });
+        i = end;
+    }
+    out
+}
+
 /// Assemble closed-form WS metrics from precomputed factors. This is the
 /// single implementation of the closed form: [`ws_metrics`] routes through
 /// it, and the shape-major sweep core calls it with factors cached per
 /// (shape, grid axis) — both paths are byte-identical by construction.
 /// The array dimensions come from the factor structs themselves, so
 /// mismatched (factors, geometry) pairings are unrepresentable.
+/// [`ws_metrics_from_scalars`] is the further-collapsed form the segmented
+/// sweep plan assembles cells with.
 pub fn ws_metrics_from_factors(gemm: GemmShape, row: &WsRowFactors, col: &WsColFactors) -> Metrics {
     if gemm.is_empty() {
         return Metrics::default();
@@ -555,6 +730,102 @@ mod tests {
         let os_cfg = ws_cfg.clone().with_dataflow(Dataflow::OutputStationary);
         assert_eq!(gemm_metrics(g, &ws_cfg), ws_metrics(g, &ws_cfg));
         assert_eq!(gemm_metrics(g, &os_cfg), os_metrics(g, &os_cfg));
+    }
+
+    #[test]
+    fn scalar_combine_equals_factor_combine() {
+        // The collapsed per-cell kernel must be byte-identical to the
+        // class-iterating combine on every partial-tile / chunking case.
+        for m in [1, 2, 3, 5, 7, 16, 196] {
+            for k in [1, 3, 4, 9, 17] {
+                for n in [1, 2, 5, 8, 13, 64] {
+                    for (h, w) in [(1, 1), (2, 3), (4, 4), (8, 2), (3, 7), (96, 48)] {
+                        for acc in [1, 2, 7, 64, 4096] {
+                            let g = GemmShape::new(m, k, n);
+                            let row = ws_row_factors(g, h);
+                            let col = ws_col_factors(g, w, acc);
+                            let collapsed =
+                                ws_metrics_from_scalars(g, &row, &col.collapse());
+                            let classed = ws_metrics_from_factors(g, &row, &col);
+                            assert_eq!(
+                                collapsed, classed,
+                                "mismatch at M{m} K{k} N{n} h{h} w{w} acc{acc}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_scalars_aggregate_classes() {
+        // M=10, N=13, w=4, acc=8: tc=4, full class (nt=4, count=3,
+        // r=2, chunks=5), tail (nt=1, count=1, r=8, chunks=2).
+        let s = ws_col_scalars(GemmShape::new(10, 3, 13), 4, 8);
+        assert_eq!(s.s_cnt, 4);
+        assert_eq!(s.s_n, 13);
+        assert_eq!(s.s_c, 3 * 5 * 4 + 2);
+        assert_eq!(s.s_cc, 3 * 5 + 2);
+        // Empty shape: all-zero aggregates.
+        let z = ws_col_scalars(GemmShape::new(0, 3, 13), 4, 8);
+        assert_eq!((z.s_cnt, z.s_n, z.s_c, z.s_cc), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn ceil_div_segments_match_per_value_division() {
+        for dim in [0usize, 1, 7, 9, 64, 100, 961] {
+            for axis in [
+                (1..=40).collect::<Vec<usize>>(),
+                (16..=256).step_by(8).collect(),
+                vec![1],
+                vec![3, 5, 1000],
+                (1..=300).collect(),
+            ] {
+                let segs = ceil_div_segments(dim, &axis);
+                // Segments partition the axis in order.
+                let mut cursor = 0;
+                for s in &segs {
+                    assert_eq!(s.start, cursor, "gap in segments for dim {dim}");
+                    assert!(s.end > s.start);
+                    cursor = s.end;
+                    for &a in &axis[s.start..s.end] {
+                        assert_eq!(
+                            s.value,
+                            ceil_div(dim, a) as u64,
+                            "dim {dim} at axis value {a}"
+                        );
+                    }
+                }
+                assert_eq!(cursor, axis.len());
+                // The collapse is real: far fewer segments than values.
+                if dim > 0 && axis.len() > 50 {
+                    assert!(segs.len() <= 2 * (dim as f64).sqrt() as usize + 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn floor_div_segments_match_per_value_division() {
+        for num in [0usize, 1, 8, 64, 100, 4096] {
+            for axis in [
+                (1..=40).collect::<Vec<usize>>(),
+                (16..=256).step_by(8).collect(),
+                (1..=5000).step_by(7).collect(),
+            ] {
+                let segs = floor_div_segments(num, &axis);
+                let mut cursor = 0;
+                for s in &segs {
+                    assert_eq!(s.start, cursor);
+                    cursor = s.end;
+                    for &a in &axis[s.start..s.end] {
+                        assert_eq!(s.value, (num / a) as u64);
+                    }
+                }
+                assert_eq!(cursor, axis.len());
+            }
+        }
     }
 
     #[test]

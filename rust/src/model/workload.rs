@@ -164,7 +164,7 @@ impl EvalCache {
     }
 
     /// Insert a precomputed per-(shape, configuration) result. The
-    /// shape-major sweep core seeds batch results through this
+    /// segmented sweep core seeds batch results through this
     /// ([`crate::sweep::runner::seed_workload`]) so follow-up
     /// per-request evaluations are pure memo-table hits. Counts as neither
     /// a hit nor a miss.

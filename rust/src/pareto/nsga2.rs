@@ -12,6 +12,7 @@ use crate::config::{ArrayConfig, EnergyWeights};
 use crate::model::workload::{EvalCache, Workload};
 use crate::pareto::dominance::{crowding_distance, fast_non_dominated_sort};
 use crate::sweep::grid::DimGrid;
+use crate::sweep::plan::SegmentedWsPlan;
 use crate::util::prng::Rng;
 
 /// NSGA-II parameters.
@@ -273,6 +274,43 @@ pub fn nsga2_workload(
     })
 }
 
+/// [`nsga2_workload`] with genome evaluation routed through a
+/// [`SegmentedWsPlan`] (DESIGN.md §10): when the template runs the WS
+/// dataflow on the plan's accumulator capacity, a genome probe is two
+/// binary searches on the plan axes plus the SoA cell combine — no
+/// divisions, no per-class loop, and no memo-table locking. Anything the
+/// plan cannot cover (non-WS templates, off-axis probes) falls back to the
+/// direct closed form, which is byte-identical by construction, so the
+/// returned solutions always match [`nsga2_workload`] exactly.
+pub fn nsga2_workload_planned(
+    grid: &DimGrid,
+    params: &Nsga2Params,
+    workload: &Workload,
+    template: &ArrayConfig,
+    weights: &EnergyWeights,
+    plan: &SegmentedWsPlan,
+    objective: WorkloadObjective,
+) -> Vec<Solution> {
+    let planned = template.dataflow == crate::config::Dataflow::WeightStationary
+        && template.acc_capacity == plan.acc_capacity();
+    nsga2(grid, params, |h, w| {
+        let mut cfg = template.clone();
+        cfg.height = h;
+        cfg.width = w;
+        let m = if planned {
+            plan.probe(h, w).unwrap_or_else(|| workload.eval(&cfg))
+        } else {
+            workload.eval(&cfg)
+        };
+        match objective {
+            WorkloadObjective::EnergyCycles => vec![m.energy(weights), m.cycles as f64],
+            WorkloadObjective::InverseUtilizationCycles => {
+                vec![1.0 - m.utilization(cfg.pe_count()), m.cycles as f64]
+            }
+        }
+    })
+}
+
 /// Rank + crowding of a whole point set (used once, for generation 0).
 fn rank_and_crowd(objs: &[&[f64]]) -> (Vec<usize>, Vec<f64>) {
     let fronts = fast_non_dominated_sort(objs);
@@ -446,6 +484,70 @@ mod tests {
             assert_eq!(s.objectives[0], m.energy(&weights));
             assert_eq!(s.objectives[1], m.cycles as f64);
         }
+    }
+
+    #[test]
+    fn planned_genome_probes_match_the_cached_path() {
+        use crate::model::layer::{Layer, SpatialDims};
+        use crate::model::network::Network;
+        let net = Network::new(
+            "n",
+            vec![
+                Layer::conv("c1", SpatialDims::square(14), 16, 32, 3, 1, 1, 1),
+                Layer::conv("c2", SpatialDims::square(7), 32, 48, 3, 1, 1, 1),
+            ],
+        );
+        let wl = Workload::of(&net);
+        let grid = DimGrid::coarse(8, 40, 8);
+        let template = ArrayConfig::new(1, 1).with_acc_capacity(256);
+        let weights = EnergyWeights::paper();
+        let params = Nsga2Params {
+            population: 16,
+            generations: 12,
+            ..Default::default()
+        };
+        let plan =
+            SegmentedWsPlan::new(&wl, &grid.heights, &grid.widths, template.acc_capacity);
+        for objective in [
+            WorkloadObjective::EnergyCycles,
+            WorkloadObjective::InverseUtilizationCycles,
+        ] {
+            let cached = nsga2_workload(
+                &grid,
+                &params,
+                &wl,
+                &template,
+                &weights,
+                &EvalCache::new(),
+                objective,
+            );
+            let planned = nsga2_workload_planned(
+                &grid, &params, &wl, &template, &weights, &plan, objective,
+            );
+            assert_eq!(cached, planned, "objective {objective:?} diverged");
+        }
+        // A plan for a different accumulator capacity falls back to the
+        // direct closed form and still agrees exactly.
+        let mismatched = SegmentedWsPlan::new(&wl, &grid.heights, &grid.widths, 4096);
+        let via_fallback = nsga2_workload_planned(
+            &grid,
+            &params,
+            &wl,
+            &template,
+            &weights,
+            &mismatched,
+            WorkloadObjective::EnergyCycles,
+        );
+        let cached = nsga2_workload(
+            &grid,
+            &params,
+            &wl,
+            &template,
+            &weights,
+            &EvalCache::new(),
+            WorkloadObjective::EnergyCycles,
+        );
+        assert_eq!(via_fallback, cached);
     }
 
     #[test]

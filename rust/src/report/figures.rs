@@ -9,12 +9,15 @@ use crate::model::network::Network;
 use crate::model::workload::{EvalCache, Workload};
 use crate::nets;
 use crate::pareto::dominance::pareto_front_indices;
-use crate::pareto::nsga2::{nsga2, nsga2_workload, Nsga2Params, Solution, WorkloadObjective};
+use crate::pareto::nsga2::{
+    nsga2, nsga2_workload, nsga2_workload_planned, Nsga2Params, Solution, WorkloadObjective,
+};
 use crate::report::heatmap::Heatmap;
 use crate::report::table::{pareto_csv, pareto_table};
 use crate::sweep::grid::{equal_pe_factorizations, DimGrid};
 use crate::sweep::normalize::RobustObjectives;
-use crate::sweep::runner::{sweep_network, sweep_workload, SweepResult};
+use crate::sweep::plan::PlanCache;
+use crate::sweep::runner::{sweep_network_planned, sweep_workload_planned, SweepResult};
 use crate::util::csv::{fmt_f64, CsvTable};
 use crate::util::stats::min_max_normalize;
 use std::collections::HashMap;
@@ -45,6 +48,15 @@ impl FigureContext {
     pub fn smoke() -> FigureContext {
         FigureContext {
             grid: DimGrid::coarse(16, 64, 16),
+            ..FigureContext::paper()
+        }
+    }
+
+    /// The dense step-1 grid over the paper's range (58 081 cells) — the
+    /// segmented sweep plan's headline setting (DESIGN.md §10).
+    pub fn dense() -> FigureContext {
+        FigureContext {
+            grid: DimGrid::dense(),
             ..FigureContext::paper()
         }
     }
@@ -80,7 +92,17 @@ pub fn fig2_heatmaps(net_name: &str, ctx: &FigureContext) -> Fig2Data {
 /// [`fig2_heatmaps`] for an already-resolved network — the `camuy::api`
 /// engine path, where user-registered networks sweep exactly like zoo ones.
 pub fn fig2_heatmaps_for(net: &Network, ctx: &FigureContext) -> Fig2Data {
-    let sweep = sweep_network(net, &ctx.configs(), &ctx.weights, ctx.threads);
+    fig2_heatmaps_planned(net, ctx, None)
+}
+
+/// [`fig2_heatmaps_for`] with an optional engine-owned [`PlanCache`], so
+/// repeated sweep requests reuse segment tables (DESIGN.md §10).
+pub fn fig2_heatmaps_planned(
+    net: &Network,
+    ctx: &FigureContext,
+    plans: Option<&PlanCache>,
+) -> Fig2Data {
+    let sweep = sweep_network_planned(net, &ctx.configs(), &ctx.weights, ctx.threads, plans);
     let energy = Heatmap::from_grid(
         format!("{}: data movement cost E", net.name),
         ctx.grid.heights.clone(),
@@ -138,11 +160,32 @@ pub fn fig3_pareto(net_name: &str, ctx: &FigureContext, params: &Nsga2Params) ->
 /// [`fig3_pareto`] for an already-resolved network (the `camuy::api`
 /// engine path).
 pub fn fig3_pareto_for(net: &Network, ctx: &FigureContext, params: &Nsga2Params) -> Fig3Data {
+    fig3_pareto_planned(net, ctx, params, None)
+}
+
+/// [`fig3_pareto_for`] with an optional engine-owned [`PlanCache`]: the
+/// exhaustive sweep and both NSGA-II objective runs all evaluate through
+/// one segmented plan, so a genome probe is two binary searches plus the
+/// SoA combine (DESIGN.md §10) — and across requests the plan itself is a
+/// cache hit.
+pub fn fig3_pareto_planned(
+    net: &Network,
+    ctx: &FigureContext,
+    params: &Nsga2Params,
+    plans: Option<&PlanCache>,
+) -> Fig3Data {
     let workload = Workload::of(net);
 
-    // Exhaustive validation fronts from the full shape-major sweep; the
+    // Without an engine cache, a request-local one still shares the single
+    // segment-table build between the exhaustive sweep and both NSGA-II
+    // objective runs.
+    let local_plans = PlanCache::new();
+    let plans = plans.unwrap_or(&local_plans);
+
+    // Exhaustive validation fronts from the full segmented sweep; the
     // grid's config order is pairs() order, so points align with pairs.
-    let sweep_points = sweep_workload(&workload, &ctx.configs(), &ctx.weights, ctx.threads);
+    let sweep_points =
+        sweep_workload_planned(&workload, &ctx.configs(), &ctx.weights, ctx.threads, Some(plans));
     let exhaustive = |objs: &dyn Fn(&crate::sweep::runner::SweepPoint) -> Vec<f64>| -> Vec<Solution> {
         let points: Vec<Vec<f64>> = sweep_points.iter().map(objs).collect();
         let mut sols: Vec<Solution> = pareto_front_indices(&points)
@@ -157,19 +200,43 @@ pub fn fig3_pareto_for(net: &Network, ctx: &FigureContext, params: &Nsga2Params)
         sols
     };
 
-    // NSGA-II consumes the workload IR directly; both objective runs share
-    // one per-(shape, config) evaluation cache across all generations.
+    // NSGA-II consumes the workload IR directly. WS templates route every
+    // genome probe through one segmented plan shared by both objective
+    // runs (and, with an engine cache, across requests — the fetch below
+    // hits the plan the exhaustive sweep just built); other dataflows
+    // keep the shared per-(shape, config) evaluation cache.
+    let plan = if ctx.template.dataflow == crate::config::Dataflow::WeightStationary {
+        Some(plans.plan(
+            &workload,
+            &ctx.grid.heights,
+            &ctx.grid.widths,
+            ctx.template.acc_capacity,
+        ))
+    } else {
+        None
+    };
     let cache = EvalCache::new();
     let front_of = |objective: WorkloadObjective| -> Vec<Solution> {
-        nsga2_workload(
-            &ctx.grid,
-            params,
-            &workload,
-            &ctx.template,
-            &ctx.weights,
-            &cache,
-            objective,
-        )
+        match &plan {
+            Some(p) => nsga2_workload_planned(
+                &ctx.grid,
+                params,
+                &workload,
+                &ctx.template,
+                &ctx.weights,
+                p,
+                objective,
+            ),
+            None => nsga2_workload(
+                &ctx.grid,
+                params,
+                &workload,
+                &ctx.template,
+                &ctx.weights,
+                &cache,
+                objective,
+            ),
+        }
     };
 
     Fig3Data {
@@ -210,9 +277,17 @@ pub fn write_fig3(data: &Fig3Data, outdir: &Path) -> io::Result<()> {
 
 /// Figure 4: data-movement heatmaps for the nine paper models.
 pub fn fig4_heatmaps(ctx: &FigureContext) -> Vec<Fig2Data> {
+    fig4_heatmaps_planned(ctx, None)
+}
+
+/// [`fig4_heatmaps`] with an optional engine-owned [`PlanCache`].
+pub fn fig4_heatmaps_planned(ctx: &FigureContext, plans: Option<&PlanCache>) -> Vec<Fig2Data> {
     nets::PAPER_MODELS
         .iter()
-        .map(|name| fig2_heatmaps(name, ctx))
+        .map(|name| {
+            let net = nets::build(name).unwrap_or_else(|| panic!("unknown network {name}"));
+            fig2_heatmaps_planned(&net, ctx, plans)
+        })
         .collect()
 }
 
@@ -241,10 +316,19 @@ pub struct Fig5Data {
 }
 
 pub fn fig5_robust(ctx: &FigureContext, params: &Nsga2Params) -> Fig5Data {
+    fig5_robust_planned(ctx, params, None)
+}
+
+/// [`fig5_robust`] with an optional engine-owned [`PlanCache`].
+pub fn fig5_robust_planned(
+    ctx: &FigureContext,
+    params: &Nsga2Params,
+    plans: Option<&PlanCache>,
+) -> Fig5Data {
     let configs = ctx.configs();
     let sweeps: Vec<SweepResult> = nets::paper_models()
         .iter()
-        .map(|net| sweep_network(net, &configs, &ctx.weights, ctx.threads))
+        .map(|net| sweep_network_planned(net, &configs, &ctx.weights, ctx.threads, plans))
         .collect();
     let objectives = RobustObjectives::from_sweeps(&sweeps);
 
@@ -320,6 +404,16 @@ pub struct Fig6Data {
 }
 
 pub fn fig6_equal_pe(pe_budget: usize, min_dim: usize, ctx: &FigureContext) -> Fig6Data {
+    fig6_equal_pe_planned(pe_budget, min_dim, ctx, None)
+}
+
+/// [`fig6_equal_pe`] with an optional engine-owned [`PlanCache`].
+pub fn fig6_equal_pe_planned(
+    pe_budget: usize,
+    min_dim: usize,
+    ctx: &FigureContext,
+    plans: Option<&PlanCache>,
+) -> Fig6Data {
     let shapes = equal_pe_factorizations(pe_budget, min_dim);
     let configs: Vec<ArrayConfig> = shapes
         .iter()
@@ -335,7 +429,7 @@ pub fn fig6_equal_pe(pe_budget: usize, min_dim: usize, ctx: &FigureContext) -> F
     let mut avg = vec![0.0; shapes.len()];
     let models = nets::paper_models();
     for net in &models {
-        let sweep = sweep_network(net, &configs, &ctx.weights, ctx.threads);
+        let sweep = sweep_network_planned(net, &configs, &ctx.weights, ctx.threads, plans);
         let norm = min_max_normalize(&sweep.energies());
         for (a, n) in avg.iter_mut().zip(&norm) {
             *a += n;

@@ -6,10 +6,11 @@ pub mod heatmap;
 pub mod table;
 
 pub use figures::{
-    fig2_heatmaps, fig2_heatmaps_for, fig3_pareto, fig3_pareto_for, fig4_heatmaps, fig5_robust,
-    fig6_equal_pe, fig7_liveness_energy, write_fig2, write_fig3, write_fig4, write_fig5,
-    write_fig6, write_fig7, write_graph_liveness, Fig2Data, Fig3Data, Fig5Data, Fig6Data,
-    Fig7Row, FigureContext,
+    fig2_heatmaps, fig2_heatmaps_for, fig2_heatmaps_planned, fig3_pareto, fig3_pareto_for,
+    fig3_pareto_planned, fig4_heatmaps, fig4_heatmaps_planned, fig5_robust, fig5_robust_planned,
+    fig6_equal_pe, fig6_equal_pe_planned, fig7_liveness_energy, write_fig2, write_fig3,
+    write_fig4, write_fig5, write_fig6, write_fig7, write_graph_liveness, Fig2Data, Fig3Data,
+    Fig5Data, Fig6Data, Fig7Row, FigureContext,
 };
 pub use heatmap::Heatmap;
 pub use table::{kv_block, pareto_csv, pareto_table};

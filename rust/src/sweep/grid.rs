@@ -1,6 +1,39 @@
 //! Configuration grids for design-space sweeps.
+//!
+//! Every constructor normalizes its axes — sorted ascending, deduplicated,
+//! zero values dropped — so duplicate or unsorted user-supplied axes can
+//! neither inflate a sweep with repeated cells nor break the segmented
+//! plan's binary searches ([`crate::sweep::plan`]), and a zero can never
+//! reach the tiling divisions.
 
 use crate::config::ArrayConfig;
+use std::fmt;
+
+/// Typed grid-construction errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridError {
+    /// A range grid was asked to step by zero, which would never terminate.
+    ZeroStep,
+}
+
+impl fmt::Display for GridError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GridError::ZeroStep => write!(f, "grid step must be positive"),
+        }
+    }
+}
+
+impl std::error::Error for GridError {}
+
+/// Sort ascending, deduplicate, and drop zeros (a zero-length array edge
+/// is not a configuration; [`ArrayConfig::validate`] rejects it anyway).
+pub fn normalize_axis(mut axis: Vec<usize>) -> Vec<usize> {
+    axis.retain(|&v| v > 0);
+    axis.sort_unstable();
+    axis.dedup();
+    axis
+}
 
 /// A rectangular (height, width) grid.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -10,24 +43,43 @@ pub struct DimGrid {
 }
 
 impl DimGrid {
+    /// Normalizing constructor: both axes are sorted, deduplicated and
+    /// stripped of zeros (see the module docs).
+    pub fn new(heights: Vec<usize>, widths: Vec<usize>) -> DimGrid {
+        DimGrid {
+            heights: normalize_axis(heights),
+            widths: normalize_axis(widths),
+        }
+    }
+
     /// The paper's evaluation grid: "all possible width and height
     /// combinations from 16 to 256 in increments of 8, for a total of 961
     /// possible dimensions" (Section 4.1).
     pub fn paper() -> DimGrid {
-        let axis: Vec<usize> = (16..=256).step_by(8).collect();
-        DimGrid {
-            heights: axis.clone(),
-            widths: axis,
-        }
+        DimGrid::coarse(16, 256, 8)
     }
 
-    /// A smaller grid for quick runs and tests.
+    /// The dense step-1 exploration grid over the paper's range: 241 × 241
+    /// = 58 081 cells, the segmented sweep plan's headline setting
+    /// (DESIGN.md §10).
+    pub fn dense() -> DimGrid {
+        DimGrid::coarse(16, 256, 1)
+    }
+
+    /// A smaller grid for quick runs and tests. Panics on a zero step;
+    /// use [`DimGrid::try_coarse`] for a typed error.
     pub fn coarse(lo: usize, hi: usize, step: usize) -> DimGrid {
-        let axis: Vec<usize> = (lo..=hi).step_by(step).collect();
-        DimGrid {
-            heights: axis.clone(),
-            widths: axis,
+        DimGrid::try_coarse(lo, hi, step).expect("grid step must be positive")
+    }
+
+    /// `lo..=hi` stepping by `step` on both axes; rejects a zero step with
+    /// a typed error instead of panicking inside the range iterator.
+    pub fn try_coarse(lo: usize, hi: usize, step: usize) -> Result<DimGrid, GridError> {
+        if step == 0 {
+            return Err(GridError::ZeroStep);
         }
+        let axis: Vec<usize> = (lo..=hi).step_by(step).collect();
+        Ok(DimGrid::new(axis.clone(), axis))
     }
 
     pub fn len(&self) -> usize {
@@ -92,9 +144,35 @@ mod tests {
     }
 
     #[test]
+    fn dense_grid_is_step_one() {
+        let g = DimGrid::dense();
+        assert_eq!(g.heights.len(), 241);
+        assert_eq!(g.len(), 241 * 241);
+        assert_eq!(g.heights[0], 16);
+        assert_eq!(*g.widths.last().unwrap(), 256);
+    }
+
+    #[test]
     fn pairs_are_height_major() {
         let g = DimGrid::coarse(2, 4, 2);
         assert_eq!(g.pairs(), vec![(2, 2), (2, 4), (4, 2), (4, 4)]);
+    }
+
+    #[test]
+    fn constructors_normalize_axes() {
+        let g = DimGrid::new(vec![8, 2, 8, 0, 4], vec![0, 16, 16]);
+        assert_eq!(g.heights, vec![2, 4, 8]);
+        assert_eq!(g.widths, vec![16]);
+        assert_eq!(g.len(), 3);
+        // Zero-only axes leave an empty (rejectable) grid, not a panic.
+        assert!(DimGrid::new(vec![0], vec![4]).is_empty());
+    }
+
+    #[test]
+    fn zero_step_is_a_typed_error() {
+        assert_eq!(DimGrid::try_coarse(8, 16, 0), Err(GridError::ZeroStep));
+        assert!(DimGrid::try_coarse(8, 16, 4).is_ok());
+        assert_eq!(GridError::ZeroStep.to_string(), "grid step must be positive");
     }
 
     #[test]

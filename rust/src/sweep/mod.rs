@@ -1,14 +1,19 @@
-//! Design-space exploration: configuration grids, the shape-major parallel
-//! sweep engine (DESIGN.md §4), cross-model normalization (Section 5) and
-//! the equal-PE-count aspect-ratio space (Figure 6).
+//! Design-space exploration: configuration grids, the segmented
+//! piecewise-constant sweep engine (DESIGN.md §10, with the shape-major
+//! and config-major cores of §4 kept as byte-identical baselines),
+//! cross-model normalization (Section 5) and the equal-PE-count
+//! aspect-ratio space (Figure 6).
 
 pub mod grid;
 pub mod normalize;
+pub mod plan;
 pub mod runner;
 
-pub use grid::{equal_pe_factorizations, DimGrid};
+pub use grid::{equal_pe_factorizations, normalize_axis, DimGrid, GridError};
 pub use normalize::RobustObjectives;
+pub use plan::{PlanCache, SegmentedWsPlan, PLAN_CACHE_CAPACITY, PLAN_CACHE_WORD_BUDGET};
 pub use runner::{
-    default_threads, parallel_map, seed_workload, sweep_network, sweep_workload,
-    sweep_workload_config_major, SweepPoint, SweepResult, Workload,
+    default_threads, parallel_map, seed_workload, seed_workload_planned, sweep_network,
+    sweep_network_planned, sweep_workload, sweep_workload_config_major, sweep_workload_planned,
+    sweep_workload_segmented, sweep_workload_shape_major, SweepPoint, SweepResult, Workload,
 };

@@ -1,0 +1,575 @@
+//! The segmented piecewise-constant sweep plan (DESIGN.md §10).
+//!
+//! For a fixed GEMM shape, the WS closed form depends on the array height
+//! only through the row-tile step function `tr = ceil(K/h)` (plus terms
+//! polynomial in `h` within a constant-`tr` run) and on the width through
+//! the col-tile step function `tc = ceil(N/w)` and the accumulator
+//! row-budget step `floor(acc/w)`. A dense grid axis therefore collapses
+//! into O(√dim) **equivalence segments** per shape
+//! ([`crate::model::gemm::ceil_div_segments`]): every tiling division of a
+//! sweep happens once per (shape, segment) — or once per (shape, axis
+//! value) for the tail-chunk residual — at plan-build time, and the
+//! per-cell hot loop is division- and branch-free.
+//!
+//! [`SegmentedWsPlan`] stores the per-(shape, axis value) tile scalars in
+//! flat structure-of-arrays tables of primitives, pre-scaled by workload
+//! multiplicity and pre-reduced into per-axis totals wherever a metric
+//! term depends on only one axis. What remains genuinely per-cell is three
+//! dot products over the shape dimension ([`SegmentedWsPlan::cell`]); the
+//! result is byte-identical to the config-major oracle by exact integer
+//! reassociation (property-tested).
+//!
+//! [`PlanCache`] memoizes plans across requests keyed by the workload
+//! fingerprint (the exact deduplicated shape histogram), the grid axes and
+//! the accumulator capacity, so a long-lived [`crate::api::Engine`] builds
+//! each segment table once per distinct (workload, grid) no matter how
+//! many sweep / Pareto / equal-PE / serve requests replay it.
+
+use crate::metrics::{Metrics, MovementCounters};
+use crate::model::gemm::{
+    ceil_div_segments, floor_div_segments, ws_metrics_from_scalars, WsColScalars, WsRowFactors,
+};
+use crate::model::schedule::GemmShape;
+use crate::model::workload::Workload;
+use crate::sweep::grid::normalize_axis;
+use crate::util::ceil_div;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// A segmented weight-stationary sweep plan for one (workload, height
+/// axis, width axis, accumulator capacity). See the module docs.
+#[derive(Debug)]
+pub struct SegmentedWsPlan {
+    heights: Vec<usize>,
+    widths: Vec<usize>,
+    acc: usize,
+    shapes: Vec<(GemmShape, u64)>,
+    // --- row tables, indexed hi * S + si ---
+    /// Row-tile count `tr` (unscaled — the seeding path reads these).
+    tr: Vec<u64>,
+    /// Weight shift-down hop sum `Σ k_t(k_t−1)/2` (unscaled).
+    s_kk: Vec<u64>,
+    /// Exposed first load `min(K, h)` (unscaled).
+    k0: Vec<u64>,
+    /// Multiplicity-scaled `tr` and `s_kk` — the dot-product operands.
+    tr_m: Vec<u64>,
+    skk_m: Vec<u64>,
+    // --- col tables, indexed wi * S + si ---
+    /// Col-class aggregates (DESIGN.md §10): Σ count, Σ count·chunks·nt,
+    /// Σ count·chunks, and the per-shape cycle coefficient
+    /// `M·s_cnt + s_c − 2·s_cc`.
+    col_cnt: Vec<u64>,
+    col_c: Vec<u64>,
+    col_cc: Vec<u64>,
+    col_cyc: Vec<u64>,
+    // --- per-axis totals (terms that depend on one axis only) ---
+    /// Σ mult·k0 per height.
+    tot_k0: Vec<u64>,
+    /// Σ mult·M·N·tr per height (aa_writes; ×(h−1) gives inter_pe_psum).
+    tot_mn_tr: Vec<u64>,
+    /// Σ mult·M·K·s_cnt per width (ub_act_reads; ×(w−1) gives
+    /// inter_pe_act).
+    tot_mk_cnt: Vec<u64>,
+    /// Σ mult·K·s_c per width (ub_weight_reads; ×2 plus `tot_5mkn` gives
+    /// intra_pe).
+    tot_k_c: Vec<u64>,
+    // --- axis-independent totals ---
+    tot_mn: u64,
+    tot_5mkn: u64,
+    tot_macs: u64,
+    row_segments: usize,
+    col_segments: usize,
+}
+
+impl SegmentedWsPlan {
+    /// Build the plan. Axes are normalized (sorted, deduplicated, zeros
+    /// dropped); all tiling divisions of the whole sweep happen here.
+    pub fn new(
+        workload: &Workload,
+        heights: &[usize],
+        widths: &[usize],
+        acc: usize,
+    ) -> SegmentedWsPlan {
+        let heights = normalize_axis(heights.to_vec());
+        let widths = normalize_axis(widths.to_vec());
+        let s = workload.shapes.len();
+        let (nh, nw) = (heights.len(), widths.len());
+        let mut p = SegmentedWsPlan {
+            heights,
+            widths,
+            acc,
+            shapes: workload.shapes.clone(),
+            tr: vec![0; nh * s],
+            s_kk: vec![0; nh * s],
+            k0: vec![0; nh * s],
+            tr_m: vec![0; nh * s],
+            skk_m: vec![0; nh * s],
+            col_cnt: vec![0; nw * s],
+            col_c: vec![0; nw * s],
+            col_cc: vec![0; nw * s],
+            col_cyc: vec![0; nw * s],
+            tot_k0: vec![0; nh],
+            tot_mn_tr: vec![0; nh],
+            tot_mk_cnt: vec![0; nw],
+            tot_k_c: vec![0; nw],
+            tot_mn: 0,
+            tot_5mkn: 0,
+            tot_macs: 0,
+            row_segments: 0,
+            col_segments: 0,
+        };
+        // The accumulator row-budget runs are shape-independent.
+        let acc_runs = floor_div_segments(acc, &p.widths);
+        let mut cf = vec![0u64; nw]; // scratch: full-class chunks per width
+        for (si, &(shape, mult)) in workload.shapes.iter().enumerate() {
+            if shape.is_empty() {
+                continue; // contributes Metrics::default() everywhere
+            }
+            let (m, k, n) = (shape.m as u64, shape.k as u64, shape.n as u64);
+            p.tot_mn += mult * m * n;
+            p.tot_5mkn += mult * 5 * m * k * n;
+            p.tot_macs += mult * shape.macs();
+            // Row axis: segments of constant tr = ceil(K/h); within a
+            // segment the remaining row factors are division-free
+            // polynomials in h (k_tail is linear, s_kk quadratic).
+            for seg in ceil_div_segments(shape.k, &p.heights) {
+                p.row_segments += 1;
+                let tr = seg.value;
+                for hi in seg.start..seg.end {
+                    let h = p.heights[hi] as u64;
+                    let k_tail = k - (tr - 1) * h;
+                    let s_kk = (tr - 1) * (h * (h - 1) / 2) + k_tail * (k_tail - 1) / 2;
+                    let k0 = k.min(h);
+                    let at = hi * s + si;
+                    p.tr[at] = tr;
+                    p.s_kk[at] = s_kk;
+                    p.k0[at] = k0;
+                    p.tr_m[at] = mult * tr;
+                    p.skk_m[at] = mult * s_kk;
+                    p.tot_k0[hi] += mult * k0;
+                    p.tot_mn_tr[hi] += mult * m * n * tr;
+                }
+            }
+            // Full-class chunk count: one division per (shape, budget run)
+            // broadcast over the run.
+            for run in &acc_runs {
+                let cfv = ceil_div(shape.m, (run.value as usize).max(1)) as u64;
+                cf[run.start..run.end].fill(cfv);
+            }
+            // Col axis: segments of constant tc = ceil(N/w). The tail
+            // class's chunk count still depends on n_tail = N − (tc−1)·w,
+            // which genuinely varies inside a segment — that one residual
+            // division stays per (shape, axis value), never per cell.
+            for seg in ceil_div_segments(shape.n, &p.widths) {
+                p.col_segments += 1;
+                let tc = seg.value;
+                for wi in seg.start..seg.end {
+                    let w = p.widths[wi] as u64;
+                    let n_tail = n - (tc - 1) * w;
+                    let r_tail = (acc as u64 / n_tail).max(1);
+                    let ct = ceil_div(shape.m, r_tail as usize) as u64;
+                    let (full_cnt, full_c) = if tc > 1 { (tc - 1, cf[wi]) } else { (0, 0) };
+                    let s_cnt = full_cnt + 1;
+                    let s_c = full_cnt * full_c * w + ct * n_tail;
+                    let s_cc = full_cnt * full_c + ct;
+                    let at = wi * s + si;
+                    p.col_cnt[at] = s_cnt;
+                    p.col_c[at] = s_c;
+                    p.col_cc[at] = s_cc;
+                    p.col_cyc[at] = m * s_cnt + s_c - 2 * s_cc;
+                    p.tot_mk_cnt[wi] += mult * m * k * s_cnt;
+                    p.tot_k_c[wi] += mult * k * s_c;
+                }
+            }
+        }
+        p
+    }
+
+    /// The normalized height axis.
+    pub fn heights(&self) -> &[usize] {
+        &self.heights
+    }
+
+    /// The normalized width axis.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// The accumulator capacity the plan was built for.
+    pub fn acc_capacity(&self) -> usize {
+        self.acc
+    }
+
+    /// Row-tile equivalence segments summed over shapes (plan statistics).
+    pub fn row_segments(&self) -> usize {
+        self.row_segments
+    }
+
+    /// Col-tile equivalence segments summed over shapes.
+    pub fn col_segments(&self) -> usize {
+        self.col_segments
+    }
+
+    /// Index of a height on the plan axis.
+    pub fn height_index(&self, h: usize) -> Option<usize> {
+        self.heights.binary_search(&h).ok()
+    }
+
+    /// Index of a width on the plan axis.
+    pub fn width_index(&self, w: usize) -> Option<usize> {
+        self.widths.binary_search(&w).ok()
+    }
+
+    /// Workload metrics of one grid cell: Σ over shapes of multiplicity ×
+    /// the WS closed form, assembled from the SoA tables — three dot
+    /// products over the shape dimension plus a constant number of scalar
+    /// multiply-adds. Byte-identical to the config-major oracle.
+    pub fn cell(&self, hi: usize, wi: usize) -> Metrics {
+        let s = self.shapes.len();
+        let (ro, co) = (hi * s, wi * s);
+        let tr_m = &self.tr_m[ro..ro + s];
+        let skk_m = &self.skk_m[ro..ro + s];
+        let col_c = &self.col_c[co..co + s];
+        let col_cc = &self.col_cc[co..co + s];
+        let col_cyc = &self.col_cyc[co..co + s];
+        let inter_weight: u64 = skk_m.iter().zip(col_c).map(|(&a, &b)| a * b).sum();
+        let passes: u64 = tr_m.iter().zip(col_cc).map(|(&a, &b)| a * b).sum();
+        let cyc: u64 = tr_m.iter().zip(col_cyc).map(|(&a, &b)| a * b).sum();
+        let h = self.heights[hi] as u64;
+        let w = self.widths[wi] as u64;
+        Metrics {
+            cycles: self.tot_k0[hi] + cyc + h * passes,
+            stall_cycles: 0,
+            macs: self.tot_macs,
+            passes,
+            movements: MovementCounters {
+                ub_act_reads: self.tot_mk_cnt[wi],
+                ub_weight_reads: self.tot_k_c[wi],
+                ub_out_writes: self.tot_mn,
+                inter_pe_act: (w - 1) * self.tot_mk_cnt[wi],
+                inter_pe_psum: (h - 1) * self.tot_mn_tr[hi],
+                inter_pe_weight: inter_weight,
+                intra_pe: self.tot_5mkn + 2 * self.tot_k_c[wi],
+                aa_writes: self.tot_mn_tr[hi],
+                aa_reads: self.tot_mn,
+            },
+        }
+    }
+
+    /// [`SegmentedWsPlan::cell`] looked up by axis values: two binary
+    /// searches plus the combine — no divisions. `None` if (h, w) is off
+    /// the plan's axes.
+    pub fn probe(&self, h: usize, w: usize) -> Option<Metrics> {
+        let hi = self.height_index(h)?;
+        let wi = self.width_index(w)?;
+        Some(self.cell(hi, wi))
+    }
+
+    /// Per-shape metrics of one cell, unscaled by multiplicity —
+    /// byte-identical to `ws_metrics` for that (shape, geometry). The
+    /// serve path seeds the per-(shape, configuration) memo table with
+    /// these.
+    pub fn shape_cell(&self, si: usize, hi: usize, wi: usize) -> Metrics {
+        let (shape, _) = self.shapes[si];
+        let s = self.shapes.len();
+        let (ra, ca) = (hi * s + si, wi * s + si);
+        let row = WsRowFactors {
+            height: self.heights[hi],
+            tr: self.tr[ra],
+            s_kk: self.s_kk[ra],
+            k0: self.k0[ra],
+        };
+        let col = WsColScalars {
+            width: self.widths[wi],
+            s_cnt: self.col_cnt[ca],
+            s_n: if shape.is_empty() { 0 } else { shape.n as u64 },
+            s_c: self.col_c[ca],
+            s_cc: self.col_cc[ca],
+        };
+        ws_metrics_from_scalars(shape, &row, &col)
+    }
+
+    /// The shapes (with multiplicities) the plan was built over.
+    pub fn shapes(&self) -> &[(GemmShape, u64)] {
+        &self.shapes
+    }
+
+    /// Resident size of the SoA tables in 64-bit words — what the plan
+    /// cache's memory budget accounts.
+    pub fn table_words(&self) -> usize {
+        let s = self.shapes.len();
+        let (nh, nw) = (self.heights.len(), self.widths.len());
+        5 * nh * s + 4 * nw * s + 2 * nh + 2 * nw
+    }
+}
+
+/// The cache key: the exact deduplicated shape histogram (a structural
+/// workload fingerprint — collision-free by construction), the normalized
+/// grid axes and the accumulator capacity. Dataflow is implicit (plans
+/// model the WS closed form; other dataflows bypass the planner), and
+/// bitwidths are deliberately absent: they scale bandwidth/energy reports,
+/// not access counts, so one plan serves every bitwidth knob — the same
+/// argument as the eval cache's `CfgKey`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    shapes: Vec<(GemmShape, u64)>,
+    heights: Vec<usize>,
+    widths: Vec<usize>,
+    acc: usize,
+}
+
+/// Most plans a long-lived engine holds before flushing wholesale. Plans
+/// are memo state, not semantics — a flush only costs rebuilding tables.
+pub const PLAN_CACHE_CAPACITY: usize = 64;
+
+/// Total SoA words the cache may keep resident (128 MiB of `u64`s). A
+/// wire-reachable worst case — thousands of distinct shapes on the dense
+/// axes — costs tens of MB *per plan*, so an entry count alone would not
+/// bound a hostile client's memory (the PR-2 capped-cache invariant);
+/// exceeding the budget flushes wholesale, exactly like the entry cap.
+pub const PLAN_CACHE_WORD_BUDGET: usize = 1 << 24;
+
+/// A thread-safe memo table of [`SegmentedWsPlan`]s. Shared by the API
+/// engine across sweep / Pareto / equal-PE / figure requests. Because the
+/// key embeds the exact shape histogram, re-registering a user network
+/// under the same name simply stops matching the old entries — stale
+/// reuse is unrepresentable and no explicit invalidation hook is needed
+/// (the capacity bounds garbage-collect orphaned entries).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: RwLock<HashMap<PlanKey, Arc<SegmentedWsPlan>>>,
+    /// Σ [`SegmentedWsPlan::table_words`] over the map; mutated only while
+    /// holding the map's write lock.
+    words: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Fetch or build the plan for (workload, axes, accumulator capacity).
+    pub fn plan(
+        &self,
+        workload: &Workload,
+        heights: &[usize],
+        widths: &[usize],
+        acc: usize,
+    ) -> Arc<SegmentedWsPlan> {
+        let key = PlanKey {
+            shapes: workload.shapes.clone(),
+            heights: normalize_axis(heights.to_vec()),
+            widths: normalize_axis(widths.to_vec()),
+            acc,
+        };
+        if let Some(p) = self.map.read().expect("plan cache poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        let plan = Arc::new(SegmentedWsPlan::new(workload, &key.heights, &key.widths, acc));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let new_words = plan.table_words() as u64;
+        let mut map = self.map.write().expect("plan cache poisoned");
+        if !map.contains_key(&key)
+            && (map.len() >= PLAN_CACHE_CAPACITY
+                || self.words.load(Ordering::Relaxed) + new_words
+                    > PLAN_CACHE_WORD_BUDGET as u64)
+        {
+            map.clear();
+            self.words.store(0, Ordering::Relaxed);
+        }
+        if !map.contains_key(&key) {
+            self.words.fetch_add(new_words, Ordering::Relaxed);
+        }
+        Arc::clone(map.entry(key).or_insert(plan))
+    }
+
+    /// Drop every cached plan (benchmarks isolate rebuild cost with this).
+    pub fn clear(&self) {
+        let mut map = self.map.write().expect("plan cache poisoned");
+        map.clear();
+        self.words.store(0, Ordering::Relaxed);
+    }
+
+    /// Cached plans.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("plan cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to build a plan.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayConfig;
+    use crate::model::gemm::ws_metrics;
+    use crate::model::layer::{Layer, SpatialDims};
+    use crate::model::network::Network;
+
+    fn small_net() -> Network {
+        Network::new(
+            "s",
+            vec![
+                Layer::conv("c1", SpatialDims::square(14), 16, 32, 3, 1, 1, 1),
+                Layer::conv("c2", SpatialDims::square(14), 32, 32, 3, 1, 1, 1),
+                Layer::conv("c3", SpatialDims::square(14), 32, 32, 3, 1, 1, 1),
+                Layer::conv("g", SpatialDims::square(14), 32, 32, 3, 1, 1, 4),
+            ],
+        )
+    }
+
+    #[test]
+    fn cell_matches_direct_workload_eval() {
+        let w = Workload::of(&small_net());
+        let heights: Vec<usize> = (1..=40).collect();
+        let widths: Vec<usize> = (1..=40).collect();
+        for acc in [1usize, 7, 64, 4096] {
+            let plan = SegmentedWsPlan::new(&w, &heights, &widths, acc);
+            for (hi, &h) in heights.iter().enumerate() {
+                for (wi, &wd) in widths.iter().enumerate() {
+                    let cfg = ArrayConfig::new(h, wd).with_acc_capacity(acc);
+                    assert_eq!(
+                        plan.cell(hi, wi),
+                        w.eval(&cfg),
+                        "cell mismatch at ({h}, {wd}) acc {acc}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn probe_is_cell_by_value() {
+        let w = Workload::of(&small_net());
+        let plan = SegmentedWsPlan::new(&w, &[8, 16, 32], &[4, 24], 4096);
+        assert_eq!(plan.probe(16, 24), Some(plan.cell(1, 1)));
+        assert_eq!(plan.probe(17, 24), None);
+        assert_eq!(plan.probe(16, 25), None);
+    }
+
+    #[test]
+    fn shape_cell_matches_ws_metrics() {
+        let w = Workload::of(&small_net());
+        let heights = [1usize, 3, 8, 19, 300];
+        let widths = [1usize, 2, 7, 48, 1000];
+        let plan = SegmentedWsPlan::new(&w, &heights, &widths, 64);
+        for (si, &(shape, _)) in w.shapes.iter().enumerate() {
+            for (hi, &h) in heights.iter().enumerate() {
+                for (wi, &wd) in widths.iter().enumerate() {
+                    let cfg = ArrayConfig::new(h, wd).with_acc_capacity(64);
+                    assert_eq!(
+                        plan.shape_cell(si, hi, wi),
+                        ws_metrics(shape, &cfg),
+                        "shape {shape:?} at ({h}, {wd})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_normalizes_axes() {
+        let w = Workload::of(&small_net());
+        let plan = SegmentedWsPlan::new(&w, &[16, 8, 16, 0], &[4, 4, 2], 4096);
+        assert_eq!(plan.heights(), &[8, 16]);
+        assert_eq!(plan.widths(), &[2, 4]);
+        assert_eq!(plan.height_index(16), Some(1));
+        assert_eq!(plan.height_index(0), None);
+    }
+
+    #[test]
+    fn empty_shapes_contribute_nothing() {
+        let live = GemmShape::new(5, 7, 9);
+        let with_empty = Workload::from_shapes(
+            "z",
+            vec![(GemmShape::new(0, 8, 8), 3), (live, 2), (GemmShape::new(4, 0, 2), 1)],
+        );
+        let only_live = Workload::from_shapes("l", vec![(live, 2)]);
+        let axes: Vec<usize> = (1..=12).collect();
+        let a = SegmentedWsPlan::new(&with_empty, &axes, &axes, 32);
+        let b = SegmentedWsPlan::new(&only_live, &axes, &axes, 32);
+        for hi in 0..axes.len() {
+            for wi in 0..axes.len() {
+                assert_eq!(a.cell(hi, wi), b.cell(hi, wi));
+            }
+        }
+        // The empty shape's seeded per-shape metrics are the identity.
+        assert_eq!(a.shape_cell(0, 3, 3), Metrics::default());
+    }
+
+    #[test]
+    fn plan_cache_hits_on_identical_requests() {
+        let w = Workload::of(&small_net());
+        let cache = PlanCache::new();
+        let a = cache.plan(&w, &[8, 16], &[4, 8], 4096);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 1, 1));
+        // Same key (even with unsorted, duplicated axes): a hit, same Arc.
+        let b = cache.plan(&w, &[16, 8, 8], &[8, 4], 4096);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // A different accumulator capacity is a different plan.
+        let c = cache.plan(&w, &[8, 16], &[4, 8], 64);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+        // A different workload fingerprint is a different plan — the
+        // re-register invalidation story.
+        let other = Workload::from_shapes("s", vec![(GemmShape::new(3, 3, 3), 1)]);
+        let d = cache.plan(&other, &[8, 16], &[4, 8], 4096);
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn plan_cache_word_budget_is_bounded() {
+        // Many distinct shapes on dense axes make each plan tables-heavy;
+        // the cache must flush on the word budget, long before the entry
+        // cap would ever trigger.
+        let shapes: Vec<(GemmShape, u64)> = (1..=512)
+            .map(|i| (GemmShape::new(i, i + 1, i + 2), 1))
+            .collect();
+        let w = Workload::from_shapes("big", shapes);
+        let axes: Vec<usize> = (16..=256).collect();
+        let per_plan = SegmentedWsPlan::new(&w, &axes, &axes, 4096).table_words();
+        let fits = PLAN_CACHE_WORD_BUDGET / per_plan;
+        assert!(fits + 1 < PLAN_CACHE_CAPACITY, "budget must bind first");
+        let cache = PlanCache::new();
+        for i in 0..fits + 2 {
+            cache.plan(&w, &axes, &axes, 4096 + i);
+        }
+        // At most the budget's worth of plans (+1 for the entry admitted
+        // right after a flush) stays resident.
+        assert!(cache.len() <= fits + 1, "{} plans resident", cache.len());
+        // A flushed cache still answers.
+        let p = cache.plan(&w, &axes, &axes, 4096);
+        assert_eq!(p.acc_capacity(), 4096);
+    }
+
+    #[test]
+    fn plan_cache_capacity_is_bounded() {
+        let w = Workload::of(&small_net());
+        let cache = PlanCache::new();
+        for i in 0..PLAN_CACHE_CAPACITY + 5 {
+            cache.plan(&w, &[8 + i], &[4], 4096);
+        }
+        assert!(cache.len() <= PLAN_CACHE_CAPACITY);
+        // A flushed cache still answers (rebuilds on miss).
+        let p = cache.plan(&w, &[8], &[4], 4096);
+        assert_eq!(p.heights(), &[8]);
+    }
+}

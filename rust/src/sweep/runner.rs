@@ -3,16 +3,23 @@
 //! across OS threads (the offline environment has no rayon; a scoped
 //! work-stealing pool over an atomic index does the job).
 //!
-//! The hot loop is **shape-major** (DESIGN.md §4): the closed-form WS model
-//! factors into height-dependent row factors and width/accumulator-
-//! dependent col factors ([`crate::model::gemm`]), and the sweep computes
-//! each factor once per (shape, grid axis) instead of once per (shape,
-//! configuration). All tiling divisions thus leave the per-cell loop; a
-//! grid of H heights × W widths pays O(S·(H+W)) divisions instead of
-//! O(S·H·W). [`sweep_workload_config_major`] keeps the naive config-major
-//! path alive as the property-test oracle and the bench baseline — the two
-//! are byte-identical by construction because both assemble metrics through
-//! [`ws_metrics_from_factors`].
+//! The default hot loop is **segmented** (DESIGN.md §10): for each shape,
+//! every grid axis collapses into the piecewise-constant equivalence
+//! segments of its tile-count step functions, per-axis tile scalars land
+//! in flat SoA tables ([`crate::sweep::plan::SegmentedWsPlan`]), and each
+//! cell is assembled with three dot products over the shape dimension —
+//! no divisions, no branches, no pointer chasing. Two older cores stay
+//! alive as byte-identical correctness baselines and bench rungs:
+//!
+//! * [`sweep_workload_shape_major`] — factors computed once per (shape,
+//!   grid axis), combined per cell through `ws_metrics_from_factors`
+//!   (DESIGN.md §4, the PR-1 core).
+//! * [`sweep_workload_config_major`] — the naive oracle: every (shape,
+//!   config) cell recomputes its tiling from scratch.
+//!
+//! All three produce byte-identical `Metrics` (property-tested); the
+//! segmented core is additionally reachable with an engine-owned
+//! [`PlanCache`] so repeated requests reuse segment tables.
 
 use crate::config::{ArrayConfig, Dataflow, EnergyWeights};
 use crate::metrics::Metrics;
@@ -23,9 +30,10 @@ use crate::model::gemm::{
 pub use crate::model::workload::Workload;
 use crate::model::network::Network;
 use crate::model::workload::EvalCache;
+use crate::sweep::plan::{PlanCache, SegmentedWsPlan};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 /// One evaluated grid point.
 #[derive(Debug, Clone)]
@@ -57,12 +65,11 @@ impl SweepResult {
         self.points.iter().map(|p| p.utilization).collect()
     }
 
-    /// Point with minimal value of `f`.
-    pub fn argmin(&self, f: impl Fn(&SweepPoint) -> f64) -> &SweepPoint {
-        self.points
-            .iter()
-            .min_by(|a, b| f(a).partial_cmp(&f(b)).unwrap())
-            .expect("non-empty sweep")
+    /// Point with minimal value of `f`, or `None` for an empty sweep.
+    /// Uses the IEEE total order, so a NaN objective can never panic —
+    /// (positive) NaNs sort after every number and lose the argmin.
+    pub fn argmin(&self, f: impl Fn(&SweepPoint) -> f64) -> Option<&SweepPoint> {
+        self.points.iter().min_by(|a, b| f(a).total_cmp(&f(b)))
     }
 }
 
@@ -196,24 +203,152 @@ fn point_of(cfg: &ArrayConfig, m: Metrics, weights: &EnergyWeights) -> SweepPoin
     }
 }
 
-/// Sweep one network over explicit configurations, parallel across threads.
+/// Sweep one network over explicit configurations, parallel across threads
+/// (the segmented core, no plan cache).
 pub fn sweep_network(
     net: &Network,
     configs: &[ArrayConfig],
     weights: &EnergyWeights,
     threads: usize,
 ) -> SweepResult {
+    sweep_network_planned(net, configs, weights, threads, None)
+}
+
+/// [`sweep_network`] with an optional engine-owned [`PlanCache`] so
+/// repeated sweeps of one workload reuse the segment tables.
+pub fn sweep_network_planned(
+    net: &Network,
+    configs: &[ArrayConfig],
+    weights: &EnergyWeights,
+    threads: usize,
+    plans: Option<&PlanCache>,
+) -> SweepResult {
     let workload = Workload::of(net);
-    let points = sweep_workload(&workload, configs, weights, threads);
+    let points = sweep_workload_planned(&workload, configs, weights, threads, plans);
     SweepResult {
         network: net.name.clone(),
         points,
     }
 }
 
-/// Sweep a prepared workload shape-major: tiling factors are computed once
-/// per (shape, grid axis) and reused across the whole config list.
+/// Sweep a prepared workload. This is the segmented core
+/// ([`sweep_workload_segmented`]); the shape-major and config-major cores
+/// remain available as byte-identical baselines.
 pub fn sweep_workload(
+    workload: &Workload,
+    configs: &[ArrayConfig],
+    weights: &EnergyWeights,
+    threads: usize,
+) -> Vec<SweepPoint> {
+    sweep_workload_planned(workload, configs, weights, threads, None)
+}
+
+/// How each configuration of a request is evaluated: through a segmented
+/// plan cell, or directly (non-WS dataflows).
+#[derive(Clone, Copy)]
+enum CellRoute {
+    Plan { plan: usize, hi: usize, wi: usize },
+    Direct,
+}
+
+/// Group WS configurations by accumulator capacity, fetch (or build) one
+/// [`SegmentedWsPlan`] per group over the group's axis values, and map
+/// every configuration to its route. Non-WS configurations route direct.
+fn build_routes(
+    workload: &Workload,
+    configs: &[ArrayConfig],
+    plans: Option<&PlanCache>,
+) -> (Vec<Arc<SegmentedWsPlan>>, Vec<CellRoute>) {
+    let mut groups: HashMap<usize, (Vec<usize>, Vec<usize>)> = HashMap::new();
+    for cfg in configs {
+        if cfg.dataflow == Dataflow::WeightStationary {
+            let axes = groups.entry(cfg.acc_capacity).or_default();
+            axes.0.push(cfg.height);
+            axes.1.push(cfg.width);
+        }
+    }
+    let mut built: Vec<Arc<SegmentedWsPlan>> = Vec::with_capacity(groups.len());
+    let mut plan_of: HashMap<usize, usize> = HashMap::with_capacity(groups.len());
+    for (acc, (hs, ws)) in groups {
+        let plan = match plans {
+            Some(cache) => cache.plan(workload, &hs, &ws, acc),
+            None => Arc::new(SegmentedWsPlan::new(workload, &hs, &ws, acc)),
+        };
+        plan_of.insert(acc, built.len());
+        built.push(plan);
+    }
+    let routes = configs
+        .iter()
+        .map(|cfg| {
+            if cfg.dataflow != Dataflow::WeightStationary {
+                return CellRoute::Direct;
+            }
+            let pi = plan_of[&cfg.acc_capacity];
+            match (
+                built[pi].height_index(cfg.height),
+                built[pi].width_index(cfg.width),
+            ) {
+                (Some(hi), Some(wi)) => CellRoute::Plan { plan: pi, hi, wi },
+                // Unreachable for valid configs (the plan axes cover the
+                // group); a zero edge falls through to the direct path,
+                // which fails exactly like a direct evaluation would.
+                _ => CellRoute::Direct,
+            }
+        })
+        .collect();
+    (built, routes)
+}
+
+/// The segmented sweep core (DESIGN.md §10): axis collapse into
+/// equivalence segments, SoA tile-scalar tables, per-cell assembly by dot
+/// products. Byte-identical to [`sweep_workload_config_major`].
+pub fn sweep_workload_segmented(
+    workload: &Workload,
+    configs: &[ArrayConfig],
+    weights: &EnergyWeights,
+    threads: usize,
+) -> Vec<SweepPoint> {
+    sweep_workload_planned(workload, configs, weights, threads, None)
+}
+
+/// Consecutive cells one worker claims at a time. A segmented cell is a
+/// few hundred nanoseconds, so per-index work-stealing overhead (atomic
+/// claim + `OnceLock` publish) would be a visible fraction of the cell
+/// itself; claiming short runs amortizes it while keeping stealing
+/// granular enough that a straggler cannot idle the pool.
+const SWEEP_CHUNK: usize = 64;
+
+/// [`sweep_workload_segmented`] with an optional [`PlanCache`].
+pub fn sweep_workload_planned(
+    workload: &Workload,
+    configs: &[ArrayConfig],
+    weights: &EnergyWeights,
+    threads: usize,
+    plans: Option<&PlanCache>,
+) -> Vec<SweepPoint> {
+    let (built, routes) = build_routes(workload, configs, plans);
+    let n = configs.len();
+    let chunks = crate::util::ceil_div(n, SWEEP_CHUNK);
+    let evaluated: Vec<Vec<SweepPoint>> = parallel_map(chunks, threads, |c| {
+        let lo = c * SWEEP_CHUNK;
+        let end = (lo + SWEEP_CHUNK).min(n);
+        (lo..end)
+            .map(|i| {
+                let m = match routes[i] {
+                    CellRoute::Plan { plan, hi, wi } => built[plan].cell(hi, wi),
+                    CellRoute::Direct => workload.eval(&configs[i]),
+                };
+                point_of(&configs[i], m, weights)
+            })
+            .collect()
+    });
+    evaluated.into_iter().flatten().collect()
+}
+
+/// The shape-major core (DESIGN.md §4): tiling factors are computed once
+/// per (shape, grid axis) and combined per cell. Kept as the intermediate
+/// bench rung between the config-major oracle and the segmented core.
+pub fn sweep_workload_shape_major(
     workload: &Workload,
     configs: &[ArrayConfig],
     weights: &EnergyWeights,
@@ -226,21 +361,44 @@ pub fn sweep_workload(
 }
 
 /// Seed `cache` with the per-(shape, configuration) metrics of every
-/// cell, shape-major, without assembling sweep points (no energy or
-/// utilization is computed — the caller reads the memo table). This is
-/// the batched serving path: `camuy serve` groups concurrent eval
-/// requests by workload, runs their distinct configurations through the
-/// shape-major core once, and answers each request from the now-hot memo
-/// table.
+/// cell without assembling sweep points (no energy or utilization is
+/// computed — the caller reads the memo table). This is the batched
+/// serving path: `camuy serve` groups concurrent eval requests by
+/// workload, runs their distinct configurations through the segmented
+/// core once, and answers each request from the now-hot memo table.
 pub fn seed_workload(
     workload: &Workload,
     configs: &[ArrayConfig],
     threads: usize,
     cache: &EvalCache,
 ) {
-    let plan = ShapeMajorPlan::new(workload, configs);
+    seed_workload_planned(workload, configs, threads, cache, None)
+}
+
+/// [`seed_workload`] through an optional engine-owned [`PlanCache`], so a
+/// serve batch that replays a previously seen (workload, axes) reuses the
+/// segment tables instead of re-deriving them.
+pub fn seed_workload_planned(
+    workload: &Workload,
+    configs: &[ArrayConfig],
+    threads: usize,
+    cache: &EvalCache,
+    plans: Option<&PlanCache>,
+) {
+    let (built, routes) = build_routes(workload, configs, plans);
     parallel_map(configs.len(), threads, |i| {
-        plan.eval(i, &configs[i], Some(cache));
+        let cfg = &configs[i];
+        match routes[i] {
+            CellRoute::Plan { plan, hi, wi } => {
+                let p = &built[plan];
+                for (si, &(shape, _)) in workload.shapes.iter().enumerate() {
+                    cache.seed(shape, cfg, p.shape_cell(si, hi, wi));
+                }
+            }
+            CellRoute::Direct => {
+                workload.eval_cached(cfg, cache);
+            }
+        }
     });
 }
 
@@ -381,9 +539,76 @@ mod tests {
         let net = small_net();
         let cfgs = DimGrid::coarse(8, 64, 8).configs(&ArrayConfig::new(1, 1));
         let res = sweep_network(&net, &cfgs, &EnergyWeights::paper(), 2);
-        let best = res.argmin(|p| p.energy);
+        let best = res.argmin(|p| p.energy).expect("non-empty sweep");
         for p in &res.points {
             assert!(best.energy <= p.energy);
+        }
+    }
+
+    #[test]
+    fn argmin_is_none_on_empty_and_total_on_nan() {
+        let empty = SweepResult {
+            network: "e".into(),
+            points: Vec::new(),
+        };
+        assert!(empty.argmin(|p| p.energy).is_none());
+        // A NaN objective must neither panic nor win the argmin.
+        let net = small_net();
+        let cfgs = DimGrid::coarse(8, 24, 8).configs(&ArrayConfig::new(1, 1));
+        let res = sweep_network(&net, &cfgs, &EnergyWeights::paper(), 1);
+        let best = res
+            .argmin(|p| if p.height == 8 { f64::NAN } else { p.energy })
+            .expect("non-empty sweep");
+        assert_ne!(best.height, 8);
+    }
+
+    #[test]
+    fn segmented_equals_shape_major_and_config_major() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        // Mixed accumulator capacities and duplicate configs in one list:
+        // the router must group, dedup axes, and keep input order.
+        let mut cfgs =
+            DimGrid::coarse(1, 24, 1).configs(&ArrayConfig::new(1, 1).with_acc_capacity(64));
+        cfgs.extend(
+            DimGrid::coarse(3, 17, 2).configs(&ArrayConfig::new(1, 1).with_acc_capacity(7)),
+        );
+        cfgs.push(cfgs[0].clone());
+        let ew = EnergyWeights::paper();
+        let seg = sweep_workload_segmented(&w, &cfgs, &ew, 2);
+        let sm = sweep_workload_shape_major(&w, &cfgs, &ew, 2);
+        let cm = sweep_workload_config_major(&w, &cfgs, &ew, 2);
+        assert_eq!(seg.len(), cfgs.len());
+        for i in 0..cfgs.len() {
+            assert_eq!((seg[i].height, seg[i].width), (cfgs[i].height, cfgs[i].width));
+            assert_eq!(seg[i].metrics, sm[i].metrics, "segmented != shape-major at {i}");
+            assert_eq!(seg[i].metrics, cm[i].metrics, "segmented != config-major at {i}");
+            assert_eq!(seg[i].energy, cm[i].energy);
+            assert_eq!(seg[i].utilization, cm[i].utilization);
+        }
+    }
+
+    #[test]
+    fn planned_sweep_reuses_the_plan_cache() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        let cfgs = DimGrid::coarse(8, 32, 8).configs(&ArrayConfig::new(1, 1));
+        let ew = EnergyWeights::paper();
+        let plans = crate::sweep::plan::PlanCache::new();
+        let a = sweep_workload_planned(&w, &cfgs, &ew, 2, Some(&plans));
+        assert_eq!((plans.len(), plans.misses()), (1, 1));
+        let b = sweep_workload_planned(&w, &cfgs, &ew, 2, Some(&plans));
+        assert!(plans.hits() >= 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.metrics, y.metrics);
+        }
+        // Seeding through the same cache hits the same plan.
+        let cache = EvalCache::new();
+        seed_workload_planned(&w, &cfgs, 2, &cache, Some(&plans));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(cache.len(), w.distinct() * cfgs.len());
+        for cfg in &cfgs {
+            assert_eq!(w.eval_cached(cfg, &cache), w.eval(cfg));
         }
     }
 

@@ -2,7 +2,10 @@
 //! the long-lived engine's shared memo table, batched evaluation, and the
 //! JSON-lines serve loop (stdin-shaped and TCP).
 
-use camuy::api::{ApiError, Engine, EvalRequest, EvalResponse, ServeOptions};
+use camuy::api::{
+    ApiError, Engine, EvalRequest, EvalResponse, ParetoRequest, ServeOptions, SweepRequest,
+    SweepSpec,
+};
 use camuy::config::{ArrayConfig, ConfigError};
 use camuy::coordinator::Coordinator;
 use camuy::model::layer::{Layer, SpatialDims};
@@ -110,6 +113,66 @@ fn engine_cache_is_shared_across_requests() {
     assert_eq!(engine.cache().misses(), misses, "repeat query recomputed");
     assert!(engine.cache().hits() > hits);
     assert_eq!(a.total(), b.total());
+}
+
+#[test]
+fn sweep_and_pareto_requests_reuse_the_plan_cache() {
+    let engine = Engine::new();
+    let req = SweepRequest {
+        net: "alexnet".to_string(),
+        spec: SweepSpec::smoke(),
+    };
+    let a = engine.sweep(&req).unwrap();
+    assert_eq!(engine.plans().len(), 1);
+    let misses = engine.plans().misses();
+    let b = engine.sweep(&req).unwrap();
+    assert_eq!(engine.plans().misses(), misses, "repeat sweep rebuilt its plan");
+    assert!(engine.plans().hits() > 0);
+    assert_eq!(a.sweep.points.len(), b.sweep.points.len());
+    for (x, y) in a.sweep.points.iter().zip(&b.sweep.points) {
+        assert_eq!(x.metrics, y.metrics);
+        assert_eq!(x.energy, y.energy);
+    }
+    // A Pareto request on the same (workload, grid, acc) hits the same
+    // plan — NSGA-II genome probes run through segment lookup.
+    let preq = ParetoRequest {
+        net: "alexnet".to_string(),
+        spec: SweepSpec::smoke(),
+        params: camuy::pareto::nsga2::Nsga2Params {
+            population: 8,
+            generations: 4,
+            ..Default::default()
+        },
+    };
+    let len = engine.plans().len();
+    let hits = engine.plans().hits();
+    let d = engine.pareto(&preq).unwrap();
+    assert!(!d.energy_front.is_empty());
+    assert_eq!(engine.plans().len(), len, "pareto built a redundant plan");
+    assert!(engine.plans().hits() > hits);
+}
+
+#[test]
+fn reregistration_changes_the_plan_fingerprint() {
+    let engine = Engine::new();
+    engine.register_network_str(TINY_SPEC).unwrap();
+    let req = SweepRequest {
+        net: "tinynet".to_string(),
+        spec: SweepSpec::smoke(),
+    };
+    let first = engine.sweep(&req).unwrap();
+    let plans_before = engine.plans().len();
+    // Same name, different layer geometry: the workload fingerprint in the
+    // plan key changes, so the old plan can never serve the new network.
+    let altered = TINY_SPEC.replace("\"c_out\": 8", "\"c_out\": 6");
+    assert_ne!(altered, TINY_SPEC);
+    engine.register_network_str(&altered).unwrap();
+    let second = engine.sweep(&req).unwrap();
+    assert!(engine.plans().len() > plans_before, "stale plan was reused");
+    assert_ne!(
+        first.sweep.points[0].metrics, second.sweep.points[0].metrics,
+        "re-registered network must evaluate differently"
+    );
 }
 
 #[test]

@@ -1,0 +1,234 @@
+//! Property tests for the segmented piecewise-constant sweep plan
+//! (DESIGN.md §10): on random networks, dense step-1 grids, degenerate
+//! axes and both dataflows, the segmented core must be **byte-identical**
+//! to the config-major oracle (and to the shape-major intermediate core) —
+//! metrics, energy and utilization alike — and the seeding path must plant
+//! exactly `ws_metrics` into the memo table.
+
+use camuy::config::{ArrayConfig, Dataflow, EnergyWeights};
+use camuy::metrics::Metrics;
+use camuy::model::gemm::gemm_metrics;
+use camuy::model::layer::{Layer, SpatialDims};
+use camuy::model::network::Network;
+use camuy::model::workload::{EvalCache, Workload};
+use camuy::sweep::plan::{PlanCache, SegmentedWsPlan};
+use camuy::sweep::runner::{
+    seed_workload_planned, sweep_workload_config_major, sweep_workload_segmented,
+    sweep_workload_shape_major,
+};
+use camuy::util::prng::Rng;
+use camuy::util::propcheck::{check, Shrink};
+
+#[derive(Debug, Clone)]
+struct Case {
+    net: Network,
+    configs: Vec<ArrayConfig>,
+    threads: usize,
+}
+
+impl Shrink for Case {}
+
+fn gen_layer(rng: &mut Rng, index: usize) -> Layer {
+    if rng.chance(0.25) {
+        Layer::linear(
+            format!("fc{index}"),
+            rng.range_usize(1, 64),
+            rng.range_usize(1, 32),
+        )
+        .with_batch(rng.range_usize(1, 4))
+    } else {
+        let groups = [1, 1, 2, 4][rng.range_usize(0, 3)];
+        let kernel = [1, 3][rng.range_usize(0, 1)];
+        Layer::conv(
+            format!("c{index}"),
+            SpatialDims::square(rng.range_usize(2, 14)),
+            groups * rng.range_usize(1, 12),
+            groups * rng.range_usize(1, 12),
+            kernel,
+            1,
+            kernel / 2,
+            groups,
+        )
+    }
+}
+
+fn gen_net(rng: &mut Rng) -> Network {
+    let mut layers = Vec::new();
+    for i in 0..rng.range_usize(1, 5) {
+        layers.push(gen_layer(rng, i));
+        if rng.chance(0.3) {
+            let mut dup = layers[rng.range_usize(0, layers.len() - 1)].clone();
+            dup.name = format!("dup{i}");
+            layers.push(dup);
+        }
+    }
+    Network::new("prop", layers)
+}
+
+/// A dense step-1 grid (the segmented plan's headline axis shape) with a
+/// random accumulator provisioning, a sprinkle of OS-dataflow configs
+/// (fallback path), a second accumulator capacity (plan grouping) and
+/// duplicated cells (router robustness).
+fn gen_dense_case(rng: &mut Rng) -> Case {
+    let net = gen_net(rng);
+    let lo = rng.range_usize(1, 3);
+    let hi = lo + rng.range_usize(3, 24);
+    let acc = rng.range_usize(1, 64);
+    let mut configs = Vec::new();
+    for h in lo..=hi {
+        for w in lo..=hi {
+            let cfg = ArrayConfig::new(h, w).with_acc_capacity(acc);
+            if rng.chance(0.1) {
+                configs.push(cfg.clone().with_dataflow(Dataflow::OutputStationary));
+            }
+            if rng.chance(0.05) {
+                configs.push(cfg.clone().with_acc_capacity(acc + 7));
+            }
+            configs.push(cfg);
+        }
+    }
+    // Duplicate a random prefix so repeated cells exercise the router.
+    let dups = rng.range_usize(0, 4).min(configs.len());
+    let prefix: Vec<ArrayConfig> = configs[..dups].to_vec();
+    configs.extend(prefix);
+    Case {
+        net,
+        configs,
+        threads: rng.range_usize(1, 3),
+    }
+}
+
+fn assert_three_way_identical(case: &Case) -> Result<(), String> {
+    let workload = Workload::of(&case.net);
+    let weights = EnergyWeights::paper();
+    let seg = sweep_workload_segmented(&workload, &case.configs, &weights, case.threads);
+    let sm = sweep_workload_shape_major(&workload, &case.configs, &weights, case.threads);
+    let cm = sweep_workload_config_major(&workload, &case.configs, &weights, case.threads);
+    if seg.len() != case.configs.len() || sm.len() != seg.len() || cm.len() != seg.len() {
+        return Err("point count mismatch".into());
+    }
+    for (i, cfg) in case.configs.iter().enumerate() {
+        if (seg[i].height, seg[i].width) != (cfg.height, cfg.width) {
+            return Err(format!("config order broken at {i}"));
+        }
+        if seg[i].metrics != cm[i].metrics {
+            return Err(format!(
+                "segmented diverges from config-major at {cfg}: {:?} != {:?}",
+                seg[i].metrics, cm[i].metrics
+            ));
+        }
+        if seg[i].metrics != sm[i].metrics {
+            return Err(format!("segmented diverges from shape-major at {cfg}"));
+        }
+        // f64 derivations must be bit-identical too (same integer inputs,
+        // same expression).
+        if seg[i].energy != cm[i].energy || seg[i].utilization != cm[i].utilization {
+            return Err(format!("derived objectives diverge at {cfg}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn segmented_equals_oracle_on_dense_step1_grids() {
+    check(60, 0x5E6_3D, gen_dense_case, assert_three_way_identical);
+}
+
+#[test]
+fn segmented_equals_oracle_on_forced_os_dataflow() {
+    check(40, 0x05DA_7A1, gen_dense_case, |case| {
+        let os = Case {
+            net: case.net.clone(),
+            configs: case
+                .configs
+                .iter()
+                .map(|c| c.clone().with_dataflow(Dataflow::OutputStationary))
+                .collect(),
+            threads: case.threads,
+        };
+        assert_three_way_identical(&os)
+    });
+}
+
+#[test]
+fn segmented_handles_degenerate_axes() {
+    let mut rng = Rng::new(0xDE6E_11);
+    for _ in 0..30 {
+        let net = gen_net(&mut rng);
+        let acc = rng.range_usize(1, 4096);
+        let degenerate: Vec<Vec<ArrayConfig>> = vec![
+            // A single cell.
+            vec![ArrayConfig::new(5, 3).with_acc_capacity(acc)],
+            // Height 1: every row factor degenerates to K tiles.
+            (1..=9)
+                .map(|w| ArrayConfig::new(1, w).with_acc_capacity(acc))
+                .collect(),
+            // Width 1 column arrays.
+            (1..=9)
+                .map(|h| ArrayConfig::new(h, 1).with_acc_capacity(acc))
+                .collect(),
+            // Axis values larger than every GEMM dimension: single-tile
+            // territory, where the tail class is the whole operand.
+            vec![
+                ArrayConfig::new(4096, 2048).with_acc_capacity(acc),
+                ArrayConfig::new(8192, 2048).with_acc_capacity(acc),
+                ArrayConfig::new(1 << 19, 1 << 19).with_acc_capacity(acc),
+            ],
+        ];
+        for configs in degenerate {
+            let case = Case {
+                net: net.clone(),
+                configs,
+                threads: 1,
+            };
+            if let Err(e) = assert_three_way_identical(&case) {
+                panic!("degenerate axes diverged: {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn planned_seeding_plants_exact_per_shape_metrics() {
+    let mut rng = Rng::new(0x5EED_CA);
+    for _ in 0..20 {
+        let case = gen_dense_case(&mut rng);
+        let workload = Workload::of(&case.net);
+        let cache = EvalCache::new();
+        let plans = PlanCache::new();
+        seed_workload_planned(&workload, &case.configs, case.threads, &cache, Some(&plans));
+        for cfg in &case.configs {
+            for &(shape, _) in &workload.shapes {
+                if !cache.contains(shape, cfg) {
+                    panic!("missing seed for {shape:?} at {cfg}");
+                }
+            }
+            let direct: Metrics = workload
+                .shapes
+                .iter()
+                .map(|&(shape, mult)| gemm_metrics(shape, cfg) * mult)
+                .sum();
+            assert_eq!(workload.eval_cached(cfg, &cache), direct, "at {cfg}");
+        }
+    }
+}
+
+#[test]
+fn plan_probe_equals_direct_eval_on_random_networks() {
+    let mut rng = Rng::new(0x960B_E5);
+    for _ in 0..20 {
+        let net = gen_net(&mut rng);
+        let workload = Workload::of(&net);
+        let heights: Vec<usize> = (1..=20).collect();
+        let widths: Vec<usize> = (3..=17).collect();
+        let acc = rng.range_usize(1, 128);
+        let plan = SegmentedWsPlan::new(&workload, &heights, &widths, acc);
+        for &h in &heights {
+            for &w in &widths {
+                let cfg = ArrayConfig::new(h, w).with_acc_capacity(acc);
+                assert_eq!(plan.probe(h, w), Some(workload.eval(&cfg)));
+            }
+        }
+        assert_eq!(plan.probe(21, 3), None);
+    }
+}
