@@ -1,16 +1,56 @@
 //! Serving-path benchmarks: the request throughput `camuy serve` sees
 //! through the `api::Engine` — cold engine vs memo-hot engine vs the
-//! batched segmented dispatch path, plus repeated sweep requests with and
-//! without the engine-level plan cache (DESIGN.md §10) — emitted
-//! machine-readably to `BENCH_api.json` (override with
-//! `CAMUY_BENCH_API_OUT`) so the serving trajectory is tracked PR over PR
-//! alongside `BENCH_sweep.json`.
+//! batched segmented dispatch path, repeated sweep requests with and
+//! without the engine-level plan cache (DESIGN.md §10), and the serve
+//! batch fan-out through the persistent work-stealing pool vs the
+//! pre-§11 per-call scoped-spawn pool — emitted machine-readably to
+//! `BENCH_api.json` (override with `CAMUY_BENCH_API_OUT`) so the serving
+//! trajectory is tracked PR over PR alongside `BENCH_sweep.json`.
+//!
+//! `CAMUY_BENCH_SMOKE=1` is the CI gate: the process fails (exit 1) if
+//! batched fan-out throughput on the persistent pool drops below the
+//! per-call-spawn baseline.
 
 use camuy::api::{Engine, EvalRequest, SweepRequest, SweepSpec};
 use camuy::config::ArrayConfig;
+use camuy::runtime::pool;
 use camuy::sweep::runner::default_threads;
 use camuy::util::bench::{bench, throughput, BenchOpts, BenchResult};
 use camuy::util::json::Json;
+
+/// The pre-§11 fan-out baseline, preserved here (not in the library — it
+/// is strictly worse than the pool and must not be reachable by library
+/// users): scoped OS threads spawned per call, stealing indices from an
+/// atomic cursor.
+fn parallel_map_spawned<T: Send + Sync>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::OnceLock;
+    let workers = threads.max(1).min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let _ = slots[i].set(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("all slots filled"))
+        .collect()
+}
 
 /// A serving-shaped request mix: one hot model queried across a spread of
 /// geometries (what a design-space-exploration client sends).
@@ -65,6 +105,36 @@ fn main() {
         warm_engine.cache().len(),
         warm_engine.cache().hits(),
         warm_engine.cache().misses(),
+    );
+
+    // --- serve batch fan-out: the persistent pool vs per-call spawned
+    // scoped threads (the pre-§11 dispatch). Memo-hot evals isolate the
+    // dispatch overhead itself — exactly what a serve batch of cached
+    // requests pays per batch.
+    println!("\n== api: batch fan-out, persistent pool vs per-call spawn ==");
+    let fan_opts = BenchOpts {
+        warmup_iters: 3,
+        measure_iters: 30,
+    };
+    let fan_pool = bench("api/fanout_pool_persistent", &fan_opts, || {
+        pool::parallel_map(reqs.len(), default_threads(), |i| {
+            warm_engine.eval(&reqs[i]).unwrap().total().cycles
+        })
+        .iter()
+        .sum::<u64>()
+    });
+    let fan_spawn = bench("api/fanout_spawn_per_call", &fan_opts, || {
+        parallel_map_spawned(reqs.len(), default_threads(), |i| {
+            warm_engine.eval(&reqs[i]).unwrap().total().cycles
+        })
+        .iter()
+        .sum::<u64>()
+    });
+    let fan_speedup = fan_spawn.seconds.mean / fan_pool.seconds.mean;
+    println!(
+        "   -> {:.0} req/s on the persistent pool, {:.0} req/s spawning per call ({fan_speedup:.2}x)",
+        throughput(&fan_pool, n),
+        throughput(&fan_spawn, n),
     );
 
     // --- serve-mode repeated sweeps: segment-table reuse via the
@@ -124,6 +194,9 @@ fn main() {
             "speedup_hot_over_cold",
             Json::num(cold.seconds.mean / hot.seconds.mean),
         ),
+        ("fanout_pool_persistent", variant(&fan_pool)),
+        ("fanout_spawn_per_call", variant(&fan_spawn)),
+        ("speedup_pool_over_spawn", Json::num(fan_speedup)),
         ("sweep_repeat_plan_cold", sweep_variant(&sweep_nocache)),
         ("sweep_repeat_plan_hot", sweep_variant(&sweep_cached)),
         (
@@ -144,5 +217,26 @@ fn main() {
     match std::fs::write(&out, doc.to_string_pretty() + "\n") {
         Ok(()) => println!("   -> wrote {out}"),
         Err(e) => eprintln!("   -> could not write {out}: {e}"),
+    }
+
+    // Smoke mode is the CI gate: batched serve fan-out must not fall
+    // below the per-call-spawn baseline it replaced. Gated on the
+    // best-over-best ratio rather than the means — each rung's `min` is
+    // its structural cost with scheduler noise stripped, so a loaded CI
+    // runner cannot flake a regression-free commit red.
+    let smoke = std::env::var("CAMUY_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if smoke {
+        let best_ratio = fan_spawn.seconds.min / fan_pool.seconds.min;
+        if best_ratio < 1.0 {
+            eprintln!(
+                "FAIL: persistent-pool fan-out is {best_ratio:.2}x the per-call-spawn \
+                 baseline best-over-best (must be >= 1.0; means: {fan_speedup:.2}x)"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "smoke gate passed: pool fan-out is {best_ratio:.2}x per-call spawn \
+             (best-over-best; means {fan_speedup:.2}x)"
+        );
     }
 }

@@ -9,10 +9,12 @@
 //!
 //! `CAMUY_BENCH_SMOKE=1` runs a reduced CI mode: fewer iterations, the
 //! paper grid only — and the process **fails** (exit 1) if the segmented
-//! core is slower than the shape-major core, so a regression on the sweep
-//! hot path cannot land silently.
+//! core is slower than the shape-major core on the WS dataflow, or
+//! slower than the cell-by-cell fallback on the OS dataflow
+//! (DESIGN.md §11), so a regression on either sweep hot path cannot land
+//! silently.
 
-use camuy::config::{ArrayConfig, EnergyWeights};
+use camuy::config::{ArrayConfig, Dataflow, EnergyWeights};
 use camuy::model::gemm::{ws_metrics, ws_metrics_ref};
 use camuy::model::schedule::GemmShape;
 use camuy::nets;
@@ -95,8 +97,8 @@ fn main() {
     let w = EnergyWeights::paper();
     bench("micro/eq1_energy", &opts, || m.energy(&w));
 
-    // Smoke mode is the CI gate: the segmented core regressing below the
-    // shape-major baseline on the paper grid fails the run.
+    // Smoke mode is the CI gate: the segmented core regressing below its
+    // baseline on either dataflow fails the run.
     if smoke {
         let speedup = sweep_json
             .get("paper_grid")
@@ -110,7 +112,22 @@ fn main() {
             );
             std::process::exit(1);
         }
-        println!("smoke gate passed: segmented is {speedup:.2}x shape-major");
+        let os_speedup = sweep_json
+            .get("paper_grid_os")
+            .and_then(|p| p.get("speedup_os_segmented_over_fallback"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if os_speedup < 1.0 {
+            eprintln!(
+                "FAIL: OS-segmented sweep is {os_speedup:.2}x the cell-by-cell \
+                 fallback on the paper grid (must be >= 1.0)"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "smoke gate passed: segmented is {speedup:.2}x shape-major (WS), \
+             {os_speedup:.2}x fallback (OS)"
+        );
     }
 }
 
@@ -195,9 +212,58 @@ fn bench_grid(
     Json::obj(fields)
 }
 
+/// One grid through the OS-dataflow sweep: the segmented OS plan
+/// (DESIGN.md §11) against the cell-by-cell `os_metrics` fallback the
+/// config-major oracle still runs — which is exactly the path *every* OS
+/// sweep took before the OS segment algebra landed.
+fn bench_grid_os(label: &str, grid: &DimGrid, workloads: &[Workload], opts: &BenchOpts) -> Json {
+    let template = ArrayConfig::new(1, 1).with_dataflow(Dataflow::OutputStationary);
+    let configs = grid.configs(&template);
+    let threads = default_threads();
+    let weights = EnergyWeights::paper();
+    let total_configs = (configs.len() * workloads.len()) as u64;
+
+    let fallback = bench(&format!("sweep/{label}_os_fallback"), opts, || {
+        workloads
+            .iter()
+            .flat_map(|wl| sweep_workload_config_major(wl, &configs, &weights, threads))
+            .map(|p| p.energy)
+            .sum::<f64>()
+    });
+    let segmented = bench(&format!("sweep/{label}_os_segmented"), opts, || {
+        workloads
+            .iter()
+            .flat_map(|wl| sweep_workload_segmented(wl, &configs, &weights, threads))
+            .map(|p| p.energy)
+            .sum::<f64>()
+    });
+    let speedup = fallback.seconds.mean / segmented.seconds.mean;
+    println!(
+        "   -> {label} OS: {:.0} configs/s fallback, {:.0} configs/s segmented ({speedup:.2}x)",
+        throughput(&fallback, total_configs),
+        throughput(&segmented, total_configs),
+    );
+    let variant = |r: &BenchResult| -> Json {
+        Json::obj(vec![
+            ("seconds_mean", Json::num(r.seconds.mean)),
+            ("seconds_min", Json::num(r.seconds.min)),
+            ("seconds_p95", Json::num(r.seconds.p95)),
+            ("configs_per_sec", Json::num(throughput(r, total_configs))),
+        ])
+    };
+    Json::obj(vec![
+        ("grid_points", Json::num(configs.len() as f64)),
+        ("network_evals_per_iter", Json::num(total_configs as f64)),
+        ("fallback", variant(&fallback)),
+        ("segmented", variant(&segmented)),
+        ("speedup_os_segmented_over_fallback", Json::num(speedup)),
+    ])
+}
+
 /// The full paper zoo through all three sweep cores — the acceptance
-/// numbers for the segmented refactor: the paper's 961-point grid, and
-/// (full mode) the dense step-1 grid where the axis collapse shines.
+/// numbers for the segmented refactor: the paper's 961-point grid on
+/// both dataflows, and (full mode) the dense step-1 grid where the axis
+/// collapse shines.
 fn bench_zoo_sweeps(smoke: bool) -> Json {
     let models = nets::paper_models();
     let workloads: Vec<Workload> = models.iter().map(Workload::of).collect();
@@ -214,6 +280,7 @@ fn bench_zoo_sweeps(smoke: bool) -> Json {
     };
 
     let paper = bench_grid("full_zoo_paper", &DimGrid::paper(), &workloads, &opts, !smoke);
+    let paper_os = bench_grid_os("full_zoo_paper", &DimGrid::paper(), &workloads, &opts);
     let mut fields = vec![
         ("bench", Json::str("full_zoo_sweep")),
         ("smoke", Json::Bool(smoke)),
@@ -224,6 +291,7 @@ fn bench_zoo_sweeps(smoke: bool) -> Json {
         ),
         ("threads", Json::num(default_threads() as f64)),
         ("paper_grid", paper),
+        ("paper_grid_os", paper_os),
     ];
     if !smoke {
         let dense_opts = BenchOpts {
@@ -233,6 +301,10 @@ fn bench_zoo_sweeps(smoke: bool) -> Json {
         fields.push((
             "dense_grid",
             bench_grid("full_zoo_dense", &DimGrid::dense(), &workloads, &dense_opts, true),
+        ));
+        fields.push((
+            "dense_grid_os",
+            bench_grid_os("full_zoo_dense", &DimGrid::dense(), &workloads, &dense_opts),
         ));
     }
     Json::obj(fields)

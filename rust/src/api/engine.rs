@@ -34,7 +34,7 @@ use crate::nets;
 use crate::pareto::nsga2::Nsga2Params;
 use crate::report::figures::{self, Fig2Data, Fig3Data, Fig5Data, Fig6Data};
 use crate::sweep::plan::PlanCache;
-use crate::sweep::runner::{parallel_map, seed_workload_planned};
+use crate::sweep::runner::seed_workload_planned;
 use crate::util::json::Json;
 use std::collections::{HashMap, HashSet};
 use std::sync::{OnceLock, RwLock};
@@ -57,12 +57,13 @@ pub struct Engine {
     /// clone, not a reconstruction (the serving hot path).
     zoo: OnceLock<HashMap<String, Network>>,
     cache: EvalCache,
-    /// Segmented sweep plans memoized per (workload fingerprint, grid
-    /// axes, accumulator capacity) — see [`PlanCache`] for the key
-    /// semantics. Sweep, Pareto, equal-PE and figure requests that replay
-    /// a (workload, grid) reuse its segment tables instead of re-deriving
-    /// them (DESIGN.md §10); batched eval seeding deliberately stays
-    /// ephemeral so ad-hoc batch geometries cannot pollute the cache.
+    /// Segmented sweep plans memoized per (dataflow, workload
+    /// fingerprint, grid axes, accumulator capacity) — see [`PlanCache`]
+    /// for the key semantics; both dataflows plan (DESIGN.md §10/§11).
+    /// Sweep, Pareto, equal-PE and figure requests that replay a
+    /// (workload, grid) reuse its segment tables instead of re-deriving
+    /// them; batched eval seeding deliberately stays ephemeral so ad-hoc
+    /// batch geometries cannot pollute the cache.
     /// Because the key embeds the exact shape histogram,
     /// [`Engine::register_network_json`] needs no invalidation hook: a
     /// re-registered network stops matching the old entries, which age
@@ -311,7 +312,7 @@ impl Engine {
         // Answer from the hot cache, fanned out so the requests the
         // seeding pass could not cover (multi-array banks, per-layer
         // reports) still use the pool.
-        parallel_map(reqs.len(), threads, |i| self.eval(&reqs[i]))
+        crate::runtime::pool::parallel_map(reqs.len(), threads, |i| self.eval(&reqs[i]))
     }
 
     /// Figure-2 heatmaps for one network over a grid, through the shared
@@ -447,8 +448,20 @@ impl Engine {
 
     /// Graph-connectivity analysis: DAG statistics, tensor liveness with
     /// the liveness-corrected energy, and the branch-parallel multi-array
-    /// schedule (DESIGN.md §9).
+    /// schedule (DESIGN.md §9). Scheduling evaluates node durations over
+    /// the default pool budget; [`Engine::graph_threaded`] takes an
+    /// explicit bound (the serve path's `--threads`).
     pub fn graph(&self, req: &GraphRequest) -> Result<GraphResponse, ApiError> {
+        self.graph_threaded(req, crate::runtime::pool::default_threads())
+    }
+
+    /// [`Engine::graph`] with an explicit executor budget for the
+    /// schedule's node-duration fan-out.
+    pub fn graph_threaded(
+        &self,
+        req: &GraphRequest,
+        threads: usize,
+    ) -> Result<GraphResponse, ApiError> {
         check_config(&req.config)?;
         check_arrays(req.arrays)?;
         let g = self.resolve_graph(&req.net, req.batch)?;
@@ -458,9 +471,10 @@ impl Engine {
         let liveness = g.liveness(&req.config);
         let layer_mem = MemoryAnalysis::of(&net, &req.config);
         let corrected_energy = base_energy + layer_mem.dram_energy() + liveness.dram_energy();
-        let schedule = g.schedule(
+        let schedule = g.schedule_threaded(
             &MultiArrayConfig::new(req.arrays, req.config.clone()),
             &self.cache,
+            threads,
         );
         Ok(GraphResponse {
             network: g.name.clone(),

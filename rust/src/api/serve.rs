@@ -9,9 +9,10 @@
 //! * eval requests go through [`Engine::eval_batch`], which groups them by
 //!   workload and runs their distinct configurations through the
 //!   segmented sweep core once, seeding the engine's shared memo table;
-//! * every other request kind runs sequentially per connection — each is
-//!   already parallel inside (the sweep cores fan out across the host),
-//!   so an outer pool would only multiply thread counts;
+//! * every other request kind fans out over the process-wide persistent
+//!   pool ([`crate::runtime::pool`], DESIGN.md §11) — nested fan-outs
+//!   (a sweep inside a request) share the same workers, so thread counts
+//!   never multiply and a saturated pool degrades to the caller's thread;
 //! * `register` requests are ordering barriers — everything before one is
 //!   answered first, so a register-then-eval pipeline behaves like the
 //!   sequential program it reads as.
@@ -281,7 +282,8 @@ fn process_batch<W: Write>(
 }
 
 /// Answer the gathered non-register requests: evals through the engine's
-/// batched segmented path, the rest over a scoped worker pool.
+/// batched segmented path, the rest fanned out over the shared
+/// persistent pool.
 fn flush_pending(
     engine: &Engine,
     parsed: &[(Option<Json>, Result<ApiRequest, ApiError>)],
@@ -315,13 +317,18 @@ fn flush_pending(
         }
         responses[i] = Some(envelope(parsed[i].0.clone(), res.map(|r| r.to_json())));
     }
-    // Sweep/pareto/equal-pe/memory requests are already parallel *inside*
-    // (the sweep cores fan out across the host's cores), so they run
-    // sequentially here — an outer fan-out would multiply thread counts
-    // (connections × dispatch workers × sweep workers) without adding
-    // throughput on a core-saturated sweep.
-    for &i in &rest {
-        let res = dispatch(engine, &parsed[i].1);
+    // Sweep/pareto/equal-pe/memory requests fan out over the shared
+    // persistent pool (DESIGN.md §11). Each is also parallel *inside*
+    // (the sweep cores fan out through the same pool), but because every
+    // fan-out in the process shares one set of workers — with nested
+    // submissions executing on their submitting thread when the pool is
+    // saturated — dispatching them concurrently overlaps their serial
+    // phases (plan builds, JSON encoding) without multiplying threads,
+    // unlike the pre-§11 per-call scoped pools this loop used to avoid.
+    let rest_results = crate::runtime::pool::parallel_map(rest.len(), opts.threads, |j| {
+        dispatch(engine, &parsed[rest[j]].1, opts.threads)
+    });
+    for (&i, res) in rest.iter().zip(rest_results) {
         if res.is_err() {
             stats.errors += 1;
         }
@@ -330,8 +337,14 @@ fn flush_pending(
     pending.clear();
 }
 
-/// Route one decoded request to the engine.
-fn dispatch(engine: &Engine, req: &Result<ApiRequest, ApiError>) -> Result<Json, ApiError> {
+/// Route one decoded request to the engine. `threads` is the serve
+/// loop's executor budget, honored by the request kinds whose fan-out is
+/// not already bounded by their own spec (today: graph scheduling).
+fn dispatch(
+    engine: &Engine,
+    req: &Result<ApiRequest, ApiError>,
+    threads: usize,
+) -> Result<Json, ApiError> {
     match req {
         Err(e) => Err(e.clone()),
         Ok(ApiRequest::Eval(r)) => engine.eval(r).map(|x| x.to_json()),
@@ -347,7 +360,7 @@ fn dispatch(engine: &Engine, req: &Result<ApiRequest, ApiError>) -> Result<Json,
         Ok(ApiRequest::Pareto(r)) => engine.pareto(r).map(|d| pareto_json(&d)),
         Ok(ApiRequest::EqualPe(r)) => engine.equal_pe(r).map(|d| equal_pe_json(&d)),
         Ok(ApiRequest::Memory(r)) => engine.memory(r).map(|x| x.to_json()),
-        Ok(ApiRequest::Graph(r)) => engine.graph(r).map(|x| x.to_json()),
+        Ok(ApiRequest::Graph(r)) => engine.graph_threaded(r, threads).map(|x| x.to_json()),
     }
 }
 

@@ -524,7 +524,8 @@ fn cmd_graph(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         config: template_config(args, 128, 128)?,
         weights: energy_weights(args)?,
     };
-    let resp = engine.graph(&req)?;
+    let threads = args.opt_usize("threads", crate::sweep::runner::default_threads())?;
+    let resp = engine.graph_threaded(&req, threads)?;
     if args.flag("json") {
         println!("{}", resp.to_json().to_string_pretty());
         return Ok(());

@@ -298,6 +298,114 @@ pub fn ws_metrics_from_scalars(gemm: GemmShape, row: &WsRowFactors, col: &WsColS
     }
 }
 
+/// The height-dependent scalars of the output-stationary closed form for
+/// one GEMM shape: the row-tile count `tm = ceil(M/h)` and the drain hop
+/// correction `s_mm = Σ over row-tiles of mt·(mt−1)/2`. Like
+/// [`WsRowFactors`], these are the only places the OS model divides by
+/// the array height, so the segmented OS sweep plan computes them once
+/// per (shape, height) — within a constant-`tm` segment `m_tail` is
+/// linear in `h` and `s_mm` quadratic (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OsRowScalars {
+    /// The array height these scalars were derived for.
+    pub height: usize,
+    /// Row tiles over M.
+    pub tm: u64,
+    /// Σ over row-tiles of mt·(mt−1)/2 — the drain shift-down deficit.
+    pub s_mm: u64,
+}
+
+/// The width-dependent scalar of the OS closed form: the col-tile count
+/// `tc = ceil(N/w)`. The OS model has no accumulator dependence, so this
+/// is the *entire* width axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OsColScalars {
+    /// The array width this scalar was derived for.
+    pub width: usize,
+    /// Col tiles over N.
+    pub tc: u64,
+}
+
+/// The OS drain deficit `Σ over row-tiles of mt·(mt−1)/2` for `tm`
+/// row-tiles of `M` rows on an `h`-row array: `tm − 1` full tiles of
+/// `mt = h` plus one tail of `M − (tm−1)·h`. The single source of the
+/// formula — [`os_row_scalars`] and the segmented OS plan builder (which
+/// already knows `tm` from its axis segments) both call it.
+pub fn os_drain_deficit(big_m: u64, h: u64, tm: u64) -> u64 {
+    let m_tail = big_m - (tm - 1) * h; // == h when divisible
+    (tm - 1) * (h * (h - 1) / 2) + m_tail * (m_tail - 1) / 2
+}
+
+/// Compute [`OsRowScalars`] for one (shape, array height) pair.
+pub fn os_row_scalars(gemm: GemmShape, height: usize) -> OsRowScalars {
+    if gemm.is_empty() {
+        return OsRowScalars {
+            height,
+            tm: 0,
+            s_mm: 0,
+        };
+    }
+    let big_m = gemm.m as u64;
+    let h = height as u64;
+    let tm = ceil_div(gemm.m, height) as u64;
+    OsRowScalars {
+        height,
+        tm,
+        s_mm: os_drain_deficit(big_m, h, tm),
+    }
+}
+
+/// Compute [`OsColScalars`] for one (shape, array width) pair.
+pub fn os_col_scalars(gemm: GemmShape, width: usize) -> OsColScalars {
+    OsColScalars {
+        width,
+        tc: if gemm.is_empty() {
+            0
+        } else {
+            ceil_div(gemm.n, width) as u64
+        },
+    }
+}
+
+/// Assemble closed-form OS metrics from per-axis scalars — byte-identical
+/// to [`os_metrics`] by exact integer reassociation of its tile-class
+/// double loop (verified by unit and property tests). Distributing the
+/// class sums over `tm = Σ rc`, `M = Σ rc·mt`, `tc = Σ cc`, `N = Σ cc·nt`
+/// leaves exactly two terms bilinear in the axes (`tm·tc` in cycles and
+/// passes); everything else is a per-axis or constant total, which is
+/// what makes the segmented OS sweep plan's per-cell combine two dot
+/// products (DESIGN.md §11). Underflow-free: `mt ≤ h` gives
+/// `s_mm ≤ M·(h−1)`, and `tm ≤ M` gives the `inter_pe_weight` bound.
+pub fn os_metrics_from_scalars(gemm: GemmShape, row: &OsRowScalars, col: &OsColScalars) -> Metrics {
+    if gemm.is_empty() {
+        return Metrics::default();
+    }
+    let (big_m, big_k, big_n) = (gemm.m as u64, gemm.k as u64, gemm.n as u64);
+    let h = row.height as u64;
+    let w = col.width as u64;
+    let OsRowScalars { tm, s_mm, .. } = *row;
+    let tc = col.tc;
+    Metrics {
+        // Σ tiles·(K + mt + nt − 2 + h) = tm·tc·(K + h − 2) + M·tc + tm·N.
+        cycles: tm * tc * (big_k + h - 2) + big_m * tc + tm * big_n,
+        stall_cycles: 0,
+        macs: gemm.macs(),
+        passes: tm * tc,
+        movements: MovementCounters {
+            ub_act_reads: big_k * big_m * tc,
+            ub_weight_reads: big_k * big_n * tm,
+            ub_out_writes: big_m * big_n,
+            inter_pe_act: big_k * big_m * tc * (w - 1),
+            inter_pe_weight: big_k * big_n * (big_m - tm),
+            // Σ tiles·nt·(mt·(h−1) − mt·(mt−1)/2) = N·(M·(h−1) − s_mm).
+            inter_pe_psum: big_n * (big_m * (h - 1) - s_mm),
+            intra_pe: (5 * big_k + 2) * big_m * big_n,
+            aa_writes: big_m * big_n,
+            aa_reads: big_m * big_n,
+        },
+    }
+}
+
 /// One maximal run of a tiling step function over a sorted axis:
 /// `axis[start..end]` all map to the same `value` (a tile count for
 /// [`ceil_div_segments`], a row budget for [`floor_div_segments`]).
@@ -756,6 +864,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn os_scalar_combine_equals_os_metrics() {
+        // The collapsed OS kernel must be byte-identical to the
+        // tile-class double loop on every partial-tile combination.
+        for m in [1, 2, 3, 5, 7, 16, 196] {
+            for k in [1, 3, 4, 9, 17] {
+                for n in [1, 2, 5, 8, 13, 64] {
+                    for (h, w) in [(1, 1), (2, 3), (4, 4), (8, 2), (3, 7), (96, 48)] {
+                        let g = GemmShape::new(m, k, n);
+                        let row = os_row_scalars(g, h);
+                        let col = os_col_scalars(g, w);
+                        let collapsed = os_metrics_from_scalars(g, &row, &col);
+                        // acc is irrelevant to the OS model.
+                        let direct = os_metrics(g, &cfg(h, w, 1));
+                        assert_eq!(collapsed, direct, "mismatch at M{m} K{k} N{n} h{h} w{w}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn os_scalars_of_empty_shape_are_inert() {
+        let g = GemmShape::new(0, 8, 8);
+        assert_eq!(os_row_scalars(g, 4).tm, 0);
+        assert_eq!(os_col_scalars(g, 4).tc, 0);
+        let m = os_metrics_from_scalars(g, &os_row_scalars(g, 4), &os_col_scalars(g, 4));
+        assert_eq!(m, Metrics::default());
     }
 
     #[test]

@@ -552,12 +552,35 @@ impl NetworkGraph {
     /// exceeds the serialized sum and never beats the critical path, with
     /// equality to the serial sum on pure chains.
     pub fn schedule(&self, cfg: &MultiArrayConfig, cache: &EvalCache) -> GraphSchedule {
+        self.schedule_threaded(cfg, cache, crate::runtime::pool::default_threads())
+    }
+
+    /// [`NetworkGraph::schedule`] with an explicit executor budget for
+    /// the node-duration evaluation — the serve path passes its
+    /// `--threads` bound through here so a graph request respects the
+    /// same concurrency contract as every other fan-out (`threads = 1`
+    /// is exactly serial).
+    pub fn schedule_threaded(
+        &self,
+        cfg: &MultiArrayConfig,
+        cache: &EvalCache,
+        threads: usize,
+    ) -> GraphSchedule {
         let n = self.nodes.len();
+        // Node durations fan out over the shared pool (DESIGN.md §11);
+        // the memo cache is sharded, so concurrent layer evaluations do
+        // not serialize on one lock. Totals are summed in node order
+        // afterwards — integer metrics, so the result is byte-identical
+        // to the serial loop.
+        let per_node: Vec<Option<Metrics>> =
+            crate::runtime::pool::parallel_map(n, threads, |i| match &self.nodes[i].op {
+                NodeOp::Layer(l) => Some(l.metrics_cached(&cfg.array, cache)),
+                _ => None,
+            });
         let mut dur = vec![0u64; n];
         let mut total = Metrics::default();
-        for (i, nd) in self.nodes.iter().enumerate() {
-            if let NodeOp::Layer(l) = &nd.op {
-                let m = l.metrics_cached(&cfg.array, cache);
+        for (i, m) in per_node.into_iter().enumerate() {
+            if let Some(m) = m {
                 dur[i] = m.cycles;
                 total += m;
             }

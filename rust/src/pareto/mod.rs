@@ -5,4 +5,4 @@ pub mod dominance;
 pub mod nsga2;
 
 pub use dominance::{crowding_distance, dominates, fast_non_dominated_sort, pareto_front_indices};
-pub use nsga2::{nsga2, nsga2_workload, Nsga2Params, Solution, WorkloadObjective};
+pub use nsga2::{nsga2, nsga2_par, nsga2_workload, Nsga2Params, Solution, WorkloadObjective};

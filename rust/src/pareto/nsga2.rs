@@ -12,7 +12,7 @@ use crate::config::{ArrayConfig, EnergyWeights};
 use crate::model::workload::{EvalCache, Workload};
 use crate::pareto::dominance::{crowding_distance, fast_non_dominated_sort};
 use crate::sweep::grid::DimGrid;
-use crate::sweep::plan::SegmentedWsPlan;
+use crate::sweep::plan::{SegmentedOsPlan, SegmentedWsPlan};
 use crate::util::prng::Rng;
 
 /// NSGA-II parameters.
@@ -90,12 +90,107 @@ struct Genome {
     wi: usize,
 }
 
+/// How a generation's batch of distinct unseen genomes is evaluated:
+/// serially through a stateful closure, or fanned out over the
+/// process-wide pool ([`crate::runtime::pool`]) for pure evaluators.
+/// Results are identical either way (parallel results are collected in
+/// submission order), so the two modes are interchangeable per run.
+enum GenomeEval<'a> {
+    Serial(&'a mut dyn FnMut(usize, usize) -> Vec<f64>),
+    Parallel {
+        f: &'a (dyn Fn(usize, usize) -> Vec<f64> + Sync),
+        threads: usize,
+    },
+}
+
+impl GenomeEval<'_> {
+    /// Evaluate `(height, width)` points, preserving order.
+    fn eval_batch(&mut self, points: &[(usize, usize)]) -> Vec<Vec<f64>> {
+        match self {
+            GenomeEval::Serial(f) => points.iter().map(|&(h, w)| f(h, w)).collect(),
+            GenomeEval::Parallel { f, threads } => {
+                let func: &(dyn Fn(usize, usize) -> Vec<f64> + Sync) = *f;
+                crate::runtime::pool::parallel_map(points.len(), *threads, |i| {
+                    func(points[i].0, points[i].1)
+                })
+            }
+        }
+    }
+}
+
+/// The memoized objective store: each distinct genome is evaluated once
+/// per run, generations reference stored vectors by index. A whole
+/// population's unseen genomes are batched through one
+/// [`GenomeEval::eval_batch`] call (first-appearance order, so the serial
+/// mode calls the closure in exactly the pre-§11 order).
+struct ObjectiveStore {
+    store: Vec<Vec<f64>>,
+    index: std::collections::HashMap<Genome, usize>,
+}
+
+impl ObjectiveStore {
+    fn new() -> ObjectiveStore {
+        ObjectiveStore {
+            store: Vec::new(),
+            index: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Evaluate every unseen genome of `genomes` in one batch, then
+    /// return each genome's store index, aligned with the input.
+    fn indices(&mut self, genomes: &[Genome], grid: &DimGrid, eval: &mut GenomeEval) -> Vec<usize> {
+        let mut fresh: Vec<Genome> = Vec::new();
+        for &g in genomes {
+            if !self.index.contains_key(&g) {
+                // Reserve the slot now so duplicates within the batch
+                // stay distinct-once; the objectives land below.
+                self.index.insert(g, self.store.len());
+                self.store.push(Vec::new());
+                fresh.push(g);
+            }
+        }
+        if !fresh.is_empty() {
+            let points: Vec<(usize, usize)> = fresh
+                .iter()
+                .map(|g| (grid.heights[g.hi], grid.widths[g.wi]))
+                .collect();
+            let objs = eval.eval_batch(&points);
+            for (g, o) in fresh.iter().zip(objs) {
+                self.store[self.index[g]] = o;
+            }
+        }
+        genomes.iter().map(|g| self.index[g]).collect()
+    }
+
+    fn objs(&self, idx: &[usize]) -> Vec<&[f64]> {
+        idx.iter().map(|&i| self.store[i].as_slice()).collect()
+    }
+}
+
 /// Run NSGA-II minimizing `eval(height, width) -> objectives`.
 pub fn nsga2(
     grid: &DimGrid,
     params: &Nsga2Params,
     mut eval: impl FnMut(usize, usize) -> Vec<f64>,
 ) -> Vec<Solution> {
+    nsga2_core(grid, params, GenomeEval::Serial(&mut eval))
+}
+
+/// [`nsga2`] with each generation's distinct unseen genomes probed in
+/// parallel over the shared pool (DESIGN.md §11). Requires a pure
+/// (`Fn + Sync`) evaluator; returns exactly what [`nsga2`] would — the
+/// genome sequence is driven by the seeded RNG alone, and objective
+/// values are order-independent.
+pub fn nsga2_par(
+    grid: &DimGrid,
+    params: &Nsga2Params,
+    threads: usize,
+    eval: impl Fn(usize, usize) -> Vec<f64> + Sync,
+) -> Vec<Solution> {
+    nsga2_core(grid, params, GenomeEval::Parallel { f: &eval, threads })
+}
+
+fn nsga2_core(grid: &DimGrid, params: &Nsga2Params, mut eval: GenomeEval) -> Vec<Solution> {
     assert!(!grid.is_empty());
     assert!(params.population >= 4 && params.population % 2 == 0);
     let mut rng = Rng::new(params.seed);
@@ -104,18 +199,10 @@ pub fn nsga2(
 
     // Objective store + cache: the expensive evaluation runs once per
     // distinct genome across the whole run, and generations reference the
-    // stored vectors instead of cloning them (§Perf iteration 2).
-    let mut store: Vec<Vec<f64>> = Vec::new();
-    let mut cache: std::collections::HashMap<Genome, usize> = std::collections::HashMap::new();
-    let mut fitness = |g: Genome,
-                       store: &mut Vec<Vec<f64>>,
-                       eval: &mut dyn FnMut(usize, usize) -> Vec<f64>|
-     -> usize {
-        *cache.entry(g).or_insert_with(|| {
-            store.push(eval(grid.heights[g.hi], grid.widths[g.wi]));
-            store.len() - 1
-        })
-    };
+    // stored vectors instead of cloning them (§Perf iteration 2). Each
+    // generation's unseen genomes go through one batched probe, which the
+    // parallel mode fans out over the pool (§Perf iteration 4).
+    let mut store = ObjectiveStore::new();
 
     // --- initial population ---
     let mut pop: Vec<Genome> = (0..params.population)
@@ -130,8 +217,8 @@ pub fn nsga2(
     // original formulation — §Perf iteration 3 removed a redundant
     // per-generation re-sort).
     let (mut rank, mut crowd) = {
-        let idx: Vec<usize> = pop.iter().map(|&g| fitness(g, &mut store, &mut eval)).collect();
-        let objs: Vec<&[f64]> = idx.iter().map(|&i| store[i].as_slice()).collect();
+        let idx = store.indices(&pop, grid, &mut eval);
+        let objs = store.objs(&idx);
         rank_and_crowd(&objs)
     };
 
@@ -171,13 +258,12 @@ pub fn nsga2(
         }
 
         // --- environmental selection over parents + offspring ---
+        // One batched probe evaluates the generation's distinct unseen
+        // genomes (parents are always already memoized).
         let mut union = pop.clone();
         union.extend_from_slice(&offspring);
-        let union_idx: Vec<usize> = union
-            .iter()
-            .map(|&g| fitness(g, &mut store, &mut eval))
-            .collect();
-        let union_objs: Vec<&[f64]> = union_idx.iter().map(|&i| store[i].as_slice()).collect();
+        let union_idx = store.indices(&union, grid, &mut eval);
+        let union_objs = store.objs(&union_idx);
         let fronts = fast_non_dominated_sort(&union_objs);
         let mut next: Vec<Genome> = Vec::with_capacity(params.population);
         let mut next_rank: Vec<usize> = Vec::with_capacity(params.population);
@@ -215,11 +301,8 @@ pub fn nsga2(
     // --- extract the final non-dominated set, deduplicated ---
     let mut seen = std::collections::HashSet::new();
     let uniq: Vec<Genome> = pop.into_iter().filter(|g| seen.insert(*g)).collect();
-    let idx: Vec<usize> = uniq
-        .iter()
-        .map(|&g| fitness(g, &mut store, &mut eval))
-        .collect();
-    let objs: Vec<&[f64]> = idx.iter().map(|&i| store[i].as_slice()).collect();
+    let idx = store.indices(&uniq, grid, &mut eval);
+    let objs = store.objs(&idx);
     let front0 = &fast_non_dominated_sort(&objs)[0];
     let mut out: Vec<Solution> = front0
         .iter()
@@ -250,7 +333,11 @@ pub enum WorkloadObjective {
 /// is evaluated through the shared [`EvalCache`], so per-(shape, config)
 /// metrics are computed once across all generations — and across *runs*
 /// when callers reuse the cache for several objective pairs on the same
-/// workload (as Figure 3 does).
+/// workload (as Figure 3 does). Each generation's distinct unseen
+/// genomes are probed in one parallel batch over `threads` executors
+/// (`threads = 1` is exactly the serial run — the probe is pure, so the
+/// returned solutions are identical either way).
+#[allow(clippy::too_many_arguments)]
 pub fn nsga2_workload(
     grid: &DimGrid,
     params: &Nsga2Params,
@@ -259,8 +346,9 @@ pub fn nsga2_workload(
     weights: &EnergyWeights,
     cache: &EvalCache,
     objective: WorkloadObjective,
+    threads: usize,
 ) -> Vec<Solution> {
-    nsga2(grid, params, |h, w| {
+    nsga2_par(grid, params, threads, |h, w| {
         let mut cfg = template.clone();
         cfg.height = h;
         cfg.width = w;
@@ -281,7 +369,9 @@ pub fn nsga2_workload(
 /// divisions, no per-class loop, and no memo-table locking. Anything the
 /// plan cannot cover (non-WS templates, off-axis probes) falls back to the
 /// direct closed form, which is byte-identical by construction, so the
-/// returned solutions always match [`nsga2_workload`] exactly.
+/// returned solutions always match [`nsga2_workload`] exactly. Generation
+/// batches fan out over `threads` executors as in [`nsga2_workload`].
+#[allow(clippy::too_many_arguments)]
 pub fn nsga2_workload_planned(
     grid: &DimGrid,
     params: &Nsga2Params,
@@ -290,10 +380,47 @@ pub fn nsga2_workload_planned(
     weights: &EnergyWeights,
     plan: &SegmentedWsPlan,
     objective: WorkloadObjective,
+    threads: usize,
 ) -> Vec<Solution> {
     let planned = template.dataflow == crate::config::Dataflow::WeightStationary
         && template.acc_capacity == plan.acc_capacity();
-    nsga2(grid, params, |h, w| {
+    nsga2_par(grid, params, threads, |h, w| {
+        let mut cfg = template.clone();
+        cfg.height = h;
+        cfg.width = w;
+        let m = if planned {
+            plan.probe(h, w).unwrap_or_else(|| workload.eval(&cfg))
+        } else {
+            workload.eval(&cfg)
+        };
+        match objective {
+            WorkloadObjective::EnergyCycles => vec![m.energy(weights), m.cycles as f64],
+            WorkloadObjective::InverseUtilizationCycles => {
+                vec![1.0 - m.utilization(cfg.pe_count()), m.cycles as f64]
+            }
+        }
+    })
+}
+
+/// [`nsga2_workload_planned`] for output-stationary templates: genome
+/// probes route through a [`SegmentedOsPlan`] (DESIGN.md §11) — two
+/// binary searches plus the two-dot-product cell combine. Non-OS
+/// templates and off-axis probes fall back to the direct closed form,
+/// byte-identical by construction, so the returned solutions always
+/// match [`nsga2_workload`] exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn nsga2_workload_planned_os(
+    grid: &DimGrid,
+    params: &Nsga2Params,
+    workload: &Workload,
+    template: &ArrayConfig,
+    weights: &EnergyWeights,
+    plan: &SegmentedOsPlan,
+    objective: WorkloadObjective,
+    threads: usize,
+) -> Vec<Solution> {
+    let planned = template.dataflow == crate::config::Dataflow::OutputStationary;
+    nsga2_par(grid, params, threads, |h, w| {
         let mut cfg = template.clone();
         cfg.height = h;
         cfg.width = w;
@@ -409,6 +536,20 @@ mod tests {
     }
 
     #[test]
+    fn parallel_generation_probes_match_serial_exactly() {
+        // The genome sequence is RNG-driven and the evaluator is pure, so
+        // fanning each generation's batch over the pool must change
+        // nothing — same fronts, same objective values, bit for bit.
+        for grid in [DimGrid::coarse(16, 128, 16), DimGrid::coarse(8, 24, 8)] {
+            let serial = nsga2(&grid, &Nsga2Params::default(), toy_eval);
+            for threads in [1, 2, 8] {
+                let parallel = nsga2_par(&grid, &Nsga2Params::default(), threads, toy_eval);
+                assert_eq!(serial, parallel, "threads={threads} diverged");
+            }
+        }
+    }
+
+    #[test]
     fn single_objective_degenerates_to_min() {
         let grid = DimGrid::coarse(8, 64, 8);
         let sols = nsga2(&grid, &Nsga2Params::default(), |h, w| vec![(h * w) as f64]);
@@ -446,6 +587,9 @@ mod tests {
             generations: 10,
             ..Default::default()
         };
+        // threads = 1: the serial path keeps the miss accounting below
+        // exact (parallel probes may benignly double-compute a racing
+        // miss).
         let energy_front = nsga2_workload(
             &grid,
             &params,
@@ -454,6 +598,7 @@ mod tests {
             &weights,
             &cache,
             WorkloadObjective::EnergyCycles,
+            1,
         );
         assert!(!energy_front.is_empty());
         // The cache can never hold more than shapes x grid points…
@@ -471,6 +616,7 @@ mod tests {
             &weights,
             &cache,
             WorkloadObjective::InverseUtilizationCycles,
+            1,
         );
         assert!(!util_front.is_empty());
         assert!(cache.hits() > hits_before);
@@ -520,9 +666,10 @@ mod tests {
                 &weights,
                 &EvalCache::new(),
                 objective,
+                2,
             );
             let planned = nsga2_workload_planned(
-                &grid, &params, &wl, &template, &weights, &plan, objective,
+                &grid, &params, &wl, &template, &weights, &plan, objective, 2,
             );
             assert_eq!(cached, planned, "objective {objective:?} diverged");
         }
@@ -537,6 +684,7 @@ mod tests {
             &weights,
             &mismatched,
             WorkloadObjective::EnergyCycles,
+            2,
         );
         let cached = nsga2_workload(
             &grid,
@@ -546,8 +694,52 @@ mod tests {
             &weights,
             &EvalCache::new(),
             WorkloadObjective::EnergyCycles,
+            1,
         );
         assert_eq!(via_fallback, cached);
+    }
+
+    #[test]
+    fn os_planned_genome_probes_match_the_cached_path() {
+        use crate::model::layer::{Layer, SpatialDims};
+        use crate::model::network::Network;
+        let net = Network::new(
+            "n",
+            vec![
+                Layer::conv("c1", SpatialDims::square(14), 16, 32, 3, 1, 1, 1),
+                Layer::conv("c2", SpatialDims::square(7), 32, 48, 3, 1, 1, 1),
+            ],
+        );
+        let wl = Workload::of(&net);
+        let grid = DimGrid::coarse(8, 40, 8);
+        let template = ArrayConfig::new(1, 1)
+            .with_dataflow(crate::config::Dataflow::OutputStationary);
+        let weights = EnergyWeights::paper();
+        let params = Nsga2Params {
+            population: 16,
+            generations: 12,
+            ..Default::default()
+        };
+        let plan = SegmentedOsPlan::new(&wl, &grid.heights, &grid.widths);
+        for objective in [
+            WorkloadObjective::EnergyCycles,
+            WorkloadObjective::InverseUtilizationCycles,
+        ] {
+            let cached = nsga2_workload(
+                &grid,
+                &params,
+                &wl,
+                &template,
+                &weights,
+                &EvalCache::new(),
+                objective,
+                1,
+            );
+            let planned = nsga2_workload_planned_os(
+                &grid, &params, &wl, &template, &weights, &plan, objective, 2,
+            );
+            assert_eq!(cached, planned, "objective {objective:?} diverged");
+        }
     }
 
     #[test]

@@ -6,11 +6,12 @@
 
 use crate::config::{ArrayConfig, EnergyWeights};
 use crate::model::network::Network;
-use crate::model::workload::{EvalCache, Workload};
+use crate::model::workload::Workload;
 use crate::nets;
 use crate::pareto::dominance::pareto_front_indices;
 use crate::pareto::nsga2::{
-    nsga2, nsga2_workload, nsga2_workload_planned, Nsga2Params, Solution, WorkloadObjective,
+    nsga2, nsga2_workload_planned, nsga2_workload_planned_os, Nsga2Params, Solution,
+    WorkloadObjective,
 };
 use crate::report::heatmap::Heatmap;
 use crate::report::table::{pareto_csv, pareto_table};
@@ -200,25 +201,30 @@ pub fn fig3_pareto_planned(
         sols
     };
 
-    // NSGA-II consumes the workload IR directly. WS templates route every
-    // genome probe through one segmented plan shared by both objective
-    // runs (and, with an engine cache, across requests — the fetch below
-    // hits the plan the exhaustive sweep just built); other dataflows
-    // keep the shared per-(shape, config) evaluation cache.
-    let plan = if ctx.template.dataflow == crate::config::Dataflow::WeightStationary {
-        Some(plans.plan(
+    // NSGA-II consumes the workload IR directly. Every genome probe
+    // routes through one segmented plan of the template's dataflow,
+    // shared by both objective runs (and, with an engine cache, across
+    // requests — the fetch below hits the plan the exhaustive sweep just
+    // built): WS plans since §10, OS plans since §11 — no dataflow is
+    // left on the cell-by-cell fallback.
+    enum GenomePlan {
+        Ws(std::sync::Arc<crate::sweep::plan::SegmentedWsPlan>),
+        Os(std::sync::Arc<crate::sweep::plan::SegmentedOsPlan>),
+    }
+    let plan = match ctx.template.dataflow {
+        crate::config::Dataflow::WeightStationary => GenomePlan::Ws(plans.plan(
             &workload,
             &ctx.grid.heights,
             &ctx.grid.widths,
             ctx.template.acc_capacity,
-        ))
-    } else {
-        None
+        )),
+        crate::config::Dataflow::OutputStationary => {
+            GenomePlan::Os(plans.plan_os(&workload, &ctx.grid.heights, &ctx.grid.widths))
+        }
     };
-    let cache = EvalCache::new();
     let front_of = |objective: WorkloadObjective| -> Vec<Solution> {
         match &plan {
-            Some(p) => nsga2_workload_planned(
+            GenomePlan::Ws(p) => nsga2_workload_planned(
                 &ctx.grid,
                 params,
                 &workload,
@@ -226,15 +232,17 @@ pub fn fig3_pareto_planned(
                 &ctx.weights,
                 p,
                 objective,
+                ctx.threads,
             ),
-            None => nsga2_workload(
+            GenomePlan::Os(p) => nsga2_workload_planned_os(
                 &ctx.grid,
                 params,
                 &workload,
                 &ctx.template,
                 &ctx.weights,
-                &cache,
+                p,
                 objective,
+                ctx.threads,
             ),
         }
     };

@@ -1,8 +1,12 @@
-//! PJRT runtime: loads and executes the HLO-text artifacts produced by
-//! `python/compile/aot.py` (`make artifacts`). Python never runs here.
+//! Process-wide runtimes: the persistent work-stealing compute pool every
+//! CAMUY fan-out routes through ([`pool`], DESIGN.md §11), and the PJRT
+//! runtime that loads and executes the HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`; Python never runs here).
 
 pub mod artifact;
 pub mod client;
+pub mod pool;
 
 pub use artifact::{default_artifact_dir, ArtifactEntry, Manifest};
 pub use client::{CompiledArtifact, PjrtRuntime};
+pub use pool::{default_threads, parallel_map, parallel_map_chunked, Pool};

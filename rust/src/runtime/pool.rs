@@ -1,0 +1,506 @@
+//! The shared compute runtime: a long-lived work-stealing thread pool
+//! (DESIGN.md §11).
+//!
+//! Every fan-out in CAMUY — the sweep cores, `Engine::eval_batch`, the
+//! serve loop's per-batch dispatch, the graph scheduler's node metrics,
+//! NSGA-II generation probes — used to spawn OS threads per call through
+//! `std::thread::scope`. Under serving traffic that is thousands of
+//! spawn/join cycles per second for jobs whose useful work is often
+//! microseconds. This module replaces all of them with one process-wide
+//! pool of **persistent parked workers**:
+//!
+//! * **Job model** — a job is a half-open index range `0..n` split into
+//!   fixed-size chunks. Executors claim chunks from a shared atomic
+//!   cursor (the same chunked work-stealing the scoped pool used, so a
+//!   straggler chunk can never idle the pool), run `f(i)` for each index
+//!   of the chunk, and the last finished chunk signals completion.
+//! * **Caller participation** — the submitting thread is always the
+//!   job's first executor: it pushes the job on the queue, wakes
+//!   workers, then claims chunks itself until the cursor is exhausted
+//!   and only parks for in-flight stragglers. A *nested* submission
+//!   (serve request → sweep inside → pool again) therefore always makes
+//!   progress on the calling thread even if every worker is busy —
+//!   nested jobs cannot deadlock, they only lose parallelism.
+//! * **Per-job caps** — `run(n, chunk, cap, f)` bounds how many
+//!   executors (caller included) may work one job, preserving the
+//!   `threads` semantics of the old per-call pools: `threads = 1` is
+//!   exactly serial on the caller.
+//! * **Sizing** — the pool spawns `default_threads() - 1` workers (the
+//!   caller supplies the remaining executor). `CAMUY_THREADS` overrides
+//!   the size; `CAMUY_THREADS=1` spawns no workers at all and every
+//!   fan-out in the process degenerates to the serial path, which CI
+//!   runs as a separate determinism step.
+//!
+//! Panics in a job closure poison only that job: remaining chunks are
+//! skipped (not left pending — completion still signals) and the payload
+//! is re-raised on the submitting thread, matching the scoped-pool
+//! behavior where `thread::scope` re-raised on join.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// The hardware parallelism, read once per process (the
+/// `available_parallelism` syscall used to run on every sweep and every
+/// serve-batch default).
+fn hardware_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    })
+}
+
+/// Ceiling for `CAMUY_THREADS`: far above any real machine, small enough
+/// that a typo cannot ask the pool for a million workers.
+const MAX_THREADS: usize = 1024;
+
+/// Default parallelism: `CAMUY_THREADS` if set to a positive integer
+/// (clamped to [`MAX_THREADS`]), otherwise the hardware parallelism.
+/// Cached in a `OnceLock` — both the env lookup and the syscall happen
+/// once per process.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        match std::env::var("CAMUY_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+        {
+            Some(n) if n >= 1 => n.min(MAX_THREADS),
+            _ => hardware_threads(),
+        }
+    })
+}
+
+/// The submitted closure with its lifetime erased to a raw pointer — a
+/// worker-held `Arc<Job>` may outlive the closure's stack frame, so the
+/// type deliberately does NOT claim a live reference. Dereferencing is
+/// sound only under `Job::execute`'s guard: a chunk index `c < chunks`
+/// implies the submitting caller is still blocked in [`Pool::run`]
+/// (completion cannot have signaled), so the frame is alive.
+struct RawFn(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for RawFn {}
+unsafe impl Sync for RawFn {}
+
+/// One submitted job: an index range, a chunk cursor, and completion
+/// accounting. Lives on the queue behind an `Arc`; the closure behind
+/// `f` lives on the submitting caller's stack (see [`RawFn`]).
+struct Job {
+    /// Total indices.
+    n: usize,
+    /// Indices per claimed chunk.
+    chunk: usize,
+    /// Total chunks (`ceil(n / chunk)`).
+    chunks: usize,
+    /// Next chunk to claim. Exhausted when `>= chunks`.
+    next: AtomicUsize,
+    /// Chunks fully executed. The executor completing the last chunk
+    /// signals `complete` (AcqRel so every executor's writes — including
+    /// result-slot publication — happen-before the caller's wakeup).
+    done: AtomicUsize,
+    /// Executors currently inside the job, caller included.
+    executors: AtomicUsize,
+    /// Most executors allowed (the job's `threads` bound).
+    cap: usize,
+    /// Set when a chunk panicked: the remaining chunks are skipped.
+    poisoned: AtomicBool,
+    /// First panic payload, re-raised by the submitting caller.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    complete: Mutex<bool>,
+    complete_cv: Condvar,
+    f: RawFn,
+}
+
+impl Job {
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.chunks
+    }
+
+    /// Try to become an executor; fails once `cap` executors are inside.
+    fn try_join(&self) -> bool {
+        let mut e = self.executors.load(Ordering::Relaxed);
+        loop {
+            if e >= self.cap {
+                return false;
+            }
+            match self.executors.compare_exchange_weak(
+                e,
+                e + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => e = now,
+            }
+        }
+    }
+
+    fn leave(&self) {
+        self.executors.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Claim and execute chunks until the cursor is exhausted. Called by
+    /// workers and by the submitting caller alike.
+    fn execute(&self) {
+        loop {
+            let c = self.next.fetch_add(1, Ordering::Relaxed);
+            if c >= self.chunks {
+                return;
+            }
+            if !self.poisoned.load(Ordering::Relaxed) {
+                let lo = c * self.chunk;
+                let hi = (lo + self.chunk).min(self.n);
+                // Safety: `c < chunks` implies the submitting caller is
+                // still blocked in `Pool::run`, so the closure's frame is
+                // alive (see `RawFn`).
+                let f = unsafe { &*self.f.0 };
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| {
+                    for i in lo..hi {
+                        f(i);
+                    }
+                })) {
+                    self.poisoned.store(true, Ordering::Relaxed);
+                    let mut slot = self.panic.lock().expect("job panic slot");
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+            }
+            // AcqRel: chains every executor's prior writes into the final
+            // increment, which the completion mutex publishes to the
+            // caller.
+            if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.chunks {
+                let mut g = self.complete.lock().expect("job completion flag");
+                *g = true;
+                self.complete_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct Shared {
+    /// Active jobs with unclaimed chunks. Submission order; executors
+    /// scan front to back, so earlier jobs drain first.
+    queue: Mutex<Vec<Arc<Job>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A work-stealing pool of persistent parked workers. One process-wide
+/// instance ([`global`]) backs every CAMUY fan-out; independent instances
+/// exist only in tests and benchmarks.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("workers", &self.workers).finish()
+    }
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` persistent worker threads (0 is valid:
+    /// every job then runs serially on its submitting caller).
+    pub fn new(workers: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("camuy-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool {
+            shared,
+            handles,
+            workers,
+        }
+    }
+
+    /// Persistent worker threads (executors beyond the caller).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, blocking until all have
+    /// completed. Indices are claimed `chunk` at a time; at most `cap`
+    /// executors (the caller plus up to `cap - 1` pool workers) run the
+    /// job. `cap <= 1` — or a pool without workers — is exactly the
+    /// serial loop on the caller.
+    pub fn run(&self, n: usize, chunk: usize, cap: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let chunks = crate::util::ceil_div(n, chunk);
+        let cap = cap.max(1).min(chunks);
+        if cap <= 1 || self.workers == 0 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Safety: lifetime erasure into a raw pointer (`RawFn`); it is
+        // dereferenced exclusively while this frame is alive (`run`
+        // blocks on the completion latch below before returning).
+        let raw = RawFn(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+        });
+        let job = Arc::new(Job {
+            n,
+            chunk,
+            chunks,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            executors: AtomicUsize::new(1), // the caller
+            cap,
+            poisoned: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            complete: Mutex::new(false),
+            complete_cv: Condvar::new(),
+            f: raw,
+        });
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue");
+            q.push(Arc::clone(&job));
+        }
+        // Wake only as many workers as the job can seat (the caller fills
+        // one slot itself) — `notify_all` would stampede a big pool for a
+        // 2-executor job, and every woken worker rescans the whole queue
+        // anyway, so undershooting on a race only costs parallelism, not
+        // progress (the caller always drives its own job).
+        for _ in 0..(cap - 1).min(self.workers) {
+            self.shared.work_cv.notify_one();
+        }
+        // Participate: the caller is executor #1. With every chunk
+        // claimed, park for the in-flight stragglers only.
+        job.execute();
+        {
+            let mut done = job.complete.lock().expect("job completion flag");
+            while !*done {
+                done = job.complete_cv.wait(done).expect("job completion wait");
+            }
+        }
+        // Workers prune exhausted jobs opportunistically; make sure this
+        // one is gone before the closure's frame unwinds.
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue");
+            q.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if let Some(payload) = job.panic.lock().expect("job panic slot").take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // The shutdown flag must flip while holding the queue mutex:
+        // workers check it and park under one continuous hold of that
+        // lock, so an unlocked store+notify could land entirely inside a
+        // worker's check-to-wait window and strand it on a notification
+        // that already fired (deadlocking the join below).
+        {
+            let _q = self.shared.queue.lock().expect("pool queue");
+            self.shared.shutdown.store(true, Ordering::Relaxed);
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut q = shared.queue.lock().expect("pool queue");
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        // Prune exhausted jobs (their stragglers finish on the executors
+        // already inside), then join the first job with open chunks and
+        // executor headroom.
+        q.retain(|j| !j.exhausted());
+        let mut picked = None;
+        for j in q.iter() {
+            if !j.exhausted() && j.try_join() {
+                picked = Some(Arc::clone(j));
+                break;
+            }
+        }
+        match picked {
+            Some(job) => {
+                drop(q);
+                job.execute();
+                job.leave();
+                q = shared.queue.lock().expect("pool queue");
+            }
+            None => {
+                q = shared.work_cv.wait(q).expect("pool wait");
+            }
+        }
+    }
+}
+
+/// The process-wide pool: `default_threads() - 1` persistent workers
+/// (the submitting caller is always the remaining executor).
+pub fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool::new(default_threads().saturating_sub(1)))
+}
+
+/// Run `f(i)` for `0..n` on the global pool with up to `threads`
+/// executors, collecting results in index order. Chunk size 1 — each
+/// index is stolen individually (jobs whose per-index work is heavy:
+/// serve requests, graph nodes, NSGA-II probes).
+pub fn parallel_map<T: Send + Sync>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    parallel_map_chunked(n, threads, 1, f)
+}
+
+/// [`parallel_map`] claiming `chunk` consecutive indices per steal — the
+/// sweep cores' dispatch shape, where a cell is a few hundred
+/// nanoseconds and per-index stealing overhead would be visible.
+pub fn parallel_map_chunked<T: Send + Sync>(
+    n: usize,
+    threads: usize,
+    chunk: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let cap = threads.max(1).min(n);
+    if cap <= 1 || global().workers() == 0 {
+        return (0..n).map(f).collect();
+    }
+    let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+    global().run(n, chunk, cap, &|i| {
+        let _ = slots[i].set(f(i));
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("all slots filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        let pool = Pool::new(3);
+        for n in [0usize, 1, 2, 63, 64, 65, 1000] {
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, 7, 4, &|i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "index {i} of n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_serially_on_the_caller() {
+        let pool = Pool::new(0);
+        let caller = std::thread::current().id();
+        let sum = AtomicUsize::new(0);
+        pool.run(100, 8, 16, &|i| {
+            assert_eq!(std::thread::current().id(), caller);
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn nested_submission_completes_without_deadlock() {
+        // Outer job saturates the pool; each outer index submits an inner
+        // job. The inner callers participate in their own jobs, so this
+        // terminates even with a single worker.
+        let pool = Pool::new(1);
+        let total = AtomicUsize::new(0);
+        pool.run(8, 1, 4, &|_| {
+            pool.run(16, 2, 4, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn concurrent_jobs_share_the_pool() {
+        let pool = Arc::new(Pool::new(2));
+        let hits = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let hits = Arc::clone(&hits);
+                s.spawn(move || {
+                    pool.run(50, 4, 3, &|_| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    });
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn parallel_map_matches_serial_in_order() {
+        let serial: Vec<usize> = (0..500).map(|i| i * i).collect();
+        assert_eq!(parallel_map(500, 8, |i| i * i), serial);
+        assert_eq!(parallel_map_chunked(500, 8, 32, |i| i * i), serial);
+        assert_eq!(parallel_map(0, 8, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn cap_one_is_exactly_serial() {
+        let caller = std::thread::current().id();
+        let out = parallel_map(64, 1, |i| {
+            assert_eq!(std::thread::current().id(), caller);
+            i + 1
+        });
+        assert_eq!(out, (1..=64).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn job_panic_propagates_to_the_caller_and_pool_survives() {
+        let pool = Pool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(100, 1, 3, &|i| {
+                if i == 17 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the submitting caller");
+        // The pool still works afterwards.
+        let sum = AtomicUsize::new(0);
+        pool.run(10, 2, 3, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn default_threads_is_cached_and_positive() {
+        let a = default_threads();
+        let b = default_threads();
+        assert_eq!(a, b);
+        assert!(a >= 1);
+        assert!(a <= MAX_THREADS);
+    }
+}

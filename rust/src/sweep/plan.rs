@@ -25,9 +25,11 @@
 //! each segment table once per distinct (workload, grid) no matter how
 //! many sweep / Pareto / equal-PE / serve requests replay it.
 
+use crate::config::Dataflow;
 use crate::metrics::{Metrics, MovementCounters};
 use crate::model::gemm::{
-    ceil_div_segments, floor_div_segments, ws_metrics_from_scalars, WsColScalars, WsRowFactors,
+    ceil_div_segments, floor_div_segments, os_metrics_from_scalars, ws_metrics_from_scalars,
+    OsColScalars, OsRowScalars, WsColScalars, WsRowFactors,
 };
 use crate::model::schedule::GemmShape;
 use crate::model::workload::Workload;
@@ -304,19 +306,263 @@ impl SegmentedWsPlan {
     }
 }
 
-/// The cache key: the exact deduplicated shape histogram (a structural
-/// workload fingerprint — collision-free by construction), the normalized
-/// grid axes and the accumulator capacity. Dataflow is implicit (plans
-/// model the WS closed form; other dataflows bypass the planner), and
-/// bitwidths are deliberately absent: they scale bandwidth/energy reports,
-/// not access counts, so one plan serves every bitwidth knob — the same
+/// A segmented output-stationary sweep plan for one (workload, height
+/// axis, width axis). The OS closed form ([`crate::model::gemm::os_metrics`])
+/// touches the height axis only through `tm = ceil(M/h)` (plus the drain
+/// deficit `s_mm`, polynomial in `h` within a constant-`tm` run) and the
+/// width axis only through `tc = ceil(N/w)` — no accumulator dependence
+/// at all, so one plan serves every accumulator capacity. Distributing
+/// the tile-class sums ([`os_metrics_from_scalars`]) leaves exactly two
+/// bilinear terms (cycles and passes); the per-cell combine is therefore
+/// **two** dot products over the shape dimension plus per-axis totals,
+/// byte-identical to the config-major oracle (property-tested).
+#[derive(Debug)]
+pub struct SegmentedOsPlan {
+    heights: Vec<usize>,
+    widths: Vec<usize>,
+    shapes: Vec<(GemmShape, u64)>,
+    // --- row tables, indexed hi * S + si ---
+    /// Row-tile count `tm` (unscaled — the seeding path reads these).
+    tm: Vec<u64>,
+    /// Drain deficit `Σ mt(mt−1)/2` (unscaled).
+    s_mm: Vec<u64>,
+    /// Multiplicity-scaled `tm` and the cycle row coefficient
+    /// `mult·tm·(K + h − 2)` — the dot-product operands.
+    tm_m: Vec<u64>,
+    cyc_r: Vec<u64>,
+    // --- col table, indexed wi * S + si ---
+    /// Col-tile count `tc` (unscaled; both dot products consume it).
+    tc: Vec<u64>,
+    // --- per-axis totals ---
+    /// Σ mult·K·N·tm per height (ub_weight_reads; `tot_kmn −` this gives
+    /// inter_pe_weight).
+    tot_kn_tm: Vec<u64>,
+    /// Σ mult·tm·N per height (cycles term).
+    tot_tm_n: Vec<u64>,
+    /// Σ mult·N·s_mm per height (inter_pe_psum correction).
+    tot_n_smm: Vec<u64>,
+    /// Σ mult·K·M·tc per width (ub_act_reads; ×(w−1) gives inter_pe_act).
+    tot_km_tc: Vec<u64>,
+    /// Σ mult·M·tc per width (cycles term).
+    tot_m_tc: Vec<u64>,
+    // --- axis-independent totals ---
+    tot_mn: u64,
+    tot_kmn: u64,
+    tot_5k2mn: u64,
+    tot_macs: u64,
+    row_segments: usize,
+    col_segments: usize,
+}
+
+impl SegmentedOsPlan {
+    /// Build the plan. Axes are normalized (sorted, deduplicated, zeros
+    /// dropped); all tiling divisions of the whole sweep happen here.
+    pub fn new(workload: &Workload, heights: &[usize], widths: &[usize]) -> SegmentedOsPlan {
+        let heights = normalize_axis(heights.to_vec());
+        let widths = normalize_axis(widths.to_vec());
+        let s = workload.shapes.len();
+        let (nh, nw) = (heights.len(), widths.len());
+        let mut p = SegmentedOsPlan {
+            heights,
+            widths,
+            shapes: workload.shapes.clone(),
+            tm: vec![0; nh * s],
+            s_mm: vec![0; nh * s],
+            tm_m: vec![0; nh * s],
+            cyc_r: vec![0; nh * s],
+            tc: vec![0; nw * s],
+            tot_kn_tm: vec![0; nh],
+            tot_tm_n: vec![0; nh],
+            tot_n_smm: vec![0; nh],
+            tot_km_tc: vec![0; nw],
+            tot_m_tc: vec![0; nw],
+            tot_mn: 0,
+            tot_kmn: 0,
+            tot_5k2mn: 0,
+            tot_macs: 0,
+            row_segments: 0,
+            col_segments: 0,
+        };
+        for (si, &(shape, mult)) in workload.shapes.iter().enumerate() {
+            if shape.is_empty() {
+                continue; // contributes Metrics::default() everywhere
+            }
+            let (m, k, n) = (shape.m as u64, shape.k as u64, shape.n as u64);
+            p.tot_mn += mult * m * n;
+            p.tot_kmn += mult * k * m * n;
+            p.tot_5k2mn += mult * (5 * k + 2) * m * n;
+            p.tot_macs += mult * shape.macs();
+            // Row axis: segments of constant tm = ceil(M/h); within a
+            // segment m_tail is linear in h and s_mm quadratic.
+            for seg in ceil_div_segments(shape.m, &p.heights) {
+                p.row_segments += 1;
+                let tm = seg.value;
+                for hi in seg.start..seg.end {
+                    let h = p.heights[hi] as u64;
+                    let s_mm = crate::model::gemm::os_drain_deficit(m, h, tm);
+                    let at = hi * s + si;
+                    p.tm[at] = tm;
+                    p.s_mm[at] = s_mm;
+                    p.tm_m[at] = mult * tm;
+                    p.cyc_r[at] = mult * tm * (k + h - 2);
+                    p.tot_kn_tm[hi] += mult * k * n * tm;
+                    p.tot_tm_n[hi] += mult * tm * n;
+                    p.tot_n_smm[hi] += mult * n * s_mm;
+                }
+            }
+            // Col axis: segments of constant tc = ceil(N/w) — the entire
+            // width dependence of the OS model.
+            for seg in ceil_div_segments(shape.n, &p.widths) {
+                p.col_segments += 1;
+                let tc = seg.value;
+                for wi in seg.start..seg.end {
+                    let at = wi * s + si;
+                    p.tc[at] = tc;
+                    p.tot_km_tc[wi] += mult * k * m * tc;
+                    p.tot_m_tc[wi] += mult * m * tc;
+                }
+            }
+        }
+        p
+    }
+
+    /// The normalized height axis.
+    pub fn heights(&self) -> &[usize] {
+        &self.heights
+    }
+
+    /// The normalized width axis.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// Row-tile equivalence segments summed over shapes (plan statistics).
+    pub fn row_segments(&self) -> usize {
+        self.row_segments
+    }
+
+    /// Col-tile equivalence segments summed over shapes.
+    pub fn col_segments(&self) -> usize {
+        self.col_segments
+    }
+
+    /// Index of a height on the plan axis.
+    pub fn height_index(&self, h: usize) -> Option<usize> {
+        self.heights.binary_search(&h).ok()
+    }
+
+    /// Index of a width on the plan axis.
+    pub fn width_index(&self, w: usize) -> Option<usize> {
+        self.widths.binary_search(&w).ok()
+    }
+
+    /// Workload metrics of one grid cell: Σ over shapes of multiplicity ×
+    /// the OS closed form, assembled from the SoA tables — two dot
+    /// products over the shape dimension plus per-axis totals.
+    /// Byte-identical to the config-major oracle.
+    pub fn cell(&self, hi: usize, wi: usize) -> Metrics {
+        let s = self.shapes.len();
+        let (ro, co) = (hi * s, wi * s);
+        let cyc_r = &self.cyc_r[ro..ro + s];
+        let tm_m = &self.tm_m[ro..ro + s];
+        let tc = &self.tc[co..co + s];
+        let cyc: u64 = cyc_r.iter().zip(tc).map(|(&a, &b)| a * b).sum();
+        let passes: u64 = tm_m.iter().zip(tc).map(|(&a, &b)| a * b).sum();
+        let h = self.heights[hi] as u64;
+        let w = self.widths[wi] as u64;
+        Metrics {
+            cycles: cyc + self.tot_m_tc[wi] + self.tot_tm_n[hi],
+            stall_cycles: 0,
+            macs: self.tot_macs,
+            passes,
+            movements: MovementCounters {
+                ub_act_reads: self.tot_km_tc[wi],
+                ub_weight_reads: self.tot_kn_tm[hi],
+                ub_out_writes: self.tot_mn,
+                inter_pe_act: (w - 1) * self.tot_km_tc[wi],
+                inter_pe_psum: (h - 1) * self.tot_mn - self.tot_n_smm[hi],
+                inter_pe_weight: self.tot_kmn - self.tot_kn_tm[hi],
+                intra_pe: self.tot_5k2mn,
+                aa_writes: self.tot_mn,
+                aa_reads: self.tot_mn,
+            },
+        }
+    }
+
+    /// [`SegmentedOsPlan::cell`] looked up by axis values — two binary
+    /// searches plus the combine. `None` if (h, w) is off the plan axes.
+    pub fn probe(&self, h: usize, w: usize) -> Option<Metrics> {
+        let hi = self.height_index(h)?;
+        let wi = self.width_index(w)?;
+        Some(self.cell(hi, wi))
+    }
+
+    /// Per-shape metrics of one cell, unscaled by multiplicity —
+    /// byte-identical to `os_metrics` for that (shape, geometry). The
+    /// serve path seeds the per-(shape, configuration) memo table with
+    /// these.
+    pub fn shape_cell(&self, si: usize, hi: usize, wi: usize) -> Metrics {
+        let (shape, _) = self.shapes[si];
+        let s = self.shapes.len();
+        let (ra, ca) = (hi * s + si, wi * s + si);
+        let row = OsRowScalars {
+            height: self.heights[hi],
+            tm: self.tm[ra],
+            s_mm: self.s_mm[ra],
+        };
+        let col = OsColScalars {
+            width: self.widths[wi],
+            tc: self.tc[ca],
+        };
+        os_metrics_from_scalars(shape, &row, &col)
+    }
+
+    /// The shapes (with multiplicities) the plan was built over.
+    pub fn shapes(&self) -> &[(GemmShape, u64)] {
+        &self.shapes
+    }
+
+    /// Resident size of the SoA tables in 64-bit words — what the plan
+    /// cache's memory budget accounts.
+    pub fn table_words(&self) -> usize {
+        let s = self.shapes.len();
+        let (nh, nw) = (self.heights.len(), self.widths.len());
+        4 * nh * s + nw * s + 3 * nh + 2 * nw
+    }
+}
+
+/// The cache key: the dataflow whose closed form the plan models, the
+/// exact deduplicated shape histogram (a structural workload fingerprint
+/// — collision-free by construction), the normalized grid axes and the
+/// accumulator capacity (normalized to 0 for OS plans, which have no
+/// accumulator dependence, so every capacity shares one plan). Bitwidths
+/// are deliberately absent: they scale bandwidth/energy reports, not
+/// access counts, so one plan serves every bitwidth knob — the same
 /// argument as the eval cache's `CfgKey`.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct PlanKey {
+    dataflow: Dataflow,
     shapes: Vec<(GemmShape, u64)>,
     heights: Vec<usize>,
     widths: Vec<usize>,
     acc: usize,
+}
+
+/// A cached plan of either dataflow. The key's `dataflow` field decides
+/// the variant, so a lookup can never see the wrong one.
+#[derive(Debug, Clone)]
+enum CachedPlan {
+    Ws(Arc<SegmentedWsPlan>),
+    Os(Arc<SegmentedOsPlan>),
+}
+
+impl CachedPlan {
+    fn table_words(&self) -> usize {
+        match self {
+            CachedPlan::Ws(p) => p.table_words(),
+            CachedPlan::Os(p) => p.table_words(),
+        }
+    }
 }
 
 /// Most plans a long-lived engine holds before flushing wholesale. Plans
@@ -330,17 +576,18 @@ pub const PLAN_CACHE_CAPACITY: usize = 64;
 /// exceeding the budget flushes wholesale, exactly like the entry cap.
 pub const PLAN_CACHE_WORD_BUDGET: usize = 1 << 24;
 
-/// A thread-safe memo table of [`SegmentedWsPlan`]s. Shared by the API
-/// engine across sweep / Pareto / equal-PE / figure requests. Because the
-/// key embeds the exact shape histogram, re-registering a user network
-/// under the same name simply stops matching the old entries — stale
-/// reuse is unrepresentable and no explicit invalidation hook is needed
-/// (the capacity bounds garbage-collect orphaned entries).
+/// A thread-safe memo table of segmented sweep plans (both dataflows).
+/// Shared by the API engine across sweep / Pareto / equal-PE / figure
+/// requests. Because the key embeds the exact shape histogram,
+/// re-registering a user network under the same name simply stops
+/// matching the old entries — stale reuse is unrepresentable and no
+/// explicit invalidation hook is needed (the capacity bounds
+/// garbage-collect orphaned entries).
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    map: RwLock<HashMap<PlanKey, Arc<SegmentedWsPlan>>>,
-    /// Σ [`SegmentedWsPlan::table_words`] over the map; mutated only while
-    /// holding the map's write lock.
+    map: RwLock<HashMap<PlanKey, CachedPlan>>,
+    /// Σ `table_words` over the map; mutated only while holding the map's
+    /// write lock.
     words: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -351,25 +598,17 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// Fetch or build the plan for (workload, axes, accumulator capacity).
-    pub fn plan(
-        &self,
-        workload: &Workload,
-        heights: &[usize],
-        widths: &[usize],
-        acc: usize,
-    ) -> Arc<SegmentedWsPlan> {
-        let key = PlanKey {
-            shapes: workload.shapes.clone(),
-            heights: normalize_axis(heights.to_vec()),
-            widths: normalize_axis(widths.to_vec()),
-            acc,
-        };
+    /// Look up `key`, or admit `build(&key)`'s plan under the capacity
+    /// and word-budget bounds (evicting wholesale on overflow — plans are
+    /// memo state, a flush only costs rebuilding tables). The build
+    /// closure reads the normalized axes from the key itself, so the hit
+    /// path never copies them.
+    fn fetch(&self, key: PlanKey, build: impl FnOnce(&PlanKey) -> CachedPlan) -> CachedPlan {
         if let Some(p) = self.map.read().expect("plan cache poisoned").get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(p);
+            return p.clone();
         }
-        let plan = Arc::new(SegmentedWsPlan::new(workload, &key.heights, &key.widths, acc));
+        let plan = build(&key);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let new_words = plan.table_words() as u64;
         let mut map = self.map.write().expect("plan cache poisoned");
@@ -384,7 +623,58 @@ impl PlanCache {
         if !map.contains_key(&key) {
             self.words.fetch_add(new_words, Ordering::Relaxed);
         }
-        Arc::clone(map.entry(key).or_insert(plan))
+        map.entry(key).or_insert(plan).clone()
+    }
+
+    /// Fetch or build the WS plan for (workload, axes, accumulator
+    /// capacity).
+    pub fn plan(
+        &self,
+        workload: &Workload,
+        heights: &[usize],
+        widths: &[usize],
+        acc: usize,
+    ) -> Arc<SegmentedWsPlan> {
+        let key = PlanKey {
+            dataflow: Dataflow::WeightStationary,
+            shapes: workload.shapes.clone(),
+            heights: normalize_axis(heights.to_vec()),
+            widths: normalize_axis(widths.to_vec()),
+            acc,
+        };
+        let cached = self.fetch(key, |k| {
+            CachedPlan::Ws(Arc::new(SegmentedWsPlan::new(workload, &k.heights, &k.widths, acc)))
+        });
+        match cached {
+            CachedPlan::Ws(p) => p,
+            // Unreachable: the key's dataflow selects the variant.
+            CachedPlan::Os(_) => unreachable!("WS key resolved to an OS plan"),
+        }
+    }
+
+    /// Fetch or build the OS plan for (workload, axes). The OS closed
+    /// form has no accumulator dependence, so the key normalizes the
+    /// capacity away and one plan serves every provisioning.
+    pub fn plan_os(
+        &self,
+        workload: &Workload,
+        heights: &[usize],
+        widths: &[usize],
+    ) -> Arc<SegmentedOsPlan> {
+        let key = PlanKey {
+            dataflow: Dataflow::OutputStationary,
+            shapes: workload.shapes.clone(),
+            heights: normalize_axis(heights.to_vec()),
+            widths: normalize_axis(widths.to_vec()),
+            acc: 0,
+        };
+        let cached = self.fetch(key, |k| {
+            CachedPlan::Os(Arc::new(SegmentedOsPlan::new(workload, &k.heights, &k.widths)))
+        });
+        match cached {
+            CachedPlan::Os(p) => p,
+            CachedPlan::Ws(_) => unreachable!("OS key resolved to a WS plan"),
+        }
     }
 
     /// Drop every cached plan (benchmarks isolate rebuild cost with this).
@@ -558,6 +848,76 @@ mod tests {
         // A flushed cache still answers.
         let p = cache.plan(&w, &axes, &axes, 4096);
         assert_eq!(p.acc_capacity(), 4096);
+    }
+
+    #[test]
+    fn os_cell_matches_direct_workload_eval() {
+        let w = Workload::of(&small_net());
+        let heights: Vec<usize> = (1..=40).collect();
+        let widths: Vec<usize> = (1..=40).collect();
+        let plan = SegmentedOsPlan::new(&w, &heights, &widths);
+        for (hi, &h) in heights.iter().enumerate() {
+            for (wi, &wd) in widths.iter().enumerate() {
+                // The OS model ignores the accumulator capacity: any
+                // provisioning must match the same plan cell.
+                for acc in [1usize, 64, 4096] {
+                    let cfg = ArrayConfig::new(h, wd)
+                        .with_acc_capacity(acc)
+                        .with_dataflow(Dataflow::OutputStationary);
+                    assert_eq!(
+                        plan.cell(hi, wi),
+                        w.eval(&cfg),
+                        "OS cell mismatch at ({h}, {wd}) acc {acc}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn os_shape_cell_matches_os_metrics() {
+        let w = Workload::of(&small_net());
+        let heights = [1usize, 3, 8, 19, 300];
+        let widths = [1usize, 2, 7, 48, 1000];
+        let plan = SegmentedOsPlan::new(&w, &heights, &widths);
+        for (si, &(shape, _)) in w.shapes.iter().enumerate() {
+            for (hi, &h) in heights.iter().enumerate() {
+                for (wi, &wd) in widths.iter().enumerate() {
+                    let cfg = ArrayConfig::new(h, wd).with_dataflow(Dataflow::OutputStationary);
+                    assert_eq!(
+                        plan.shape_cell(si, hi, wi),
+                        crate::model::gemm::os_metrics(shape, &cfg),
+                        "shape {shape:?} at ({h}, {wd})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn os_plan_probe_and_normalization() {
+        let w = Workload::of(&small_net());
+        let plan = SegmentedOsPlan::new(&w, &[16, 8, 16, 0], &[4, 4, 2]);
+        assert_eq!(plan.heights(), &[8, 16]);
+        assert_eq!(plan.widths(), &[2, 4]);
+        assert_eq!(plan.probe(16, 4), Some(plan.cell(1, 1)));
+        assert_eq!(plan.probe(17, 4), None);
+    }
+
+    #[test]
+    fn plan_cache_keeps_dataflows_apart_and_shares_os_across_acc() {
+        let w = Workload::of(&small_net());
+        let cache = PlanCache::new();
+        let ws = cache.plan(&w, &[8, 16], &[4, 8], 4096);
+        let os = cache.plan_os(&w, &[8, 16], &[4, 8]);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(ws.heights(), os.heights());
+        // OS plans are accumulator-independent: any capacity hits the
+        // same entry.
+        let os2 = cache.plan_os(&w, &[16, 8, 8], &[8, 4]);
+        assert!(Arc::ptr_eq(&os, &os2));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.hits() >= 1);
     }
 
     #[test]

@@ -1,15 +1,19 @@
 //! The sweep engine: evaluates a workload (the deduplicated GEMM-shape IR
-//! of [`crate::model::workload`]) over a configuration grid, in parallel
-//! across OS threads (the offline environment has no rayon; a scoped
-//! work-stealing pool over an atomic index does the job).
+//! of [`crate::model::workload`]) over a configuration grid, fanned out
+//! through the process-wide persistent work-stealing pool
+//! ([`crate::runtime::pool`], DESIGN.md §11 — the offline environment has
+//! no rayon).
 //!
-//! The default hot loop is **segmented** (DESIGN.md §10): for each shape,
-//! every grid axis collapses into the piecewise-constant equivalence
-//! segments of its tile-count step functions, per-axis tile scalars land
-//! in flat SoA tables ([`crate::sweep::plan::SegmentedWsPlan`]), and each
-//! cell is assembled with three dot products over the shape dimension —
-//! no divisions, no branches, no pointer chasing. Two older cores stay
-//! alive as byte-identical correctness baselines and bench rungs:
+//! The default hot loop is **segmented** (DESIGN.md §10/§11): for each
+//! shape, every grid axis collapses into the piecewise-constant
+//! equivalence segments of its tile-count step functions, per-axis tile
+//! scalars land in flat SoA tables
+//! ([`crate::sweep::plan::SegmentedWsPlan`] for weight-stationary,
+//! [`crate::sweep::plan::SegmentedOsPlan`] for output-stationary), and
+//! each cell is assembled with a handful of dot products over the shape
+//! dimension — no divisions, no branches, no pointer chasing, on either
+//! dataflow. Two older cores stay alive as byte-identical correctness
+//! baselines and bench rungs:
 //!
 //! * [`sweep_workload_shape_major`] — factors computed once per (shape,
 //!   grid axis), combined per cell through `ws_metrics_from_factors`
@@ -30,10 +34,10 @@ use crate::model::gemm::{
 pub use crate::model::workload::Workload;
 use crate::model::network::Network;
 use crate::model::workload::EvalCache;
-use crate::sweep::plan::{PlanCache, SegmentedWsPlan};
+use crate::runtime::pool;
+use crate::sweep::plan::{PlanCache, SegmentedOsPlan, SegmentedWsPlan};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::Arc;
 
 /// One evaluated grid point.
 #[derive(Debug, Clone)]
@@ -160,38 +164,11 @@ impl<'a> ShapeMajorPlan<'a> {
     }
 }
 
-/// Run `f(i)` for every index in `0..n` across `threads` workers that
-/// steal indices from a shared atomic counter — no static chunking, so a
-/// straggler task (large shape count, slow cell, heavy request) cannot
-/// idle the pool. Shared by the sweep cores and the serve loop's request
-/// fan-out.
-pub fn parallel_map<T: Send + Sync>(
-    n: usize,
-    threads: usize,
-    f: impl Fn(usize) -> T + Sync,
-) -> Vec<T> {
-    let workers = threads.max(1).min(n);
-    if workers <= 1 {
-        return (0..n).map(f).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let _ = slots[i].set(f(i));
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|s| s.into_inner().expect("all slots filled"))
-        .collect()
-}
+// Historically the sweep engine owned the process's fan-out primitives;
+// since DESIGN.md §11 they live in the persistent-pool runtime and are
+// re-exported here so `camuy::sweep::{parallel_map, default_threads}`
+// remain valid paths (and true synonyms, not wrappers that could drift).
+pub use crate::runtime::pool::parallel_map;
 
 fn point_of(cfg: &ArrayConfig, m: Metrics, weights: &EnergyWeights) -> SweepPoint {
     SweepPoint {
@@ -244,46 +221,102 @@ pub fn sweep_workload(
 }
 
 /// How each configuration of a request is evaluated: through a segmented
-/// plan cell, or directly (non-WS dataflows).
+/// plan cell (either dataflow), or directly (the defensive fallback for
+/// degenerate geometries a plan cannot index).
 #[derive(Clone, Copy)]
 enum CellRoute {
     Plan { plan: usize, hi: usize, wi: usize },
     Direct,
 }
 
-/// Group WS configurations by accumulator capacity, fetch (or build) one
-/// [`SegmentedWsPlan`] per group over the group's axis values, and map
-/// every configuration to its route. Non-WS configurations route direct.
+/// A built segmented plan of either dataflow, dispatched per cell.
+enum PlanRef {
+    Ws(Arc<SegmentedWsPlan>),
+    Os(Arc<SegmentedOsPlan>),
+}
+
+impl PlanRef {
+    fn height_index(&self, h: usize) -> Option<usize> {
+        match self {
+            PlanRef::Ws(p) => p.height_index(h),
+            PlanRef::Os(p) => p.height_index(h),
+        }
+    }
+
+    fn width_index(&self, w: usize) -> Option<usize> {
+        match self {
+            PlanRef::Ws(p) => p.width_index(w),
+            PlanRef::Os(p) => p.width_index(w),
+        }
+    }
+
+    fn cell(&self, hi: usize, wi: usize) -> Metrics {
+        match self {
+            PlanRef::Ws(p) => p.cell(hi, wi),
+            PlanRef::Os(p) => p.cell(hi, wi),
+        }
+    }
+
+    fn shape_cell(&self, si: usize, hi: usize, wi: usize) -> Metrics {
+        match self {
+            PlanRef::Ws(p) => p.shape_cell(si, hi, wi),
+            PlanRef::Os(p) => p.shape_cell(si, hi, wi),
+        }
+    }
+}
+
+/// Group WS configurations by accumulator capacity (one
+/// [`SegmentedWsPlan`] per group over the group's axis values) and OS
+/// configurations into a single accumulator-independent
+/// [`SegmentedOsPlan`], then map every configuration to its route. Both
+/// dataflows sweep segmented (DESIGN.md §10/§11).
 fn build_routes(
     workload: &Workload,
     configs: &[ArrayConfig],
     plans: Option<&PlanCache>,
-) -> (Vec<Arc<SegmentedWsPlan>>, Vec<CellRoute>) {
-    let mut groups: HashMap<usize, (Vec<usize>, Vec<usize>)> = HashMap::new();
+) -> (Vec<PlanRef>, Vec<CellRoute>) {
+    let mut ws_groups: HashMap<usize, (Vec<usize>, Vec<usize>)> = HashMap::new();
+    let mut os_axes: (Vec<usize>, Vec<usize>) = (Vec::new(), Vec::new());
     for cfg in configs {
-        if cfg.dataflow == Dataflow::WeightStationary {
-            let axes = groups.entry(cfg.acc_capacity).or_default();
-            axes.0.push(cfg.height);
-            axes.1.push(cfg.width);
+        match cfg.dataflow {
+            Dataflow::WeightStationary => {
+                let axes = ws_groups.entry(cfg.acc_capacity).or_default();
+                axes.0.push(cfg.height);
+                axes.1.push(cfg.width);
+            }
+            Dataflow::OutputStationary => {
+                os_axes.0.push(cfg.height);
+                os_axes.1.push(cfg.width);
+            }
         }
     }
-    let mut built: Vec<Arc<SegmentedWsPlan>> = Vec::with_capacity(groups.len());
-    let mut plan_of: HashMap<usize, usize> = HashMap::with_capacity(groups.len());
-    for (acc, (hs, ws)) in groups {
+    let mut built: Vec<PlanRef> = Vec::with_capacity(ws_groups.len() + 1);
+    let mut ws_plan_of: HashMap<usize, usize> = HashMap::with_capacity(ws_groups.len());
+    for (acc, (hs, ws)) in ws_groups {
         let plan = match plans {
             Some(cache) => cache.plan(workload, &hs, &ws, acc),
             None => Arc::new(SegmentedWsPlan::new(workload, &hs, &ws, acc)),
         };
-        plan_of.insert(acc, built.len());
-        built.push(plan);
+        ws_plan_of.insert(acc, built.len());
+        built.push(PlanRef::Ws(plan));
     }
+    let os_plan = if os_axes.0.is_empty() {
+        None
+    } else {
+        let plan = match plans {
+            Some(cache) => cache.plan_os(workload, &os_axes.0, &os_axes.1),
+            None => Arc::new(SegmentedOsPlan::new(workload, &os_axes.0, &os_axes.1)),
+        };
+        built.push(PlanRef::Os(plan));
+        Some(built.len() - 1)
+    };
     let routes = configs
         .iter()
         .map(|cfg| {
-            if cfg.dataflow != Dataflow::WeightStationary {
-                return CellRoute::Direct;
-            }
-            let pi = plan_of[&cfg.acc_capacity];
+            let pi = match cfg.dataflow {
+                Dataflow::WeightStationary => ws_plan_of[&cfg.acc_capacity],
+                Dataflow::OutputStationary => os_plan.expect("OS configs imply an OS plan"),
+            };
             match (
                 built[pi].height_index(cfg.height),
                 built[pi].width_index(cfg.width),
@@ -327,22 +360,13 @@ pub fn sweep_workload_planned(
     plans: Option<&PlanCache>,
 ) -> Vec<SweepPoint> {
     let (built, routes) = build_routes(workload, configs, plans);
-    let n = configs.len();
-    let chunks = crate::util::ceil_div(n, SWEEP_CHUNK);
-    let evaluated: Vec<Vec<SweepPoint>> = parallel_map(chunks, threads, |c| {
-        let lo = c * SWEEP_CHUNK;
-        let end = (lo + SWEEP_CHUNK).min(n);
-        (lo..end)
-            .map(|i| {
-                let m = match routes[i] {
-                    CellRoute::Plan { plan, hi, wi } => built[plan].cell(hi, wi),
-                    CellRoute::Direct => workload.eval(&configs[i]),
-                };
-                point_of(&configs[i], m, weights)
-            })
-            .collect()
-    });
-    evaluated.into_iter().flatten().collect()
+    pool::parallel_map_chunked(configs.len(), threads, SWEEP_CHUNK, |i| {
+        let m = match routes[i] {
+            CellRoute::Plan { plan, hi, wi } => built[plan].cell(hi, wi),
+            CellRoute::Direct => workload.eval(&configs[i]),
+        };
+        point_of(&configs[i], m, weights)
+    })
 }
 
 /// The shape-major core (DESIGN.md §4): tiling factors are computed once
@@ -355,7 +379,7 @@ pub fn sweep_workload_shape_major(
     threads: usize,
 ) -> Vec<SweepPoint> {
     let plan = ShapeMajorPlan::new(workload, configs);
-    parallel_map(configs.len(), threads, |i| {
+    pool::parallel_map(configs.len(), threads, |i| {
         point_of(&configs[i], plan.eval(i, &configs[i], None), weights)
     })
 }
@@ -386,7 +410,7 @@ pub fn seed_workload_planned(
     plans: Option<&PlanCache>,
 ) {
     let (built, routes) = build_routes(workload, configs, plans);
-    parallel_map(configs.len(), threads, |i| {
+    pool::parallel_map(configs.len(), threads, |i| {
         let cfg = &configs[i];
         match routes[i] {
             CellRoute::Plan { plan, hi, wi } => {
@@ -411,7 +435,7 @@ pub fn sweep_workload_config_major(
     weights: &EnergyWeights,
     threads: usize,
 ) -> Vec<SweepPoint> {
-    parallel_map(configs.len(), threads, |i| {
+    pool::parallel_map(configs.len(), threads, |i| {
         let cfg = &configs[i];
         let m: Metrics = workload
             .shapes
@@ -422,12 +446,7 @@ pub fn sweep_workload_config_major(
     })
 }
 
-/// Default parallelism: available cores.
-pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-}
+pub use crate::runtime::pool::default_threads;
 
 #[cfg(test)]
 mod tests {
@@ -490,10 +509,11 @@ mod tests {
     }
 
     #[test]
-    fn non_ws_dataflow_falls_back_and_matches() {
+    fn mixed_dataflows_match_direct_eval() {
         let net = small_net();
         let w = Workload::of(&net);
-        // A mixed config list: WS and OS entries interleaved.
+        // A mixed config list: WS and OS entries interleaved — each
+        // routes through its own segmented plan.
         let mut cfgs = DimGrid::coarse(8, 24, 8).configs(&ArrayConfig::new(1, 1));
         let os: Vec<ArrayConfig> = cfgs
             .iter()
@@ -606,6 +626,34 @@ mod tests {
         let cache = EvalCache::new();
         seed_workload_planned(&w, &cfgs, 2, &cache, Some(&plans));
         assert_eq!(plans.len(), 1);
+        assert_eq!(cache.len(), w.distinct() * cfgs.len());
+        for cfg in &cfgs {
+            assert_eq!(w.eval_cached(cfg, &cache), w.eval(cfg));
+        }
+    }
+
+    #[test]
+    fn os_sweeps_route_through_the_plan_cache() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        let cfgs: Vec<ArrayConfig> = DimGrid::coarse(4, 32, 4)
+            .configs(&ArrayConfig::new(1, 1))
+            .into_iter()
+            .map(|c| c.with_dataflow(crate::config::Dataflow::OutputStationary))
+            .collect();
+        let ew = EnergyWeights::paper();
+        let plans = crate::sweep::plan::PlanCache::new();
+        let a = sweep_workload_planned(&w, &cfgs, &ew, 2, Some(&plans));
+        assert_eq!((plans.len(), plans.misses()), (1, 1));
+        let b = sweep_workload_planned(&w, &cfgs, &ew, 2, Some(&plans));
+        assert!(plans.hits() >= 1);
+        for (i, cfg) in cfgs.iter().enumerate() {
+            assert_eq!(a[i].metrics, w.eval(cfg), "OS plan cell diverged at {cfg}");
+            assert_eq!(a[i].metrics, b[i].metrics);
+        }
+        // Seeding OS configs plants exact per-shape os_metrics.
+        let cache = EvalCache::new();
+        seed_workload_planned(&w, &cfgs, 2, &cache, Some(&plans));
         assert_eq!(cache.len(), w.distinct() * cfgs.len());
         for cfg in &cfgs {
             assert_eq!(w.eval_cached(cfg, &cache), w.eval(cfg));

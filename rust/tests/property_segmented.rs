@@ -1,17 +1,21 @@
-//! Property tests for the segmented piecewise-constant sweep plan
-//! (DESIGN.md §10): on random networks, dense step-1 grids, degenerate
-//! axes and both dataflows, the segmented core must be **byte-identical**
-//! to the config-major oracle (and to the shape-major intermediate core) —
-//! metrics, energy and utilization alike — and the seeding path must plant
-//! exactly `ws_metrics` into the memo table.
+//! Property tests for the segmented piecewise-constant sweep plans
+//! (DESIGN.md §10/§11): on random networks, dense step-1 grids,
+//! degenerate axes and both dataflows, the segmented core must be
+//! **byte-identical** to the config-major oracle (and to the shape-major
+//! intermediate core) — metrics, energy and utilization alike — and the
+//! seeding path must plant exactly `ws_metrics` / `os_metrics` into the
+//! memo table. Since §11 the output-stationary dataflow sweeps through
+//! its own segmented plan ([`SegmentedOsPlan`]) rather than the
+//! cell-by-cell fallback, so the forced-OS cases below exercise that
+//! plan end to end.
 
 use camuy::config::{ArrayConfig, Dataflow, EnergyWeights};
 use camuy::metrics::Metrics;
-use camuy::model::gemm::gemm_metrics;
+use camuy::model::gemm::{gemm_metrics, os_metrics};
 use camuy::model::layer::{Layer, SpatialDims};
 use camuy::model::network::Network;
 use camuy::model::workload::{EvalCache, Workload};
-use camuy::sweep::plan::{PlanCache, SegmentedWsPlan};
+use camuy::sweep::plan::{PlanCache, SegmentedOsPlan, SegmentedWsPlan};
 use camuy::sweep::runner::{
     seed_workload_planned, sweep_workload_config_major, sweep_workload_segmented,
     sweep_workload_shape_major,
@@ -210,6 +214,42 @@ fn planned_seeding_plants_exact_per_shape_metrics() {
                 .sum();
             assert_eq!(workload.eval_cached(cfg, &cache), direct, "at {cfg}");
         }
+    }
+}
+
+#[test]
+fn os_plan_cells_equal_the_os_metrics_oracle() {
+    // The OS segment algebra against the closed-form oracle, per shape
+    // and per workload cell, on random networks and dense axes — the OS
+    // mirror of `plan_probe_equals_direct_eval_on_random_networks`.
+    let mut rng = Rng::new(0x05_0A_AC);
+    for _ in 0..20 {
+        let net = gen_net(&mut rng);
+        let workload = Workload::of(&net);
+        let heights: Vec<usize> = (1..=20).collect();
+        let widths: Vec<usize> = (3..=17).collect();
+        let plan = SegmentedOsPlan::new(&workload, &heights, &widths);
+        for (hi, &h) in heights.iter().enumerate() {
+            for (wi, &w) in widths.iter().enumerate() {
+                let cfg = ArrayConfig::new(h, w).with_dataflow(Dataflow::OutputStationary);
+                // Workload cell = Σ multiplicity × oracle.
+                let direct: Metrics = workload
+                    .shapes
+                    .iter()
+                    .map(|&(shape, mult)| os_metrics(shape, &cfg) * mult)
+                    .sum();
+                assert_eq!(plan.cell(hi, wi), direct, "OS cell at ({h}, {w})");
+                // Per-shape seeding values = the oracle exactly.
+                for (si, &(shape, _)) in workload.shapes.iter().enumerate() {
+                    assert_eq!(
+                        plan.shape_cell(si, hi, wi),
+                        os_metrics(shape, &cfg),
+                        "OS shape cell {shape:?} at ({h}, {w})"
+                    );
+                }
+            }
+        }
+        assert_eq!(plan.probe(21, 3), None);
     }
 }
 

@@ -1,0 +1,149 @@
+//! Concurrency stress: one long-lived [`camuy::api::Engine`] hammered
+//! from many client threads with a mixed eval / sweep / register / graph
+//! workload — exactly the shape `camuy serve --listen` produces, where
+//! every TCP connection fans requests onto one shared engine, one shared
+//! sharded memo table, one shared plan cache, and one shared persistent
+//! thread pool (DESIGN.md §11).
+//!
+//! The invariant: every response produced under contention must be
+//! **byte-identical** (as compact wire JSON) to the same request sequence
+//! run serially on a fresh engine. Responses are deterministic functions
+//! of (request, per-thread registration prefix), so any divergence means
+//! shared state leaked between requests — a torn cache entry, a stale
+//! plan, a cross-thread registration race.
+
+use camuy::api::{sweep_json, Engine, EvalRequest, SweepRequest, SweepSpec};
+use camuy::config::{ArrayConfig, Dataflow};
+
+/// A tiny registerable network, unique per client thread.
+fn spec_for(thread: usize) -> String {
+    format!(
+        r#"{{
+  "name": "stress-t{thread}",
+  "layers": [
+    {{"op": "conv2d", "name": "c1", "input": {{"h": 14, "w": 14}},
+     "c_in": {cin}, "c_out": 16, "kernel": 3, "stride": 1, "padding": 1}},
+    {{"op": "linear", "name": "fc", "in_features": {feat}, "out_features": 10}}
+  ]
+}}"#,
+        cin = 3 + thread,
+        feat = 16 * 14 * 14,
+    )
+}
+
+/// The deterministic request script of one client thread, applied to
+/// `engine`; returns the compact-JSON transcript of every response.
+fn run_script(engine: &Engine, thread: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    // Register this thread's own network first; later evals resolve it.
+    let reg = engine
+        .register_network_json(&camuy::util::json::Json::parse(&spec_for(thread)).unwrap())
+        .expect("register");
+    out.push(format!("registered {} replaced {}", reg.name, reg.replaced));
+    for i in 0..12 {
+        // Mixed geometries, both dataflows, overlapping across threads so
+        // the sharded memo table sees concurrent hits and misses on the
+        // same keys.
+        let h = 8 + 8 * ((thread + i) % 4);
+        let w = 8 + 8 * (i % 4);
+        let mut cfg = ArrayConfig::new(h, w);
+        if i % 3 == 0 {
+            cfg = cfg.with_dataflow(Dataflow::OutputStationary);
+        }
+        let net = if i % 4 == 0 {
+            format!("stress-t{thread}")
+        } else {
+            "alexnet".to_string()
+        };
+        let resp = engine.eval(&EvalRequest::new(net, cfg)).expect("eval");
+        out.push(resp.to_json().to_string_compact());
+        if i % 5 == 0 {
+            // A sweep (plan-cache traffic) with a small grid; threads = 2
+            // nests pool jobs inside pool jobs.
+            let mut spec = SweepSpec::smoke();
+            spec.threads = 2;
+            let sweep = engine
+                .sweep(&SweepRequest {
+                    net: "alexnet".to_string(),
+                    spec,
+                })
+                .expect("sweep");
+            out.push(sweep_json(&sweep).to_string_compact());
+        }
+    }
+    out
+}
+
+#[test]
+fn concurrent_clients_match_serial_replay_byte_for_byte() {
+    let n_threads = 8;
+    // Contended run: all client scripts at once against one engine.
+    let shared = Engine::new();
+    let mut concurrent: Vec<Vec<String>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|t| {
+                let shared = &shared;
+                s.spawn(move || run_script(shared, t))
+            })
+            .collect();
+        for h in handles {
+            concurrent.push(h.join().expect("client thread"));
+        }
+    });
+    // Serial replay: the same scripts, one after another, fresh engine.
+    let serial_engine = Engine::new();
+    for (t, got) in concurrent.iter().enumerate() {
+        let want = run_script(&serial_engine, t);
+        assert_eq!(
+            got.len(),
+            want.len(),
+            "thread {t}: transcript length diverged"
+        );
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "thread {t} response {j} diverged under contention");
+        }
+    }
+    // The shared engine really did share state: the memo table saw the
+    // overlapping keys, and at least one sweep plan is resident.
+    assert!(!shared.cache().is_empty());
+    assert!(shared.plans().len() >= 1);
+    assert!(shared.plans().hits() > 0, "replayed sweeps must hit the plan cache");
+}
+
+#[test]
+fn concurrent_eval_batches_match_individual_evals() {
+    // eval_batch seeds the shared cache through the segmented cores (both
+    // dataflows); racing batches must still answer exactly like
+    // Engine::eval.
+    let engine = Engine::new();
+    let reqs: Vec<EvalRequest> = (0..24)
+        .map(|i| {
+            let cfg = ArrayConfig::new(8 + 8 * (i % 3), 8 + 4 * (i % 5));
+            let cfg = if i % 2 == 0 {
+                cfg.with_dataflow(Dataflow::OutputStationary)
+            } else {
+                cfg
+            };
+            EvalRequest::new("alexnet", cfg)
+        })
+        .collect();
+    let fresh = Engine::new();
+    let want: Vec<String> = reqs
+        .iter()
+        .map(|r| fresh.eval(r).unwrap().to_json().to_string_compact())
+        .collect();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let engine = &engine;
+            let reqs = &reqs;
+            let want = &want;
+            s.spawn(move || {
+                let got = engine.eval_batch(reqs, 4);
+                for (g, w) in got.into_iter().zip(want) {
+                    assert_eq!(&g.unwrap().to_json().to_string_compact(), w);
+                }
+            });
+        }
+    });
+}
