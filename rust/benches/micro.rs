@@ -7,12 +7,14 @@
 //! `BENCH_sweep.json` (override the path with `CAMUY_BENCH_OUT`) so the
 //! perf trajectory is tracked PR over PR.
 //!
-//! `CAMUY_BENCH_SMOKE=1` runs a reduced CI mode: fewer iterations, the
-//! paper grid only — and the process **fails** (exit 1) if the segmented
-//! core is slower than the shape-major core on the WS dataflow, or
-//! slower than the cell-by-cell fallback on the OS dataflow
-//! (DESIGN.md §11), so a regression on either sweep hot path cannot land
-//! silently.
+//! `CAMUY_BENCH_SMOKE=1` runs a reduced CI mode: fewer iterations, and
+//! the dense grid drops its oracle rungs (keeping the scalar-segmented
+//! vs vectorized pair). The process **fails** (exit 1) if the segmented
+//! core is slower than the shape-major core on the WS dataflow, slower
+//! than the cell-by-cell fallback on the OS dataflow (DESIGN.md §11),
+//! or if the vectorized blocked core (DESIGN.md §12) is slower than the
+//! scalar segmented core on the dense grid for either dataflow — so a
+//! regression on any sweep hot path cannot land silently.
 
 use camuy::config::{ArrayConfig, Dataflow, EnergyWeights};
 use camuy::model::gemm::{ws_metrics, ws_metrics_ref};
@@ -20,9 +22,10 @@ use camuy::model::schedule::GemmShape;
 use camuy::nets;
 use camuy::pareto::dominance::{fast_non_dominated_sort, pareto_front_indices};
 use camuy::sweep::grid::DimGrid;
+use camuy::sweep::plan::PlanCache;
 use camuy::sweep::runner::{
-    default_threads, sweep_workload_config_major, sweep_workload_segmented,
-    sweep_workload_shape_major, Workload,
+    default_threads, sweep_workload_config_major, sweep_workload_planned,
+    sweep_workload_segmented_scalar, sweep_workload_shape_major, Workload,
 };
 use camuy::util::bench::{bench, throughput, BenchOpts, BenchResult};
 use camuy::util::json::Json;
@@ -124,27 +127,77 @@ fn main() {
             );
             std::process::exit(1);
         }
+        let vec_speedup = sweep_json
+            .get("dense_grid")
+            .and_then(|p| p.get("speedup_vectorized_over_segmented_scalar"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if vec_speedup < 1.0 {
+            eprintln!(
+                "FAIL: the vectorized blocked WS core is {vec_speedup:.2}x the \
+                 scalar segmented core on the dense grid (must be >= 1.0)"
+            );
+            std::process::exit(1);
+        }
+        let os_vec_speedup = sweep_json
+            .get("dense_grid_os")
+            .and_then(|p| p.get("speedup_os_vectorized_over_segmented_scalar"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if os_vec_speedup < 1.0 {
+            eprintln!(
+                "FAIL: the vectorized blocked OS core is {os_vec_speedup:.2}x the \
+                 scalar segmented core on the dense grid (must be >= 1.0)"
+            );
+            std::process::exit(1);
+        }
         println!(
             "smoke gate passed: segmented is {speedup:.2}x shape-major (WS), \
-             {os_speedup:.2}x fallback (OS)"
+             {os_speedup:.2}x fallback (OS); vectorized is {vec_speedup:.2}x \
+             scalar segmented (WS dense), {os_vec_speedup:.2}x (OS dense)"
         );
     }
 }
 
-/// One grid through the three sweep cores over the whole paper zoo, same
-/// thread pool. `include_config_major: false` skips the slow oracle (CI
-/// smoke, dense grid) — the JSON then omits that variant.
+/// The per-rung JSON entry: timing summary, throughput, and the cell
+/// count one iteration evaluates (`cells` — grid points × models), so
+/// BENCH_sweep.json entries are comparable across machines and grids.
+fn variant(r: &BenchResult, cells: u64) -> Json {
+    Json::obj(vec![
+        ("seconds_mean", Json::num(r.seconds.mean)),
+        ("seconds_min", Json::num(r.seconds.min)),
+        ("seconds_p95", Json::num(r.seconds.p95)),
+        ("cells", Json::num(cells as f64)),
+        ("configs_per_sec", Json::num(throughput(r, cells))),
+    ])
+}
+
+/// One grid through the WS sweep cores over the whole paper zoo, same
+/// thread pool: the vectorized blocked core (`segmented`) against the
+/// scalar segmented rung (`segmented_scalar`), plus optionally the
+/// shape-major core and the config-major oracle (both skipped on the
+/// dense grid in CI smoke). Both segmented rungs share `plans`, which
+/// is warmed with one untimed pass so the timed rungs measure the cell
+/// loops, not segment-table construction.
 fn bench_grid(
     label: &str,
     grid: &DimGrid,
     workloads: &[Workload],
     opts: &BenchOpts,
+    plans: &PlanCache,
     include_config_major: bool,
+    include_shape_major: bool,
 ) -> Json {
     let configs = grid.configs(&ArrayConfig::new(1, 1));
     let threads = default_threads();
     let weights = EnergyWeights::paper();
     let total_configs = (configs.len() * workloads.len()) as u64;
+
+    // Warm the plan cache: segment tables are built (or re-fetched) here,
+    // never inside a timed rung.
+    for wl in workloads {
+        sweep_workload_planned(wl, &configs, &weights, threads, Some(plans));
+    }
 
     // Sum energies so the whole evaluation is observably consumed.
     let naive = if include_config_major {
@@ -158,52 +211,67 @@ fn bench_grid(
     } else {
         None
     };
-    let shape_major = bench(&format!("sweep/{label}_shape_major"), opts, || {
+    let shape_major = if include_shape_major {
+        Some(bench(&format!("sweep/{label}_shape_major"), opts, || {
+            workloads
+                .iter()
+                .flat_map(|wl| sweep_workload_shape_major(wl, &configs, &weights, threads))
+                .map(|p| p.energy)
+                .sum::<f64>()
+        }))
+    } else {
+        None
+    };
+    let scalar = bench(&format!("sweep/{label}_segmented_scalar"), opts, || {
         workloads
             .iter()
-            .flat_map(|wl| sweep_workload_shape_major(wl, &configs, &weights, threads))
+            .flat_map(|wl| {
+                sweep_workload_segmented_scalar(wl, &configs, &weights, threads, Some(plans))
+            })
             .map(|p| p.energy)
             .sum::<f64>()
     });
     let segmented = bench(&format!("sweep/{label}_segmented"), opts, || {
         workloads
             .iter()
-            .flat_map(|wl| sweep_workload_segmented(wl, &configs, &weights, threads))
+            .flat_map(|wl| sweep_workload_planned(wl, &configs, &weights, threads, Some(plans)))
             .map(|p| p.energy)
             .sum::<f64>()
     });
 
-    let seg_speedup = shape_major.seconds.mean / segmented.seconds.mean;
+    let vec_speedup = scalar.seconds.mean / segmented.seconds.mean;
     println!(
-        "   -> {label}: {:.0} configs/s shape-major, {:.0} configs/s segmented ({seg_speedup:.2}x)",
-        throughput(&shape_major, total_configs),
+        "   -> {label}: {:.0} configs/s scalar segmented, {:.0} configs/s vectorized \
+         ({vec_speedup:.2}x)",
+        throughput(&scalar, total_configs),
         throughput(&segmented, total_configs),
     );
 
-    let variant = |r: &BenchResult| -> Json {
-        Json::obj(vec![
-            ("seconds_mean", Json::num(r.seconds.mean)),
-            ("seconds_min", Json::num(r.seconds.min)),
-            ("seconds_p95", Json::num(r.seconds.p95)),
-            ("configs_per_sec", Json::num(throughput(r, total_configs))),
-        ])
-    };
     let mut fields = vec![
         ("grid_points", Json::num(configs.len() as f64)),
         ("network_evals_per_iter", Json::num(total_configs as f64)),
-        ("shape_major", variant(&shape_major)),
-        ("segmented", variant(&segmented)),
+        ("segmented_scalar", variant(&scalar, total_configs)),
+        ("segmented", variant(&segmented, total_configs)),
         (
-            "speedup_segmented_over_shape_major",
-            Json::num(seg_speedup),
+            "speedup_vectorized_over_segmented_scalar",
+            Json::num(vec_speedup),
         ),
     ];
-    if let Some(naive) = &naive {
-        fields.push(("config_major", variant(naive)));
+    if let Some(sm) = &shape_major {
+        fields.push(("shape_major", variant(sm, total_configs)));
         fields.push((
-            "speedup_shape_major_over_config_major",
-            Json::num(naive.seconds.mean / shape_major.seconds.mean),
+            "speedup_segmented_over_shape_major",
+            Json::num(sm.seconds.mean / segmented.seconds.mean),
         ));
+    }
+    if let Some(naive) = &naive {
+        fields.push(("config_major", variant(naive, total_configs)));
+        if let Some(sm) = &shape_major {
+            fields.push((
+                "speedup_shape_major_over_config_major",
+                Json::num(naive.seconds.mean / sm.seconds.mean),
+            ));
+        }
         fields.push((
             "speedup_segmented_over_config_major",
             Json::num(naive.seconds.mean / segmented.seconds.mean),
@@ -212,61 +280,92 @@ fn bench_grid(
     Json::obj(fields)
 }
 
-/// One grid through the OS-dataflow sweep: the segmented OS plan
-/// (DESIGN.md §11) against the cell-by-cell `os_metrics` fallback the
-/// config-major oracle still runs — which is exactly the path *every* OS
-/// sweep took before the OS segment algebra landed.
-fn bench_grid_os(label: &str, grid: &DimGrid, workloads: &[Workload], opts: &BenchOpts) -> Json {
+/// One grid through the OS-dataflow sweep: the vectorized blocked OS
+/// plan against the scalar segmented rung and (optionally — skipped on
+/// the dense grid in CI smoke) the cell-by-cell `os_metrics` fallback
+/// the config-major oracle still runs, which is exactly the path
+/// *every* OS sweep took before the OS segment algebra landed.
+fn bench_grid_os(
+    label: &str,
+    grid: &DimGrid,
+    workloads: &[Workload],
+    opts: &BenchOpts,
+    plans: &PlanCache,
+    include_fallback: bool,
+) -> Json {
     let template = ArrayConfig::new(1, 1).with_dataflow(Dataflow::OutputStationary);
     let configs = grid.configs(&template);
     let threads = default_threads();
     let weights = EnergyWeights::paper();
     let total_configs = (configs.len() * workloads.len()) as u64;
 
-    let fallback = bench(&format!("sweep/{label}_os_fallback"), opts, || {
+    // Warm the plan cache before any timed rung.
+    for wl in workloads {
+        sweep_workload_planned(wl, &configs, &weights, threads, Some(plans));
+    }
+
+    let fallback = if include_fallback {
+        Some(bench(&format!("sweep/{label}_os_fallback"), opts, || {
+            workloads
+                .iter()
+                .flat_map(|wl| sweep_workload_config_major(wl, &configs, &weights, threads))
+                .map(|p| p.energy)
+                .sum::<f64>()
+        }))
+    } else {
+        None
+    };
+    let scalar = bench(&format!("sweep/{label}_os_segmented_scalar"), opts, || {
         workloads
             .iter()
-            .flat_map(|wl| sweep_workload_config_major(wl, &configs, &weights, threads))
+            .flat_map(|wl| {
+                sweep_workload_segmented_scalar(wl, &configs, &weights, threads, Some(plans))
+            })
             .map(|p| p.energy)
             .sum::<f64>()
     });
     let segmented = bench(&format!("sweep/{label}_os_segmented"), opts, || {
         workloads
             .iter()
-            .flat_map(|wl| sweep_workload_segmented(wl, &configs, &weights, threads))
+            .flat_map(|wl| sweep_workload_planned(wl, &configs, &weights, threads, Some(plans)))
             .map(|p| p.energy)
             .sum::<f64>()
     });
-    let speedup = fallback.seconds.mean / segmented.seconds.mean;
+    let vec_speedup = scalar.seconds.mean / segmented.seconds.mean;
     println!(
-        "   -> {label} OS: {:.0} configs/s fallback, {:.0} configs/s segmented ({speedup:.2}x)",
-        throughput(&fallback, total_configs),
+        "   -> {label} OS: {:.0} configs/s scalar segmented, {:.0} configs/s vectorized \
+         ({vec_speedup:.2}x)",
+        throughput(&scalar, total_configs),
         throughput(&segmented, total_configs),
     );
-    let variant = |r: &BenchResult| -> Json {
-        Json::obj(vec![
-            ("seconds_mean", Json::num(r.seconds.mean)),
-            ("seconds_min", Json::num(r.seconds.min)),
-            ("seconds_p95", Json::num(r.seconds.p95)),
-            ("configs_per_sec", Json::num(throughput(r, total_configs))),
-        ])
-    };
-    Json::obj(vec![
+    let mut fields = vec![
         ("grid_points", Json::num(configs.len() as f64)),
         ("network_evals_per_iter", Json::num(total_configs as f64)),
-        ("fallback", variant(&fallback)),
-        ("segmented", variant(&segmented)),
-        ("speedup_os_segmented_over_fallback", Json::num(speedup)),
-    ])
+        ("segmented_scalar", variant(&scalar, total_configs)),
+        ("segmented", variant(&segmented, total_configs)),
+        (
+            "speedup_os_vectorized_over_segmented_scalar",
+            Json::num(vec_speedup),
+        ),
+    ];
+    if let Some(fb) = &fallback {
+        fields.push(("fallback", variant(fb, total_configs)));
+        fields.push((
+            "speedup_os_segmented_over_fallback",
+            Json::num(fb.seconds.mean / segmented.seconds.mean),
+        ));
+    }
+    Json::obj(fields)
 }
 
-/// The full paper zoo through all three sweep cores — the acceptance
-/// numbers for the segmented refactor: the paper's 961-point grid on
-/// both dataflows, and (full mode) the dense step-1 grid where the axis
-/// collapse shines.
+/// The full paper zoo through all the sweep cores — the acceptance
+/// numbers for the segmented refactor and the vectorized blocked
+/// kernels: the paper's 961-point grid on both dataflows, and the dense
+/// step-1 grid where the axis collapse and the fused kernels shine.
 fn bench_zoo_sweeps(smoke: bool) -> Json {
     let models = nets::paper_models();
     let workloads: Vec<Workload> = models.iter().map(Workload::of).collect();
+    let plans = PlanCache::new();
     let opts = if smoke {
         BenchOpts {
             warmup_iters: 1,
@@ -279,9 +378,49 @@ fn bench_zoo_sweeps(smoke: bool) -> Json {
         }
     };
 
-    let paper = bench_grid("full_zoo_paper", &DimGrid::paper(), &workloads, &opts, !smoke);
-    let paper_os = bench_grid_os("full_zoo_paper", &DimGrid::paper(), &workloads, &opts);
-    let mut fields = vec![
+    let paper = bench_grid(
+        "full_zoo_paper",
+        &DimGrid::paper(),
+        &workloads,
+        &opts,
+        &plans,
+        !smoke,
+        true,
+    );
+    let paper_os = bench_grid_os(
+        "full_zoo_paper",
+        &DimGrid::paper(),
+        &workloads,
+        &opts,
+        &plans,
+        true,
+    );
+    // The dense step-1 grid runs in smoke mode too (vectorized and
+    // scalar segmented rungs only — no oracles): the CI gate requires
+    // the fused kernels to beat the scalar core where it matters most.
+    let dense_opts = BenchOpts {
+        warmup_iters: 1,
+        measure_iters: 2,
+    };
+    let dense = bench_grid(
+        "full_zoo_dense",
+        &DimGrid::dense(),
+        &workloads,
+        &dense_opts,
+        &plans,
+        !smoke,
+        !smoke,
+    );
+    let dense_os = bench_grid_os(
+        "full_zoo_dense",
+        &DimGrid::dense(),
+        &workloads,
+        &dense_opts,
+        &plans,
+        !smoke,
+    );
+    let ps = plans.stats();
+    Json::obj(vec![
         ("bench", Json::str("full_zoo_sweep")),
         ("smoke", Json::Bool(smoke)),
         ("models", Json::num(workloads.len() as f64)),
@@ -292,20 +431,17 @@ fn bench_zoo_sweeps(smoke: bool) -> Json {
         ("threads", Json::num(default_threads() as f64)),
         ("paper_grid", paper),
         ("paper_grid_os", paper_os),
-    ];
-    if !smoke {
-        let dense_opts = BenchOpts {
-            warmup_iters: 1,
-            measure_iters: 2,
-        };
-        fields.push((
-            "dense_grid",
-            bench_grid("full_zoo_dense", &DimGrid::dense(), &workloads, &dense_opts, true),
-        ));
-        fields.push((
-            "dense_grid_os",
-            bench_grid_os("full_zoo_dense", &DimGrid::dense(), &workloads, &dense_opts),
-        ));
-    }
-    Json::obj(fields)
+        ("dense_grid", dense),
+        ("dense_grid_os", dense_os),
+        (
+            "plan_cache",
+            Json::obj(vec![
+                ("entries", Json::num(ps.entries as f64)),
+                ("table_words", Json::num(ps.table_words as f64)),
+                ("hits", Json::num(ps.hits as f64)),
+                ("misses", Json::num(ps.misses as f64)),
+                ("hit_rate", Json::num(ps.hit_rate())),
+            ]),
+        ),
+    ])
 }

@@ -33,7 +33,7 @@ use crate::model::workload::{EvalCache, Workload};
 use crate::nets;
 use crate::pareto::nsga2::Nsga2Params;
 use crate::report::figures::{self, Fig2Data, Fig3Data, Fig5Data, Fig6Data};
-use crate::sweep::plan::PlanCache;
+use crate::sweep::plan::{PlanCache, PlanCacheStats};
 use crate::sweep::runner::seed_workload_planned;
 use crate::util::json::Json;
 use std::collections::{HashMap, HashSet};
@@ -84,6 +84,13 @@ impl Engine {
     /// The shared segmented-sweep plan cache.
     pub fn plans(&self) -> &PlanCache {
         &self.plans
+    }
+
+    /// A point-in-time occupancy/traffic snapshot of the plan cache —
+    /// what the serve loop logs per connection so operators can see
+    /// whether sweeps are re-deriving segment tables or replaying them.
+    pub fn plan_stats(&self) -> PlanCacheStats {
+        self.plans.stats()
     }
 
     fn zoo(&self) -> &HashMap<String, Network> {

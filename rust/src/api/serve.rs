@@ -214,12 +214,22 @@ pub fn serve_tcp(
                 if let Some(reader) = reader {
                     let mut writer = stream;
                     match serve(engine, reader, &mut writer, &conn_opts) {
-                        Ok(stats) => log::info!(
-                            "serve: {peer}: {} request(s), {} error(s), {} batch(es)",
-                            stats.requests,
-                            stats.errors,
-                            stats.batches
-                        ),
+                        Ok(stats) => {
+                            let ps = engine.plan_stats();
+                            log::info!(
+                                "serve: {peer}: {} request(s), {} error(s), {} batch(es); \
+                                 plan cache: {} plan(s), {} hit(s) / {} miss(es) \
+                                 ({:.0}% hit rate), {} table word(s)",
+                                stats.requests,
+                                stats.errors,
+                                stats.batches,
+                                ps.entries,
+                                ps.hits,
+                                ps.misses,
+                                100.0 * ps.hit_rate(),
+                                ps.table_words
+                            );
+                        }
                         Err(e) => log::warn!("serve: {peer}: {e}"),
                     }
                 }

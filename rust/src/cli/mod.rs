@@ -610,11 +610,17 @@ fn cmd_serve(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         let stdin = std::io::BufReader::new(std::io::stdin());
         let stdout = std::io::stdout();
         let stats = crate::api::serve(engine, stdin, &mut stdout.lock(), &opts)?;
+        let ps = engine.plan_stats();
         log::info!(
-            "served {} request(s) ({} error(s)) in {} batch(es)",
+            "served {} request(s) ({} error(s)) in {} batch(es); plan cache: \
+             {} plan(s), {} hit(s) / {} miss(es) ({:.0}% hit rate)",
             stats.requests,
             stats.errors,
-            stats.batches
+            stats.batches,
+            ps.entries,
+            ps.hits,
+            ps.misses,
+            100.0 * ps.hit_rate()
         );
     }
     Ok(())

@@ -634,12 +634,167 @@ pub fn os_metrics(gemm: GemmShape, cfg: &ArrayConfig) -> Metrics {
     }
 }
 
+/// Accumulator lanes in the fused streaming dot kernels below. Eight
+/// 64-bit lanes fill one AVX-512 register (two AVX2, four NEON) per
+/// accumulator; the segmented plans pad their SoA tables to a multiple
+/// of this so the lane loop never takes the scalar tail on plan tables.
+pub const DOT_LANES: usize = 8;
+
+/// The fused weight-stationary cell kernel: one streaming pass over the
+/// five SoA operands computes all three per-cell dot products
+/// (`inter_weight = skk_m·col_c`, `passes = tr_m·col_cc`,
+/// `cyc = tr_m·col_cyc`) with [`DOT_LANES`] independent accumulator
+/// lanes per product, written as fixed-width array blocks so LLVM
+/// autovectorizes on stable Rust (no nightly `std::simd`).
+///
+/// Unsigned 64-bit addition is associative and commutative even under
+/// wrapping, so the lane reassociation is **byte-identical** to the
+/// sequential `iter().zip().map().sum()` it replaces whenever that sum
+/// does not overflow — and still equals the sequential *wrapping* fold
+/// when it does (unit- and property-tested).
+#[inline]
+pub fn ws_cell_dots(
+    skk_m: &[u64],
+    tr_m: &[u64],
+    col_c: &[u64],
+    col_cc: &[u64],
+    col_cyc: &[u64],
+) -> (u64, u64, u64) {
+    let n = skk_m.len();
+    debug_assert!(
+        tr_m.len() == n && col_c.len() == n && col_cc.len() == n && col_cyc.len() == n,
+        "ws_cell_dots operands must agree in length"
+    );
+    let mut iw = [0u64; DOT_LANES];
+    let mut ps = [0u64; DOT_LANES];
+    let mut cy = [0u64; DOT_LANES];
+    let mut i = 0;
+    while i + DOT_LANES <= n {
+        let a: &[u64; DOT_LANES] = skk_m[i..i + DOT_LANES].try_into().unwrap();
+        let t: &[u64; DOT_LANES] = tr_m[i..i + DOT_LANES].try_into().unwrap();
+        let c: &[u64; DOT_LANES] = col_c[i..i + DOT_LANES].try_into().unwrap();
+        let cc: &[u64; DOT_LANES] = col_cc[i..i + DOT_LANES].try_into().unwrap();
+        let cyv: &[u64; DOT_LANES] = col_cyc[i..i + DOT_LANES].try_into().unwrap();
+        for l in 0..DOT_LANES {
+            iw[l] = iw[l].wrapping_add(a[l].wrapping_mul(c[l]));
+            ps[l] = ps[l].wrapping_add(t[l].wrapping_mul(cc[l]));
+            cy[l] = cy[l].wrapping_add(t[l].wrapping_mul(cyv[l]));
+        }
+        i += DOT_LANES;
+    }
+    // Scalar tail — unreachable for lane-padded plan tables, kept so the
+    // kernel is total over arbitrary slices.
+    let (mut inter_weight, mut passes, mut cyc) = (0u64, 0u64, 0u64);
+    while i < n {
+        inter_weight = inter_weight.wrapping_add(skk_m[i].wrapping_mul(col_c[i]));
+        passes = passes.wrapping_add(tr_m[i].wrapping_mul(col_cc[i]));
+        cyc = cyc.wrapping_add(tr_m[i].wrapping_mul(col_cyc[i]));
+        i += 1;
+    }
+    for l in 0..DOT_LANES {
+        inter_weight = inter_weight.wrapping_add(iw[l]);
+        passes = passes.wrapping_add(ps[l]);
+        cyc = cyc.wrapping_add(cy[l]);
+    }
+    (inter_weight, passes, cyc)
+}
+
+/// The fused output-stationary cell kernel: one streaming pass over the
+/// three SoA operands computes both per-cell dot products
+/// (`cyc = cyc_r·tc`, `passes = tm_m·tc` — the shared `tc` stream is
+/// loaded once per lane block). Same lane layout and byte-identity
+/// argument as [`ws_cell_dots`].
+#[inline]
+pub fn os_cell_dots(cyc_r: &[u64], tm_m: &[u64], tc: &[u64]) -> (u64, u64) {
+    let n = cyc_r.len();
+    debug_assert!(
+        tm_m.len() == n && tc.len() == n,
+        "os_cell_dots operands must agree in length"
+    );
+    let mut cy = [0u64; DOT_LANES];
+    let mut ps = [0u64; DOT_LANES];
+    let mut i = 0;
+    while i + DOT_LANES <= n {
+        let r: &[u64; DOT_LANES] = cyc_r[i..i + DOT_LANES].try_into().unwrap();
+        let m: &[u64; DOT_LANES] = tm_m[i..i + DOT_LANES].try_into().unwrap();
+        let c: &[u64; DOT_LANES] = tc[i..i + DOT_LANES].try_into().unwrap();
+        for l in 0..DOT_LANES {
+            cy[l] = cy[l].wrapping_add(r[l].wrapping_mul(c[l]));
+            ps[l] = ps[l].wrapping_add(m[l].wrapping_mul(c[l]));
+        }
+        i += DOT_LANES;
+    }
+    let (mut cyc, mut passes) = (0u64, 0u64);
+    while i < n {
+        cyc = cyc.wrapping_add(cyc_r[i].wrapping_mul(tc[i]));
+        passes = passes.wrapping_add(tm_m[i].wrapping_mul(tc[i]));
+        i += 1;
+    }
+    for l in 0..DOT_LANES {
+        cyc = cyc.wrapping_add(cy[l]);
+        passes = passes.wrapping_add(ps[l]);
+    }
+    (cyc, passes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn cfg(h: usize, w: usize, acc: usize) -> ArrayConfig {
         ArrayConfig::new(h, w).with_acc_capacity(acc)
+    }
+
+    #[test]
+    fn cell_dot_kernels_match_sequential_sums() {
+        let mut rng = crate::util::prng::Rng::new(0xD075);
+        for n in 0..=40usize {
+            // Small operands: the checked sequential sum cannot overflow,
+            // so this covers the exact pre-vectorization semantics on
+            // every length class mod DOT_LANES (including 0, 1, 7).
+            let v: Vec<Vec<u64>> = (0..5)
+                .map(|_| (0..n).map(|_| rng.next_u64() >> 44).collect())
+                .collect();
+            let dot = |x: &[u64], y: &[u64]| -> u64 {
+                x.iter().zip(y).map(|(&a, &b)| a * b).sum()
+            };
+            assert_eq!(
+                ws_cell_dots(&v[0], &v[1], &v[2], &v[3], &v[4]),
+                (dot(&v[0], &v[2]), dot(&v[1], &v[3]), dot(&v[1], &v[4])),
+                "ws kernel diverged at n={n}"
+            );
+            assert_eq!(
+                os_cell_dots(&v[0], &v[1], &v[2]),
+                (dot(&v[0], &v[2]), dot(&v[1], &v[2])),
+                "os kernel diverged at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn cell_dot_kernels_wrap_like_the_sequential_wrapping_fold() {
+        // Full-width operands overflow; u64 wrapping addition stays
+        // associative and commutative, so the lane reassociation must
+        // equal the sequential wrapping fold bit for bit.
+        let mut rng = crate::util::prng::Rng::new(0x0F10);
+        for n in [1usize, 7, 8, 9, 15, 16, 17, 31] {
+            let v: Vec<Vec<u64>> = (0..5)
+                .map(|_| (0..n).map(|_| rng.next_u64()).collect())
+                .collect();
+            let dot = |x: &[u64], y: &[u64]| -> u64 {
+                x.iter()
+                    .zip(y)
+                    .fold(0u64, |s, (&a, &b)| s.wrapping_add(a.wrapping_mul(b)))
+            };
+            assert_eq!(
+                ws_cell_dots(&v[0], &v[1], &v[2], &v[3], &v[4]),
+                (dot(&v[0], &v[2]), dot(&v[1], &v[3]), dot(&v[1], &v[4]))
+            );
+            assert_eq!(
+                os_cell_dots(&v[0], &v[1], &v[2]),
+                (dot(&v[0], &v[2]), dot(&v[1], &v[2]))
+            );
+        }
     }
 
     #[test]

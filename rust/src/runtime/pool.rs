@@ -395,6 +395,55 @@ pub fn parallel_map_chunked<T: Send + Sync>(
         .collect()
 }
 
+/// A write-once scatter view over a result buffer: the work units of
+/// [`parallel_scatter`] publish each result under its own index, so a
+/// unit may produce results for an arbitrary subset of `0..n` (the
+/// blocked sweep dispatch reorders cells block-major but must return
+/// them in request order).
+pub struct Scatter<'a, T> {
+    slots: &'a [OnceLock<T>],
+}
+
+impl<T> Scatter<'_, T> {
+    /// Publish the result for index `i`. Writing an index twice is a bug
+    /// in the caller's unit decomposition and panics.
+    pub fn set(&self, i: usize, value: T) {
+        if self.slots[i].set(value).is_err() {
+            panic!("scatter index {i} written twice");
+        }
+    }
+}
+
+/// Run `f(u, &scatter)` for every unit `u in 0..units` on the global
+/// pool with up to `threads` executors, where the units collectively
+/// publish exactly one result per index in `0..n`; returns the results
+/// in index order. This is [`parallel_map_chunked`] with the
+/// index-to-unit mapping inverted: the *caller* decides how indices
+/// group into stealable units (the blocked sweep dispatch makes one
+/// unit per cache block run), instead of the pool slicing `0..n` into
+/// fixed-size chunks. Panics if a unit leaves an index unwritten.
+pub fn parallel_scatter<T: Send + Sync>(
+    n: usize,
+    threads: usize,
+    units: usize,
+    f: impl Fn(usize, &Scatter<'_, T>) + Sync,
+) -> Vec<T> {
+    let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+    let scatter = Scatter { slots: &slots };
+    let cap = threads.max(1).min(units);
+    if cap <= 1 || global().workers() == 0 {
+        for u in 0..units {
+            f(u, &scatter);
+        }
+    } else {
+        global().run(units, 1, cap, &|u| f(u, &scatter));
+    }
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("every index scattered"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -464,6 +513,38 @@ mod tests {
         assert_eq!(parallel_map(500, 8, |i| i * i), serial);
         assert_eq!(parallel_map_chunked(500, 8, 32, |i| i * i), serial);
         assert_eq!(parallel_map(0, 8, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn parallel_scatter_returns_index_order_for_unit_major_writes() {
+        // 10 units of 50 indices each, written in a unit-local order that
+        // differs from the index order — the result must still come back
+        // index-major, for both the serial and the pooled path.
+        for threads in [1usize, 8] {
+            let out = parallel_scatter(500, threads, 10, |u, s| {
+                for j in (0..50).rev() {
+                    let i = u * 50 + j;
+                    s.set(i, i * i);
+                }
+            });
+            assert_eq!(out, (0..500).map(|i| i * i).collect::<Vec<usize>>());
+        }
+        // Degenerate shapes: no indices, and more units than indices.
+        assert_eq!(parallel_scatter(0, 4, 0, |_, _: &Scatter<usize>| {}), vec![]);
+        let one = parallel_scatter(1, 4, 3, |u, s: &Scatter<usize>| {
+            if u == 2 {
+                s.set(0, 7);
+            }
+        });
+        assert_eq!(one, vec![7]);
+    }
+
+    #[test]
+    fn parallel_scatter_panics_on_a_double_write() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            parallel_scatter(2, 1, 2, |_, s: &Scatter<usize>| s.set(0, 1))
+        }));
+        assert!(r.is_err(), "double write must panic");
     }
 
     #[test]

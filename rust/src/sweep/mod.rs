@@ -12,10 +12,12 @@ pub mod runner;
 pub use grid::{equal_pe_factorizations, normalize_axis, DimGrid, GridError};
 pub use normalize::RobustObjectives;
 pub use plan::{
-    PlanCache, SegmentedOsPlan, SegmentedWsPlan, PLAN_CACHE_CAPACITY, PLAN_CACHE_WORD_BUDGET,
+    PlanCache, PlanCacheStats, SegmentedOsPlan, SegmentedWsPlan, PLAN_CACHE_CAPACITY,
+    PLAN_CACHE_WORD_BUDGET,
 };
 pub use runner::{
     default_threads, parallel_map, seed_workload, seed_workload_planned, sweep_network,
     sweep_network_planned, sweep_workload, sweep_workload_config_major, sweep_workload_planned,
-    sweep_workload_segmented, sweep_workload_shape_major, SweepPoint, SweepResult, Workload,
+    sweep_workload_segmented, sweep_workload_segmented_scalar, sweep_workload_shape_major,
+    SweepPoint, SweepResult, Workload,
 };

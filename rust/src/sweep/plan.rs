@@ -28,8 +28,8 @@
 use crate::config::Dataflow;
 use crate::metrics::{Metrics, MovementCounters};
 use crate::model::gemm::{
-    ceil_div_segments, floor_div_segments, os_metrics_from_scalars, ws_metrics_from_scalars,
-    OsColScalars, OsRowScalars, WsColScalars, WsRowFactors,
+    ceil_div_segments, floor_div_segments, os_cell_dots, os_metrics_from_scalars, ws_cell_dots,
+    ws_metrics_from_scalars, DOT_LANES, OsColScalars, OsRowScalars, WsColScalars, WsRowFactors,
 };
 use crate::model::schedule::GemmShape;
 use crate::model::workload::Workload;
@@ -47,7 +47,12 @@ pub struct SegmentedWsPlan {
     widths: Vec<usize>,
     acc: usize,
     shapes: Vec<(GemmShape, u64)>,
-    // --- row tables, indexed hi * S + si ---
+    /// Table stride per axis value: `shapes.len()` rounded up to a
+    /// [`DOT_LANES`] multiple, so the fused cell kernels stream whole
+    /// lane blocks with no scalar tail (the zero padding is inert in
+    /// every dot product).
+    stride: usize,
+    // --- row tables, indexed hi * stride + si ---
     /// Row-tile count `tr` (unscaled — the seeding path reads these).
     tr: Vec<u64>,
     /// Weight shift-down hop sum `Σ k_t(k_t−1)/2` (unscaled).
@@ -57,7 +62,7 @@ pub struct SegmentedWsPlan {
     /// Multiplicity-scaled `tr` and `s_kk` — the dot-product operands.
     tr_m: Vec<u64>,
     skk_m: Vec<u64>,
-    // --- col tables, indexed wi * S + si ---
+    // --- col tables, indexed wi * stride + si ---
     /// Col-class aggregates (DESIGN.md §10): Σ count, Σ count·chunks·nt,
     /// Σ count·chunks, and the per-shape cycle coefficient
     /// `M·s_cnt + s_c − 2·s_cc`.
@@ -96,21 +101,23 @@ impl SegmentedWsPlan {
         let heights = normalize_axis(heights.to_vec());
         let widths = normalize_axis(widths.to_vec());
         let s = workload.shapes.len();
+        let stride = ceil_div(s, DOT_LANES) * DOT_LANES;
         let (nh, nw) = (heights.len(), widths.len());
         let mut p = SegmentedWsPlan {
             heights,
             widths,
             acc,
             shapes: workload.shapes.clone(),
-            tr: vec![0; nh * s],
-            s_kk: vec![0; nh * s],
-            k0: vec![0; nh * s],
-            tr_m: vec![0; nh * s],
-            skk_m: vec![0; nh * s],
-            col_cnt: vec![0; nw * s],
-            col_c: vec![0; nw * s],
-            col_cc: vec![0; nw * s],
-            col_cyc: vec![0; nw * s],
+            stride,
+            tr: vec![0; nh * stride],
+            s_kk: vec![0; nh * stride],
+            k0: vec![0; nh * stride],
+            tr_m: vec![0; nh * stride],
+            skk_m: vec![0; nh * stride],
+            col_cnt: vec![0; nw * stride],
+            col_c: vec![0; nw * stride],
+            col_cc: vec![0; nw * stride],
+            col_cyc: vec![0; nw * stride],
             tot_k0: vec![0; nh],
             tot_mn_tr: vec![0; nh],
             tot_mk_cnt: vec![0; nw],
@@ -143,7 +150,7 @@ impl SegmentedWsPlan {
                     let k_tail = k - (tr - 1) * h;
                     let s_kk = (tr - 1) * (h * (h - 1) / 2) + k_tail * (k_tail - 1) / 2;
                     let k0 = k.min(h);
-                    let at = hi * s + si;
+                    let at = hi * stride + si;
                     p.tr[at] = tr;
                     p.s_kk[at] = s_kk;
                     p.k0[at] = k0;
@@ -175,7 +182,7 @@ impl SegmentedWsPlan {
                     let s_cnt = full_cnt + 1;
                     let s_c = full_cnt * full_c * w + ct * n_tail;
                     let s_cc = full_cnt * full_c + ct;
-                    let at = wi * s + si;
+                    let at = wi * stride + si;
                     p.col_cnt[at] = s_cnt;
                     p.col_c[at] = s_c;
                     p.col_cc[at] = s_cc;
@@ -225,11 +232,50 @@ impl SegmentedWsPlan {
 
     /// Workload metrics of one grid cell: Σ over shapes of multiplicity ×
     /// the WS closed form, assembled from the SoA tables — three dot
-    /// products over the shape dimension plus a constant number of scalar
-    /// multiply-adds. Byte-identical to the config-major oracle.
+    /// products over the shape dimension, fused into one streaming pass
+    /// through the multi-lane [`ws_cell_dots`] kernel (the tables are
+    /// lane-padded at construction, so the kernel never takes its scalar
+    /// tail). Byte-identical to the config-major oracle and to
+    /// [`SegmentedWsPlan::cell_scalar`].
     pub fn cell(&self, hi: usize, wi: usize) -> Metrics {
+        let n = self.stride;
+        let (ro, co) = (hi * n, wi * n);
+        let (inter_weight, passes, cyc) = ws_cell_dots(
+            &self.skk_m[ro..ro + n],
+            &self.tr_m[ro..ro + n],
+            &self.col_c[co..co + n],
+            &self.col_cc[co..co + n],
+            &self.col_cyc[co..co + n],
+        );
+        let h = self.heights[hi] as u64;
+        let w = self.widths[wi] as u64;
+        Metrics {
+            cycles: self.tot_k0[hi] + cyc + h * passes,
+            stall_cycles: 0,
+            macs: self.tot_macs,
+            passes,
+            movements: MovementCounters {
+                ub_act_reads: self.tot_mk_cnt[wi],
+                ub_weight_reads: self.tot_k_c[wi],
+                ub_out_writes: self.tot_mn,
+                inter_pe_act: (w - 1) * self.tot_mk_cnt[wi],
+                inter_pe_psum: (h - 1) * self.tot_mn_tr[hi],
+                inter_pe_weight: inter_weight,
+                intra_pe: self.tot_5mkn + 2 * self.tot_k_c[wi],
+                aa_writes: self.tot_mn_tr[hi],
+                aa_reads: self.tot_mn,
+            },
+        }
+    }
+
+    /// The pre-vectorization per-cell combine: sequential `iter().zip()`
+    /// dot products over the live (unpadded) prefix of the SoA tables.
+    /// Kept as the scalar baseline rung of the oracle chain — the
+    /// property tests assert it byte-identical to [`SegmentedWsPlan::cell`],
+    /// and the bench smoke gate requires the fused kernel to beat it.
+    pub fn cell_scalar(&self, hi: usize, wi: usize) -> Metrics {
         let s = self.shapes.len();
-        let (ro, co) = (hi * s, wi * s);
+        let (ro, co) = (hi * self.stride, wi * self.stride);
         let tr_m = &self.tr_m[ro..ro + s];
         let skk_m = &self.skk_m[ro..ro + s];
         let col_c = &self.col_c[co..co + s];
@@ -259,6 +305,13 @@ impl SegmentedWsPlan {
         }
     }
 
+    /// Words each axis value owns in every row/col table:
+    /// `shapes.len()` rounded up to a [`DOT_LANES`] multiple. The blocked
+    /// dispatch sizes its cache blocks from this.
+    pub fn lane_stride(&self) -> usize {
+        self.stride
+    }
+
     /// [`SegmentedWsPlan::cell`] looked up by axis values: two binary
     /// searches plus the combine — no divisions. `None` if (h, w) is off
     /// the plan's axes.
@@ -274,8 +327,7 @@ impl SegmentedWsPlan {
     /// these.
     pub fn shape_cell(&self, si: usize, hi: usize, wi: usize) -> Metrics {
         let (shape, _) = self.shapes[si];
-        let s = self.shapes.len();
-        let (ra, ca) = (hi * s + si, wi * s + si);
+        let (ra, ca) = (hi * self.stride + si, wi * self.stride + si);
         let row = WsRowFactors {
             height: self.heights[hi],
             tr: self.tr[ra],
@@ -298,9 +350,10 @@ impl SegmentedWsPlan {
     }
 
     /// Resident size of the SoA tables in 64-bit words — what the plan
-    /// cache's memory budget accounts.
+    /// cache's memory budget accounts. Lane padding included: the cache
+    /// bounds what is actually allocated, not the live prefix.
     pub fn table_words(&self) -> usize {
-        let s = self.shapes.len();
+        let s = self.stride;
         let (nh, nw) = (self.heights.len(), self.widths.len());
         5 * nh * s + 4 * nw * s + 2 * nh + 2 * nw
     }
@@ -321,7 +374,10 @@ pub struct SegmentedOsPlan {
     heights: Vec<usize>,
     widths: Vec<usize>,
     shapes: Vec<(GemmShape, u64)>,
-    // --- row tables, indexed hi * S + si ---
+    /// Table stride per axis value (`shapes.len()` lane-padded), as in
+    /// [`SegmentedWsPlan`].
+    stride: usize,
+    // --- row tables, indexed hi * stride + si ---
     /// Row-tile count `tm` (unscaled — the seeding path reads these).
     tm: Vec<u64>,
     /// Drain deficit `Σ mt(mt−1)/2` (unscaled).
@@ -330,7 +386,7 @@ pub struct SegmentedOsPlan {
     /// `mult·tm·(K + h − 2)` — the dot-product operands.
     tm_m: Vec<u64>,
     cyc_r: Vec<u64>,
-    // --- col table, indexed wi * S + si ---
+    // --- col table, indexed wi * stride + si ---
     /// Col-tile count `tc` (unscaled; both dot products consume it).
     tc: Vec<u64>,
     // --- per-axis totals ---
@@ -361,16 +417,18 @@ impl SegmentedOsPlan {
         let heights = normalize_axis(heights.to_vec());
         let widths = normalize_axis(widths.to_vec());
         let s = workload.shapes.len();
+        let stride = ceil_div(s, DOT_LANES) * DOT_LANES;
         let (nh, nw) = (heights.len(), widths.len());
         let mut p = SegmentedOsPlan {
             heights,
             widths,
             shapes: workload.shapes.clone(),
-            tm: vec![0; nh * s],
-            s_mm: vec![0; nh * s],
-            tm_m: vec![0; nh * s],
-            cyc_r: vec![0; nh * s],
-            tc: vec![0; nw * s],
+            stride,
+            tm: vec![0; nh * stride],
+            s_mm: vec![0; nh * stride],
+            tm_m: vec![0; nh * stride],
+            cyc_r: vec![0; nh * stride],
+            tc: vec![0; nw * stride],
             tot_kn_tm: vec![0; nh],
             tot_tm_n: vec![0; nh],
             tot_n_smm: vec![0; nh],
@@ -400,7 +458,7 @@ impl SegmentedOsPlan {
                 for hi in seg.start..seg.end {
                     let h = p.heights[hi] as u64;
                     let s_mm = crate::model::gemm::os_drain_deficit(m, h, tm);
-                    let at = hi * s + si;
+                    let at = hi * stride + si;
                     p.tm[at] = tm;
                     p.s_mm[at] = s_mm;
                     p.tm_m[at] = mult * tm;
@@ -416,7 +474,7 @@ impl SegmentedOsPlan {
                 p.col_segments += 1;
                 let tc = seg.value;
                 for wi in seg.start..seg.end {
-                    let at = wi * s + si;
+                    let at = wi * stride + si;
                     p.tc[at] = tc;
                     p.tot_km_tc[wi] += mult * k * m * tc;
                     p.tot_m_tc[wi] += mult * m * tc;
@@ -458,11 +516,46 @@ impl SegmentedOsPlan {
 
     /// Workload metrics of one grid cell: Σ over shapes of multiplicity ×
     /// the OS closed form, assembled from the SoA tables — two dot
-    /// products over the shape dimension plus per-axis totals.
-    /// Byte-identical to the config-major oracle.
+    /// products over the shape dimension (fused into one streaming pass
+    /// through the multi-lane [`os_cell_dots`] kernel) plus per-axis
+    /// totals. Byte-identical to the config-major oracle and to
+    /// [`SegmentedOsPlan::cell_scalar`].
     pub fn cell(&self, hi: usize, wi: usize) -> Metrics {
+        let n = self.stride;
+        let (ro, co) = (hi * n, wi * n);
+        let (cyc, passes) = os_cell_dots(
+            &self.cyc_r[ro..ro + n],
+            &self.tm_m[ro..ro + n],
+            &self.tc[co..co + n],
+        );
+        let h = self.heights[hi] as u64;
+        let w = self.widths[wi] as u64;
+        Metrics {
+            cycles: cyc + self.tot_m_tc[wi] + self.tot_tm_n[hi],
+            stall_cycles: 0,
+            macs: self.tot_macs,
+            passes,
+            movements: MovementCounters {
+                ub_act_reads: self.tot_km_tc[wi],
+                ub_weight_reads: self.tot_kn_tm[hi],
+                ub_out_writes: self.tot_mn,
+                inter_pe_act: (w - 1) * self.tot_km_tc[wi],
+                inter_pe_psum: (h - 1) * self.tot_mn - self.tot_n_smm[hi],
+                inter_pe_weight: self.tot_kmn - self.tot_kn_tm[hi],
+                intra_pe: self.tot_5k2mn,
+                aa_writes: self.tot_mn,
+                aa_reads: self.tot_mn,
+            },
+        }
+    }
+
+    /// The pre-vectorization per-cell combine: sequential `iter().zip()`
+    /// dot products over the live (unpadded) prefix of the SoA tables.
+    /// Kept as the scalar baseline rung of the oracle chain, exactly as
+    /// [`SegmentedWsPlan::cell_scalar`].
+    pub fn cell_scalar(&self, hi: usize, wi: usize) -> Metrics {
         let s = self.shapes.len();
-        let (ro, co) = (hi * s, wi * s);
+        let (ro, co) = (hi * self.stride, wi * self.stride);
         let cyc_r = &self.cyc_r[ro..ro + s];
         let tm_m = &self.tm_m[ro..ro + s];
         let tc = &self.tc[co..co + s];
@@ -489,6 +582,12 @@ impl SegmentedOsPlan {
         }
     }
 
+    /// Words each axis value owns in every row/col table (lane-padded),
+    /// as in [`SegmentedWsPlan::lane_stride`].
+    pub fn lane_stride(&self) -> usize {
+        self.stride
+    }
+
     /// [`SegmentedOsPlan::cell`] looked up by axis values — two binary
     /// searches plus the combine. `None` if (h, w) is off the plan axes.
     pub fn probe(&self, h: usize, w: usize) -> Option<Metrics> {
@@ -503,8 +602,7 @@ impl SegmentedOsPlan {
     /// these.
     pub fn shape_cell(&self, si: usize, hi: usize, wi: usize) -> Metrics {
         let (shape, _) = self.shapes[si];
-        let s = self.shapes.len();
-        let (ra, ca) = (hi * s + si, wi * s + si);
+        let (ra, ca) = (hi * self.stride + si, wi * self.stride + si);
         let row = OsRowScalars {
             height: self.heights[hi],
             tm: self.tm[ra],
@@ -523,9 +621,10 @@ impl SegmentedOsPlan {
     }
 
     /// Resident size of the SoA tables in 64-bit words — what the plan
-    /// cache's memory budget accounts.
+    /// cache's memory budget accounts. Lane padding included, as in
+    /// [`SegmentedWsPlan::table_words`].
     pub fn table_words(&self) -> usize {
-        let s = self.shapes.len();
+        let s = self.stride;
         let (nh, nw) = (self.heights.len(), self.widths.len());
         4 * nh * s + nw * s + 3 * nh + 2 * nw
     }
@@ -701,6 +800,42 @@ impl PlanCache {
     /// Lookups that had to build a plan.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// One-call snapshot of occupancy and traffic — what `camuy serve`
+    /// logs per connection (groundwork for a `/metrics` endpoint).
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            entries: self.len(),
+            table_words: self.words.load(Ordering::Relaxed),
+            hits: self.hits(),
+            misses: self.misses(),
+        }
+    }
+}
+
+/// A point-in-time snapshot of [`PlanCache`] occupancy and traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlanCacheStats {
+    /// Plans currently resident.
+    pub entries: usize,
+    /// Σ `table_words` over the resident plans (lane padding included).
+    pub table_words: u64,
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to build a plan.
+    pub misses: u64,
+}
+
+impl PlanCacheStats {
+    /// Hits over total lookups; 0.0 before any traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
     }
 }
 
@@ -931,5 +1066,49 @@ mod tests {
         // A flushed cache still answers (rebuilds on miss).
         let p = cache.plan(&w, &[8], &[4], 4096);
         assert_eq!(p.heights(), &[8]);
+    }
+
+    #[test]
+    fn tables_are_lane_padded_and_the_scalar_cell_agrees() {
+        // Shape counts on every interesting residue class mod DOT_LANES.
+        for extra in [0usize, 1, 6, 7, 8, 9] {
+            let mut shapes = vec![(GemmShape::new(5, 7, 9), 2)];
+            for i in 0..extra {
+                shapes.push((GemmShape::new(3 + i, 11, 4 + 2 * i), 1 + i as u64));
+            }
+            let w = Workload::from_shapes("pad", shapes);
+            let axes: Vec<usize> = (1..=17).collect();
+            let ws = SegmentedWsPlan::new(&w, &axes, &axes, 19);
+            let os = SegmentedOsPlan::new(&w, &axes, &axes);
+            assert_eq!(ws.lane_stride() % DOT_LANES, 0);
+            assert!(ws.lane_stride() >= w.distinct());
+            assert!(ws.lane_stride() < w.distinct() + DOT_LANES);
+            assert_eq!(os.lane_stride(), ws.lane_stride());
+            for hi in 0..axes.len() {
+                for wi in 0..axes.len() {
+                    assert_eq!(ws.cell(hi, wi), ws.cell_scalar(hi, wi));
+                    assert_eq!(os.cell(hi, wi), os.cell_scalar(hi, wi));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stats_snapshot_tracks_occupancy_and_traffic() {
+        let w = Workload::of(&small_net());
+        let cache = PlanCache::new();
+        assert_eq!(cache.stats(), PlanCacheStats::default());
+        assert_eq!(cache.stats().hit_rate(), 0.0);
+        let a = cache.plan(&w, &[8, 16], &[4, 8], 4096);
+        cache.plan(&w, &[8, 16], &[4, 8], 4096);
+        let s = cache.stats();
+        assert_eq!((s.entries, s.hits, s.misses), (1, 1, 1));
+        assert_eq!(s.table_words, a.table_words() as u64);
+        assert_eq!(s.hit_rate(), 0.5);
+        cache.clear();
+        let s = cache.stats();
+        assert_eq!((s.entries, s.table_words), (0, 0));
+        // Traffic counters survive a flush (they are lifetime totals).
+        assert_eq!((s.hits, s.misses), (1, 1));
     }
 }

@@ -250,10 +250,12 @@ impl PlanRef {
         }
     }
 
-    fn cell(&self, hi: usize, wi: usize) -> Metrics {
+    /// The scalar (pre-vectorization) per-cell combine — the baseline
+    /// rung [`sweep_workload_segmented_scalar`] dispatches through.
+    fn cell_scalar(&self, hi: usize, wi: usize) -> Metrics {
         match self {
-            PlanRef::Ws(p) => p.cell(hi, wi),
-            PlanRef::Os(p) => p.cell(hi, wi),
+            PlanRef::Ws(p) => p.cell_scalar(hi, wi),
+            PlanRef::Os(p) => p.cell_scalar(hi, wi),
         }
     }
 
@@ -351,8 +353,146 @@ pub fn sweep_workload_segmented(
 /// granular enough that a straggler cannot idle the pool.
 const SWEEP_CHUNK: usize = 64;
 
-/// [`sweep_workload_segmented`] with an optional [`PlanCache`].
+/// Combined bytes of the hot row- and col-table slices one (height,
+/// width) cache block streams while its cells are assembled — the
+/// blocked dispatch picks the block edge so this fits comfortably in a
+/// typical 256 KiB–1 MiB L2, leaving headroom for the per-axis totals
+/// and the output points.
+const BLOCK_TABLE_BYTES: usize = 192 * 1024;
+
+/// Cache-block edge (axis values per side) for a plan whose cells
+/// stream `hot_tables` SoA tables of `stride` words per axis value: a
+/// `B × B` block touches `B · stride · hot_tables` words of row plus
+/// col tables, so both block slices together stay under
+/// [`BLOCK_TABLE_BYTES`]. Clamped so degenerate strides can neither
+/// collapse the blocks to single cells nor unblock the traversal.
+fn block_edge(stride: usize, hot_tables: usize) -> usize {
+    let per_value_bytes = 8 * stride.max(1) * hot_tables;
+    (BLOCK_TABLE_BYTES / per_value_bytes.max(1)).clamp(8, 512)
+}
+
+/// A routed cell in block-major order: the original config index plus
+/// its plan coordinates (zero for direct-path cells).
+#[derive(Clone, Copy)]
+struct BlockCell {
+    cfg: usize,
+    hi: usize,
+    wi: usize,
+}
+
+/// One block-granular dispatch unit: a run of consecutive entries in
+/// the block-major cell order, all routed through the same plan (or all
+/// direct). The unit — not the cell — is the work-stealing quantum, so
+/// the plan variant is dispatched **once per unit** and the inner loop
+/// is monomorphic over the concrete plan type, letting the fused cell
+/// kernels inline.
+struct SweepUnit {
+    /// Index into the built plans, or [`DIRECT`].
+    plan: usize,
+    /// Half-open range into the block-major cell order.
+    start: usize,
+    end: usize,
+}
+
+/// Sentinel plan index for cells on the direct-evaluation fallback.
+const DIRECT: usize = usize::MAX;
+
+/// Append `run` (already ordered) to the block-major cell list and cut
+/// it into stealable units of at most [`SWEEP_CHUNK`] cells. Units
+/// never straddle plans; a cache block larger than one unit is shared
+/// by several executors, which then all stream the same resident table
+/// slices.
+fn append_units(
+    cells: &mut Vec<BlockCell>,
+    units: &mut Vec<SweepUnit>,
+    plan: usize,
+    run: Vec<BlockCell>,
+) {
+    let base = cells.len();
+    let len = run.len();
+    cells.extend(run);
+    let mut s = 0;
+    while s < len {
+        let e = (s + SWEEP_CHUNK).min(len);
+        units.push(SweepUnit {
+            plan,
+            start: base + s,
+            end: base + e,
+        });
+        s = e;
+    }
+}
+
+/// [`sweep_workload_segmented`] with an optional [`PlanCache`]. This is
+/// the vectorized blocked core: cells are bucketed per plan, ordered
+/// block-major — by (height block, width block, height, width) with the
+/// block edge sized from the plan's table stride — and dispatched as
+/// block-granular units through the pool, so segment-table slices load
+/// once per block instead of once per cell and each unit runs one
+/// monomorphic fused-kernel loop. Byte-identical to
+/// [`sweep_workload_segmented_scalar`] and the config-major oracle.
 pub fn sweep_workload_planned(
+    workload: &Workload,
+    configs: &[ArrayConfig],
+    weights: &EnergyWeights,
+    threads: usize,
+    plans: Option<&PlanCache>,
+) -> Vec<SweepPoint> {
+    let (built, routes) = build_routes(workload, configs, plans);
+    let mut buckets: Vec<Vec<BlockCell>> = (0..built.len()).map(|_| Vec::new()).collect();
+    let mut direct: Vec<BlockCell> = Vec::new();
+    for (i, route) in routes.iter().enumerate() {
+        match *route {
+            CellRoute::Plan { plan, hi, wi } => buckets[plan].push(BlockCell { cfg: i, hi, wi }),
+            CellRoute::Direct => direct.push(BlockCell { cfg: i, hi: 0, wi: 0 }),
+        }
+    }
+    let mut cells: Vec<BlockCell> = Vec::with_capacity(configs.len());
+    let mut units: Vec<SweepUnit> = Vec::new();
+    for (pi, mut bucket) in buckets.into_iter().enumerate() {
+        let edge = match &built[pi] {
+            // WS cells stream two row tables and three col tables.
+            PlanRef::Ws(p) => block_edge(p.lane_stride(), 5),
+            // OS cells stream two row tables and one col table.
+            PlanRef::Os(p) => block_edge(p.lane_stride(), 3),
+        };
+        bucket.sort_unstable_by_key(|c| (c.hi / edge, c.wi / edge, c.hi, c.wi));
+        append_units(&mut cells, &mut units, pi, bucket);
+    }
+    append_units(&mut cells, &mut units, DIRECT, direct);
+    pool::parallel_scatter(configs.len(), threads, units.len(), |u, out| {
+        let unit = &units[u];
+        let run = &cells[unit.start..unit.end];
+        // One plan dispatch per unit; `built.get(DIRECT)` is `None`, so
+        // the fallback cells share the same match.
+        match built.get(unit.plan) {
+            Some(PlanRef::Ws(p)) => {
+                for c in run {
+                    out.set(c.cfg, point_of(&configs[c.cfg], p.cell(c.hi, c.wi), weights));
+                }
+            }
+            Some(PlanRef::Os(p)) => {
+                for c in run {
+                    out.set(c.cfg, point_of(&configs[c.cfg], p.cell(c.hi, c.wi), weights));
+                }
+            }
+            None => {
+                for c in run {
+                    let cfg = &configs[c.cfg];
+                    out.set(c.cfg, point_of(cfg, workload.eval(cfg), weights));
+                }
+            }
+        }
+    })
+}
+
+/// The scalar segmented baseline: identical routing and plan tables to
+/// [`sweep_workload_planned`], but every cell runs the sequential
+/// pre-vectorization combine ([`SegmentedWsPlan::cell_scalar`] /
+/// [`SegmentedOsPlan::cell_scalar`]) with per-cell dispatch and no
+/// cache blocking. Kept as the rung the vectorized core is
+/// property-tested equal to and bench-gated against.
+pub fn sweep_workload_segmented_scalar(
     workload: &Workload,
     configs: &[ArrayConfig],
     weights: &EnergyWeights,
@@ -362,7 +502,7 @@ pub fn sweep_workload_planned(
     let (built, routes) = build_routes(workload, configs, plans);
     pool::parallel_map_chunked(configs.len(), threads, SWEEP_CHUNK, |i| {
         let m = match routes[i] {
-            CellRoute::Plan { plan, hi, wi } => built[plan].cell(hi, wi),
+            CellRoute::Plan { plan, hi, wi } => built[plan].cell_scalar(hi, wi),
             CellRoute::Direct => workload.eval(&configs[i]),
         };
         point_of(&configs[i], m, weights)
@@ -606,6 +746,50 @@ mod tests {
             assert_eq!(seg[i].energy, cm[i].energy);
             assert_eq!(seg[i].utilization, cm[i].utilization);
         }
+    }
+
+    #[test]
+    fn scalar_segmented_rung_matches_the_vectorized_blocked_core() {
+        let net = small_net();
+        let w = Workload::of(&net);
+        // Mixed dataflows, mixed accumulator capacities, duplicates: the
+        // blocked dispatch must scatter every cell back to request order
+        // and stay byte-identical to the per-cell scalar rung.
+        let mut cfgs =
+            DimGrid::coarse(1, 24, 1).configs(&ArrayConfig::new(1, 1).with_acc_capacity(64));
+        cfgs.extend(
+            DimGrid::coarse(3, 17, 2).configs(&ArrayConfig::new(1, 1).with_acc_capacity(7)),
+        );
+        let os: Vec<ArrayConfig> = cfgs
+            .iter()
+            .step_by(3)
+            .map(|c| c.clone().with_dataflow(crate::config::Dataflow::OutputStationary))
+            .collect();
+        cfgs.extend(os);
+        cfgs.push(cfgs[0].clone());
+        let ew = EnergyWeights::paper();
+        for threads in [1usize, 4] {
+            let vec = sweep_workload_planned(&w, &cfgs, &ew, threads, None);
+            let scalar = sweep_workload_segmented_scalar(&w, &cfgs, &ew, threads, None);
+            assert_eq!(vec.len(), cfgs.len());
+            for i in 0..cfgs.len() {
+                assert_eq!((vec[i].height, vec[i].width), (cfgs[i].height, cfgs[i].width));
+                assert_eq!(vec[i].metrics, scalar[i].metrics, "cell {i} diverged");
+                assert_eq!(vec[i].energy, scalar[i].energy);
+                assert_eq!(vec[i].utilization, scalar[i].utilization);
+            }
+        }
+    }
+
+    #[test]
+    fn block_edge_is_budgeted_and_clamped() {
+        // A dense-plan stride: the edge follows the table-byte budget.
+        assert_eq!(block_edge(64, 5), BLOCK_TABLE_BYTES / (8 * 64 * 5));
+        // Tiny strides hit the upper clamp, huge strides the lower one.
+        assert_eq!(block_edge(0, 5), 512);
+        assert_eq!(block_edge(1 << 20, 5), 8);
+        // Fewer hot tables (the OS plan) allow a wider edge.
+        assert!(block_edge(64, 3) >= block_edge(64, 5));
     }
 
     #[test]

@@ -7,18 +7,23 @@
 //! memo table. Since §11 the output-stationary dataflow sweeps through
 //! its own segmented plan ([`SegmentedOsPlan`]) rather than the
 //! cell-by-cell fallback, so the forced-OS cases below exercise that
-//! plan end to end.
+//! plan end to end. Since §12 the segmented plans assemble cells through
+//! fused multi-lane kernels over lane-padded tables, so every identity
+//! here is four-way: vectorized blocked == scalar segmented ==
+//! shape-major == config-major, with dedicated cases at the lane
+//! boundaries (`s % 8 ∈ {0, 1, 7}`).
 
 use camuy::config::{ArrayConfig, Dataflow, EnergyWeights};
 use camuy::metrics::Metrics;
-use camuy::model::gemm::{gemm_metrics, os_metrics};
+use camuy::model::gemm::{gemm_metrics, os_metrics, DOT_LANES};
 use camuy::model::layer::{Layer, SpatialDims};
 use camuy::model::network::Network;
+use camuy::model::schedule::GemmShape;
 use camuy::model::workload::{EvalCache, Workload};
 use camuy::sweep::plan::{PlanCache, SegmentedOsPlan, SegmentedWsPlan};
 use camuy::sweep::runner::{
     seed_workload_planned, sweep_workload_config_major, sweep_workload_segmented,
-    sweep_workload_shape_major,
+    sweep_workload_segmented_scalar, sweep_workload_shape_major,
 };
 use camuy::util::prng::Rng;
 use camuy::util::propcheck::{check, Shrink};
@@ -106,9 +111,14 @@ fn assert_three_way_identical(case: &Case) -> Result<(), String> {
     let workload = Workload::of(&case.net);
     let weights = EnergyWeights::paper();
     let seg = sweep_workload_segmented(&workload, &case.configs, &weights, case.threads);
+    let sc = sweep_workload_segmented_scalar(&workload, &case.configs, &weights, case.threads, None);
     let sm = sweep_workload_shape_major(&workload, &case.configs, &weights, case.threads);
     let cm = sweep_workload_config_major(&workload, &case.configs, &weights, case.threads);
-    if seg.len() != case.configs.len() || sm.len() != seg.len() || cm.len() != seg.len() {
+    if seg.len() != case.configs.len()
+        || sc.len() != seg.len()
+        || sm.len() != seg.len()
+        || cm.len() != seg.len()
+    {
         return Err("point count mismatch".into());
     }
     for (i, cfg) in case.configs.iter().enumerate() {
@@ -124,10 +134,20 @@ fn assert_three_way_identical(case: &Case) -> Result<(), String> {
         if seg[i].metrics != sm[i].metrics {
             return Err(format!("segmented diverges from shape-major at {cfg}"));
         }
+        if seg[i].metrics != sc[i].metrics {
+            return Err(format!(
+                "vectorized blocked core diverges from the scalar segmented \
+                 rung at {cfg}: {:?} != {:?}",
+                seg[i].metrics, sc[i].metrics
+            ));
+        }
         // f64 derivations must be bit-identical too (same integer inputs,
         // same expression).
         if seg[i].energy != cm[i].energy || seg[i].utilization != cm[i].utilization {
             return Err(format!("derived objectives diverge at {cfg}"));
+        }
+        if sc[i].energy != cm[i].energy || sc[i].utilization != cm[i].utilization {
+            return Err(format!("scalar-rung derived objectives diverge at {cfg}"));
         }
     }
     Ok(())
@@ -250,6 +270,59 @@ fn os_plan_cells_equal_the_os_metrics_oracle() {
             }
         }
         assert_eq!(plan.probe(21, 3), None);
+    }
+}
+
+#[test]
+fn fused_kernels_agree_across_lane_boundaries() {
+    // Distinct-shape counts with s % 8 ∈ {0, 1, 7} straddle the 8-lane
+    // kernel width (DESIGN.md §12): full lane blocks only, one element
+    // past a block, and one short of a block. The zero padding in the
+    // lane-strided tables must stay inert — the fused cell, the scalar
+    // combine and the direct oracle agree on every cell, both dataflows,
+    // including degenerate and larger-than-every-GEMM axes.
+    let mut rng = Rng::new(0x1A9E_0B);
+    let heights: Vec<usize> = vec![1, 2, 3, 5, 8, 13, 4096];
+    let widths: Vec<usize> = vec![1, 4, 7, 2048];
+    for &s in &[1usize, 7, 8, 9, 15, 16, 17] {
+        // Strictly distinct K dimensions (spacing 8 > the random offset)
+        // so deduplication cannot collapse the shape count below `s`.
+        let pairs: Vec<(GemmShape, u64)> = (0..s)
+            .map(|i| {
+                let k = 3 + 8 * i + rng.range_usize(0, 5);
+                (
+                    GemmShape::new(rng.range_usize(1, 40), k, rng.range_usize(1, 24)),
+                    rng.range_usize(1, 4) as u64,
+                )
+            })
+            .collect();
+        let workload = Workload::from_shapes(format!("lanes{s}"), pairs);
+        assert_eq!(workload.distinct(), s, "distinct K values must not dedup");
+
+        let acc = rng.range_usize(1, 64);
+        let ws = SegmentedWsPlan::new(&workload, &heights, &widths, acc);
+        assert_eq!(ws.lane_stride() % DOT_LANES, 0, "stride not lane-padded");
+        assert!(ws.lane_stride() >= s && ws.lane_stride() < s + DOT_LANES);
+        let os = SegmentedOsPlan::new(&workload, &heights, &widths);
+        assert_eq!(os.lane_stride(), ws.lane_stride());
+        for (hi, &h) in heights.iter().enumerate() {
+            for (wi, &w) in widths.iter().enumerate() {
+                let cfg = ArrayConfig::new(h, w).with_acc_capacity(acc);
+                let fused = ws.cell(hi, wi);
+                assert_eq!(fused, ws.cell_scalar(hi, wi), "WS scalar ({h}, {w}) s={s}");
+                assert_eq!(fused, workload.eval(&cfg), "WS oracle ({h}, {w}) s={s}");
+
+                let os_cfg = cfg.with_dataflow(Dataflow::OutputStationary);
+                let direct: Metrics = workload
+                    .shapes
+                    .iter()
+                    .map(|&(shape, mult)| os_metrics(shape, &os_cfg) * mult)
+                    .sum();
+                let fused_os = os.cell(hi, wi);
+                assert_eq!(fused_os, os.cell_scalar(hi, wi), "OS scalar ({h}, {w}) s={s}");
+                assert_eq!(fused_os, direct, "OS oracle ({h}, {w}) s={s}");
+            }
+        }
     }
 }
 
