@@ -1,0 +1,142 @@
+//! Event-driven simulator benchmarks (DESIGN.md §13), emitted
+//! machine-readably to `BENCH_trace.json` (override the path with
+//! `CAMUY_TRACE_BENCH_OUT`):
+//!
+//! * event throughput — queue events processed per second over a full
+//!   zoo network's tiling schedule, both dataflows;
+//! * sim-vs-analytic slowdown — the cost of *executing* the machine
+//!   instead of evaluating the closed forms it is property-tested
+//!   against (the price of the second oracle);
+//! * trace-on vs trace-off overhead — what recording Perfetto slices
+//!   and counters costs relative to the `TraceSink::Off` zero-cost path.
+//!
+//! `CAMUY_BENCH_SMOKE=1` is the CI gate: the process fails (exit 1) if
+//! the trace-on overhead or the sim-vs-analytic slowdown exceeds its
+//! generous structural bound — both ratios are best-over-best, so a
+//! loaded runner cannot flake a regression-free commit red.
+
+use camuy::config::{ArrayConfig, Dataflow};
+use camuy::model::workload::Workload;
+use camuy::nets;
+use camuy::sim::{simulate_network, SimOptions};
+use camuy::util::bench::{bench, throughput, BenchOpts};
+use camuy::util::json::Json;
+
+/// Trace-on may cost at most this much over trace-off (best-over-best).
+/// Recording a slice is a push plus a closure call; even with string
+/// formatting the traced run stays within a small constant of the plain
+/// one — far under this bound unless the zero-cost path regresses.
+const MAX_TRACE_OVERHEAD: f64 = 50.0;
+
+/// The simulator may cost at most this much over the analytic closed
+/// forms (best-over-best). The analytic path is a few hundred
+/// nanoseconds per distinct shape; executing the event machine is
+/// inherently orders of magnitude more — the bound only catches a
+/// pathological regression (e.g. the queue losing its O(log n) pop).
+const MAX_SIM_SLOWDOWN: f64 = 200_000.0;
+
+fn main() {
+    let smoke = std::env::var("CAMUY_BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let opts = if smoke {
+        BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 3,
+        }
+    } else {
+        BenchOpts::default()
+    };
+
+    let net = nets::build("alexnet").unwrap();
+    let cfg = ArrayConfig::new(32, 32);
+    let os_cfg = ArrayConfig::new(32, 32).with_dataflow(Dataflow::OutputStationary);
+
+    println!("== sim: event throughput (alexnet, 32x32) ==");
+    let probe = simulate_network(&net, &cfg, 1, &SimOptions::default());
+    let off = bench("sim/alexnet_ws_untraced", &opts, || {
+        simulate_network(&net, &cfg, 1, &SimOptions::default()).events
+    });
+    let events_per_sec = throughput(&off, probe.events);
+    println!("   -> {events_per_sec:.0} events/s ({} events per run)", probe.events);
+
+    let os_probe = simulate_network(&net, &os_cfg, 1, &SimOptions::default());
+    let os_off = bench("sim/alexnet_os_untraced", &opts, || {
+        simulate_network(&net, &os_cfg, 1, &SimOptions::default()).events
+    });
+    let os_events_per_sec = throughput(&os_off, os_probe.events);
+    println!(
+        "   -> {os_events_per_sec:.0} events/s OS ({} events per run)",
+        os_probe.events
+    );
+
+    println!("\n== sim: slowdown over the analytic closed forms ==");
+    let workload = Workload::of(&net);
+    let analytic = bench("sim/alexnet_analytic", &opts, || {
+        workload.eval(&cfg).cycles
+    });
+    let slowdown = off.seconds.mean / analytic.seconds.mean;
+    let slowdown_best = off.seconds.min / analytic.seconds.min;
+    println!(
+        "   -> executing the machine costs {slowdown:.0}x the closed forms \
+         (best-over-best {slowdown_best:.0}x)"
+    );
+    // The two oracles must agree — the slowdown is only worth paying
+    // because the equality is exact (tests/property_sim.rs).
+    assert_eq!(probe.total, workload.eval(&cfg), "sim diverged from analytic");
+
+    println!("\n== sim: trace-on overhead over TraceSink::Off ==");
+    let traced_probe = simulate_network(&net, &cfg, 1, &SimOptions::traced(1 << 16));
+    let on = bench("sim/alexnet_ws_traced", &opts, || {
+        simulate_network(&net, &cfg, 1, &SimOptions::traced(1 << 16)).events
+    });
+    let overhead = on.seconds.mean / off.seconds.mean;
+    let overhead_best = on.seconds.min / off.seconds.min;
+    println!(
+        "   -> tracing costs {overhead:.2}x the untraced run \
+         (best-over-best {overhead_best:.2}x, {} slices)",
+        traced_probe.slice_count()
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sim_trace")),
+        ("network", Json::str("alexnet")),
+        ("events_per_run", Json::num(probe.events as f64)),
+        ("events_per_sec", Json::num(events_per_sec)),
+        ("os_events_per_sec", Json::num(os_events_per_sec)),
+        ("sim_seconds_mean", Json::num(off.seconds.mean)),
+        ("analytic_seconds_mean", Json::num(analytic.seconds.mean)),
+        ("slowdown_sim_over_analytic", Json::num(slowdown)),
+        ("traced_seconds_mean", Json::num(on.seconds.mean)),
+        ("overhead_trace_on_over_off", Json::num(overhead)),
+        ("trace_slices", Json::num(traced_probe.slice_count() as f64)),
+    ]);
+    let out =
+        std::env::var("CAMUY_TRACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_trace.json".to_string());
+    match std::fs::write(&out, doc.to_string_pretty() + "\n") {
+        Ok(()) => println!("\n   -> wrote {out}"),
+        Err(e) => eprintln!("\n   -> could not write {out}: {e}"),
+    }
+
+    if smoke {
+        if overhead_best > MAX_TRACE_OVERHEAD {
+            eprintln!(
+                "FAIL: trace-on costs {overhead_best:.2}x the untraced run \
+                 best-over-best (bound {MAX_TRACE_OVERHEAD}x)"
+            );
+            std::process::exit(1);
+        }
+        if slowdown_best > MAX_SIM_SLOWDOWN {
+            eprintln!(
+                "FAIL: the simulator costs {slowdown_best:.0}x the analytic \
+                 closed forms best-over-best (bound {MAX_SIM_SLOWDOWN}x)"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "smoke gate passed: trace overhead {overhead_best:.2}x (bound \
+             {MAX_TRACE_OVERHEAD}x), sim slowdown {slowdown_best:.0}x (bound \
+             {MAX_SIM_SLOWDOWN}x)"
+        );
+    }
+}

@@ -16,11 +16,11 @@
 use super::error::ApiError;
 use super::request::{
     check_arrays, check_config, check_nsga2, EqualPeRequest, EvalRequest, GraphRequest,
-    MemoryRequest, ParetoRequest, SweepRequest, SweepSpec,
+    MemoryRequest, ParetoRequest, SweepRequest, SweepSpec, TraceRequest,
 };
 use super::response::{
     EvalResponse, GraphResponse, MemoryResponse, NetworkEntry, NetworkSource, PerLayerReport,
-    RegisterResponse,
+    RegisterResponse, TraceResponse,
 };
 use crate::config::ArrayConfig;
 use crate::coordinator::Coordinator;
@@ -33,6 +33,7 @@ use crate::model::workload::{EvalCache, Workload};
 use crate::nets;
 use crate::pareto::nsga2::Nsga2Params;
 use crate::report::figures::{self, Fig2Data, Fig3Data, Fig5Data, Fig6Data};
+use crate::sim::{self, SimOptions};
 use crate::sweep::plan::{PlanCache, PlanCacheStats};
 use crate::sweep::runner::seed_workload_planned;
 use crate::util::json::Json;
@@ -265,6 +266,7 @@ impl Engine {
         };
         Ok(EvalResponse::Single {
             energy: run.energy(&req.weights),
+            max_fifo_depth: sim::network_fifo_depth(&net, &req.config),
             run,
             per_layer,
         })
@@ -320,6 +322,43 @@ impl Engine {
         // seeding pass could not cover (multi-array banks, per-layer
         // reports) still use the pool.
         crate::runtime::pool::parallel_map(reqs.len(), threads, |i| self.eval(&reqs[i]))
+    }
+
+    /// Run a network through the event-driven simulator (DESIGN.md §13),
+    /// layer sims fanned out over the default pool budget.
+    pub fn trace(&self, req: &TraceRequest) -> Result<TraceResponse, ApiError> {
+        self.trace_threaded(req, crate::runtime::pool::default_threads())
+    }
+
+    /// [`Engine::trace`] with an explicit executor budget (the serve
+    /// path's `--threads`). The simulated totals are cross-checked against
+    /// the analytic evaluation through the shared memo table — the two are
+    /// property-tested identical, so a divergence here is a bug in one of
+    /// the oracles and is logged loudly rather than silently returned.
+    pub fn trace_threaded(
+        &self,
+        req: &TraceRequest,
+        threads: usize,
+    ) -> Result<TraceResponse, ApiError> {
+        check_config(&req.config)?;
+        let net = self.resolve(&req.net, req.batch)?;
+        let opts = SimOptions::traced(req.max_slices);
+        let run = sim::simulate_network(&net, &req.config, threads, &opts);
+        let analytic = Workload::of(&net).eval_cached(&req.config, &self.cache);
+        if run.total != analytic {
+            log::warn!(
+                "trace: simulator diverges from the analytic model on '{}' \
+                 ({} vs {} cycles)",
+                run.network,
+                run.total.cycles,
+                analytic.cycles
+            );
+        }
+        Ok(TraceResponse {
+            sim: run,
+            config: req.config.clone(),
+            per_layer: req.per_layer,
+        })
     }
 
     /// Figure-2 heatmaps for one network over a grid, through the shared

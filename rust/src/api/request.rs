@@ -376,6 +376,57 @@ impl GraphRequest {
     }
 }
 
+/// Run a network through the event-driven simulator (DESIGN.md §13) and
+/// return the Perfetto trace document (CLI: `camuy emulate --trace`).
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub net: String,
+    /// Re-batch every layer; `None` keeps the registered batch.
+    pub batch: Option<usize>,
+    pub config: ArrayConfig,
+    /// Attach per-layer rows (timeline placement, FIFO depth, events).
+    pub per_layer: bool,
+    /// Per-layer trace-slice budget; layers past it mark the response
+    /// truncated instead of growing the document without bound.
+    pub max_slices: usize,
+}
+
+impl TraceRequest {
+    /// Default per-layer slice budget — enough for every zoo network's
+    /// full tiling schedule while keeping the document in the tens of MB.
+    pub const DEFAULT_SLICES: usize = 1 << 16;
+
+    /// Most slices per layer a request may ask for.
+    pub const MAX_SLICES: usize = 1 << 20;
+
+    pub fn new(net: impl Into<String>, config: ArrayConfig) -> TraceRequest {
+        TraceRequest {
+            net: net.into(),
+            batch: None,
+            config,
+            per_layer: false,
+            max_slices: Self::DEFAULT_SLICES,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceRequest, ApiError> {
+        let max_slices = opt_positive(v, "max_slices")?.unwrap_or(Self::DEFAULT_SLICES);
+        if max_slices > Self::MAX_SLICES {
+            return Err(ApiError::BadRequest(format!(
+                "max_slices {max_slices} exceeds the limit {}",
+                Self::MAX_SLICES
+            )));
+        }
+        Ok(TraceRequest {
+            net: req_str(v, "net")?,
+            batch: opt_positive(v, "batch")?,
+            config: parse_config(v.get("config"), ArrayConfig::new(128, 128))?,
+            per_layer: v.get("per_layer").and_then(Json::as_bool).unwrap_or(false),
+            max_slices,
+        })
+    }
+}
+
 /// Register a user network from a layer-list JSON document.
 #[derive(Debug, Clone)]
 pub struct RegisterRequest {
@@ -402,6 +453,7 @@ pub enum ApiRequest {
     EqualPe(EqualPeRequest),
     Memory(MemoryRequest),
     Graph(GraphRequest),
+    Trace(TraceRequest),
     Register(RegisterRequest),
     /// List every known network (zoo + user store).
     Zoo,
@@ -418,11 +470,12 @@ impl ApiRequest {
             "equal_pe" | "equal-pe" => EqualPeRequest::from_json(v).map(ApiRequest::EqualPe),
             "memory" => MemoryRequest::from_json(v).map(ApiRequest::Memory),
             "graph" => GraphRequest::from_json(v).map(ApiRequest::Graph),
+            "trace" => TraceRequest::from_json(v).map(ApiRequest::Trace),
             "register" => RegisterRequest::from_json(v).map(ApiRequest::Register),
             "zoo" | "networks" => Ok(ApiRequest::Zoo),
             other => Err(ApiError::BadRequest(format!(
                 "unknown request type '{other}' \
-                 (eval|sweep|pareto|equal_pe|memory|graph|register|zoo)"
+                 (eval|sweep|pareto|equal_pe|memory|graph|trace|register|zoo)"
             ))),
         }
     }
@@ -555,6 +608,30 @@ mod tests {
             r#"{"type":"equal_pe","budgets":[4611686018427387904]}"#,
             r#"{"type":"equal_pe","budgets":[4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096,4096]}"#,
             r#"{"type":"equal_pe","budgets":[]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(
+                matches!(ApiRequest::from_json(&v), Err(ApiError::BadRequest(_))),
+                "not rejected as bad request: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_request_parses_and_bounds_slices() {
+        let v = Json::parse(r#"{"type":"trace","net":"alexnet","per_layer":true}"#).unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Trace(r) => {
+                assert_eq!(r.net, "alexnet");
+                assert_eq!(r.max_slices, TraceRequest::DEFAULT_SLICES);
+                assert!(r.per_layer);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        for bad in [
+            r#"{"type":"trace"}"#,
+            r#"{"type":"trace","net":"alexnet","max_slices":0}"#,
+            r#"{"type":"trace","net":"alexnet","max_slices":10000000}"#,
         ] {
             let v = Json::parse(bad).unwrap();
             assert!(

@@ -13,6 +13,7 @@ use crate::model::multi::{MultiArrayConfig, MultiMetrics};
 use crate::model::roofline::LayerRoofline;
 use crate::pareto::nsga2::Solution;
 use crate::report::figures::{Fig2Data, Fig3Data, Fig6Data};
+use crate::sim::NetworkSim;
 use crate::util::json::Json;
 
 /// Per-layer roofline context attached when [`super::EvalRequest::per_layer`]
@@ -61,6 +62,9 @@ pub enum EvalResponse {
         /// Eq.1 energy under the request's weights (the run's own JSON
         /// always reports paper weights).
         energy: f64,
+        /// Peak rows staged in the Systolic Data Setup FIFOs across the
+        /// network (closed form; the simulator measures the same value).
+        max_fifo_depth: usize,
         per_layer: Option<PerLayerReport>,
     },
     /// A multi-array bank (`arrays > 1`).
@@ -92,11 +96,16 @@ impl EvalResponse {
             EvalResponse::Single {
                 run,
                 energy,
+                max_fifo_depth,
                 per_layer,
             } => {
                 let mut j = run.to_json();
                 if let Json::Obj(m) = &mut j {
                     m.insert("energy".to_string(), Json::num(*energy));
+                    m.insert(
+                        "max_fifo_depth".to_string(),
+                        Json::num(*max_fifo_depth as f64),
+                    );
                     if let Some(pl) = per_layer {
                         m.insert("roofline".to_string(), pl.to_json());
                     }
@@ -119,6 +128,62 @@ impl EvalResponse {
                 ("energy", Json::num(*energy)),
             ]),
         }
+    }
+}
+
+/// Result of a [`super::TraceRequest`]: the simulated run (totals,
+/// per-layer timeline, event counts) plus the Perfetto trace-event
+/// document, ready to write to a file and load at <https://ui.perfetto.dev>.
+#[derive(Debug)]
+pub struct TraceResponse {
+    pub sim: NetworkSim,
+    pub config: ArrayConfig,
+    /// Attach the per-layer timeline rows.
+    pub per_layer: bool,
+}
+
+impl TraceResponse {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("network", Json::str(self.sim.network.clone())),
+            ("config", self.config.to_json()),
+            ("cycles", Json::num(self.sim.total.cycles as f64)),
+            (
+                "stall_cycles",
+                Json::num(self.sim.total.stall_cycles as f64),
+            ),
+            (
+                "max_fifo_depth",
+                Json::num(self.sim.max_fifo_depth as f64),
+            ),
+            ("events", Json::num(self.sim.events as f64)),
+            ("slices", Json::num(self.sim.slice_count() as f64)),
+            ("truncated", Json::Bool(self.sim.truncated())),
+            ("trace", self.sim.perfetto()),
+        ];
+        if self.per_layer {
+            pairs.push((
+                "layers",
+                Json::arr(self.sim.layers.iter().map(|l| {
+                    Json::obj(vec![
+                        ("layer", Json::str(l.name.clone())),
+                        ("start_cycle", Json::num(l.start_cycle as f64)),
+                        ("end_cycle", Json::num(l.end_cycle as f64)),
+                        ("cycles", Json::num(l.metrics.cycles as f64)),
+                        (
+                            "stall_cycles",
+                            Json::num(l.metrics.stall_cycles as f64),
+                        ),
+                        (
+                            "max_fifo_depth",
+                            Json::num(l.max_fifo_depth as f64),
+                        ),
+                        ("events", Json::num(l.events as f64)),
+                    ])
+                })),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 

@@ -371,6 +371,7 @@ fn dispatch(
         Ok(ApiRequest::EqualPe(r)) => engine.equal_pe(r).map(|d| equal_pe_json(&d)),
         Ok(ApiRequest::Memory(r)) => engine.memory(r).map(|x| x.to_json()),
         Ok(ApiRequest::Graph(r)) => engine.graph_threaded(r, threads).map(|x| x.to_json()),
+        Ok(ApiRequest::Trace(r)) => engine.trace_threaded(r, threads).map(|x| x.to_json()),
     }
 }
 

@@ -1,9 +1,12 @@
 //! The Main Control Unit: drives the full weight-stationary pipeline —
 //! Weight Fetcher, Systolic Data Setup, PE array, Accumulator Array,
 //! Unified Buffer — over the tile schedule shared with the analytic model,
-//! and assembles the final [`Metrics`].
+//! and assembles the final [`Metrics`]. Output-stationary configurations
+//! are emulated too: their numerics follow the literal OS tile walk and
+//! their timing/counters route through the event-driven `sim` backend
+//! (DESIGN.md §13).
 //!
-//! Timing follows the double-buffered recurrence of DESIGN.md §3: the
+//! WS timing follows the double-buffered recurrence of DESIGN.md §3: the
 //! fetcher starts loading pass p's tile when pass p-1 begins computing, so
 //! `start(p) = max(end(p-1), start(p-1) + load(p))` and the first pass
 //! exposes its whole load.
@@ -13,9 +16,11 @@ use crate::arch::array::SystolicArray;
 use crate::arch::fifo::SystolicDataSetup;
 use crate::arch::unified_buffer::UnifiedBuffer;
 use crate::arch::weight_fetcher::WeightFetcher;
-use crate::config::{ArrayConfig, Dataflow};
+use crate::config::{ArrayConfig, ConfigError, Dataflow};
 use crate::metrics::{Metrics, MovementCounters};
-use crate::model::schedule::{GemmShape, WsSchedule};
+use crate::model::schedule::{GemmShape, OsSchedule, WsSchedule};
+use crate::sim;
+use crate::sim::trace::TraceSink;
 use crate::tensor::Matrix;
 
 /// Which array engine streams the passes.
@@ -45,15 +50,13 @@ pub struct Emulator {
 }
 
 impl Emulator {
-    pub fn new(cfg: ArrayConfig) -> Result<Emulator, String> {
-        cfg.validate().map_err(|e| e.to_string())?;
-        if cfg.dataflow != Dataflow::WeightStationary {
-            return Err(format!(
-                "functional emulation implements weight-stationary only (got {}); \
-                 the output-stationary variant is analytic-only",
-                cfg.dataflow
-            ));
-        }
+    /// Build an emulator for a validated configuration. Both dataflows are
+    /// supported: weight-stationary runs the in-crate functional pipeline
+    /// below; output-stationary routes timing and movement counters
+    /// through the event-driven `sim` backend while the numerics follow
+    /// the literal OS tile walk.
+    pub fn new(cfg: ArrayConfig) -> Result<Emulator, ConfigError> {
+        cfg.validate()?;
         Ok(Emulator { cfg })
     }
 
@@ -64,6 +67,13 @@ impl Emulator {
     /// Emulate `C = A * W` and return the computed output plus metrics.
     pub fn run_gemm(&self, a: &Matrix, w: &Matrix, mode: EmulationMode) -> EmulationResult {
         assert_eq!(a.cols, w.rows, "GEMM inner dimensions");
+        match self.cfg.dataflow {
+            Dataflow::WeightStationary => self.run_gemm_ws(a, w, mode),
+            Dataflow::OutputStationary => self.run_gemm_os(a, w),
+        }
+    }
+
+    fn run_gemm_ws(&self, a: &Matrix, w: &Matrix, mode: EmulationMode) -> EmulationResult {
         let gemm = GemmShape::new(a.rows, a.cols, w.cols);
         let sched = WsSchedule::new(gemm, &self.cfg);
 
@@ -122,7 +132,12 @@ impl Emulator {
                 }
                 act_rows.push(row);
             }
-            max_fifo_depth = max_fifo_depth.max(sds.max_depth());
+            // In CycleAccurate mode the staged depth is literally measured
+            // (`sds.max_depth() == Mc`); the wavefront engine skips the
+            // staging but the same rows are held, so both modes report the
+            // same peak — and it matches `sim::gemm_fifo_depth`.
+            debug_assert!(mode == EmulationMode::Wavefront || sds.max_depth() == p.mc);
+            max_fifo_depth = max_fifo_depth.max(p.mc);
 
             // --- stream ---
             // Pass duration is Mc + h + n_t - 2 (full-height drain); the
@@ -179,6 +194,38 @@ impl Emulator {
         }
     }
 
+    /// Output-stationary emulation: walk the `OsSchedule` tile grid and
+    /// perform the literal in-place accumulation the dataflow pins into
+    /// the PEs (each `(mt x nt)` tile of C accumulates across the full
+    /// reduction depth while A and W stream through). Timing and movement
+    /// counters come from the event-driven `sim` pipeline — the same
+    /// backend the property tests hold byte-identical to `os_metrics` —
+    /// so the emulator and the analytic model cannot drift. The
+    /// `EmulationMode` distinction is WS-specific (it selects how the
+    /// wavefront is stepped); OS has a single engine.
+    fn run_gemm_os(&self, a: &Matrix, w: &Matrix) -> EmulationResult {
+        let gemm = GemmShape::new(a.rows, a.cols, w.cols);
+        let sched = OsSchedule::new(gemm, &self.cfg);
+        let mut out = Matrix::zeros(a.rows, w.cols);
+        for t in sched.tiles() {
+            for r in t.row_start..t.row_start + t.mt {
+                for c in t.col_start..t.col_start + t.nt {
+                    let mut acc = 0.0f32;
+                    for kk in 0..t.k {
+                        acc += a[(r, kk)] * w[(kk, c)];
+                    }
+                    out[(r, c)] = acc;
+                }
+            }
+        }
+        let simulated = sim::simulate_gemm(gemm, &self.cfg, &mut TraceSink::Off);
+        EmulationResult {
+            output: out,
+            metrics: simulated.metrics,
+            max_fifo_depth: simulated.max_fifo_depth,
+        }
+    }
+
     /// Emulate a grouped layer: `groups` independent GEMMs with
     /// block-diagonal weights. `a` is `M x (groups * K_g)`, `w` is a vec of
     /// per-group `K_g x N_g` matrices; output is `M x (groups * N_g)`.
@@ -228,9 +275,30 @@ mod tests {
     }
 
     #[test]
-    fn rejects_output_stationary() {
-        let c = cfg(4, 4, 64).with_dataflow(Dataflow::OutputStationary);
-        assert!(Emulator::new(c).is_err());
+    fn invalid_config_yields_typed_error() {
+        let c = ArrayConfig {
+            height: 0,
+            ..cfg(4, 4, 64)
+        };
+        assert_eq!(Emulator::new(c).unwrap_err(), ConfigError::ZeroHeight);
+    }
+
+    #[test]
+    fn output_stationary_matches_matmul_and_closed_form() {
+        use crate::model::gemm::os_metrics;
+        let mut rng = Rng::new(41);
+        let c = cfg(4, 3, 16).with_dataflow(Dataflow::OutputStationary);
+        let emu = Emulator::new(c.clone()).unwrap();
+        let a = Matrix::random_small_int(7, 10, &mut rng);
+        let w = Matrix::random_small_int(10, 8, &mut rng);
+        let res = emu.run_gemm(&a, &w, EmulationMode::Wavefront);
+        assert_eq!(res.output, a.matmul(&w));
+        assert_eq!(res.metrics, os_metrics(GemmShape::new(7, 10, 8), &c));
+        assert_eq!(res.max_fifo_depth, 4); // min(M, h)
+        // The mode distinction is WS-specific; OS has one engine.
+        let ca = emu.run_gemm(&a, &w, EmulationMode::CycleAccurate);
+        assert_eq!(ca.output, res.output);
+        assert_eq!(ca.metrics, res.metrics);
     }
 
     #[test]
@@ -253,6 +321,7 @@ mod tests {
         let ca = emu.run_gemm(&a, &w, EmulationMode::CycleAccurate);
         assert_eq!(wf.output, ca.output);
         assert_eq!(wf.metrics, ca.metrics);
+        assert_eq!(wf.max_fifo_depth, ca.max_fifo_depth);
     }
 
     #[test]

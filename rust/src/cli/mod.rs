@@ -5,6 +5,7 @@
 //! ```text
 //! camuy zoo [--net NAME]            list networks / dump one as JSON spec
 //! camuy emulate --net resnet152 --height 128 --width 64 [--per-layer] [--json]
+//! camuy emulate --net resnet152 --trace out.json   event-driven sim + Perfetto trace
 //! camuy sweep   --net resnet152 [--grid paper|smoke] [--out DIR]   (Fig 2)
 //! camuy pareto  --net resnet152 [--out DIR]                        (Fig 3)
 //! camuy heatmaps [--out DIR]                                       (Fig 4)
@@ -22,7 +23,7 @@ pub mod args;
 
 use crate::api::{
     Engine, EqualPeRequest, EvalRequest, EvalResponse, GraphRequest, MemoryRequest,
-    ParetoRequest, ServeOptions, SweepRequest, SweepSpec,
+    ParetoRequest, ServeOptions, SweepRequest, SweepSpec, TraceRequest,
 };
 use crate::config::{ArrayConfig, Dataflow, EnergyWeights};
 use crate::pareto::nsga2::Nsga2Params;
@@ -37,6 +38,7 @@ const SCHEMA: Schema = Schema {
     options: &[
         "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "min-dim",
         "threads", "artifacts", "dataflow", "seed", "energy-model", "listen", "batch-max",
+        "trace", "max-slices",
     ],
     flags: &[
         "json", "per-layer", "smoke", "dense", "help", "quiet", "verbose", "version", "graph",
@@ -80,6 +82,11 @@ OPTIONS:
   --listen ADDR       serve on a TCP address instead of stdin/stdout
   --batch-max N       serve: most requests coalesced per batch (default 64)
   --artifacts DIR     AOT artifact directory (default artifacts/)
+  --trace FILE        emulate: run the event-driven simulator (DESIGN.md §13)
+                      and write a Perfetto trace-event JSON file — open it at
+                      https://ui.perfetto.dev (Open trace file) to see per-unit
+                      tracks, FIFO occupancy, UB residency and PE utilization
+  --max-slices N      trace: per-layer slice budget (default 65536)
   --per-layer --json --smoke --quiet --verbose --version --help
 "
 }
@@ -232,6 +239,9 @@ fn cmd_zoo(engine: &Engine, args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_emulate(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.opt("trace") {
+        return cmd_emulate_trace(engine, args, Path::new(path));
+    }
     let req = eval_request(args)?;
     let resp = engine.eval(&req)?;
     if args.flag("json") {
@@ -264,6 +274,7 @@ fn cmd_emulate(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         EvalResponse::Single {
             run,
             energy,
+            max_fifo_depth,
             per_layer,
         } => {
             println!(
@@ -276,6 +287,7 @@ fn cmd_emulate(engine: &Engine, args: &Args) -> anyhow::Result<()> {
                         ("MACs", human_count(run.total.macs)),
                         ("passes", human_count(run.total.passes)),
                         ("utilization", format!("{:.4}", run.utilization())),
+                        ("max FIFO depth", human_count(max_fifo_depth as u64)),
                         ("energy (Eq.1)", format!("{energy:.4e}")),
                         ("M_UB", human_count(run.total.movements.m_ub())),
                         ("M_INTER_PE", human_count(run.total.movements.m_inter_pe())),
@@ -322,6 +334,83 @@ fn cmd_emulate(engine: &Engine, args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// `camuy emulate --trace FILE`: run the event-driven simulator over the
+/// network's full tiling schedule and write the Perfetto trace-event
+/// document (DESIGN.md §13). Load the file at <https://ui.perfetto.dev>.
+fn cmd_emulate_trace(engine: &Engine, args: &Args, path: &Path) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.opt_usize("arrays", 1)? == 1,
+        "--trace simulates a single array; drop --arrays"
+    );
+    let max_slices = args.opt_usize("max-slices", TraceRequest::DEFAULT_SLICES)?;
+    anyhow::ensure!(
+        max_slices > 0 && max_slices <= TraceRequest::MAX_SLICES,
+        "--max-slices must be in 1..={}",
+        TraceRequest::MAX_SLICES
+    );
+    let req = TraceRequest {
+        net: require_net(args)?,
+        batch: opt_batch(args)?,
+        config: template_config(args, 128, 128)?,
+        per_layer: args.flag("per-layer"),
+        max_slices,
+    };
+    let threads = args.opt_usize("threads", crate::sweep::runner::default_threads())?;
+    let resp = engine.trace_threaded(&req, threads)?;
+    std::fs::write(path, resp.sim.perfetto().to_string_compact())?;
+    if args.flag("json") {
+        // The trace itself went to the file; print the summary document
+        // without duplicating it inline.
+        let mut j = resp.to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("trace");
+        }
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "{}",
+        kv_block(
+            &format!("{} simulated on {}", resp.sim.network, resp.config),
+            &[
+                ("cycles", human_count(resp.sim.total.cycles)),
+                ("stall cycles", human_count(resp.sim.total.stall_cycles)),
+                ("MACs", human_count(resp.sim.total.macs)),
+                ("passes", human_count(resp.sim.total.passes)),
+                ("max FIFO depth", human_count(resp.sim.max_fifo_depth as u64)),
+                ("events", human_count(resp.sim.events)),
+                ("trace slices", human_count(resp.sim.slice_count())),
+                (
+                    "truncated",
+                    if resp.sim.truncated() {
+                        "yes (raise --max-slices)".to_string()
+                    } else {
+                        "no".to_string()
+                    }
+                ),
+            ]
+        )
+    );
+    if req.per_layer {
+        println!("per-layer timeline:");
+        for l in &resp.sim.layers {
+            println!(
+                "  {:<40} [{:>12}, {:>12})  fifo {:>5}  {:>9} events",
+                l.name,
+                l.start_cycle,
+                l.end_cycle,
+                l.max_fifo_depth,
+                human_count(l.events)
+            );
+        }
+    }
+    println!(
+        "wrote Perfetto trace to {} — open it at https://ui.perfetto.dev",
+        path.display()
+    );
     Ok(())
 }
 

@@ -34,5 +34,5 @@ pub use memory::{MemoryAnalysis, DRAM_COST};
 pub use multi::{layer_metrics_multi, network_metrics_multi, MultiArrayConfig, MultiMetrics};
 pub use network::{LayerReport, Network};
 pub use roofline::{layer_roofline, machine_balance, network_roofline, Bound, LayerRoofline};
-pub use schedule::{GemmShape, Pass, WsSchedule};
+pub use schedule::{GemmShape, OsSchedule, OsTile, Pass, WsSchedule};
 pub use workload::{EvalCache, Workload};

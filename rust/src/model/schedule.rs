@@ -179,6 +179,98 @@ impl WsSchedule {
     }
 }
 
+/// One output-stationary tile: an `(mt x nt)` block of C pinned in the
+/// PEs while A and W stream through for the full reduction depth K.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OsTile {
+    /// Row-tile index and first output row.
+    pub i: usize,
+    pub row_start: usize,
+    pub mt: usize,
+    /// Col-tile index and first output column.
+    pub j: usize,
+    pub col_start: usize,
+    pub nt: usize,
+    /// Full reduction depth — OS tiles never split K.
+    pub k: usize,
+    /// Full array dims: streams propagate through all `array_width`
+    /// columns and the finished tile drains down all `array_height` rows,
+    /// exactly as in the WS model (no clock gating).
+    pub array_height: usize,
+    pub array_width: usize,
+}
+
+impl OsTile {
+    /// Skewed stream (`K + mt + nt - 2`) plus the full-height drain (`h`).
+    /// Tiles serialize — the drain is not overlapped, so it is part of the
+    /// tile's cycle count (matching `os_metrics`).
+    pub fn compute_cycles(&self) -> u64 {
+        (self.k + self.mt + self.nt - 2 + self.array_height) as u64
+    }
+}
+
+/// The output-stationary tiling of one (GEMM, array) pair: C is covered by
+/// `tm x tc` tiles, walked row-major. The accumulator capacity plays no
+/// role — outputs live *in* the PEs, the AA is only crossed once per tile
+/// on the way out.
+#[derive(Debug, Clone)]
+pub struct OsSchedule {
+    pub gemm: GemmShape,
+    pub height: usize,
+    pub width: usize,
+    /// Row tiles over M.
+    pub tm: usize,
+    /// Col tiles over N.
+    pub tc: usize,
+}
+
+impl OsSchedule {
+    pub fn new(gemm: GemmShape, cfg: &ArrayConfig) -> Self {
+        assert!(!gemm.is_empty(), "schedule of an empty GEMM");
+        Self {
+            gemm,
+            height: cfg.height,
+            width: cfg.width,
+            tm: ceil_div(gemm.m, cfg.height),
+            tc: ceil_div(gemm.n, cfg.width),
+        }
+    }
+
+    /// Active height of row-tile `i`.
+    pub fn m_t(&self, i: usize) -> usize {
+        debug_assert!(i < self.tm);
+        (self.gemm.m - i * self.height).min(self.height)
+    }
+
+    /// Active width of col-tile `j`.
+    pub fn n_t(&self, j: usize) -> usize {
+        debug_assert!(j < self.tc);
+        (self.gemm.n - j * self.width).min(self.width)
+    }
+
+    pub fn tile_count(&self) -> u64 {
+        self.tm as u64 * self.tc as u64
+    }
+
+    /// Iterate all tiles in execution order (row-major over C).
+    pub fn tiles(&self) -> impl Iterator<Item = OsTile> + '_ {
+        (0..self.tm).flat_map(move |i| {
+            let mt = self.m_t(i);
+            (0..self.tc).map(move |j| OsTile {
+                i,
+                row_start: i * self.height,
+                mt,
+                j,
+                col_start: j * self.width,
+                nt: self.n_t(j),
+                k: self.gemm.k,
+                array_height: self.height,
+                array_width: self.width,
+            })
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +372,41 @@ mod tests {
         };
         assert_eq!(p.compute_cycles(), 1);
         assert_eq!(p.load_cycles(), 1);
+    }
+
+    #[test]
+    fn os_tiles_cover_c_row_major() {
+        // M=10 on height 4 -> 4,4,2; N=6 on width 4 -> 4,2.
+        let s = OsSchedule::new(GemmShape::new(10, 3, 6), &cfg(4, 4, 8));
+        assert_eq!((s.tm, s.tc), (3, 2));
+        let tiles: Vec<OsTile> = s.tiles().collect();
+        assert_eq!(tiles.len() as u64, s.tile_count());
+        assert_eq!(
+            tiles
+                .iter()
+                .map(|t| (t.i, t.j, t.mt, t.nt))
+                .collect::<Vec<_>>(),
+            vec![
+                (0, 0, 4, 4),
+                (0, 1, 4, 2),
+                (1, 0, 4, 4),
+                (1, 1, 4, 2),
+                (2, 0, 2, 4),
+                (2, 1, 2, 2)
+            ]
+        );
+        // Covered output elements == M*N exactly.
+        let covered: usize = tiles.iter().map(|t| t.mt * t.nt).sum();
+        assert_eq!(covered, 60);
+        // Tail tile still pays the full-height drain.
+        assert_eq!(tiles[4].compute_cycles(), (3 + 2 + 4 - 2 + 4) as u64);
+    }
+
+    #[test]
+    fn os_schedule_ignores_accumulator_capacity() {
+        let a = OsSchedule::new(GemmShape::new(9, 5, 7), &cfg(4, 4, 1));
+        let b = OsSchedule::new(GemmShape::new(9, 5, 7), &cfg(4, 4, 4096));
+        assert_eq!(a.tile_count(), b.tile_count());
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Bounded single-producer/single-consumer channels joining the simulated
+//! contexts (DESIGN.md §13).
+//!
+//! A channel's capacity *is* the hardware buffering it models: the weight
+//! channel has capacity 1 because the array owns exactly one set of shadow
+//! registers, and the credit channel (array → fetcher) has capacity 1
+//! because at most one tile load may run ahead of the compute wavefront.
+//! Backpressure therefore falls out of `try_send` failing on a full
+//! channel, not out of any timing formula.
+//!
+//! Blocking is cooperative: a context whose `try_send`/`try_recv` fails
+//! parks itself (the channel remembers *who* is blocked), and the opposite
+//! operation returns the parked context's id so the caller can schedule
+//! its wake-up at the current cycle. Channels never touch the event queue
+//! directly — that keeps them pure data structures, unit-testable without
+//! a scheduler.
+
+use crate::sim::event::CtxId;
+use std::collections::VecDeque;
+
+/// Result of a [`Channel::try_send`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Sent {
+    /// Enqueued; `woke` is a consumer that was parked on the empty channel.
+    Ok { woke: Option<CtxId> },
+    /// Channel full — the sender is now parked and must retry when woken.
+    Full,
+}
+
+/// Result of a [`Channel::try_recv`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Recvd<T> {
+    /// Dequeued; `woke` is a producer that was parked on the full channel.
+    Ok { msg: T, woke: Option<CtxId> },
+    /// Channel empty — the receiver is now parked and must retry when woken.
+    Empty,
+}
+
+/// A bounded FIFO with parked-context bookkeeping and occupancy stats.
+#[derive(Debug)]
+pub struct Channel<T> {
+    name: &'static str,
+    cap: usize,
+    q: VecDeque<T>,
+    peak: usize,
+    pushes: u64,
+    blocked_send: Option<CtxId>,
+    blocked_recv: Option<CtxId>,
+}
+
+impl<T> Channel<T> {
+    pub fn new(name: &'static str, cap: usize) -> Self {
+        assert!(cap >= 1, "channel {name} needs capacity >= 1");
+        Self {
+            name,
+            cap,
+            q: VecDeque::with_capacity(cap),
+            peak: 0,
+            pushes: 0,
+            blocked_send: None,
+            blocked_recv: None,
+        }
+    }
+
+    /// Try to enqueue `msg`; on failure the calling context `me` is parked.
+    pub fn try_send(&mut self, msg: T, me: CtxId) -> Sent {
+        if self.q.len() >= self.cap {
+            self.blocked_send = Some(me);
+            return Sent::Full;
+        }
+        self.q.push_back(msg);
+        self.pushes += 1;
+        self.peak = self.peak.max(self.q.len());
+        Sent::Ok {
+            woke: self.blocked_recv.take(),
+        }
+    }
+
+    /// Try to dequeue; on failure the calling context `me` is parked.
+    pub fn try_recv(&mut self, me: CtxId) -> Recvd<T> {
+        match self.q.pop_front() {
+            Some(msg) => Recvd::Ok {
+                msg,
+                woke: self.blocked_send.take(),
+            },
+            None => {
+                self.blocked_recv = Some(me);
+                Recvd::Empty
+            }
+        }
+    }
+
+    /// Peek the head without consuming (used when a context needs two
+    /// channels simultaneously and must not hold a popped message while
+    /// the other is empty).
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// High-water mark of occupancy over the whole run.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_send_recv_with_wakeups() {
+        let mut ch: Channel<u32> = Channel::new("t", 1);
+        assert_eq!(ch.try_send(10, 7), Sent::Ok { woke: None });
+        // Full: sender 7 parks.
+        assert_eq!(ch.try_send(11, 7), Sent::Full);
+        // Recv drains and wakes the parked sender.
+        assert_eq!(
+            ch.try_recv(9),
+            Recvd::Ok {
+                msg: 10,
+                woke: Some(7)
+            }
+        );
+        // Empty: receiver 9 parks; next send wakes it.
+        assert_eq!(ch.try_recv(9), Recvd::Empty);
+        assert_eq!(ch.try_send(12, 7), Sent::Ok { woke: Some(9) });
+        assert_eq!(ch.peak(), 1);
+        assert_eq!(ch.pushes(), 2);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut ch: Channel<u8> = Channel::new("t", 3);
+        ch.try_send(1, 0);
+        ch.try_send(2, 0);
+        assert_eq!(ch.peak(), 2);
+        ch.try_recv(1);
+        ch.try_recv(1);
+        assert_eq!(ch.peak(), 2);
+        assert!(ch.is_empty());
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut ch: Channel<u8> = Channel::new("t", 2);
+        ch.try_send(5, 0);
+        assert_eq!(ch.peek(), Some(&5));
+        assert_eq!(ch.len(), 1);
+    }
+}

@@ -1,0 +1,63 @@
+//! Event-driven cycle-level simulator with Perfetto trace export
+//! (DESIGN.md §13).
+//!
+//! The pipeline units of the modeled TPU-like array — Weight Fetcher,
+//! Systolic Data Setup FIFOs, PE array wavefront, Accumulator Array and
+//! Unified Buffer — run as *contexts* joined by bounded [`channel`]s and
+//! advanced by a monotone [`event`] queue, in the style of dataflow
+//! abstract machines: timing emerges from channel capacities and each
+//! unit's initiation interval, not from a closed-form formula. A full
+//! network's tiling schedule is simulated tile-by-tile for both dataflows
+//! (reusing `model::schedule`'s `WsSchedule`/`OsSchedule`), with
+//! independent per-layer simulations fanned out over `runtime::pool`.
+//!
+//! This makes the simulator a *second, independent oracle* for the whole
+//! analytic chain: `tests/property_sim.rs` proves simulated total cycles
+//! and every `MovementCounters` field byte-identical to
+//! `ws_metrics`/`os_metrics` on random shapes and configs — which the
+//! segmented and vectorized sweep plans are in turn property-tested
+//! against. Where the closed forms are algebra, the simulator is an
+//! executable machine whose stalls are *measured* (time blocked on the
+//! weight channel), so a bug in either side breaks the equality.
+//!
+//! Every context emits Perfetto-compatible trace slices and counter
+//! tracks behind the zero-cost-when-disabled [`trace::TraceSink`]; see
+//! `camuy emulate --trace out.json` and load the file at
+//! <https://ui.perfetto.dev>.
+
+pub mod channel;
+pub mod event;
+mod network;
+mod os;
+pub mod trace;
+mod ws;
+
+use crate::config::{ArrayConfig, Dataflow};
+use crate::metrics::Metrics;
+use crate::model::schedule::GemmShape;
+
+pub use network::{
+    gemm_fifo_depth, network_fifo_depth, simulate_network, LayerSim, NetworkSim, SimOptions,
+};
+pub use trace::{perfetto_trace, TraceBuffer, TraceSink, Track};
+
+/// Result of simulating one GEMM's full tiling schedule.
+#[derive(Debug, Clone, Default)]
+pub struct GemmSim {
+    pub metrics: Metrics,
+    /// Peak rows staged in the Systolic Data Setup FIFOs.
+    pub max_fifo_depth: usize,
+    /// Events processed by the queue (the events/sec bench denominator).
+    pub events: u64,
+}
+
+/// Simulate one GEMM under `cfg`'s dataflow. An empty GEMM is zero work.
+pub fn simulate_gemm(gemm: GemmShape, cfg: &ArrayConfig, trace: &mut TraceSink) -> GemmSim {
+    if gemm.is_empty() {
+        return GemmSim::default();
+    }
+    match cfg.dataflow {
+        Dataflow::WeightStationary => ws::simulate_ws(gemm, cfg, trace),
+        Dataflow::OutputStationary => os::simulate_os(gemm, cfg, trace),
+    }
+}

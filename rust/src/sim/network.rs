@@ -1,0 +1,265 @@
+//! Whole-network simulation: the tiling schedule of every layer is run
+//! through the event-driven pipeline, layer sims dispatched independently
+//! across `runtime::pool`, then stitched into one serialized timeline
+//! (layers execute back-to-back on a single array, exactly like
+//! `Coordinator::run_inference_cached`). The stitched totals must equal
+//! the analytic `Workload` evaluation byte-for-byte — property-tested in
+//! `tests/property_sim.rs`.
+//!
+//! Grouped layers (depthwise/grouped convs) run `groups` identical
+//! block-diagonal GEMMs back to back. The simulator runs the pipeline
+//! once and scales by the group count (the metrics algebra guarantees
+//! `m * g == m + ... + m` exactly); the trace shows group 0 in full
+//! detail plus one aggregate slice covering the remaining groups.
+
+use crate::config::{ArrayConfig, Dataflow};
+use crate::metrics::Metrics;
+use crate::model::schedule::{GemmShape, WsSchedule};
+use crate::model::Network;
+use crate::runtime::pool;
+use crate::sim::trace::{perfetto_trace, Slice, TraceBuffer, TraceProcess, TraceSink, Track};
+use crate::sim::{simulate_gemm, GemmSim};
+use crate::util::json::Json;
+
+/// Simulation options. `trace_cap` enables tracing with a per-layer slice
+/// budget; `None` runs with `TraceSink::Off` (the zero-cost path).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimOptions {
+    pub trace_cap: Option<usize>,
+}
+
+impl SimOptions {
+    pub fn traced(cap: usize) -> Self {
+        Self {
+            trace_cap: Some(cap),
+        }
+    }
+}
+
+/// One layer's simulated execution.
+#[derive(Debug)]
+pub struct LayerSim {
+    pub name: String,
+    pub gemm: GemmShape,
+    pub groups: u64,
+    /// Placement in the serialized network timeline.
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    /// Whole-layer metrics (single-group sim scaled by `groups`).
+    pub metrics: Metrics,
+    /// Peak rows staged in the Systolic Data Setup FIFOs.
+    pub max_fifo_depth: usize,
+    /// Events the layer's queue processed.
+    pub events: u64,
+    pub trace: Option<TraceBuffer>,
+}
+
+/// A full network run through the event-driven simulator.
+#[derive(Debug)]
+pub struct NetworkSim {
+    pub network: String,
+    pub layers: Vec<LayerSim>,
+    pub total: Metrics,
+    pub max_fifo_depth: usize,
+    pub events: u64,
+}
+
+impl NetworkSim {
+    /// Assemble the Perfetto trace-event document: one process per layer,
+    /// offset into the serialized timeline. Empty (but valid) when the
+    /// run was untraced.
+    pub fn perfetto(&self) -> Json {
+        let procs: Vec<TraceProcess<'_>> = self
+            .layers
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| {
+                l.trace.as_ref().map(|buffer| TraceProcess {
+                    name: if l.groups > 1 {
+                        format!("{}: {} (x{} groups)", i + 1, l.name, l.groups)
+                    } else {
+                        format!("{}: {}", i + 1, l.name)
+                    },
+                    offset: l.start_cycle,
+                    buffer,
+                })
+            })
+            .collect();
+        perfetto_trace(&procs)
+    }
+
+    /// True when any layer hit its slice budget.
+    pub fn truncated(&self) -> bool {
+        self.layers
+            .iter()
+            .any(|l| l.trace.as_ref().is_some_and(|t| t.truncated()))
+    }
+
+    /// Total recorded slices across all layers.
+    pub fn slice_count(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.trace.as_ref().map_or(0, |t| t.slices.len() as u64))
+            .sum()
+    }
+}
+
+/// Simulate every layer of `net` (fanned out over the worker pool — the
+/// layers are independent; only the timeline stitching is serial).
+pub fn simulate_network(
+    net: &Network,
+    cfg: &ArrayConfig,
+    threads: usize,
+    opts: &SimOptions,
+) -> NetworkSim {
+    struct LayerOut {
+        sim: GemmSim,
+        trace: Option<TraceBuffer>,
+        gemm: GemmShape,
+        groups: u64,
+    }
+
+    let outs: Vec<LayerOut> = pool::parallel_map(net.layers.len(), threads, |i| {
+        let (gemm, groups) = net.layers[i].gemm();
+        let groups = groups as u64;
+        let mut sink = match opts.trace_cap {
+            Some(cap) => TraceSink::on(cap),
+            None => TraceSink::Off,
+        };
+        let sim = simulate_gemm(gemm, cfg, &mut sink);
+        let mut trace = sink.take();
+        if let Some(buf) = &mut trace {
+            if groups > 1 && sim.metrics.cycles > 0 {
+                // Groups 2..G repeat group 1's schedule exactly; collapse
+                // them into one aggregate slice so the trace stays bounded.
+                buf.slices.push(Slice {
+                    track: Track::Array,
+                    name: format!("groups 2..{groups} (x{} repeats)", groups - 1),
+                    start: sim.metrics.cycles,
+                    dur: sim.metrics.cycles * (groups - 1),
+                });
+            }
+        }
+        LayerOut {
+            sim,
+            trace,
+            gemm,
+            groups,
+        }
+    });
+
+    let mut layers = Vec::with_capacity(outs.len());
+    let mut clock: u64 = 0;
+    let mut total = Metrics::default();
+    let mut max_fifo_depth = 0usize;
+    let mut events: u64 = 0;
+    for (i, out) in outs.into_iter().enumerate() {
+        let metrics = out.sim.metrics * out.groups;
+        let start = clock;
+        clock += metrics.cycles;
+        total += metrics;
+        max_fifo_depth = max_fifo_depth.max(out.sim.max_fifo_depth);
+        events += out.sim.events;
+        layers.push(LayerSim {
+            name: net.layers[i].name.clone(),
+            gemm: out.gemm,
+            groups: out.groups,
+            start_cycle: start,
+            end_cycle: clock,
+            metrics,
+            max_fifo_depth: out.sim.max_fifo_depth,
+            events: out.sim.events,
+            trace: out.trace,
+        });
+    }
+
+    NetworkSim {
+        network: net.name.clone(),
+        layers,
+        total,
+        max_fifo_depth,
+        events,
+    }
+}
+
+/// Closed-form peak SDS staging depth for one GEMM — what the simulator
+/// measures as `max_fifo_depth`, derivable without running it: the
+/// largest M-chunk any pass stages (WS: the accumulator row budget caps
+/// chunks, and only the col-tile width changes the budget; OS: a tile
+/// stages at most `min(M, h)` rows).
+pub fn gemm_fifo_depth(gemm: GemmShape, cfg: &ArrayConfig) -> usize {
+    if gemm.is_empty() {
+        return 0;
+    }
+    match cfg.dataflow {
+        Dataflow::WeightStationary => {
+            let s = WsSchedule::new(gemm, cfg);
+            // Only two col-tile classes exist (full width and the tail),
+            // so the max over j needs only the first and last.
+            let d0 = gemm.m.min(s.row_budget(0));
+            let dt = gemm.m.min(s.row_budget(s.tc - 1));
+            d0.max(dt)
+        }
+        Dataflow::OutputStationary => gemm.m.min(cfg.height),
+    }
+}
+
+/// Peak SDS staging depth across a whole network (groups share the depth
+/// of a single block-diagonal GEMM).
+pub fn network_fifo_depth(net: &Network, cfg: &ArrayConfig) -> usize {
+    net.layers
+        .iter()
+        .map(|l| gemm_fifo_depth(l.gemm().0, cfg))
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Workload;
+
+    #[test]
+    fn network_sim_matches_workload_eval() {
+        let net = crate::nets::build("alexnet").unwrap();
+        let cfg = ArrayConfig::new(32, 32);
+        let sim = simulate_network(&net, &cfg, 1, &SimOptions::default());
+        let analytic = Workload::of(&net).eval(&cfg);
+        assert_eq!(sim.total, analytic);
+        // Timeline is gap-free and serialized.
+        let mut clock = 0;
+        for l in &sim.layers {
+            assert_eq!(l.start_cycle, clock);
+            clock = l.end_cycle;
+        }
+        assert_eq!(clock, sim.total.cycles);
+    }
+
+    #[test]
+    fn fifo_depth_closed_form_matches_sim() {
+        let net = crate::nets::build("alexnet").unwrap();
+        for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+            let cfg = ArrayConfig::new(16, 16)
+                .with_acc_capacity(256)
+                .with_dataflow(df);
+            let sim = simulate_network(&net, &cfg, 1, &SimOptions::default());
+            assert_eq!(sim.max_fifo_depth, network_fifo_depth(&net, &cfg));
+        }
+    }
+
+    #[test]
+    fn traced_run_is_metric_identical_and_offsets_shift() {
+        let net = crate::nets::build("alexnet").unwrap();
+        let cfg = ArrayConfig::new(64, 64);
+        let plain = simulate_network(&net, &cfg, 1, &SimOptions::default());
+        let traced = simulate_network(&net, &cfg, 2, &SimOptions::traced(1 << 14));
+        assert_eq!(plain.total, traced.total);
+        assert!(traced.slice_count() > 0);
+        let doc = traced.perfetto().to_string_compact();
+        assert!(doc.contains("PE Array"));
+        assert!(doc.contains("traceEvents"));
+        // A grouped layer (alexnet conv2 has groups=2) gets the aggregate
+        // repeat slice.
+        assert!(doc.contains("repeats"));
+    }
+}

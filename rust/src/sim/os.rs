@@ -1,0 +1,310 @@
+//! The output-stationary pipeline as channel-connected contexts
+//! (DESIGN.md §13).
+//!
+//! ```text
+//!  Streamer (UB reads) ──tiles (cap 1)──► PE Array ──notices──► Accumulator
+//!                                                                    │
+//!                                         Unified Buffer ◄──chunks───┘
+//! ```
+//!
+//! OS keeps each `(mt x nt)` tile of C pinned in the PEs while A and W
+//! stream through for the full reduction depth, then drains the finished
+//! tile down the array's columns. Unlike WS there is no double-buffered
+//! load to hide: operand streaming is concurrent with compute (the
+//! streamer's slice *is* the compute window), and the drain is *not*
+//! overlapped — the next tile cannot start until the PEs are free, so
+//! tiles serialize end-to-start and the measured stall is structurally
+//! zero. The tile channel still carries one tile of lookahead; the
+//! backpressure mechanism is identical to the WS pipeline even though
+//! this dataflow never exercises it. Totals are compared field-by-field
+//! against `os_metrics`.
+//!
+//! Counter ownership mirrors the WS pipeline: the streamer counts UB
+//! operand reads, the array the in-fabric traffic (including the drain's
+//! shift-down hops — they happen between PEs), the accumulator its port
+//! crossings, the UB the final writes.
+
+use crate::config::ArrayConfig;
+use crate::metrics::{Metrics, MovementCounters};
+use crate::model::schedule::{GemmShape, OsSchedule, OsTile};
+use crate::sim::channel::{Channel, Recvd, Sent};
+use crate::sim::event::{CtxId, EventQueue};
+use crate::sim::trace::{Counter, Track, TraceSink};
+use crate::sim::GemmSim;
+
+const STREAMER: CtxId = 0;
+const ARRAY: CtxId = 1;
+const ACC: CtxId = 2;
+const UB: CtxId = 3;
+
+struct TileMsg {
+    tile: OsTile,
+    idx: u64,
+}
+
+struct AccMsg {
+    tile: OsTile,
+    /// When the drain reached the bottom edge (= tile end).
+    end: u64,
+}
+
+struct ChunkMsg {
+    mt: usize,
+    nt: usize,
+    at: u64,
+}
+
+pub(crate) fn simulate_os(gemm: GemmShape, cfg: &ArrayConfig, trace: &mut TraceSink) -> GemmSim {
+    let sched = OsSchedule::new(gemm, cfg);
+    let (h, w) = (cfg.height as u64, cfg.width as u64);
+    let big_k = gemm.k as u64;
+
+    let mut tiles_ch: Channel<TileMsg> = Channel::new("tiles", 1);
+    let mut notices: Channel<AccMsg> = Channel::new("notices", 1);
+    let mut chunks: Channel<ChunkMsg> = Channel::new("chunks", 1);
+
+    let mut tile_iter = sched.tiles();
+    let mut staged: Option<OsTile> = tile_iter.next();
+    let mut next_idx: u64 = 0;
+
+    // Array state.
+    let mut computing: Option<(OsTile, u64)> = None; // (tile, end)
+    let mut pending_notice: Option<AccMsg> = None;
+    let mut started: u64 = 0;
+    let mut last_end: u64 = 0;
+    let mut max_staged: usize = 0;
+
+    let resident_base = (gemm.m as u64 * gemm.k as u64 * cfg.act_bits as u64
+        + gemm.k as u64 * gemm.n as u64 * cfg.weight_bits as u64)
+        / 8;
+    let out_word_bytes = cfg.out_bits as u64 / 8;
+    let mut out_bytes_written: u64 = 0;
+    if trace.is_on() {
+        trace.counter(Counter::UbResidency, 0, resident_base as f64);
+    }
+
+    let mut mv = MovementCounters::default();
+    let mut q = EventQueue::new();
+    q.push(0, STREAMER);
+    q.push(0, ARRAY);
+    q.push(0, ACC);
+    q.push(0, UB);
+
+    while let Some((now, ctx)) = q.pop() {
+        match ctx {
+            STREAMER => {
+                while let Some(tile) = staged {
+                    match tiles_ch.try_send(
+                        TileMsg {
+                            tile,
+                            idx: next_idx,
+                        },
+                        STREAMER,
+                    ) {
+                        Sent::Ok { woke } => {
+                            let (mt, nt) = (tile.mt as u64, tile.nt as u64);
+                            mv.ub_act_reads += big_k * mt;
+                            mv.ub_weight_reads += big_k * nt;
+                            max_staged = max_staged.max(tile.mt);
+                            next_idx += 1;
+                            staged = tile_iter.next();
+                            if let Some(c) = woke {
+                                q.push(now, c);
+                            }
+                        }
+                        Sent::Full => break, // one tile of lookahead is the limit
+                    }
+                }
+            }
+            ARRAY => loop {
+                if let Some(msg) = pending_notice.take() {
+                    match notices.try_send(msg, ARRAY) {
+                        Sent::Ok { woke } => {
+                            if let Some(c) = woke {
+                                q.push(now, c);
+                            }
+                        }
+                        Sent::Full => unreachable!("notice channel full with an eager consumer"),
+                    }
+                }
+                if let Some((tile, end)) = computing {
+                    if now < end {
+                        break;
+                    }
+                    computing = None;
+                    last_end = end;
+                    pending_notice = Some(AccMsg { tile, end });
+                    continue;
+                }
+                match tiles_ch.try_recv(ARRAY) {
+                    Recvd::Ok { msg, woke } => {
+                        if let Some(c) = woke {
+                            q.push(now, c);
+                        }
+                        let t = msg.tile;
+                        let (mt, nt) = (t.mt as u64, t.nt as u64);
+                        mv.inter_pe_act += big_k * mt * (w - 1);
+                        mv.inter_pe_weight += big_k * nt * (mt - 1);
+                        // Drain: the output at row r descends (h - 1 - r)
+                        // hops between PEs.
+                        mv.inter_pe_psum += nt * (mt * (h - 1) - mt * (mt - 1) / 2);
+                        mv.intra_pe += 5 * big_k * mt * nt + 2 * mt * nt;
+                        let stream = big_k + mt + nt - 2;
+                        let d = t.compute_cycles(); // stream + full-height drain
+                        trace.slice(Track::Array, now, d, || {
+                            format!(
+                                "tile {} i{} j{} ({}x{} K={})",
+                                msg.idx, t.i, t.j, t.mt, t.nt, t.k
+                            )
+                        });
+                        if trace.is_on() {
+                            // Operand streams are concurrent with compute:
+                            // the streamer/SDS slices span the stream window.
+                            trace.slice(Track::Fetcher, now, big_k + nt - 1, || {
+                                format!("stream W K x {} (tile {})", t.nt, msg.idx)
+                            });
+                            trace.slice(Track::Setup, now, big_k + mt - 1, || {
+                                format!("stream A {} x K (tile {})", t.mt, msg.idx)
+                            });
+                            trace.counter(Counter::FifoOccupancy, now, t.mt as f64);
+                            trace.counter(Counter::FifoOccupancy, now + big_k + mt - 1, 0.0);
+                            let util = (mt * nt) as f64 / (h * w) as f64;
+                            trace.counter(Counter::PeUtilization, now, util);
+                            trace.counter(Counter::PeUtilization, now + d, 0.0);
+                            trace.slice(Track::Accumulator, now + stream, h, || {
+                                format!("drain {}x{} (tile {})", t.mt, t.nt, msg.idx)
+                            });
+                        }
+                        computing = Some((t, now + d));
+                        started += 1;
+                        q.push(now + d, ARRAY);
+                    }
+                    Recvd::Empty => break,
+                }
+            },
+            ACC => loop {
+                match notices.try_recv(ACC) {
+                    Recvd::Ok { msg, woke } => {
+                        if let Some(c) = woke {
+                            q.push(now, c);
+                        }
+                        let t = msg.tile;
+                        let words = t.mt as u64 * t.nt as u64;
+                        // Outputs cross the array boundary exactly once.
+                        mv.aa_writes += words;
+                        mv.aa_reads += words;
+                        match chunks.try_send(
+                            ChunkMsg {
+                                mt: t.mt,
+                                nt: t.nt,
+                                at: msg.end,
+                            },
+                            ACC,
+                        ) {
+                            Sent::Ok { woke } => {
+                                if let Some(c) = woke {
+                                    q.push(now, c);
+                                }
+                            }
+                            Sent::Full => {
+                                unreachable!("chunk channel full with an eager consumer")
+                            }
+                        }
+                    }
+                    Recvd::Empty => break,
+                }
+            },
+            UB => loop {
+                match chunks.try_recv(UB) {
+                    Recvd::Ok { msg, woke } => {
+                        if let Some(c) = woke {
+                            q.push(now, c);
+                        }
+                        let words = msg.mt as u64 * msg.nt as u64;
+                        mv.ub_out_writes += words;
+                        out_bytes_written += words * out_word_bytes;
+                        trace.slice(Track::UnifiedBuffer, msg.at, msg.mt as u64, || {
+                            format!("writeback {}x{}", msg.mt, msg.nt)
+                        });
+                        trace.counter(
+                            Counter::UbResidency,
+                            msg.at,
+                            (resident_base + out_bytes_written) as f64,
+                        );
+                    }
+                    Recvd::Empty => break,
+                }
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    debug_assert!(staged.is_none() && computing.is_none());
+    debug_assert_eq!(started, sched.tile_count());
+
+    GemmSim {
+        metrics: Metrics {
+            cycles: last_end,
+            stall_cycles: 0,
+            macs: gemm.macs(),
+            passes: started,
+            movements: mv,
+        },
+        max_fifo_depth: max_staged,
+        events: q.processed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataflow;
+    use crate::model::gemm::os_metrics;
+
+    fn cfg(h: usize, w: usize) -> ArrayConfig {
+        ArrayConfig::new(h, w).with_dataflow(Dataflow::OutputStationary)
+    }
+
+    #[test]
+    fn single_tile_matches_closed_form() {
+        let g = GemmShape::new(3, 7, 4);
+        let c = cfg(4, 4);
+        let sim = simulate_os(g, &c, &mut TraceSink::Off);
+        assert_eq!(sim.metrics, os_metrics(g, &c));
+        assert_eq!(sim.max_fifo_depth, 3);
+    }
+
+    #[test]
+    fn tiled_matches_closed_form() {
+        let g = GemmShape::new(37, 29, 23);
+        let c = cfg(8, 4);
+        let sim = simulate_os(g, &c, &mut TraceSink::Off);
+        assert_eq!(sim.metrics, os_metrics(g, &c));
+        assert_eq!(sim.max_fifo_depth, 8);
+    }
+
+    #[test]
+    fn degenerate_arrays_match_closed_form() {
+        for (h, w) in [(1, 16), (16, 1), (1, 1)] {
+            let g = GemmShape::new(9, 11, 7);
+            let c = cfg(h, w);
+            let sim = simulate_os(g, &c, &mut TraceSink::Off);
+            assert_eq!(sim.metrics, os_metrics(g, &c), "array {h}x{w}");
+        }
+    }
+
+    #[test]
+    fn one_array_slice_per_tile() {
+        let g = GemmShape::new(10, 5, 12);
+        let c = cfg(4, 4);
+        let mut sink = TraceSink::on(1 << 16);
+        let sim = simulate_os(g, &c, &mut sink);
+        let buf = sink.take().unwrap();
+        let array_slices = buf
+            .slices
+            .iter()
+            .filter(|s| s.track == Track::Array)
+            .count() as u64;
+        assert_eq!(array_slices, sim.metrics.passes);
+    }
+}

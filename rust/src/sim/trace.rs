@@ -1,0 +1,297 @@
+//! Perfetto trace export (DESIGN.md §13).
+//!
+//! The simulator records slices and counter samples into a [`TraceBuffer`]
+//! behind the [`TraceSink`] enum. `TraceSink::Off` is the zero-cost path:
+//! every recording method is `#[inline]` and reduces to one tag check —
+//! slice names are built by closures that are never called when tracing is
+//! off, so the disabled simulator allocates nothing per pass. The
+//! trace-overhead bench (`benches/sim_trace.rs`) holds this to account.
+//!
+//! [`perfetto_trace`] assembles per-layer buffers into the Chrome/Perfetto
+//! JSON trace-event format (the legacy `{"traceEvents": [...]}` schema,
+//! which Perfetto loads natively): one *process* per network layer
+//! (`"M"`/`process_name`), one *thread* per pipeline unit
+//! (`"M"`/`thread_name` — Weight Fetcher, Systolic Data Setup, PE Array,
+//! Accumulator Array, Unified Buffer), `"X"` complete slices with
+//! microsecond timestamps (1 simulated cycle ≡ 1 µs), and `"C"` counter
+//! events for SDS occupancy, UB residency and PE utilization. Load the
+//! file at <https://ui.perfetto.dev> (or `chrome://tracing`) unmodified.
+
+use crate::util::json::Json;
+
+/// One pipeline unit = one named Perfetto thread track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    Fetcher,
+    Setup,
+    Array,
+    Accumulator,
+    UnifiedBuffer,
+}
+
+impl Track {
+    pub const ALL: [Track; 5] = [
+        Track::Fetcher,
+        Track::Setup,
+        Track::Array,
+        Track::Accumulator,
+        Track::UnifiedBuffer,
+    ];
+
+    /// Human-readable track name shown in the Perfetto UI (and grepped by
+    /// the CI trace-smoke step — keep in sync with `.github/workflows`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Track::Fetcher => "Weight Fetcher",
+            Track::Setup => "Systolic Data Setup",
+            Track::Array => "PE Array",
+            Track::Accumulator => "Accumulator Array",
+            Track::UnifiedBuffer => "Unified Buffer",
+        }
+    }
+
+    /// Stable thread id; tid 0 is reserved for counter tracks.
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Fetcher => 1,
+            Track::Setup => 2,
+            Track::Array => 3,
+            Track::Accumulator => 4,
+            Track::UnifiedBuffer => 5,
+        }
+    }
+}
+
+/// One counter track per process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Rows staged in the Systolic Data Setup FIFOs.
+    FifoOccupancy,
+    /// Bytes resident in the Unified Buffer (inputs + weights + outputs
+    /// written back so far).
+    UbResidency,
+    /// Active PEs / total PEs of the pass that just started.
+    PeUtilization,
+}
+
+impl Counter {
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::FifoOccupancy => "SDS occupancy (rows)",
+            Counter::UbResidency => "UB residency (bytes)",
+            Counter::PeUtilization => "PE utilization",
+        }
+    }
+}
+
+/// A completed `"X"` slice in layer-local cycles.
+#[derive(Debug, Clone)]
+pub struct Slice {
+    pub track: Track,
+    pub name: String,
+    pub start: u64,
+    pub dur: u64,
+}
+
+/// A `"C"` counter sample in layer-local cycles.
+#[derive(Debug, Clone, Copy)]
+pub struct CounterSample {
+    pub counter: Counter,
+    pub at: u64,
+    pub value: f64,
+}
+
+/// Recorded events for one simulated GEMM, capped at `cap` slices so a
+/// hostile request cannot make the service materialize millions of events
+/// (the wire caps `max_slices`; metrics are unaffected by truncation).
+#[derive(Debug)]
+pub struct TraceBuffer {
+    pub slices: Vec<Slice>,
+    pub counters: Vec<CounterSample>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl TraceBuffer {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            slices: Vec::new(),
+            counters: Vec::new(),
+            cap,
+            dropped: 0,
+        }
+    }
+
+    /// True when the slice cap was hit and events were dropped.
+    pub fn truncated(&self) -> bool {
+        self.dropped > 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// The recording façade handed to every context. `Off` must cost nothing:
+/// all methods are `#[inline]` one-branch no-ops, and name closures are
+/// only invoked (and their `String`s only allocated) when recording.
+#[derive(Debug)]
+pub enum TraceSink {
+    Off,
+    On(Box<TraceBuffer>),
+}
+
+impl TraceSink {
+    pub fn on(cap: usize) -> Self {
+        TraceSink::On(Box::new(TraceBuffer::new(cap)))
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        matches!(self, TraceSink::On(_))
+    }
+
+    /// Record a complete slice; `name` is evaluated lazily.
+    #[inline]
+    pub fn slice(&mut self, track: Track, start: u64, dur: u64, name: impl FnOnce() -> String) {
+        if let TraceSink::On(buf) = self {
+            if buf.slices.len() >= buf.cap {
+                buf.dropped += 1;
+                return;
+            }
+            buf.slices.push(Slice {
+                track,
+                name: name(),
+                start,
+                dur,
+            });
+        }
+    }
+
+    /// Record a counter sample (counters ride along with slices and are
+    /// capped at twice the slice budget — two samples per slice).
+    #[inline]
+    pub fn counter(&mut self, counter: Counter, at: u64, value: f64) {
+        if let TraceSink::On(buf) = self {
+            if buf.counters.len() >= buf.cap.saturating_mul(2) {
+                return;
+            }
+            buf.counters.push(CounterSample { counter, at, value });
+        }
+    }
+
+    /// Take the recorded buffer, leaving the sink off.
+    pub fn take(&mut self) -> Option<TraceBuffer> {
+        match std::mem::replace(self, TraceSink::Off) {
+            TraceSink::Off => None,
+            TraceSink::On(buf) => Some(*buf),
+        }
+    }
+}
+
+/// One layer's worth of trace data plus its placement in the network run.
+pub struct TraceProcess<'a> {
+    /// Process name shown in the UI, e.g. `"3: conv2 (x2 groups)"`.
+    pub name: String,
+    /// Cycle offset of this layer's start in the network timeline; all
+    /// layer-local event times are shifted by this.
+    pub offset: u64,
+    pub buffer: &'a TraceBuffer,
+}
+
+/// Assemble the Perfetto JSON trace-event document. `pid` is 1-based per
+/// process, `ts` is in microseconds with 1 cycle ≡ 1 µs.
+pub fn perfetto_trace(processes: &[TraceProcess<'_>]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (idx, p) in processes.iter().enumerate() {
+        let pid = (idx + 1) as f64;
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("process_name")),
+            ("pid", Json::num(pid)),
+            ("args", Json::obj(vec![("name", Json::str(p.name.clone()))])),
+        ]));
+        for t in Track::ALL {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("name", Json::str("thread_name")),
+                ("pid", Json::num(pid)),
+                ("tid", Json::num(t.tid() as f64)),
+                ("args", Json::obj(vec![("name", Json::str(t.name()))])),
+            ]));
+        }
+        for s in &p.buffer.slices {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("name", Json::str(s.name.clone())),
+                ("pid", Json::num(pid)),
+                ("tid", Json::num(s.track.tid() as f64)),
+                ("ts", Json::num((p.offset + s.start) as f64)),
+                ("dur", Json::num(s.dur as f64)),
+            ]));
+        }
+        for c in &p.buffer.counters {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("C")),
+                ("name", Json::str(c.counter.name())),
+                ("pid", Json::num(pid)),
+                ("ts", Json::num((p.offset + c.at) as f64)),
+                ("args", Json::obj(vec![("value", Json::num(c.value))])),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ns")),
+        ("traceEvents", Json::arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_sink_records_nothing_and_never_calls_name() {
+        let mut sink = TraceSink::Off;
+        sink.slice(Track::Array, 0, 5, || unreachable!("name built while off"));
+        sink.counter(Counter::PeUtilization, 0, 1.0);
+        assert!(sink.take().is_none());
+    }
+
+    #[test]
+    fn cap_truncates_slices_but_counts_drops() {
+        let mut sink = TraceSink::on(2);
+        for i in 0..5 {
+            sink.slice(Track::Array, i, 1, || format!("pass {i}"));
+        }
+        let buf = sink.take().unwrap();
+        assert_eq!(buf.slices.len(), 2);
+        assert!(buf.truncated());
+        assert_eq!(buf.dropped(), 3);
+    }
+
+    #[test]
+    fn perfetto_document_shape() {
+        let mut sink = TraceSink::on(16);
+        sink.slice(Track::Fetcher, 0, 3, || "load tile".into());
+        sink.slice(Track::Array, 3, 7, || "pass 0".into());
+        sink.counter(Counter::PeUtilization, 3, 0.5);
+        let buf = sink.take().unwrap();
+        let doc = perfetto_trace(&[TraceProcess {
+            name: "1: conv".into(),
+            offset: 100,
+            buffer: &buf,
+        }]);
+        let text = doc.to_string_compact();
+        // Round-trips through our own parser.
+        let back = Json::parse(&text).unwrap();
+        let events = back.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 1 process_name + 5 thread_name + 2 slices + 1 counter.
+        assert_eq!(events.len(), 9);
+        for t in Track::ALL {
+            assert!(text.contains(t.name()));
+        }
+        // Slice times shifted by the layer offset.
+        assert!(text.contains("\"ts\":103"));
+    }
+}
