@@ -9,7 +9,8 @@
 //!
 //! `CAMUY_BENCH_SMOKE=1` is the CI gate: the process fails (exit 1) if
 //! batched fan-out throughput on the persistent pool drops below the
-//! per-call-spawn baseline.
+//! per-call-spawn baseline, or if the telemetry-enabled memo-hot path
+//! costs more than 3% over the disabled one (DESIGN.md §14).
 
 use camuy::api::{Engine, EvalRequest, SweepRequest, SweepSpec};
 use camuy::config::ArrayConfig;
@@ -137,6 +138,33 @@ fn main() {
         throughput(&fan_spawn, n),
     );
 
+    // --- telemetry overhead: the same memo-hot eval loop with the
+    // registry recording vs disabled. Request timers, striped counter
+    // adds and histogram records are all relaxed atomics, so the
+    // enabled path must stay within 3% of the disabled one — the smoke
+    // gate below holds it there (DESIGN.md §14).
+    println!("\n== api: telemetry overhead on the memo-hot path ==");
+    camuy::telemetry::set_enabled(true);
+    let tel_on = bench("api/eval_memo_hot_telemetry_on", &fan_opts, || {
+        reqs.iter()
+            .map(|r| warm_engine.eval(r).unwrap().total().cycles)
+            .sum::<u64>()
+    });
+    camuy::telemetry::set_enabled(false);
+    let tel_off = bench("api/eval_memo_hot_telemetry_off", &fan_opts, || {
+        reqs.iter()
+            .map(|r| warm_engine.eval(r).unwrap().total().cycles)
+            .sum::<u64>()
+    });
+    camuy::telemetry::set_enabled(true);
+    let tel_overhead = tel_on.seconds.min / tel_off.seconds.min;
+    println!(
+        "   -> {:.0} req/s recording, {:.0} req/s disabled ({:+.1}% best-over-best)",
+        throughput(&tel_on, n),
+        throughput(&tel_off, n),
+        100.0 * (tel_overhead - 1.0),
+    );
+
     // --- serve-mode repeated sweeps: segment-table reuse via the
     // engine-level plan cache (DESIGN.md §10). The same engine answers the
     // same sweep request over and over; the baseline clears the plan cache
@@ -197,6 +225,9 @@ fn main() {
         ("fanout_pool_persistent", variant(&fan_pool)),
         ("fanout_spawn_per_call", variant(&fan_spawn)),
         ("speedup_pool_over_spawn", Json::num(fan_speedup)),
+        ("telemetry_on", variant(&tel_on)),
+        ("telemetry_off", variant(&tel_off)),
+        ("overhead_telemetry_on_over_off", Json::num(tel_overhead)),
         ("sweep_repeat_plan_cold", sweep_variant(&sweep_nocache)),
         ("sweep_repeat_plan_hot", sweep_variant(&sweep_cached)),
         (
@@ -237,6 +268,16 @@ fn main() {
         println!(
             "smoke gate passed: pool fan-out is {best_ratio:.2}x per-call spawn \
              (best-over-best; means {fan_speedup:.2}x)"
+        );
+        if tel_overhead > 1.03 {
+            eprintln!(
+                "FAIL: telemetry-enabled memo-hot evals cost {tel_overhead:.3}x the \
+                 disabled path best-over-best (budget 1.03x)"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "smoke gate passed: telemetry overhead {tel_overhead:.3}x (budget 1.03x)"
         );
     }
 }

@@ -16,11 +16,11 @@
 use super::error::ApiError;
 use super::request::{
     check_arrays, check_config, check_nsga2, EqualPeRequest, EvalRequest, GraphRequest,
-    MemoryRequest, ParetoRequest, SweepRequest, SweepSpec, TraceRequest,
+    MemoryRequest, ParetoRequest, StatsRequest, SweepRequest, SweepSpec, TraceRequest,
 };
 use super::response::{
     EvalResponse, GraphResponse, MemoryResponse, NetworkEntry, NetworkSource, PerLayerReport,
-    RegisterResponse, TraceResponse,
+    RegisterResponse, StatsResponse, TraceResponse,
 };
 use crate::config::ArrayConfig;
 use crate::coordinator::Coordinator;
@@ -36,6 +36,7 @@ use crate::report::figures::{self, Fig2Data, Fig3Data, Fig5Data, Fig6Data};
 use crate::sim::{self, SimOptions};
 use crate::sweep::plan::{PlanCache, PlanCacheStats};
 use crate::sweep::runner::seed_workload_planned;
+use crate::telemetry::{self, ReqKind};
 use crate::util::json::Json;
 use std::collections::{HashMap, HashSet};
 use std::sync::{OnceLock, RwLock};
@@ -94,6 +95,25 @@ impl Engine {
         self.plans.stats()
     }
 
+    /// Answer a stats request (DESIGN.md §14): a snapshot of the
+    /// process-wide telemetry registry with the engine-owned sections
+    /// attached — per-shard eval-cache stats, plan-cache stats, and the
+    /// network-store sizes. The poll itself is counted as a request, so
+    /// a monitoring loop shows up in the traffic it reports.
+    pub fn stats(&self, req: &StatsRequest) -> StatsResponse {
+        let timer = telemetry::Timer::start();
+        let mut snapshot = telemetry::global().snapshot();
+        snapshot.eval_cache = Some(self.cache.stats());
+        snapshot.plan_cache = Some(self.plans.stats());
+        let users = self.user_nets.read().expect("user-network store poisoned").len();
+        snapshot.networks = Some((nets::ALL_MODELS.len(), users));
+        timer.observe_request(ReqKind::Stats);
+        StatsResponse {
+            snapshot,
+            buckets: req.buckets,
+        }
+    }
+
     fn zoo(&self) -> &HashMap<String, Network> {
         self.zoo.get_or_init(|| {
             nets::ALL_MODELS
@@ -147,6 +167,10 @@ impl Engine {
     /// additionally stored in DAG form, so graph requests see its real
     /// connectivity; its chain lowering serves every other request kind.
     pub fn register_network_json(&self, spec: &Json) -> Result<RegisterResponse, ApiError> {
+        observed(ReqKind::Register, || self.register_inner(spec))
+    }
+
+    fn register_inner(&self, spec: &Json) -> Result<RegisterResponse, ApiError> {
         // `junctions` without `edges` must reach the graph parser so it is
         // rejected loudly instead of silently dropping the junctions.
         let graph = if spec.get("edges").is_some() || spec.get("junctions").is_some() {
@@ -207,6 +231,13 @@ impl Engine {
     /// Every known network: the zoo in registry order, then the user store
     /// sorted by name.
     pub fn list_networks(&self) -> Vec<NetworkEntry> {
+        let timer = telemetry::Timer::start();
+        let out = self.list_networks_inner();
+        timer.observe_request(ReqKind::Zoo);
+        out
+    }
+
+    fn list_networks_inner(&self) -> Vec<NetworkEntry> {
         fn entry(net: &Network, source: NetworkSource) -> NetworkEntry {
             NetworkEntry {
                 name: net.name.clone(),
@@ -236,6 +267,10 @@ impl Engine {
 
     /// Answer one eval request through the shared memo table.
     pub fn eval(&self, req: &EvalRequest) -> Result<EvalResponse, ApiError> {
+        observed(ReqKind::Eval, || self.eval_inner(req))
+    }
+
+    fn eval_inner(&self, req: &EvalRequest) -> Result<EvalResponse, ApiError> {
         check_config(&req.config)?;
         check_arrays(req.arrays)?;
         let net = self.resolve(&req.net, req.batch)?;
@@ -340,6 +375,10 @@ impl Engine {
         req: &TraceRequest,
         threads: usize,
     ) -> Result<TraceResponse, ApiError> {
+        observed(ReqKind::Trace, || self.trace_inner(req, threads))
+    }
+
+    fn trace_inner(&self, req: &TraceRequest, threads: usize) -> Result<TraceResponse, ApiError> {
         check_config(&req.config)?;
         let net = self.resolve(&req.net, req.batch)?;
         let opts = SimOptions::traced(req.max_slices);
@@ -365,6 +404,10 @@ impl Engine {
     /// plan cache: a repeated sweep of the same (workload, grid) reuses
     /// its segment tables.
     pub fn sweep(&self, req: &SweepRequest) -> Result<Fig2Data, ApiError> {
+        observed(ReqKind::Sweep, || self.sweep_inner(req))
+    }
+
+    fn sweep_inner(&self, req: &SweepRequest) -> Result<Fig2Data, ApiError> {
         req.spec.validate()?;
         let net = self.resolve(&req.net, None)?;
         Ok(figures::fig2_heatmaps_planned(&net, &req.spec, Some(&self.plans)))
@@ -374,6 +417,10 @@ impl Engine {
     /// through the cached segmented plan (two binary searches plus the
     /// SoA combine — no divisions).
     pub fn pareto(&self, req: &ParetoRequest) -> Result<Fig3Data, ApiError> {
+        observed(ReqKind::Pareto, || self.pareto_inner(req))
+    }
+
+    fn pareto_inner(&self, req: &ParetoRequest) -> Result<Fig3Data, ApiError> {
         req.spec.validate()?;
         check_nsga2(&req.params)?;
         let net = self.resolve(&req.net, None)?;
@@ -400,6 +447,10 @@ impl Engine {
 
     /// Figure-6 equal-PE aspect-ratio study, one entry per budget.
     pub fn equal_pe(&self, req: &EqualPeRequest) -> Result<Vec<Fig6Data>, ApiError> {
+        observed(ReqKind::EqualPe, || self.equal_pe_inner(req))
+    }
+
+    fn equal_pe_inner(&self, req: &EqualPeRequest) -> Result<Vec<Fig6Data>, ApiError> {
         req.spec.validate()?;
         req.validate()?;
         let ctx = &req.spec;
@@ -414,6 +465,10 @@ impl Engine {
     /// With `graph: true` the graph-aware liveness pass runs too, and the
     /// corrected energy additionally charges long-lived edge spills.
     pub fn memory(&self, req: &MemoryRequest) -> Result<MemoryResponse, ApiError> {
+        observed(ReqKind::Memory, || self.memory_inner(req))
+    }
+
+    fn memory_inner(&self, req: &MemoryRequest) -> Result<MemoryResponse, ApiError> {
         check_config(&req.config)?;
         let net = self.resolve(&req.net, req.batch)?;
         let analysis = MemoryAnalysis::of(&net, &req.config);
@@ -508,6 +563,10 @@ impl Engine {
         req: &GraphRequest,
         threads: usize,
     ) -> Result<GraphResponse, ApiError> {
+        observed(ReqKind::Graph, || self.graph_inner(req, threads))
+    }
+
+    fn graph_inner(&self, req: &GraphRequest, threads: usize) -> Result<GraphResponse, ApiError> {
         check_config(&req.config)?;
         check_arrays(req.arrays)?;
         let g = self.resolve_graph(&req.net, req.batch)?;
@@ -538,4 +597,19 @@ impl Engine {
             schedule,
         })
     }
+}
+
+/// Time one engine entry point through the process-wide telemetry
+/// registry (DESIGN.md §14): bump the per-kind request counter, record
+/// its latency histogram, and count errors by kind on failure. With
+/// telemetry disabled the timer never reads the clock, so the wrapper
+/// reduces to two branches.
+fn observed<T>(kind: ReqKind, f: impl FnOnce() -> Result<T, ApiError>) -> Result<T, ApiError> {
+    let timer = telemetry::Timer::start();
+    let out = f();
+    if out.is_err() {
+        telemetry::global().record_request_error(kind);
+    }
+    timer.observe_request(kind);
+    out
 }

@@ -39,11 +39,11 @@ pub use engine::{Engine, MAX_USER_NETWORKS};
 pub use error::ApiError;
 pub use request::{
     ApiRequest, EqualPeRequest, EvalRequest, GraphRequest, MemoryRequest, ParetoRequest,
-    RegisterRequest, SweepRequest, SweepSpec, TraceRequest,
+    RegisterRequest, StatsRequest, SweepRequest, SweepSpec, TraceRequest,
 };
 pub use response::{
     equal_pe_json, liveness_json, pareto_json, schedule_json, sweep_json, zoo_json, EvalResponse,
     GraphResponse, MemoryResponse, NetworkEntry, NetworkSource, PerLayerReport, RegisterResponse,
-    TraceResponse,
+    StatsResponse, TraceResponse,
 };
-pub use serve::{serve, serve_tcp, ServeOptions, ServeStats};
+pub use serve::{connection_summary, serve, serve_tcp, ServeOptions, ServeStats};

@@ -444,6 +444,29 @@ impl RegisterRequest {
     }
 }
 
+/// Poll the process-wide telemetry registry (DESIGN.md §14): request
+/// counts and latency quantiles per type, eval/plan-cache stats, pool
+/// health. CLI adapters: `camuy stats` and `{"type":"stats"}` through
+/// `camuy serve`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatsRequest {
+    /// Attach the raw sparse bucket array to every histogram in the
+    /// response (off by default — quantiles usually suffice).
+    pub buckets: bool,
+}
+
+impl StatsRequest {
+    pub fn from_json(v: &Json) -> Result<StatsRequest, ApiError> {
+        let buckets = match v.get("buckets") {
+            None => false,
+            Some(b) => b.as_bool().ok_or_else(|| {
+                ApiError::BadRequest("field 'buckets' must be a boolean".into())
+            })?,
+        };
+        Ok(StatsRequest { buckets })
+    }
+}
+
 /// One decoded request.
 #[derive(Debug, Clone)]
 pub enum ApiRequest {
@@ -457,6 +480,7 @@ pub enum ApiRequest {
     Register(RegisterRequest),
     /// List every known network (zoo + user store).
     Zoo,
+    Stats(StatsRequest),
 }
 
 impl ApiRequest {
@@ -473,9 +497,10 @@ impl ApiRequest {
             "trace" => TraceRequest::from_json(v).map(ApiRequest::Trace),
             "register" => RegisterRequest::from_json(v).map(ApiRequest::Register),
             "zoo" | "networks" => Ok(ApiRequest::Zoo),
+            "stats" => StatsRequest::from_json(v).map(ApiRequest::Stats),
             other => Err(ApiError::BadRequest(format!(
                 "unknown request type '{other}' \
-                 (eval|sweep|pareto|equal_pe|memory|graph|trace|register|zoo)"
+                 (eval|sweep|pareto|equal_pe|memory|graph|trace|register|zoo|stats)"
             ))),
         }
     }
@@ -658,6 +683,23 @@ mod tests {
             ApiRequest::Memory(r) => assert!(r.graph),
             other => panic!("wrong request: {other:?}"),
         }
+    }
+
+    #[test]
+    fn stats_request_parses_and_validates_buckets() {
+        let v = Json::parse(r#"{"type":"stats"}"#).unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Stats(r) => assert!(!r.buckets),
+            other => panic!("wrong request: {other:?}"),
+        }
+        let v = Json::parse(r#"{"type":"stats","buckets":true}"#).unwrap();
+        match ApiRequest::from_json(&v).unwrap() {
+            ApiRequest::Stats(r) => assert!(r.buckets),
+            other => panic!("wrong request: {other:?}"),
+        }
+        let v = Json::parse(r#"{"type":"stats","buckets":1}"#).unwrap();
+        let err = ApiRequest::from_json(&v);
+        assert!(matches!(err, Err(ApiError::BadRequest(_))));
     }
 
     #[test]

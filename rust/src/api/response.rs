@@ -212,6 +212,23 @@ impl RegisterResponse {
     }
 }
 
+/// The stats payload: a full [`TelemetrySnapshot`] with the engine-owned
+/// sections (eval cache, plan cache, network stores) attached by
+/// `Engine::stats` (DESIGN.md §14).
+#[derive(Debug, Clone)]
+pub struct StatsResponse {
+    pub snapshot: crate::telemetry::TelemetrySnapshot,
+    /// Render raw histogram bucket arrays into the JSON (mirrors
+    /// `StatsRequest::buckets`).
+    pub buckets: bool,
+}
+
+impl StatsResponse {
+    pub fn to_json(&self) -> Json {
+        self.snapshot.to_json(self.buckets)
+    }
+}
+
 /// Where a listed network comes from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NetworkSource {

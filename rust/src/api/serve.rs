@@ -78,6 +78,7 @@ where
     W: Write,
 {
     let mut stats = ServeStats::default();
+    crate::telemetry::global().serve_connections.add(1);
     let batch_max = opts.batch_max.max(1);
     let (tx, rx) = mpsc::sync_channel::<String>(batch_max);
     std::thread::scope(|scope| -> io::Result<()> {
@@ -105,6 +106,7 @@ where
                         if trimmed.is_empty() {
                             continue;
                         }
+                        crate::telemetry::global().serve_bytes_in.add(line.len() as u64);
                         if tx.send(trimmed.to_string()).is_err() {
                             break;
                         }
@@ -215,20 +217,8 @@ pub fn serve_tcp(
                     let mut writer = stream;
                     match serve(engine, reader, &mut writer, &conn_opts) {
                         Ok(stats) => {
-                            let ps = engine.plan_stats();
-                            log::info!(
-                                "serve: {peer}: {} request(s), {} error(s), {} batch(es); \
-                                 plan cache: {} plan(s), {} hit(s) / {} miss(es) \
-                                 ({:.0}% hit rate), {} table word(s)",
-                                stats.requests,
-                                stats.errors,
-                                stats.batches,
-                                ps.entries,
-                                ps.hits,
-                                ps.misses,
-                                100.0 * ps.hit_rate(),
-                                ps.table_words
-                            );
+                            let summary = connection_summary(engine, &stats);
+                            log::info!("serve: {peer}: {summary}");
                         }
                         Err(e) => log::warn!("serve: {peer}: {e}"),
                     }
@@ -281,13 +271,20 @@ fn process_batch<W: Write>(
         }
     }
     flush_pending(engine, &parsed, &mut pending, &mut responses, opts, stats);
+    let mut bytes_out = 0u64;
     for r in &responses {
         let json = r.as_ref().expect("every request answered");
-        writeln!(out, "{}", json.to_string_compact())?;
+        let text = json.to_string_compact();
+        bytes_out += text.len() as u64 + 1; // newline
+        writeln!(out, "{text}")?;
     }
     out.flush()?;
     stats.requests += n as u64;
     stats.batches += 1;
+    let tel = crate::telemetry::global();
+    tel.serve_bytes_out.add(bytes_out);
+    tel.serve_batches.add(1);
+    tel.serve_batch_size.record(n as u64);
     Ok(())
 }
 
@@ -372,7 +369,39 @@ fn dispatch(
         Ok(ApiRequest::Memory(r)) => engine.memory(r).map(|x| x.to_json()),
         Ok(ApiRequest::Graph(r)) => engine.graph_threaded(r, threads).map(|x| x.to_json()),
         Ok(ApiRequest::Trace(r)) => engine.trace_threaded(r, threads).map(|x| x.to_json()),
+        Ok(ApiRequest::Stats(r)) => Ok(engine.stats(r).to_json()),
     }
+}
+
+/// One human-readable line summarizing a finished serve loop: the
+/// connection's own counters, the engine-wide request-latency quantiles,
+/// and the eval/plan cache traffic — the log-file rendering of the
+/// telemetry the `{"type": "stats"}` request exposes as JSON. Shared by
+/// the TCP per-connection log and the stdin path of `camuy serve`.
+pub fn connection_summary(engine: &Engine, stats: &ServeStats) -> String {
+    let tel = crate::telemetry::global().snapshot();
+    let lat = tel.request_latency();
+    let ec = engine.cache().stats();
+    let ps = engine.plan_stats();
+    format!(
+        "{} request(s), {} error(s), {} batch(es); \
+         request p50/p99 {:.2}/{:.2} ms; \
+         eval cache: {} entr(ies), {:.0}% hit rate; \
+         plan cache: {} plan(s), {} hit(s) / {} miss(es) \
+         ({:.0}% hit rate), {} table word(s)",
+        stats.requests,
+        stats.errors,
+        stats.batches,
+        lat.quantile(0.50) as f64 / 1e6,
+        lat.quantile(0.99) as f64 / 1e6,
+        ec.entries,
+        100.0 * ec.hit_rate(),
+        ps.entries,
+        ps.hits,
+        ps.misses,
+        100.0 * ps.hit_rate(),
+        ps.table_words
+    )
 }
 
 /// The response envelope: the echoed id, the ok flag, and either the
@@ -388,6 +417,7 @@ fn envelope(id: Option<Json>, result: Result<Json, ApiError>) -> Json {
             pairs.push(("result", v));
         }
         Err(e) => {
+            crate::telemetry::global().record_error_kind(e.kind());
             pairs.push(("ok", Json::Bool(false)));
             pairs.push(("error", e.to_json()));
         }

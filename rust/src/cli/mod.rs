@@ -15,6 +15,7 @@
 //! camuy memory  --net vgg16 [--graph]  per-layer UB working sets and spills
 //! camuy graph   --net resnet50 [--arrays N]  DAG stats, liveness, schedule
 //! camuy serve   [--listen ADDR]    batched JSON-lines request server
+//! camuy stats   [--connect ADDR]   engine telemetry (counters, latency, caches)
 //! camuy verify  [--artifacts DIR]  three-way artifact verification
 //! camuy --version                  print the crate version
 //! ```
@@ -23,7 +24,7 @@ pub mod args;
 
 use crate::api::{
     Engine, EqualPeRequest, EvalRequest, EvalResponse, GraphRequest, MemoryRequest,
-    ParetoRequest, ServeOptions, SweepRequest, SweepSpec, TraceRequest,
+    ParetoRequest, ServeOptions, StatsRequest, SweepRequest, SweepSpec, TraceRequest,
 };
 use crate::config::{ArrayConfig, Dataflow, EnergyWeights};
 use crate::pareto::nsga2::Nsga2Params;
@@ -31,6 +32,7 @@ use crate::report::figures;
 use crate::report::{kv_block, pareto_table};
 use crate::runtime::{Manifest, PjrtRuntime};
 use crate::util::human_count;
+use crate::util::json::Json;
 use args::{Args, Schema};
 use std::path::{Path, PathBuf};
 
@@ -38,10 +40,11 @@ const SCHEMA: Schema = Schema {
     options: &[
         "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "min-dim",
         "threads", "artifacts", "dataflow", "seed", "energy-model", "listen", "batch-max",
-        "trace", "max-slices",
+        "trace", "max-slices", "connect", "perfetto",
     ],
     flags: &[
         "json", "per-layer", "smoke", "dense", "help", "quiet", "verbose", "version", "graph",
+        "buckets",
     ],
 };
 
@@ -63,6 +66,7 @@ COMMANDS:
   graph               DAG connectivity: liveness-true residency + branch-
                       parallel multi-array schedule (see DESIGN.md §9)
   serve               batched JSON-lines request server (stdin, or --listen)
+  stats               engine telemetry: request counts/latency, caches, pool
   verify              three-way check: reference = emulator = PJRT artifact
 
 OPTIONS:
@@ -81,6 +85,9 @@ OPTIONS:
   --threads N         sweep / serve parallelism (default: cores)
   --listen ADDR       serve on a TCP address instead of stdin/stdout
   --batch-max N       serve: most requests coalesced per batch (default 64)
+  --connect ADDR      stats: query a running `camuy serve --listen` server
+  --perfetto FILE     stats: also write a Perfetto counter-trace JSON file
+  --buckets           stats: include raw histogram buckets (with --json)
   --artifacts DIR     AOT artifact directory (default artifacts/)
   --trace FILE        emulate: run the event-driven simulator (DESIGN.md §13)
                       and write a Perfetto trace-event JSON file — open it at
@@ -126,6 +133,7 @@ pub fn run(argv: &[String]) -> i32 {
         "memory" => cmd_memory(&engine, &args),
         "graph" => cmd_graph(&engine, &args),
         "serve" => cmd_serve(&engine, &args),
+        "stats" => cmd_stats(&engine, &args),
         "verify" => cmd_verify(&args),
         other => {
             eprintln!("unknown command '{other}'\n\n{}", usage());
@@ -699,20 +707,141 @@ fn cmd_serve(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         let stdin = std::io::BufReader::new(std::io::stdin());
         let stdout = std::io::stdout();
         let stats = crate::api::serve(engine, stdin, &mut stdout.lock(), &opts)?;
-        let ps = engine.plan_stats();
-        log::info!(
-            "served {} request(s) ({} error(s)) in {} batch(es); plan cache: \
-             {} plan(s), {} hit(s) / {} miss(es) ({:.0}% hit rate)",
-            stats.requests,
-            stats.errors,
-            stats.batches,
-            ps.entries,
-            ps.hits,
-            ps.misses,
-            100.0 * ps.hit_rate()
+        let summary = crate::api::connection_summary(engine, &stats);
+        log::info!("served {summary}");
+    }
+    Ok(())
+}
+
+/// `camuy stats`: render the engine-wide telemetry snapshot — this
+/// process's engine by default, or a running `camuy serve --listen`
+/// server via `--connect ADDR` (one `{"type": "stats"}` round trip).
+fn cmd_stats(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let req = StatsRequest {
+        buckets: args.flag("buckets"),
+    };
+    let doc = match args.opt("connect") {
+        Some(addr) => fetch_remote_stats(addr, &req)?,
+        None => engine.stats(&req).to_json(),
+    };
+    if let Some(path) = args.opt("perfetto") {
+        let secs = doc.get("uptime_seconds").and_then(Json::as_f64).unwrap_or(0.0);
+        let secs = if secs.is_finite() { secs.max(0.0) } else { 0.0 };
+        let uptime = std::time::Duration::from_secs_f64(secs);
+        let trace = crate::telemetry::perfetto_counters_from_json(&doc, uptime);
+        std::fs::write(path, trace.to_string_compact())?;
+        println!("wrote Perfetto counter trace to {path}");
+    }
+    if args.flag("json") {
+        println!("{}", doc.to_string_pretty());
+        return Ok(());
+    }
+    let num = |path: &[&str]| -> f64 {
+        let mut v = Some(&doc);
+        for k in path {
+            v = v.and_then(|x| x.get(k));
+        }
+        v.and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let enabled = doc.get("enabled").and_then(Json::as_bool).unwrap_or(false);
+    println!(
+        "engine telemetry ({}; up {:.1} s):",
+        if enabled { "enabled" } else { "disabled" },
+        num(&["uptime_seconds"])
+    );
+    println!(
+        "{:<10} {:>9} {:>7} {:>10} {:>10} {:>10}",
+        "request", "count", "errors", "p50 ms", "p95 ms", "p99 ms"
+    );
+    for kind in crate::telemetry::ReqKind::ALL {
+        let count = num(&["requests", kind.name(), "count"]);
+        if count == 0.0 {
+            continue;
+        }
+        println!(
+            "{:<10} {:>9} {:>7} {:>10.2} {:>10.2} {:>10.2}",
+            kind.name(),
+            count,
+            num(&["requests", kind.name(), "errors"]),
+            num(&["requests", kind.name(), "latency", "p50"]) / 1e6,
+            num(&["requests", kind.name(), "latency", "p95"]) / 1e6,
+            num(&["requests", kind.name(), "latency", "p99"]) / 1e6,
+        );
+    }
+    println!(
+        "serve: {} connection(s), {} batch(es), {} B in / {} B out",
+        num(&["serve", "connections"]),
+        num(&["serve", "batches"]),
+        num(&["serve", "bytes_in"]),
+        num(&["serve", "bytes_out"])
+    );
+    println!(
+        "pool: {} worker(s), {} job(s), {} steal(s), queue depth {}, job p99 {:.2} ms",
+        num(&["pool", "workers"]),
+        num(&["pool", "jobs"]),
+        num(&["pool", "steals"]),
+        num(&["pool", "queue_depth"]),
+        num(&["pool", "job_latency", "p99"]) / 1e6
+    );
+    println!(
+        "sweep: {} cell(s) evaluated",
+        num(&["sweep", "cells_evaluated"])
+    );
+    if doc.get("eval_cache").is_some() {
+        println!(
+            "eval cache: {} entr(ies), {:.0}% hit rate ({} hits / {} misses, {} evictions)",
+            num(&["eval_cache", "entries"]),
+            100.0 * num(&["eval_cache", "hit_rate"]),
+            num(&["eval_cache", "hits"]),
+            num(&["eval_cache", "misses"]),
+            num(&["eval_cache", "evictions"])
+        );
+    }
+    if doc.get("plan_cache").is_some() {
+        println!(
+            "plan cache: {} plan(s), {:.0}% hit rate, {} table word(s)",
+            num(&["plan_cache", "entries"]),
+            100.0 * num(&["plan_cache", "hit_rate"]),
+            num(&["plan_cache", "table_words"])
+        );
+    }
+    if doc.get("networks").is_some() {
+        println!(
+            "networks: {} zoo, {} user-registered",
+            num(&["networks", "zoo"]),
+            num(&["networks", "user"])
         );
     }
     Ok(())
+}
+
+/// One `{"type": "stats"}` round trip against a running
+/// `camuy serve --listen` server, returning the unwrapped `result`.
+fn fetch_remote_stats(addr: &str, req: &StatsRequest) -> anyhow::Result<Json> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut pairs = vec![("type", Json::str("stats"))];
+    if req.buckets {
+        pairs.push(("buckets", Json::Bool(true)));
+    }
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    writeln!(stream, "{}", Json::obj(pairs).to_string_compact())?;
+    stream.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let trimmed = line.trim();
+    anyhow::ensure!(
+        !trimmed.is_empty(),
+        "server closed the connection without answering"
+    );
+    let v = Json::parse(trimmed).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+    if v.get("ok").and_then(Json::as_bool) != Some(true) {
+        let err = v.get("error").cloned().unwrap_or(Json::Null);
+        anyhow::bail!("server error: {}", err.to_string_compact());
+    }
+    v.get("result")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("response has no result"))
 }
 
 fn cmd_verify(args: &Args) -> anyhow::Result<()> {
@@ -762,7 +891,7 @@ mod tests {
     fn usage_lists_every_dispatched_command() {
         for cmd in [
             "zoo", "emulate", "sweep", "pareto", "heatmaps", "robust", "equal-pe", "figures",
-            "memory", "graph", "serve", "verify",
+            "memory", "graph", "serve", "stats", "verify",
         ] {
             assert!(usage().contains(cmd), "usage() missing {cmd}");
         }

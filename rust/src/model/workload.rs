@@ -127,7 +127,7 @@ impl CfgKey {
 /// Lock shards in [`EvalCache`]. Power of two so the shard index is a
 /// mask of the key hash; 32 shards keep write contention negligible even
 /// with every core seeding at once, at ~32 × 40 bytes of fixed overhead.
-const EVAL_CACHE_SHARDS: usize = 32;
+pub const EVAL_CACHE_SHARDS: usize = 32;
 
 /// Total entry cap for [`EvalCache`], split evenly across the shards.
 /// This bounds a long-lived server's memory even against a client that
@@ -151,17 +151,101 @@ const EVAL_SHARD_CAPACITY: usize = EVAL_CACHE_CAPACITY / EVAL_CACHE_SHARDS;
 /// nothing.
 #[derive(Debug)]
 pub struct EvalCache {
-    shards: Vec<RwLock<HashMap<(GemmShape, CfgKey), Metrics>>>,
+    shards: Vec<EvalShard>,
+}
+
+/// One lock shard with its own relaxed traffic counters, so
+/// [`EvalCache::stats`] reports per-shard hit rates, occupancy and
+/// eviction counts from plain loads, with no cross-shard coordination.
+#[derive(Debug, Default)]
+struct EvalShard {
+    map: RwLock<HashMap<(GemmShape, CfgKey), Metrics>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl EvalShard {
+    /// Make room in a full shard before inserting `key`: drop every other
+    /// entry. Partial eviction, not a flush — the surviving half keeps
+    /// serving hits — and overwriting a key that is already resident
+    /// never evicts (the insert won't grow the map). (Which half survives
+    /// follows the map's iteration order; the cache is a memo table, so
+    /// the choice affects only future hit rates.)
+    fn evict_if_full(
+        &self,
+        map: &mut HashMap<(GemmShape, CfgKey), Metrics>,
+        key: &(GemmShape, CfgKey),
+    ) {
+        if map.len() >= EVAL_SHARD_CAPACITY && !map.contains_key(key) {
+            let before = map.len();
+            let mut i = 0usize;
+            map.retain(|_, _| {
+                i += 1;
+                i % 2 == 0
+            });
+            self.evictions.fetch_add((before - map.len()) as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Counters for one [`EvalCache`] shard in a [`stats`](EvalCache::stats)
+/// snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EvalCacheShardStats {
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Per-shard entry cap ([`EVAL_CACHE_CAPACITY`] / shard count).
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    /// Entries dropped by the half-shard eviction policy.
+    pub evictions: u64,
+}
+
+impl EvalCacheShardStats {
+    /// Hits per lookup; 0.0 before any traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Aggregate + per-shard snapshot of the evaluation memo table — the
+/// eval-cache counterpart of [`crate::sweep::plan::PlanCacheStats`],
+/// surfaced through `{"type":"stats"}` (DESIGN.md §14).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct EvalCacheStats {
+    pub entries: usize,
+    /// Total entry cap across all shards ([`EVAL_CACHE_CAPACITY`]).
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// One entry per shard, in shard-index order.
+    pub shards: Vec<EvalCacheShardStats>,
+}
+
+impl EvalCacheStats {
+    /// Hits per lookup; 0.0 before any traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
 }
 
 impl Default for EvalCache {
     fn default() -> EvalCache {
         EvalCache {
-            shards: (0..EVAL_CACHE_SHARDS).map(|_| RwLock::default()).collect(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            shards: (0..EVAL_CACHE_SHARDS).map(|_| EvalShard::default()).collect(),
         }
     }
 }
@@ -179,7 +263,7 @@ impl EvalCache {
     /// sequential dimension values real workloads produce; the final
     /// multiply-and-shift reads high bits so low-entropy fields still
     /// spread across all shards.
-    fn shard(&self, key: &(GemmShape, CfgKey)) -> &RwLock<HashMap<(GemmShape, CfgKey), Metrics>> {
+    fn shard(&self, key: &(GemmShape, CfgKey)) -> &EvalShard {
         let (s, c) = key;
         let x = (s.m as u64)
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
@@ -193,34 +277,18 @@ impl EvalCache {
         &self.shards[i & (EVAL_CACHE_SHARDS - 1)]
     }
 
-    /// Make room in a full shard before inserting `key`: drop every other
-    /// entry. Partial eviction, not a flush — the surviving half keeps
-    /// serving hits — and overwriting a key that is already resident
-    /// never evicts (the insert won't grow the map). (Which half survives
-    /// follows the map's iteration order; the cache is a memo table, so
-    /// the choice affects only future hit rates.)
-    fn evict_if_full(map: &mut HashMap<(GemmShape, CfgKey), Metrics>, key: &(GemmShape, CfgKey)) {
-        if map.len() >= EVAL_SHARD_CAPACITY && !map.contains_key(key) {
-            let mut i = 0usize;
-            map.retain(|_, _| {
-                i += 1;
-                i % 2 == 0
-            });
-        }
-    }
-
     /// Memoized [`gemm_metrics`].
     pub fn gemm_metrics(&self, shape: GemmShape, cfg: &ArrayConfig) -> Metrics {
         let key = (shape, CfgKey::of(cfg));
         let shard = self.shard(&key);
-        if let Some(m) = shard.read().expect("eval cache poisoned").get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = shard.map.read().expect("eval cache poisoned").get(&key) {
+            shard.hits.fetch_add(1, Ordering::Relaxed);
             return *m;
         }
         let m = gemm_metrics(shape, cfg);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = shard.write().expect("eval cache poisoned");
-        Self::evict_if_full(&mut map, &key);
+        shard.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = shard.map.write().expect("eval cache poisoned");
+        shard.evict_if_full(&mut map, &key);
         map.insert(key, m);
         m
     }
@@ -234,25 +302,24 @@ impl EvalCache {
     /// a shard past its cap.
     pub fn seed(&self, shape: GemmShape, cfg: &ArrayConfig, m: Metrics) {
         let key = (shape, CfgKey::of(cfg));
-        let mut map = self.shard(&key).write().expect("eval cache poisoned");
-        Self::evict_if_full(&mut map, &key);
+        let shard = self.shard(&key);
+        let mut map = shard.map.write().expect("eval cache poisoned");
+        shard.evict_if_full(&mut map, &key);
         map.insert(key, m);
     }
 
     /// Whether a per-(shape, configuration) entry is currently memoized.
     pub fn contains(&self, shape: GemmShape, cfg: &ArrayConfig) -> bool {
         let key = (shape, CfgKey::of(cfg));
-        self.shard(&key)
-            .read()
-            .expect("eval cache poisoned")
-            .contains_key(&key)
+        let shard = self.shard(&key);
+        shard.map.read().expect("eval cache poisoned").contains_key(&key)
     }
 
     /// Distinct (shape, configuration) pairs currently memoized.
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.read().expect("eval cache poisoned").len())
+            .map(|s| s.map.read().expect("eval cache poisoned").len())
             .sum()
     }
 
@@ -260,14 +327,45 @@ impl EvalCache {
         self.len() == 0
     }
 
-    /// Lookups served from the memo table.
+    /// Lookups served from the memo table (all shards).
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.shards.iter().map(|s| s.hits.load(Ordering::Relaxed)).sum()
     }
 
-    /// Lookups that had to evaluate the closed form.
+    /// Lookups that had to evaluate the closed form (all shards).
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.shards.iter().map(|s| s.misses.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Entries dropped by the half-shard eviction policy (all shards).
+    pub fn evictions(&self) -> u64 {
+        self.shards.iter().map(|s| s.evictions.load(Ordering::Relaxed)).sum()
+    }
+
+    /// A per-shard and aggregate traffic/occupancy snapshot (relaxed
+    /// loads; a racing insert may tear between shards, which is fine for
+    /// monitoring). Shard order is stable, so successive snapshots are
+    /// comparable shard by shard.
+    pub fn stats(&self) -> EvalCacheStats {
+        let shards: Vec<EvalCacheShardStats> = self
+            .shards
+            .iter()
+            .map(|s| EvalCacheShardStats {
+                entries: s.map.read().expect("eval cache poisoned").len(),
+                capacity: EVAL_SHARD_CAPACITY,
+                hits: s.hits.load(Ordering::Relaxed),
+                misses: s.misses.load(Ordering::Relaxed),
+                evictions: s.evictions.load(Ordering::Relaxed),
+            })
+            .collect();
+        EvalCacheStats {
+            entries: shards.iter().map(|s| s.entries).sum(),
+            capacity: EVAL_CACHE_CAPACITY,
+            hits: shards.iter().map(|s| s.hits).sum(),
+            misses: shards.iter().map(|s| s.misses).sum(),
+            evictions: shards.iter().map(|s| s.evictions).sum(),
+            shards,
+        }
     }
 }
 

@@ -149,6 +149,7 @@ impl Job {
             if c >= self.chunks {
                 return;
             }
+            crate::telemetry::global().pool_chunks.add(1);
             if !self.poisoned.load(Ordering::Relaxed) {
                 let lo = c * self.chunk;
                 let hi = (lo + self.chunk).min(self.n);
@@ -271,6 +272,14 @@ impl Pool {
             complete_cv: Condvar::new(),
             f: raw,
         });
+        // Telemetry (DESIGN.md §14): the job counter and latency
+        // histogram cover the pooled path only — the serial fast path
+        // above never queues. The timer starts before the push so the
+        // recorded latency is submit-to-completion, queueing included.
+        let tel = crate::telemetry::global();
+        let timer = crate::telemetry::Timer::start();
+        tel.pool_jobs.add(1);
+        tel.pool_queue_depth.inc();
         {
             let mut q = self.shared.queue.lock().expect("pool queue");
             q.push(Arc::clone(&job));
@@ -298,6 +307,8 @@ impl Pool {
             let mut q = self.shared.queue.lock().expect("pool queue");
             q.retain(|j| !Arc::ptr_eq(j, &job));
         }
+        tel.pool_queue_depth.dec();
+        timer.observe_into(&tel.pool_job_latency);
         if let Some(payload) = job.panic.lock().expect("job panic slot").take() {
             resume_unwind(payload);
         }
@@ -342,12 +353,19 @@ fn worker_loop(shared: &Shared) {
         match picked {
             Some(job) => {
                 drop(q);
+                crate::telemetry::global().pool_steals.add(1);
                 job.execute();
                 job.leave();
                 q = shared.queue.lock().expect("pool queue");
             }
             None => {
+                // The parked gauge is inc/dec-paired around the wait
+                // (never flag-gated), so it reads true even across
+                // enable toggles.
+                let tel = crate::telemetry::global();
+                tel.pool_workers_parked.inc();
                 q = shared.work_cv.wait(q).expect("pool wait");
+                tel.pool_workers_parked.dec();
             }
         }
     }

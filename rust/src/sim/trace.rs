@@ -199,18 +199,45 @@ pub struct TraceProcess<'a> {
     pub buffer: &'a TraceBuffer,
 }
 
+/// The `"M"` process-name metadata event naming process `pid`.
+fn process_meta_event(pid: f64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str("process_name")),
+        ("pid", Json::num(pid)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+/// One `"C"` counter sample: Perfetto draws these as a per-name counter
+/// track, with the value riding in `args.value`. Shared by the
+/// simulator document assembler and the engine-telemetry export
+/// ([`crate::telemetry::TelemetrySnapshot::perfetto_counters`]).
+fn counter_event(pid: f64, name: &str, ts: f64, value: f64) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("C")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid)),
+        ("ts", Json::num(ts)),
+        ("args", Json::obj(vec![("value", Json::num(value))])),
+    ])
+}
+
+/// Wrap a finished event list in the trace-event document envelope.
+fn trace_document(events: Vec<Json>) -> Json {
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ns")),
+        ("traceEvents", Json::arr(events)),
+    ])
+}
+
 /// Assemble the Perfetto JSON trace-event document. `pid` is 1-based per
 /// process, `ts` is in microseconds with 1 cycle ≡ 1 µs.
 pub fn perfetto_trace(processes: &[TraceProcess<'_>]) -> Json {
     let mut events: Vec<Json> = Vec::new();
     for (idx, p) in processes.iter().enumerate() {
         let pid = (idx + 1) as f64;
-        events.push(Json::obj(vec![
-            ("ph", Json::str("M")),
-            ("name", Json::str("process_name")),
-            ("pid", Json::num(pid)),
-            ("args", Json::obj(vec![("name", Json::str(p.name.clone()))])),
-        ]));
+        events.push(process_meta_event(pid, &p.name));
         for t in Track::ALL {
             events.push(Json::obj(vec![
                 ("ph", Json::str("M")),
@@ -231,19 +258,28 @@ pub fn perfetto_trace(processes: &[TraceProcess<'_>]) -> Json {
             ]));
         }
         for c in &p.buffer.counters {
-            events.push(Json::obj(vec![
-                ("ph", Json::str("C")),
-                ("name", Json::str(c.counter.name())),
-                ("pid", Json::num(pid)),
-                ("ts", Json::num((p.offset + c.at) as f64)),
-                ("args", Json::obj(vec![("value", Json::num(c.value))])),
-            ]));
+            let ts = (p.offset + c.at) as f64;
+            events.push(counter_event(pid, c.counter.name(), ts, c.value));
         }
     }
-    Json::obj(vec![
-        ("displayTimeUnit", Json::str("ns")),
-        ("traceEvents", Json::arr(events)),
-    ])
+    trace_document(events)
+}
+
+/// Assemble a counter-only Perfetto document: one process named
+/// `process` holding one counter track per `(name, value)` sample. Each
+/// track is sampled at t=0 and `t=ts_us` so it renders as a level over
+/// the process lifetime rather than an invisible point. This is the
+/// writer behind the engine-telemetry export (DESIGN.md §14); it shares
+/// the event shapes with [`perfetto_trace`], so both documents load
+/// side by side in ui.perfetto.dev.
+pub fn perfetto_counter_doc(process: &str, ts_us: u64, samples: &[(String, f64)]) -> Json {
+    let pid = 1.0;
+    let mut events = vec![process_meta_event(pid, process)];
+    for (name, value) in samples {
+        events.push(counter_event(pid, name, 0.0, *value));
+        events.push(counter_event(pid, name, ts_us.max(1) as f64, *value));
+    }
+    trace_document(events)
 }
 
 #[cfg(test)]

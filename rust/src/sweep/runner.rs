@@ -439,6 +439,7 @@ pub fn sweep_workload_planned(
     plans: Option<&PlanCache>,
 ) -> Vec<SweepPoint> {
     let (built, routes) = build_routes(workload, configs, plans);
+    crate::telemetry::global().sweep_cells.add(configs.len() as u64);
     let mut buckets: Vec<Vec<BlockCell>> = (0..built.len()).map(|_| Vec::new()).collect();
     let mut direct: Vec<BlockCell> = Vec::new();
     for (i, route) in routes.iter().enumerate() {
@@ -550,6 +551,7 @@ pub fn seed_workload_planned(
     plans: Option<&PlanCache>,
 ) {
     let (built, routes) = build_routes(workload, configs, plans);
+    crate::telemetry::global().sweep_cells.add(configs.len() as u64);
     pool::parallel_map(configs.len(), threads, |i| {
         let cfg = &configs[i];
         match routes[i] {

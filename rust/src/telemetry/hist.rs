@@ -1,0 +1,324 @@
+//! Log-linear latency histograms with exact-bound quantile extraction.
+//!
+//! Values (nanoseconds for latency, plain counts for size distributions)
+//! land in log-spaced buckets: each power-of-two octave is split into
+//! `1 << SUB_BITS` linear sub-buckets, so a bucket's width never exceeds
+//! 1/4 of its lower bound. Quantiles are therefore *exact bounds*: the
+//! reported p99 is the upper edge of the bucket holding the rank-⌈0.99·n⌉
+//! sample, within 25% of the true order statistic, with no sampling and
+//! no allocation. Recording is one relaxed `fetch_add` per field —
+//! wait-free, safe from any thread, and gated on the global
+//! [`enabled`](super::enabled) flag so a disabled registry costs one
+//! branch (the [`TraceSink`](crate::sim::trace::TraceSink) pattern).
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: every power-of-two octave splits into
+/// `1 << SUB_BITS` linear sub-buckets, bounding relative bucket width
+/// (and therefore quantile error) at `1 / (1 << SUB_BITS)` = 25%.
+const SUB_BITS: u32 = 2;
+const SUBS: u64 = 1 << SUB_BITS;
+
+/// Bucket count covering the full `u64` range: values below [`SUBS`] get
+/// one exact bucket each, then four sub-buckets per remaining octave.
+pub const BUCKETS: usize = ((64 - SUB_BITS as usize) << SUB_BITS) + SUBS as usize;
+
+/// The bucket holding `v`. Values below [`SUBS`] map to themselves;
+/// larger values index by (octave, linear sub-bucket within the octave).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros();
+    let sub = ((v >> (octave - SUB_BITS)) & (SUBS - 1)) as usize;
+    (((octave - SUB_BITS + 1) as usize) << SUB_BITS) + sub
+}
+
+/// Smallest value that lands in bucket `index` (inverse of
+/// [`bucket_index`] at the bucket's lower edge).
+pub fn bucket_lo(index: usize) -> u64 {
+    if index < SUBS as usize {
+        return index as u64;
+    }
+    let group = (index >> SUB_BITS) as u32;
+    let sub = (index & (SUBS as usize - 1)) as u64;
+    let octave = group + SUB_BITS - 1;
+    (1u64 << octave) + (sub << (octave - SUB_BITS))
+}
+
+/// Largest value that lands in bucket `index`. The final bucket absorbs
+/// everything up to `u64::MAX` (its upper edge would be `1 << 64`).
+pub fn bucket_hi(index: usize) -> u64 {
+    if index + 1 >= BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lo(index + 1) - 1
+    }
+}
+
+/// A concurrent log-bucketed histogram: 252 relaxed counters plus sum,
+/// min, and max. Everything a snapshot needs is derivable from a plain
+/// load of each field, so readers never block writers.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value when telemetry is enabled. Wait-free: four
+    /// relaxed atomic ops, no locks, no allocation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if super::enabled() {
+            self.record_always(v);
+        }
+    }
+
+    /// Record regardless of the global enable flag. Used by unit tests
+    /// (so a concurrently running enabled-toggle test cannot starve
+    /// them) and by callers that manage their own gating.
+    pub fn record_always(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy. Concurrent recording may tear between
+    /// fields (count vs sum), which is acceptable for monitoring.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = buckets.iter().sum();
+        let raw_min = self.min.load(Ordering::Relaxed);
+        HistogramSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { raw_min },
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// An owned copy of a [`Histogram`] at one instant, with quantile and
+/// JSON rendering. `buckets` is empty for a default (never-merged)
+/// snapshot and `BUCKETS` long otherwise.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Exact-bound quantile: the upper edge of the bucket holding the
+    /// rank-⌈q·count⌉ sample, clamped into `[min, max]` so p0 and p100
+    /// are the true extremes. Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_hi(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold `other` into `self` bucket-wise. Used to merge the per-kind
+    /// request latency histograms into one process-wide distribution.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if other.count == 0 {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; BUCKETS];
+        }
+        for (a, &b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+        } else {
+            self.min = self.min.min(other.min);
+        }
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Render as `{count, mean, min, max, p50, p95, p99}` (latency
+    /// histograms record nanoseconds). With `include_buckets`, append a
+    /// sparse `[[bucket_lo, count], ...]` array of non-empty buckets.
+    pub fn to_json(&self, include_buckets: bool) -> Json {
+        let mut pairs = vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean())),
+            ("min", Json::num(self.min as f64)),
+            ("max", Json::num(self.max as f64)),
+            ("p50", Json::num(self.quantile(0.50) as f64)),
+            ("p95", Json::num(self.quantile(0.95) as f64)),
+            ("p99", Json::num(self.quantile(0.99) as f64)),
+        ];
+        if include_buckets {
+            let mut rows = Vec::new();
+            for (i, &c) in self.buckets.iter().enumerate().filter(|&(_, &c)| c > 0) {
+                let row = vec![Json::num(bucket_lo(i) as f64), Json::num(c as f64)];
+                rows.push(Json::arr(row));
+            }
+            pairs.push(("buckets", Json::arr(rows)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_tile_the_u64_range_without_gaps() {
+        assert_eq!(BUCKETS, 252);
+        for i in 0..BUCKETS - 1 {
+            assert_eq!(bucket_lo(i + 1), bucket_hi(i) + 1, "gap after bucket {i}");
+        }
+        assert_eq!(bucket_lo(0), 0);
+        assert_eq!(bucket_hi(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_index_inverts_bucket_edges() {
+        for i in 0..BUCKETS {
+            assert_eq!(bucket_index(bucket_lo(i)), i, "lo edge of {i}");
+            assert_eq!(bucket_index(bucket_hi(i)), i, "hi edge of {i}");
+        }
+    }
+
+    #[test]
+    fn bucket_width_is_at_most_a_quarter_of_its_lower_bound() {
+        for i in SUBS as usize..BUCKETS - 1 {
+            let width = bucket_hi(i) - bucket_lo(i) + 1;
+            assert!(bucket_lo(i) / width >= 4, "bucket {i} wider than 25%");
+        }
+    }
+
+    #[test]
+    fn values_land_in_brackets_that_contain_them() {
+        let probes = [0, 1, 3, 4, 7, 8, 100, 999, 1 << 20, (1 << 20) + 1, u64::MAX];
+        for &v in &probes {
+            let i = bucket_index(v);
+            assert!(bucket_lo(i) <= v && v <= bucket_hi(i), "v={v} bucket={i}");
+        }
+    }
+
+    #[test]
+    fn quantiles_bracket_a_known_bimodal_distribution() {
+        // 900 samples at 1 ms, 100 at 64 ms: p50 sits in the 1 ms bucket,
+        // p99 in the 64 ms one, and clamping pins both to exact values
+        // because each mode is a bucket lower edge.
+        let h = Histogram::new();
+        for _ in 0..900 {
+            h.record_always(1_000_000);
+        }
+        for _ in 0..100 {
+            h.record_always(64_000_000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        let p50 = s.quantile(0.50);
+        assert!((1_000_000..1_250_000).contains(&p50), "p50={p50}");
+        assert_eq!(s.quantile(0.99), 64_000_000);
+        assert_eq!(s.min, 1_000_000);
+        assert_eq!(s.max, 64_000_000);
+        assert!(s.quantile(0.50) <= s.quantile(0.95));
+        assert!(s.quantile(0.95) <= s.quantile(0.99));
+    }
+
+    #[test]
+    fn quantile_of_single_sample_is_that_sample() {
+        let h = Histogram::new();
+        h.record_always(12_345);
+        let s = h.snapshot();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), 12_345);
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 0);
+        assert_eq!(s.quantile(0.99), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_counts_and_extremes() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_always(10);
+        a.record_always(20);
+        b.record_always(5);
+        b.record_always(40_000);
+        let mut m = HistogramSnapshot::default();
+        m.merge(&a.snapshot());
+        m.merge(&b.snapshot());
+        m.merge(&HistogramSnapshot::default());
+        assert_eq!(m.count, 4);
+        assert_eq!(m.sum, 40_035);
+        assert_eq!(m.min, 5);
+        assert_eq!(m.max, 40_000);
+        assert!(m.quantile(0.99) >= 40_000);
+    }
+
+    #[test]
+    fn json_rendering_exposes_quantiles_and_sparse_buckets() {
+        let h = Histogram::new();
+        for _ in 0..10 {
+            h.record_always(1_000);
+        }
+        let s = h.snapshot();
+        let j = s.to_json(true);
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(j.get("p50").and_then(Json::as_f64), Some(1_000.0));
+        let rows = j.get("buckets").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(s.to_json(false).get("buckets").is_none());
+    }
+}

@@ -1,0 +1,732 @@
+//! Engine-wide telemetry: the process-global metrics registry behind
+//! `{"type":"stats"}` and `camuy stats` (DESIGN.md §14).
+//!
+//! Three primitives, all wait-free on the hot path:
+//!
+//! * [`Counter`] — a monotone count striped across 16 cache-line-padded
+//!   cells, indexed by a per-thread stripe, so concurrent increments
+//!   never contend on one line. Reads sum the stripes.
+//! * [`Gauge`] — the same striping over a signed delta (queue depth,
+//!   parked workers). Gauges are *not* gated on the enable flag: an
+//!   inc/dec pair split across a mid-flight [`set_enabled`] toggle would
+//!   skew the level forever.
+//! * [`Histogram`](hist::Histogram) — log-bucketed latency distribution
+//!   with exact-bound p50/p95/p99 (see [`hist`]).
+//!
+//! The registry mirrors the [`TraceSink`](crate::sim::trace::TraceSink)
+//! zero-cost pattern: when disabled (`CAMUY_TELEMETRY=0` or
+//! [`set_enabled`]`(false)`) every counter add and histogram record is
+//! one relaxed boolean load, and [`Timer`] never reads the clock. The
+//! api bench gates the enabled-path overhead at ≤3% on the memo-hot
+//! serve path (`benches/api_engine.rs`).
+//!
+//! [`Telemetry::snapshot`] copies every metric into a plain
+//! [`TelemetrySnapshot`]; `Engine::stats` attaches the engine-owned
+//! sections (eval cache, plan cache, network stores) and the result
+//! renders to JSON or to a Perfetto counter trace
+//! ([`TelemetrySnapshot::perfetto_counters`]) that loads side by side
+//! with simulator traces in ui.perfetto.dev.
+
+pub mod hist;
+
+pub use hist::{Histogram, HistogramSnapshot};
+
+use crate::model::workload::EvalCacheStats;
+use crate::sweep::plan::PlanCacheStats;
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Stripes per counter/gauge. Power of two; one cache line each.
+const STRIPES: usize = 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+/// Whether the registry is recording. One relaxed load — this is the
+/// branch every hot-path hook pays when telemetry is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off at runtime (the bench harness measures both
+/// sides of this switch). Gauges keep tracking either way.
+pub fn set_enabled(on: bool) {
+    init_from_env();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Apply the `CAMUY_TELEMETRY=0` environment opt-out exactly once, so a
+/// later explicit [`set_enabled`] can never be overwritten by it.
+fn init_from_env() {
+    ENV_INIT.get_or_init(|| {
+        if std::env::var("CAMUY_TELEMETRY").is_ok_and(|v| v.trim() == "0") {
+            ENABLED.store(false, Ordering::Relaxed);
+        }
+    });
+}
+
+/// This thread's stripe: assigned round-robin on first use, so threads
+/// spread across the [`STRIPES`] cells instead of hashing to collisions.
+fn stripe_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static STRIPE: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    STRIPE.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            s.set(v);
+        }
+        v & (STRIPES - 1)
+    })
+}
+
+/// One stripe, padded to a cache line so neighbours never false-share.
+#[repr(align(64))]
+#[derive(Debug)]
+struct PadU64(AtomicU64);
+
+#[repr(align(64))]
+#[derive(Debug)]
+struct PadI64(AtomicI64);
+
+/// A monotone counter striped across padded cells. `add` is one relaxed
+/// `fetch_add` on this thread's stripe when enabled; `get` sums stripes.
+#[derive(Debug)]
+pub struct Counter {
+    stripes: [PadU64; STRIPES],
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter {
+            stripes: std::array::from_fn(|_| PadU64(AtomicU64::new(0))),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.stripes[stripe_index()].0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Point-in-time total. Monotone between calls on a quiet registry.
+    pub fn get(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// A signed level (queue depth, parked workers) with the same striping.
+/// Never gated on [`enabled`]: see the module docs on inc/dec pairing.
+#[derive(Debug)]
+pub struct Gauge {
+    stripes: [PadI64; STRIPES],
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge {
+            stripes: std::array::from_fn(|_| PadI64(AtomicI64::new(0))),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.stripes[stripe_index()].0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    /// Point-in-time level (sum of stripes). A snapshot racing an inc on
+    /// one stripe and its dec on another can transiently read -1 or +1
+    /// off; snapshots clamp at zero for display.
+    pub fn get(&self) -> i64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Number of wire request kinds ([`ReqKind::ALL`]).
+const REQ_KINDS: usize = 10;
+
+/// Every request kind the API answers, in wire-name order. One latency
+/// histogram and one count/error counter pair per kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqKind {
+    Eval,
+    Sweep,
+    Pareto,
+    EqualPe,
+    Memory,
+    Graph,
+    Trace,
+    Register,
+    Zoo,
+    Stats,
+}
+
+impl ReqKind {
+    pub const ALL: [ReqKind; REQ_KINDS] = [
+        ReqKind::Eval,
+        ReqKind::Sweep,
+        ReqKind::Pareto,
+        ReqKind::EqualPe,
+        ReqKind::Memory,
+        ReqKind::Graph,
+        ReqKind::Trace,
+        ReqKind::Register,
+        ReqKind::Zoo,
+        ReqKind::Stats,
+    ];
+
+    /// The wire `"type"` string for this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReqKind::Eval => "eval",
+            ReqKind::Sweep => "sweep",
+            ReqKind::Pareto => "pareto",
+            ReqKind::EqualPe => "equal_pe",
+            ReqKind::Memory => "memory",
+            ReqKind::Graph => "graph",
+            ReqKind::Trace => "trace",
+            ReqKind::Register => "register",
+            ReqKind::Zoo => "zoo",
+            ReqKind::Stats => "stats",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// The `ApiError::kind()` strings the wire-error counters track, plus a
+/// catch-all. Keep in sync with [`crate::api::ApiError::kind`].
+const ERROR_KINDS: [&str; 6] =
+    ["unknown_network", "invalid_config", "bad_json", "bad_request", "invalid_network", "other"];
+
+/// The process-global registry. Obtain it with [`global`]; every field
+/// is safe to hit from any thread without coordination.
+#[derive(Debug)]
+pub struct Telemetry {
+    start: Instant,
+    req_count: [Counter; REQ_KINDS],
+    req_errors: [Counter; REQ_KINDS],
+    req_latency: [Histogram; REQ_KINDS],
+    /// Raw request bytes read off the serve wire (newline included).
+    pub serve_bytes_in: Counter,
+    /// Response bytes written back (newline included).
+    pub serve_bytes_out: Counter,
+    /// Batches flushed through the adaptive batcher.
+    pub serve_batches: Counter,
+    /// TCP connections accepted.
+    pub serve_connections: Counter,
+    /// Requests per flushed batch.
+    pub serve_batch_size: Histogram,
+    wire_errors: [Counter; ERROR_KINDS.len()],
+    /// Jobs submitted through the persistent pool (pooled path only —
+    /// the serial fast path never queues).
+    pub pool_jobs: Counter,
+    /// Chunks claimed by executors (workers and submitting callers).
+    pub pool_chunks: Counter,
+    /// Jobs picked up by a worker off the shared queue.
+    pub pool_steals: Counter,
+    /// Jobs currently submitted and not yet complete.
+    pub pool_queue_depth: Gauge,
+    /// Workers currently blocked on the work condvar.
+    pub pool_workers_parked: Gauge,
+    /// Wall-clock per pooled job, submit to completion (nanoseconds).
+    pub pool_job_latency: Histogram,
+    /// Sweep cells evaluated through the segmented production cores.
+    pub sweep_cells: Counter,
+}
+
+impl Telemetry {
+    fn new() -> Telemetry {
+        Telemetry {
+            start: Instant::now(),
+            req_count: std::array::from_fn(|_| Counter::new()),
+            req_errors: std::array::from_fn(|_| Counter::new()),
+            req_latency: std::array::from_fn(|_| Histogram::new()),
+            serve_bytes_in: Counter::new(),
+            serve_bytes_out: Counter::new(),
+            serve_batches: Counter::new(),
+            serve_connections: Counter::new(),
+            serve_batch_size: Histogram::new(),
+            wire_errors: std::array::from_fn(|_| Counter::new()),
+            pool_jobs: Counter::new(),
+            pool_chunks: Counter::new(),
+            pool_steals: Counter::new(),
+            pool_queue_depth: Gauge::new(),
+            pool_workers_parked: Gauge::new(),
+            pool_job_latency: Histogram::new(),
+            sweep_cells: Counter::new(),
+        }
+    }
+
+    /// Count one answered request of `kind` and record its latency.
+    #[inline]
+    pub fn observe_request(&self, kind: ReqKind, latency: Duration) {
+        let i = kind.index();
+        self.req_count[i].add(1);
+        self.req_latency[i].record(latency.as_nanos() as u64);
+    }
+
+    /// Count one failed request of `kind` (the request is still counted
+    /// in `observe_request` — errors are a subset, not a disjoint set).
+    pub fn record_request_error(&self, kind: ReqKind) {
+        self.req_errors[kind.index()].add(1);
+    }
+
+    /// Count one wire-level error by its `ApiError::kind()` string.
+    /// Unknown strings land in the `"other"` catch-all.
+    pub fn record_error_kind(&self, kind: &str) {
+        let known = ERROR_KINDS.iter().position(|&k| k == kind);
+        self.wire_errors[known.unwrap_or(ERROR_KINDS.len() - 1)].add(1);
+    }
+
+    /// Time since the registry was first touched.
+    pub fn uptime(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Copy every metric into a plain snapshot. The engine-owned
+    /// sections (`eval_cache`, `plan_cache`, `networks`) stay `None`
+    /// here; `Engine::stats` fills them.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let requests = ReqKind::ALL
+            .iter()
+            .map(|&k| RequestStats {
+                kind: k.name(),
+                count: self.req_count[k.index()].get(),
+                errors: self.req_errors[k.index()].get(),
+                latency: self.req_latency[k.index()].snapshot(),
+            })
+            .collect();
+        let mut errors = Vec::new();
+        for (k, c) in ERROR_KINDS.iter().zip(&self.wire_errors) {
+            errors.push((*k, c.get()));
+        }
+        TelemetrySnapshot {
+            enabled: enabled(),
+            uptime: self.uptime(),
+            requests,
+            bytes_in: self.serve_bytes_in.get(),
+            bytes_out: self.serve_bytes_out.get(),
+            batches: self.serve_batches.get(),
+            connections: self.serve_connections.get(),
+            batch_size: self.serve_batch_size.snapshot(),
+            errors,
+            pool: PoolStats {
+                workers: crate::runtime::pool::global().workers(),
+                jobs: self.pool_jobs.get(),
+                chunks: self.pool_chunks.get(),
+                steals: self.pool_steals.get(),
+                queue_depth: self.pool_queue_depth.get().max(0),
+                workers_parked: self.pool_workers_parked.get().max(0),
+                job_latency: self.pool_job_latency.snapshot(),
+            },
+            sweep_cells: self.sweep_cells.get(),
+            eval_cache: None,
+            plan_cache: None,
+            networks: None,
+        }
+    }
+}
+
+/// The process-wide registry. First use applies the `CAMUY_TELEMETRY`
+/// environment opt-out and starts the uptime clock.
+pub fn global() -> &'static Telemetry {
+    static REGISTRY: OnceLock<Telemetry> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        init_from_env();
+        Telemetry::new()
+    })
+}
+
+/// Times one hot-path interval. When telemetry is disabled at `start`,
+/// the clock is never read — the whole timer is two branches.
+#[derive(Debug)]
+pub struct Timer(Option<Instant>);
+
+impl Timer {
+    #[inline]
+    pub fn start() -> Timer {
+        if enabled() {
+            Timer(Some(Instant::now()))
+        } else {
+            Timer(None)
+        }
+    }
+
+    /// Record the elapsed interval as one answered request of `kind`.
+    #[inline]
+    pub fn observe_request(self, kind: ReqKind) {
+        if let Some(t0) = self.0 {
+            global().observe_request(kind, t0.elapsed());
+        }
+    }
+
+    /// Record the elapsed interval (nanoseconds) into `hist`.
+    #[inline]
+    pub fn observe_into(self, hist: &Histogram) {
+        if let Some(t0) = self.0 {
+            hist.record(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// One request kind's traffic in a snapshot.
+#[derive(Debug, Clone)]
+pub struct RequestStats {
+    pub kind: &'static str,
+    pub count: u64,
+    pub errors: u64,
+    pub latency: HistogramSnapshot,
+}
+
+/// Pool health in a snapshot (gauges clamped at zero for display).
+#[derive(Debug, Clone)]
+pub struct PoolStats {
+    pub workers: usize,
+    pub jobs: u64,
+    pub chunks: u64,
+    pub steals: u64,
+    pub queue_depth: i64,
+    pub workers_parked: i64,
+    pub job_latency: HistogramSnapshot,
+}
+
+/// A point-in-time copy of the whole registry, plus the engine-owned
+/// sections `Engine::stats` attaches (`None` for a bare registry
+/// snapshot). This is the payload of a `StatsResponse`.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    pub enabled: bool,
+    pub uptime: Duration,
+    /// One entry per [`ReqKind::ALL`] member, in that order.
+    pub requests: Vec<RequestStats>,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub batches: u64,
+    pub connections: u64,
+    pub batch_size: HistogramSnapshot,
+    /// Wire-level error counts, one per [`ApiError::kind`] string.
+    ///
+    /// [`ApiError::kind`]: crate::api::ApiError::kind
+    pub errors: Vec<(&'static str, u64)>,
+    pub pool: PoolStats,
+    pub sweep_cells: u64,
+    pub eval_cache: Option<EvalCacheStats>,
+    pub plan_cache: Option<PlanCacheStats>,
+    /// (zoo, user-registered) network-store sizes.
+    pub networks: Option<(usize, usize)>,
+}
+
+impl TelemetrySnapshot {
+    /// Traffic for one request kind.
+    pub fn request(&self, kind: ReqKind) -> &RequestStats {
+        &self.requests[kind.index()]
+    }
+
+    /// Total answered requests across every kind.
+    pub fn total_requests(&self) -> u64 {
+        self.requests.iter().map(|r| r.count).sum()
+    }
+
+    /// Every kind's latency histogram merged into one process-wide
+    /// request-latency distribution.
+    pub fn request_latency(&self) -> HistogramSnapshot {
+        let mut merged = HistogramSnapshot::default();
+        for r in &self.requests {
+            merged.merge(&r.latency);
+        }
+        merged
+    }
+
+    /// Render the snapshot as the stats JSON document (DESIGN.md §14).
+    /// With `include_buckets`, every histogram carries its raw sparse
+    /// bucket array.
+    pub fn to_json(&self, include_buckets: bool) -> Json {
+        let mut requests = Vec::new();
+        for r in &self.requests {
+            let fields = vec![
+                ("count", Json::num(r.count as f64)),
+                ("errors", Json::num(r.errors as f64)),
+                ("latency", r.latency.to_json(include_buckets)),
+            ];
+            requests.push((r.kind, Json::obj(fields)));
+        }
+        let mut errors = Vec::new();
+        for &(k, n) in &self.errors {
+            errors.push((k, Json::num(n as f64)));
+        }
+        let serve = Json::obj(vec![
+            ("bytes_in", Json::num(self.bytes_in as f64)),
+            ("bytes_out", Json::num(self.bytes_out as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("connections", Json::num(self.connections as f64)),
+            ("batch_size", self.batch_size.to_json(include_buckets)),
+            ("errors", Json::obj(errors)),
+        ]);
+        let pool = Json::obj(vec![
+            ("workers", Json::num(self.pool.workers as f64)),
+            ("jobs", Json::num(self.pool.jobs as f64)),
+            ("chunks", Json::num(self.pool.chunks as f64)),
+            ("steals", Json::num(self.pool.steals as f64)),
+            ("queue_depth", Json::num(self.pool.queue_depth as f64)),
+            ("workers_parked", Json::num(self.pool.workers_parked as f64)),
+            ("job_latency", self.pool.job_latency.to_json(include_buckets)),
+        ]);
+        let sweep = Json::obj(vec![("cells_evaluated", Json::num(self.sweep_cells as f64))]);
+        let mut pairs = vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("uptime_seconds", Json::num(self.uptime.as_secs_f64())),
+            ("requests", Json::obj(requests)),
+            ("request_latency", self.request_latency().to_json(include_buckets)),
+            ("serve", serve),
+            ("pool", pool),
+            ("sweep", sweep),
+        ];
+        if let Some(ec) = &self.eval_cache {
+            pairs.push(("eval_cache", eval_cache_json(ec)));
+        }
+        if let Some(pc) = &self.plan_cache {
+            pairs.push(("plan_cache", plan_cache_json(pc)));
+        }
+        if let Some((zoo, user)) = self.networks {
+            let fields = vec![("zoo", Json::num(zoo as f64)), ("user", Json::num(user as f64))];
+            pairs.push(("networks", Json::obj(fields)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Export the snapshot as a Perfetto counter-track document, built
+    /// by the same writer the event-driven simulator uses, so engine
+    /// health loads side by side with hardware traces in
+    /// ui.perfetto.dev.
+    pub fn perfetto_counters(&self) -> Json {
+        perfetto_counters_from_json(&self.to_json(false), self.uptime)
+    }
+}
+
+fn eval_cache_json(s: &EvalCacheStats) -> Json {
+    let mut shards = Vec::new();
+    for sh in &s.shards {
+        shards.push(Json::obj(vec![
+            ("entries", Json::num(sh.entries as f64)),
+            ("hits", Json::num(sh.hits as f64)),
+            ("misses", Json::num(sh.misses as f64)),
+            ("evictions", Json::num(sh.evictions as f64)),
+            ("hit_rate", Json::num(sh.hit_rate())),
+        ]));
+    }
+    Json::obj(vec![
+        ("entries", Json::num(s.entries as f64)),
+        ("capacity", Json::num(s.capacity as f64)),
+        ("hits", Json::num(s.hits as f64)),
+        ("misses", Json::num(s.misses as f64)),
+        ("evictions", Json::num(s.evictions as f64)),
+        ("hit_rate", Json::num(s.hit_rate())),
+        ("shards", Json::arr(shards)),
+    ])
+}
+
+fn plan_cache_json(s: &PlanCacheStats) -> Json {
+    Json::obj(vec![
+        ("entries", Json::num(s.entries as f64)),
+        ("table_words", Json::num(s.table_words as f64)),
+        ("hits", Json::num(s.hits as f64)),
+        ("misses", Json::num(s.misses as f64)),
+        ("hit_rate", Json::num(s.hit_rate())),
+    ])
+}
+
+/// Flatten any stats JSON document into a Perfetto counter trace: one
+/// `"C"` track per numeric leaf, named by its dotted path, sampled at
+/// t=0 and t=uptime. Shared by the local snapshot export and `camuy
+/// stats --connect --perfetto` (which only ever holds the remote JSON).
+/// Arrays (raw histogram buckets, per-shard lists) are skipped — they
+/// are distributions, not levels.
+pub fn perfetto_counters_from_json(doc: &Json, uptime: Duration) -> Json {
+    let mut samples: Vec<(String, f64)> = Vec::new();
+    flatten_numeric(doc, "", &mut samples);
+    crate::sim::trace::perfetto_counter_doc("camuy engine", uptime.as_micros() as u64, &samples)
+}
+
+fn flatten_numeric(v: &Json, path: &str, out: &mut Vec<(String, f64)>) {
+    match v {
+        Json::Obj(map) => {
+            for (k, val) in map {
+                let p = if path.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{path}.{k}")
+                };
+                flatten_numeric(val, &p, out);
+            }
+        }
+        Json::Num(x) => out.push((path.to_string(), *x)),
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that read or toggle the process-global enable flag hold
+    /// this lock so a concurrently running toggle test cannot drop
+    /// their increments (the test harness runs tests in parallel).
+    static FLAG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn lock_flag() -> std::sync::MutexGuard<'static, ()> {
+        FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn req_kind_table_is_consistent() {
+        assert_eq!(ReqKind::ALL.len(), REQ_KINDS);
+        for (i, k) in ReqKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "{} out of order", k.name());
+        }
+        let names: std::collections::HashSet<&str> =
+            ReqKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), REQ_KINDS, "duplicate wire names");
+    }
+
+    #[test]
+    fn counters_sum_across_threads_without_losing_increments() {
+        let _g = lock_flag();
+        let c = Counter::new();
+        set_enabled(true);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = &c;
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.add(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn gauge_pairs_return_to_zero() {
+        let g = Gauge::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let g = &g;
+                s.spawn(move || {
+                    for _ in 0..1_000 {
+                        g.inc();
+                        g.dec();
+                    }
+                });
+            }
+        });
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn snapshot_reflects_observed_requests() {
+        let _g = lock_flag();
+        let t = Telemetry::new();
+        set_enabled(true);
+        t.observe_request(ReqKind::Eval, Duration::from_micros(100));
+        t.observe_request(ReqKind::Eval, Duration::from_micros(200));
+        t.observe_request(ReqKind::Sweep, Duration::from_millis(5));
+        t.record_request_error(ReqKind::Sweep);
+        t.record_error_kind("bad_json");
+        t.record_error_kind("no_such_kind");
+        let s = t.snapshot();
+        assert_eq!(s.request(ReqKind::Eval).count, 2);
+        assert_eq!(s.request(ReqKind::Eval).errors, 0);
+        assert_eq!(s.request(ReqKind::Sweep).count, 1);
+        assert_eq!(s.request(ReqKind::Sweep).errors, 1);
+        assert_eq!(s.total_requests(), 3);
+        let merged = s.request_latency();
+        assert_eq!(merged.count, 3);
+        assert!(merged.quantile(0.99) >= 5_000_000);
+        let errs: std::collections::BTreeMap<&str, u64> = s.errors.iter().copied().collect();
+        assert_eq!(errs["bad_json"], 1);
+        assert_eq!(errs["other"], 1);
+    }
+
+    #[test]
+    fn stats_json_has_the_documented_shape() {
+        let _g = lock_flag();
+        let t = Telemetry::new();
+        set_enabled(true);
+        t.observe_request(ReqKind::Eval, Duration::from_micros(50));
+        let mut snap = t.snapshot();
+        snap.eval_cache = Some(EvalCacheStats::default());
+        snap.plan_cache = Some(PlanCacheStats::default());
+        snap.networks = Some((12, 0));
+        let j = snap.to_json(false);
+        let eval = j.get("requests").and_then(|r| r.get("eval")).unwrap();
+        assert_eq!(eval.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(eval.get("latency").and_then(|l| l.get("p99")).is_some());
+        let merged = j.get("request_latency").unwrap();
+        assert!(merged.get("p50").is_some());
+        assert!(j.get("pool").and_then(|p| p.get("queue_depth")).is_some());
+        assert!(j.get("serve").and_then(|s| s.get("errors")).is_some());
+        let ec = j.get("eval_cache").unwrap();
+        assert!(ec.get("hit_rate").is_some());
+        let pc = j.get("plan_cache").unwrap();
+        assert!(pc.get("entries").is_some());
+        let zoo = j.get("networks").and_then(|n| n.get("zoo"));
+        assert_eq!(zoo.and_then(Json::as_f64), Some(12.0));
+    }
+
+    #[test]
+    fn perfetto_export_tracks_every_numeric_leaf() {
+        let _g = lock_flag();
+        let t = Telemetry::new();
+        set_enabled(true);
+        t.observe_request(ReqKind::Eval, Duration::from_micros(50));
+        let doc = t.snapshot().perfetto_counters();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let is_counter = |e: &Json| e.get("ph").and_then(Json::as_str) == Some("C");
+        let name_of = |e: &Json| e.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        let names: Vec<String> = events.iter().filter(|e| is_counter(e)).map(name_of).collect();
+        assert!(names.iter().any(|n| n == "requests.eval.count"), "{names:?}");
+        assert!(names.iter().any(|n| n == "pool.queue_depth"));
+        assert!(names.iter().any(|n| n == "uptime_seconds"));
+        // Counter values ride in args.value, the shape the simulator's
+        // counter tracks use, so both documents load identically.
+        let ev = events.iter().find(|e| is_counter(e)).unwrap();
+        assert!(ev.get("args").and_then(|a| a.get("value")).is_some());
+    }
+
+    #[test]
+    fn disabling_telemetry_stops_counters_but_not_gauges() {
+        let _g = lock_flag();
+        let t = Telemetry::new();
+        set_enabled(false);
+        t.observe_request(ReqKind::Graph, Duration::from_micros(1));
+        t.pool_jobs.add(1);
+        t.pool_queue_depth.inc();
+        let s = t.snapshot();
+        set_enabled(true);
+        assert_eq!(s.request(ReqKind::Graph).count, 0);
+        assert_eq!(s.pool.jobs, 0);
+        assert_eq!(s.pool.queue_depth, 1);
+        assert!(!s.enabled);
+    }
+}

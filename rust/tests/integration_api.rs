@@ -3,14 +3,15 @@
 //! JSON-lines serve loop (stdin-shaped and TCP).
 
 use camuy::api::{
-    ApiError, Engine, EvalRequest, EvalResponse, ParetoRequest, ServeOptions, SweepRequest,
-    SweepSpec,
+    ApiError, Engine, EvalRequest, EvalResponse, ParetoRequest, ServeOptions, StatsRequest,
+    SweepRequest, SweepSpec,
 };
 use camuy::config::{ArrayConfig, ConfigError};
 use camuy::coordinator::Coordinator;
 use camuy::model::layer::{Layer, SpatialDims};
 use camuy::model::network::Network;
 use camuy::model::workload::Workload;
+use camuy::telemetry::{ReqKind, TelemetrySnapshot};
 use camuy::util::json::Json;
 
 /// A 16x16 conv stack plus a classifier head: 8*16*16 = 2048 features.
@@ -551,4 +552,137 @@ fn serve_answers_graph_requests() {
             .as_str(),
         Some("unknown_network")
     );
+}
+
+#[test]
+fn telemetry_counters_are_monotone_across_replayed_batches() {
+    camuy::telemetry::set_enabled(true);
+    let engine = Engine::new();
+    let input = concat!(
+        "{\"id\":1,\"type\":\"eval\",\"net\":\"alexnet\",",
+        "\"config\":{\"height\":16,\"width\":16}}\n",
+        "{\"id\":2,\"type\":\"eval\",\"net\":\"alexnet\",",
+        "\"config\":{\"height\":24,\"width\":16}}\n",
+        "{\"id\":3,\"type\":\"memory\",\"net\":\"alexnet\"}\n",
+    );
+    let evals = |s: &TelemetrySnapshot| s.request(ReqKind::Eval).count;
+    let mems = |s: &TelemetrySnapshot| s.request(ReqKind::Memory).count;
+    let stats = |s: &TelemetrySnapshot| s.request(ReqKind::Stats).count;
+
+    let before = engine.stats(&StatsRequest::default()).snapshot;
+    let first = serve_str(&engine, input, &ServeOptions::default());
+    for r in &first {
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    }
+    let mid = engine.stats(&StatsRequest::default()).snapshot;
+    serve_str(&engine, input, &ServeOptions::default());
+    let after = engine.stats(&StatsRequest::default()).snapshot;
+
+    // The registry is process-global and the harness runs tests
+    // concurrently, so every assertion is a monotone delta (>=) over
+    // this test's own traffic, never an exact total.
+    assert!(evals(&mid) >= evals(&before) + 2);
+    assert!(evals(&after) >= evals(&mid) + 2);
+    assert!(mems(&after) >= mems(&before) + 2);
+    assert!(stats(&after) >= stats(&before) + 2);
+    assert!(after.batches >= before.batches + 2);
+    assert!(after.bytes_in > before.bytes_in);
+    assert!(after.bytes_out > before.bytes_out);
+    assert!(after.total_requests() >= before.total_requests() + 8);
+
+    // The second replay answers from this engine's memo table, and the
+    // attached per-shard stats stay consistent with the aggregate.
+    let ec = after.eval_cache.expect("eval-cache stats attached");
+    assert!(ec.hits >= 2);
+    assert_eq!(ec.entries, engine.cache().len());
+    let shard_entries: usize = ec.shards.iter().map(|s| s.entries).sum();
+    assert_eq!(shard_entries, ec.entries);
+    assert!(after.networks.is_some());
+}
+
+#[test]
+fn telemetry_quantiles_bracket_observed_latencies() {
+    camuy::telemetry::set_enabled(true);
+    let engine = Engine::new();
+    for h in [16usize, 24, 32, 40, 48, 56, 64, 72] {
+        let req = EvalRequest::new("alexnet", ArrayConfig::new(h, 16));
+        engine.eval(&req).unwrap();
+        engine.eval(&req).unwrap();
+    }
+    let snap = engine.stats(&StatsRequest::default()).snapshot;
+    let lat = &snap.request(ReqKind::Eval).latency;
+    assert!(lat.count >= 16);
+    assert!(lat.max > 0, "evals take nonzero time");
+
+    // Quantiles are exact bucket bounds clamped to the recorded range,
+    // so they are ordered and bracketed by [min, max].
+    let p50 = lat.quantile(0.50);
+    let p95 = lat.quantile(0.95);
+    let p99 = lat.quantile(0.99);
+    assert!(lat.min <= p50);
+    assert!(p50 <= p95 && p95 <= p99);
+    assert!(p99 <= lat.max);
+    let mean = lat.mean();
+    assert!((lat.min as f64..=lat.max as f64).contains(&mean));
+
+    // The merged all-kinds histogram contains at least these samples.
+    let merged = snap.request_latency();
+    assert!(merged.count >= lat.count);
+    assert!(merged.max >= lat.max && merged.min <= lat.min);
+}
+
+#[test]
+fn serve_tcp_answers_a_stats_request() {
+    use std::io::{BufRead, BufReader, Write};
+
+    camuy::telemetry::set_enabled(true);
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 2,
+        batch_max: 8,
+        max_connections: Some(1),
+        ..ServeOptions::default()
+    };
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+        // Drive one eval first so the stats that follow have traffic.
+        stream
+            .write_all(
+                b"{\"id\":8,\"type\":\"eval\",\"net\":\"alexnet\",\
+                  \"config\":{\"height\":16,\"width\":16}}\n",
+            )
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let eval = Json::parse(line.trim()).unwrap();
+        assert_eq!(eval.get("ok").unwrap().as_bool(), Some(true));
+
+        stream.write_all(b"{\"id\":9,\"type\":\"stats\"}\n").unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
+
+        let r = v.get("result").unwrap();
+        assert_eq!(r.get("enabled").unwrap().as_bool(), Some(true));
+        let eval = r.get("requests").unwrap().get("eval").unwrap();
+        assert!(eval.get("count").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(eval.get("latency").unwrap().get("p99").is_some());
+        assert!(r.get("request_latency").unwrap().get("p50").is_some());
+        let cache = r.get("eval_cache").unwrap();
+        assert!(cache.get("hit_rate").is_some());
+        assert!(!cache.get("shards").unwrap().as_arr().unwrap().is_empty());
+        assert!(r.get("plan_cache").unwrap().get("entries").is_some());
+        assert!(r.get("pool").unwrap().get("queue_depth").is_some());
+        let sv = r.get("serve").unwrap();
+        assert!(sv.get("bytes_in").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("networks").is_some());
+    });
 }

@@ -147,3 +147,48 @@ fn concurrent_eval_batches_match_individual_evals() {
         }
     });
 }
+
+#[test]
+fn telemetry_loses_no_increments_under_concurrent_clients() {
+    use camuy::api::{MemoryRequest, StatsRequest};
+    use camuy::config::EnergyWeights;
+    use camuy::telemetry::ReqKind;
+
+    camuy::telemetry::set_enabled(true);
+    let engine = Engine::new();
+    let threads = 8usize;
+    let per_thread = 200u64;
+    let before = engine.stats(&StatsRequest::default()).snapshot;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let engine = &engine;
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let h = 8 + 8 * ((t + i as usize) % 4);
+                    let req = MemoryRequest {
+                        net: "alexnet".to_string(),
+                        batch: None,
+                        config: ArrayConfig::new(h, 16),
+                        weights: EnergyWeights::paper(),
+                        graph: false,
+                    };
+                    engine.memory(&req).expect("memory request");
+                }
+            });
+        }
+    });
+    let after = engine.stats(&StatsRequest::default()).snapshot;
+
+    // Striped counters must not drop increments under contention. Other
+    // tests in this binary run concurrently against the same process-wide
+    // registry, so the observed delta is a floor, never an exact count.
+    let want = threads as u64 * per_thread;
+    let delta = after.request(ReqKind::Memory).count - before.request(ReqKind::Memory).count;
+    assert!(delta >= want, "lost increments: {delta} < {want}");
+    let lat_before = before.request(ReqKind::Memory).latency.count;
+    let lat_after = after.request(ReqKind::Memory).latency.count;
+    assert!(lat_after >= lat_before + want);
+    let stats_before = before.request(ReqKind::Stats).count;
+    let stats_after = after.request(ReqKind::Stats).count;
+    assert!(stats_after > stats_before, "stats requests count themselves");
+}
