@@ -9,8 +9,10 @@
 //!
 //! `CAMUY_BENCH_SMOKE=1` is the CI gate: the process fails (exit 1) if
 //! batched fan-out throughput on the persistent pool drops below the
-//! per-call-spawn baseline, or if the telemetry-enabled memo-hot path
-//! costs more than 3% over the disabled one (DESIGN.md §14).
+//! per-call-spawn baseline, if the telemetry-enabled memo-hot path
+//! costs more than 3% over the disabled one (DESIGN.md §14), or if the
+//! per-request deadline guard costs more than 3% over the bare loop
+//! (DESIGN.md §15).
 
 use camuy::api::{Engine, EvalRequest, SweepRequest, SweepSpec};
 use camuy::config::ArrayConfig;
@@ -165,6 +167,40 @@ fn main() {
         100.0 * (tel_overhead - 1.0),
     );
 
+    // --- deadline-check overhead: the memo-hot eval loop with the full
+    // per-request guard the serve tier applies to deadline-carrying
+    // requests — a fresh token, the ambient install, checkpoint polls at
+    // every chunk boundary, and the `catch_unwind` isolation — vs the
+    // bare loop. The deadline is far in the future so no request ever
+    // cancels; what is measured is purely the cost of being cancellable
+    // (DESIGN.md §15). Must stay within 3% best-over-best.
+    println!("\n== api: deadline-guard overhead on the memo-hot path ==");
+    let deadline_on = bench("api/eval_memo_hot_deadline_on", &fan_opts, || {
+        reqs.iter()
+            .map(|r| {
+                let token = camuy::robust::CancelToken::with_deadline_ms(60_000);
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    camuy::robust::with_token(&token, || {
+                        warm_engine.eval(r).unwrap().total().cycles
+                    })
+                }));
+                run.expect("a 60 s deadline never fires on a memo-hot eval")
+            })
+            .sum::<u64>()
+    });
+    let deadline_off = bench("api/eval_memo_hot_deadline_off", &fan_opts, || {
+        reqs.iter()
+            .map(|r| warm_engine.eval(r).unwrap().total().cycles)
+            .sum::<u64>()
+    });
+    let deadline_overhead = deadline_on.seconds.min / deadline_off.seconds.min;
+    println!(
+        "   -> {:.0} req/s guarded, {:.0} req/s bare ({:+.1}% best-over-best)",
+        throughput(&deadline_on, n),
+        throughput(&deadline_off, n),
+        100.0 * (deadline_overhead - 1.0),
+    );
+
     // --- serve-mode repeated sweeps: segment-table reuse via the
     // engine-level plan cache (DESIGN.md §10). The same engine answers the
     // same sweep request over and over; the baseline clears the plan cache
@@ -228,6 +264,9 @@ fn main() {
         ("telemetry_on", variant(&tel_on)),
         ("telemetry_off", variant(&tel_off)),
         ("overhead_telemetry_on_over_off", Json::num(tel_overhead)),
+        ("deadline_on", variant(&deadline_on)),
+        ("deadline_off", variant(&deadline_off)),
+        ("overhead_deadline_on_over_off", Json::num(deadline_overhead)),
         ("sweep_repeat_plan_cold", sweep_variant(&sweep_nocache)),
         ("sweep_repeat_plan_hot", sweep_variant(&sweep_cached)),
         (
@@ -278,6 +317,16 @@ fn main() {
         }
         println!(
             "smoke gate passed: telemetry overhead {tel_overhead:.3}x (budget 1.03x)"
+        );
+        if deadline_overhead > 1.03 {
+            eprintln!(
+                "FAIL: deadline-guarded memo-hot evals cost {deadline_overhead:.3}x the \
+                 bare path best-over-best (budget 1.03x)"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "smoke gate passed: deadline-guard overhead {deadline_overhead:.3}x (budget 1.03x)"
         );
     }
 }

@@ -47,6 +47,11 @@ use std::sync::{OnceLock, RwLock};
 /// succeeds.
 pub const MAX_USER_NETWORKS: usize = 256;
 
+/// Format version stamped into registry snapshots ([`Engine::snapshot_json`]).
+/// Bump it when the network spec schema changes incompatibly; restore
+/// rejects versions it does not understand (DESIGN.md §15).
+pub const SNAPSHOT_VERSION: usize = 1;
+
 /// The long-lived query engine. See the module docs.
 #[derive(Debug, Default)]
 pub struct Engine {
@@ -171,6 +176,9 @@ impl Engine {
     }
 
     fn register_inner(&self, spec: &Json) -> Result<RegisterResponse, ApiError> {
+        // Before any lock: an injected panic here must never poison the
+        // network stores (DESIGN.md §15).
+        crate::faultpoint::hit("register.inner");
         // `junctions` without `edges` must reach the graph parser so it is
         // rejected loudly instead of silently dropping the junctions.
         let graph = if spec.get("edges").is_some() || spec.get("junctions").is_some() {
@@ -271,6 +279,8 @@ impl Engine {
     }
 
     fn eval_inner(&self, req: &EvalRequest) -> Result<EvalResponse, ApiError> {
+        crate::robust::checkpoint();
+        crate::faultpoint::hit("eval.inner");
         check_config(&req.config)?;
         check_arrays(req.arrays)?;
         let net = self.resolve(&req.net, req.batch)?;
@@ -545,6 +555,83 @@ impl Engine {
                 Ok(g)
             }
         }
+    }
+
+    /// Serialize the registered-network store — chains *and* DAG forms —
+    /// as a versioned snapshot document (DESIGN.md §15):
+    /// `{"version": 1, "kind": "camuy-registry", "networks": [spec, …]}`,
+    /// networks sorted by name for byte-stable output. Graph-registered
+    /// networks export their full DAG spec (edges and junctions
+    /// round-trip), so a restored shard answers graph requests exactly as
+    /// the original did. Zoo networks are never snapshotted — every
+    /// binary rebuilds them.
+    pub fn snapshot_json(&self) -> Json {
+        // nets → graphs is the same order `register_inner` takes its
+        // write locks, so the two read guards cannot deadlock against a
+        // concurrent registration.
+        let nets = self.user_nets.read().expect("user-network store poisoned");
+        let graphs = self.user_graphs.read().expect("user-graph store poisoned");
+        let mut names: Vec<&String> = nets.keys().collect();
+        names.sort();
+        let specs: Vec<Json> = names
+            .into_iter()
+            .map(|name| match graphs.get(name) {
+                Some(g) => g.to_json_spec(),
+                None => nets[name].to_json_spec(),
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(SNAPSHOT_VERSION as f64)),
+            ("kind", Json::str("camuy-registry")),
+            ("networks", Json::arr(specs)),
+        ])
+    }
+
+    /// Re-register every network from a snapshot document produced by
+    /// [`Engine::snapshot_json`]; returns how many were restored. Rejects
+    /// unknown snapshot versions loudly rather than guessing — a future
+    /// format bump must not half-restore a shard. Restoration goes
+    /// through the same validation as wire registration but does not
+    /// count in the request telemetry (a warm start is not traffic).
+    pub fn restore_json(&self, doc: &Json) -> Result<usize, ApiError> {
+        let version = doc.get("version").and_then(Json::as_usize);
+        if version != Some(SNAPSHOT_VERSION) {
+            return Err(ApiError::BadRequest(format!(
+                "unsupported snapshot version {:?} (this build reads version {SNAPSHOT_VERSION})",
+                doc.get("version").map(Json::to_string_compact)
+            )));
+        }
+        let specs = doc
+            .get("networks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ApiError::BadRequest("snapshot has no 'networks' array".into()))?;
+        for spec in specs {
+            self.register_inner(spec)?;
+        }
+        Ok(specs.len())
+    }
+
+    /// Write the registry snapshot to `path` atomically (write to a
+    /// `.tmp` sibling, then rename), so a crash mid-write can never leave
+    /// a truncated snapshot where a good one stood.
+    pub fn snapshot_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        crate::faultpoint::hit("snapshot.write");
+        let doc = self.snapshot_json();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, doc.to_string_pretty() + "\n")?;
+        std::fs::rename(&tmp, path)?;
+        telemetry::global().snapshot_writes.add(1);
+        Ok(())
+    }
+
+    /// Restore the registry from a snapshot file written by
+    /// [`Engine::snapshot_to`]; returns how many networks came back.
+    pub fn restore_from(&self, path: &std::path::Path) -> Result<usize, ApiError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            ApiError::BadRequest(format!("cannot read snapshot {}: {e}", path.display()))
+        })?;
+        let doc = Json::parse(&text).map_err(ApiError::Json)?;
+        self.restore_json(&doc)
     }
 
     /// Graph-connectivity analysis: DAG statistics, tensor liveness with

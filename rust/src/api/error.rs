@@ -24,6 +24,18 @@ pub enum ApiError {
     BadRequest(String),
     /// A network spec failed validation during registration.
     InvalidNetwork(String),
+    /// The request's `deadline_ms` fired before the work finished
+    /// (DESIGN.md §15). `progress` counts the cooperative checkpoints the
+    /// request passed — pool chunks, sweep units, NSGA-II generations —
+    /// before cancellation, so a client can tell "barely started" from
+    /// "almost done" and size its retry deadline accordingly.
+    DeadlineExceeded { deadline_ms: u64, progress: u64 },
+    /// The server shed the request under load (admission queue full or
+    /// connection cap reached); retry after roughly `retry_after_ms`.
+    Overloaded { retry_after_ms: u64 },
+    /// The request panicked and was isolated (DESIGN.md §15); the engine
+    /// and the connection stay healthy. The message is the panic payload.
+    Internal(String),
 }
 
 impl ApiError {
@@ -35,16 +47,36 @@ impl ApiError {
             ApiError::Json(_) => "bad_json",
             ApiError::BadRequest(_) => "bad_request",
             ApiError::InvalidNetwork(_) => "invalid_network",
+            ApiError::DeadlineExceeded { .. } => "deadline_exceeded",
+            ApiError::Overloaded { .. } => "overloaded",
+            ApiError::Internal(_) => "internal",
         }
     }
 
     /// The structured error object embedded in a serve response:
-    /// `{"kind": ..., "message": ...}`.
+    /// `{"kind": ..., "message": ...}`, plus machine-readable detail
+    /// fields for the operational kinds (`deadline_ms`/`progress` on a
+    /// fired deadline, `retry_after_ms` on a shed request) so clients
+    /// never parse the human message.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("kind", Json::str(self.kind())),
             ("message", Json::str(self.to_string())),
-        ])
+        ];
+        match self {
+            ApiError::DeadlineExceeded {
+                deadline_ms,
+                progress,
+            } => {
+                pairs.push(("deadline_ms", Json::num(*deadline_ms as f64)));
+                pairs.push(("progress", Json::num(*progress as f64)));
+            }
+            ApiError::Overloaded { retry_after_ms } => {
+                pairs.push(("retry_after_ms", Json::num(*retry_after_ms as f64)));
+            }
+            _ => {}
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -58,6 +90,18 @@ impl fmt::Display for ApiError {
             ApiError::Json(e) => write!(f, "{e}"),
             ApiError::BadRequest(msg) => write!(f, "bad request: {msg}"),
             ApiError::InvalidNetwork(msg) => write!(f, "invalid network spec: {msg}"),
+            ApiError::DeadlineExceeded {
+                deadline_ms,
+                progress,
+            } => write!(
+                f,
+                "deadline of {deadline_ms} ms exceeded after {progress} checkpoint(s); \
+                 partial work discarded"
+            ),
+            ApiError::Overloaded { retry_after_ms } => {
+                write!(f, "server overloaded; retry after {retry_after_ms} ms")
+            }
+            ApiError::Internal(msg) => write!(f, "internal error: {msg}"),
         }
     }
 }
@@ -89,6 +133,28 @@ mod tests {
         let j = e.to_json();
         assert_eq!(j.get("kind").unwrap().as_str(), Some("unknown_network"));
         assert!(j.get("message").unwrap().as_str().unwrap().contains("lenet-9000"));
+    }
+
+    #[test]
+    fn operational_kinds_carry_structured_detail() {
+        let e = ApiError::DeadlineExceeded {
+            deadline_ms: 250,
+            progress: 17,
+        };
+        assert_eq!(e.kind(), "deadline_exceeded");
+        let j = e.to_json();
+        assert_eq!(j.get("deadline_ms").and_then(Json::as_f64), Some(250.0));
+        assert_eq!(j.get("progress").and_then(Json::as_f64), Some(17.0));
+
+        let e = ApiError::Overloaded { retry_after_ms: 40 };
+        assert_eq!(e.kind(), "overloaded");
+        let j = e.to_json();
+        assert_eq!(j.get("retry_after_ms").and_then(Json::as_f64), Some(40.0));
+
+        let e = ApiError::Internal("boom".into());
+        assert_eq!(e.kind(), "internal");
+        assert!(e.to_string().contains("boom"));
+        assert!(e.to_json().get("retry_after_ms").is_none());
     }
 
     #[test]

@@ -35,11 +35,11 @@ mod request;
 mod response;
 mod serve;
 
-pub use engine::{Engine, MAX_USER_NETWORKS};
+pub use engine::{Engine, MAX_USER_NETWORKS, SNAPSHOT_VERSION};
 pub use error::ApiError;
 pub use request::{
-    ApiRequest, EqualPeRequest, EvalRequest, GraphRequest, MemoryRequest, ParetoRequest,
-    RegisterRequest, StatsRequest, SweepRequest, SweepSpec, TraceRequest,
+    ApiRequest, EqualPeRequest, EvalRequest, GraphRequest, LineMeta, MemoryRequest, ParetoRequest,
+    RegisterRequest, StatsRequest, SweepRequest, SweepSpec, TraceRequest, MAX_DEADLINE_MS,
 };
 pub use response::{
     equal_pe_json, liveness_json, pareto_json, schedule_json, sweep_json, zoo_json, EvalResponse,

@@ -505,14 +505,46 @@ impl ApiRequest {
         }
     }
 
-    /// Decode one JSON-lines request. Returns the request's `"id"` (echoed
-    /// back in the response envelope) alongside the decode result; a line
-    /// that is not JSON at all has no recoverable id.
-    pub fn parse_line(line: &str) -> (Option<Json>, Result<ApiRequest, ApiError>) {
+    /// Decode one JSON-lines request. Returns the envelope metadata — the
+    /// request's `"id"` (echoed back in the response) and its optional
+    /// `"deadline_ms"` budget (DESIGN.md §15) — alongside the decode
+    /// result; a line that is not JSON at all has no recoverable id.
+    pub fn parse_line(line: &str) -> (LineMeta, Result<ApiRequest, ApiError>) {
         match Json::parse(line) {
-            Err(e) => (None, Err(ApiError::Json(e))),
-            Ok(v) => (v.get("id").cloned(), ApiRequest::from_json(&v)),
+            Err(e) => (LineMeta::default(), Err(ApiError::Json(e))),
+            Ok(v) => {
+                let id = v.get("id").cloned();
+                match parse_deadline(&v) {
+                    Err(e) => (LineMeta { id, deadline_ms: None }, Err(e)),
+                    Ok(deadline_ms) => {
+                        (LineMeta { id, deadline_ms }, ApiRequest::from_json(&v))
+                    }
+                }
+            }
         }
+    }
+}
+
+/// Envelope metadata common to every wire request, decoded before the
+/// per-kind body: the echoed `"id"` and the optional `"deadline_ms"`
+/// cancellation budget (DESIGN.md §15).
+#[derive(Debug, Clone, Default)]
+pub struct LineMeta {
+    pub id: Option<Json>,
+    pub deadline_ms: Option<u64>,
+}
+
+/// Ceiling for the wire `deadline_ms` field — far beyond any real request
+/// budget, small enough that the deadline arithmetic can never overflow.
+pub const MAX_DEADLINE_MS: u64 = 86_400_000; // one day
+
+fn parse_deadline(v: &Json) -> Result<Option<u64>, ApiError> {
+    match opt_positive(v, "deadline_ms")? {
+        None => Ok(None),
+        Some(ms) if ms as u64 > MAX_DEADLINE_MS => Err(ApiError::BadRequest(format!(
+            "deadline_ms {ms} exceeds the limit {MAX_DEADLINE_MS}"
+        ))),
+        Some(ms) => Ok(Some(ms as u64)),
     }
 }
 
@@ -743,11 +775,32 @@ mod tests {
 
     #[test]
     fn parse_line_recovers_id() {
-        let (id, req) = ApiRequest::parse_line(r#"{"id":42,"type":"zoo"}"#);
-        assert_eq!(id.unwrap().as_usize(), Some(42));
+        let (meta, req) = ApiRequest::parse_line(r#"{"id":42,"type":"zoo"}"#);
+        assert_eq!(meta.id.unwrap().as_usize(), Some(42));
+        assert_eq!(meta.deadline_ms, None);
         assert!(matches!(req, Ok(ApiRequest::Zoo)));
-        let (id, req) = ApiRequest::parse_line("not json");
-        assert!(id.is_none());
+        let (meta, req) = ApiRequest::parse_line("not json");
+        assert!(meta.id.is_none());
         assert!(matches!(req, Err(ApiError::Json(_))));
+    }
+
+    #[test]
+    fn parse_line_decodes_the_deadline_budget() {
+        let (meta, req) =
+            ApiRequest::parse_line(r#"{"id":7,"type":"eval","net":"alexnet","deadline_ms":250}"#);
+        assert_eq!(meta.deadline_ms, Some(250));
+        assert!(req.is_ok());
+        // Invalid budgets reject the whole request but keep the id so the
+        // error envelope routes back to the right client call.
+        for bad in [
+            r#"{"id":7,"type":"zoo","deadline_ms":0}"#,
+            r#"{"id":7,"type":"zoo","deadline_ms":-3}"#,
+            r#"{"id":7,"type":"zoo","deadline_ms":"fast"}"#,
+            r#"{"id":7,"type":"zoo","deadline_ms":99999999999}"#,
+        ] {
+            let (meta, req) = ApiRequest::parse_line(bad);
+            assert_eq!(meta.id.clone().unwrap().as_usize(), Some(7), "{bad}");
+            assert!(matches!(req, Err(ApiError::BadRequest(_))), "{bad}");
+        }
     }
 }

@@ -6,27 +6,44 @@
 //! batching: an interactive client sees single-request latency, a piped
 //! request file rides the batched path. Within a batch:
 //!
-//! * eval requests go through [`Engine::eval_batch`], which groups them by
-//!   workload and runs their distinct configurations through the
-//!   segmented sweep core once, seeding the engine's shared memo table;
-//! * every other request kind fans out over the process-wide persistent
-//!   pool ([`crate::runtime::pool`], DESIGN.md §11) — nested fan-outs
-//!   (a sweep inside a request) share the same workers, so thread counts
-//!   never multiply and a saturated pool degrades to the caller's thread;
+//! * eval requests without a deadline go through [`Engine::eval_batch`],
+//!   which groups them by workload and runs their distinct configurations
+//!   through the segmented sweep core once, seeding the engine's shared
+//!   memo table;
+//! * every other request kind — and any deadline-carrying eval — fans out
+//!   over the process-wide persistent pool ([`crate::runtime::pool`],
+//!   DESIGN.md §11) through the per-request dispatch guard;
 //! * `register` requests are ordering barriers — everything before one is
 //!   answered first, so a register-then-eval pipeline behaves like the
 //!   sequential program it reads as.
 //!
 //! Responses are envelopes: `{"id": ..., "ok": true, "result": {...}}` or
 //! `{"id": ..., "ok": false, "error": {"kind": ..., "message": ...}}`.
+//!
+//! # Operational hardening (DESIGN.md §15)
+//!
+//! Every request dispatch runs inside a guard ([`dispatch_guarded`]) that
+//! installs the request's [`CancelToken`] when a `"deadline_ms"` field was
+//! sent and catches unwinds: a cooperative-cancellation payload becomes a
+//! typed `deadline_exceeded` error carrying the progress count, any other
+//! panic is isolated as `internal` — the engine, its caches and the
+//! connection stay healthy either way. Compute requests pass an
+//! [`Admission`] gate at batch-assembly time; past its budget they are
+//! shed immediately with `overloaded` + `retry_after_ms`. The TCP front
+//! end installs a SIGTERM flag for graceful drain and writes periodic and
+//! final registry snapshots when `--snapshot` is set.
 
 use super::engine::Engine;
 use super::error::ApiError;
-use super::request::ApiRequest;
+use super::request::{ApiRequest, LineMeta};
 use super::response::{equal_pe_json, pareto_json, sweep_json, zoo_json};
+use crate::robust::{Admission, CancelToken, Cancelled};
 use crate::util::json::Json;
 use std::io::{self, BufRead, Read, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 /// Serve-loop knobs.
 #[derive(Debug, Clone)]
@@ -42,8 +59,18 @@ pub struct ServeOptions {
     /// thread exists per live connection, so this bounds the server's
     /// worst-case thread count at roughly `max_concurrent × host cores`
     /// (each connection runs at most one internally-parallel request at a
-    /// time). Excess connections are closed immediately.
+    /// time). Excess connections get an `overloaded` line, then close.
     pub max_concurrent: usize,
+    /// Most compute requests admitted concurrently (across every
+    /// connection of one TCP server) before load shedding answers
+    /// `overloaded` with a `retry_after_ms` hint (DESIGN.md §15).
+    pub admission_max: usize,
+    /// Write the registered-network store here periodically and on
+    /// graceful drain, so a restarted shard comes back warm via
+    /// `--restore` (DESIGN.md §15).
+    pub snapshot: Option<std::path::PathBuf>,
+    /// Seconds between periodic snapshot writes.
+    pub snapshot_secs: u64,
 }
 
 impl Default for ServeOptions {
@@ -53,6 +80,9 @@ impl Default for ServeOptions {
             batch_max: 64,
             max_connections: None,
             max_concurrent: 64,
+            admission_max: 256,
+            snapshot: None,
+            snapshot_secs: 30,
         }
     }
 }
@@ -64,6 +94,18 @@ pub struct ServeStats {
     pub errors: u64,
     pub batches: u64,
 }
+
+/// One unit off the reader thread: a complete request line, or the
+/// tombstone of one that blew [`MAX_LINE_BYTES`] (answered with a
+/// structured error so the client's id sequence never desynchronizes).
+enum Incoming {
+    Line(String),
+    Oversized,
+}
+
+/// One request per line, each at most this long — a client streaming
+/// bytes without a newline cannot grow memory without bound.
+const MAX_LINE_BYTES: u64 = 4 << 20;
 
 /// Serve JSON-lines requests from `input` until EOF, writing one response
 /// line per request to `out`. Blank lines are skipped.
@@ -77,17 +119,30 @@ where
     R: BufRead + Send,
     W: Write,
 {
+    let admission = Admission::new(opts.admission_max);
+    serve_gated(engine, input, out, opts, &admission)
+}
+
+/// [`serve`] against a caller-owned admission gate — the TCP front end
+/// shares one gate across every connection, so the in-flight budget is a
+/// server property, not a per-connection one.
+fn serve_gated<R, W>(
+    engine: &Engine,
+    input: R,
+    out: &mut W,
+    opts: &ServeOptions,
+    admission: &Admission,
+) -> io::Result<ServeStats>
+where
+    R: BufRead + Send,
+    W: Write,
+{
     let mut stats = ServeStats::default();
     crate::telemetry::global().serve_connections.add(1);
     let batch_max = opts.batch_max.max(1);
-    let (tx, rx) = mpsc::sync_channel::<String>(batch_max);
+    let (tx, rx) = mpsc::sync_channel::<Incoming>(batch_max);
     std::thread::scope(|scope| -> io::Result<()> {
-        let rx = rx;
         scope.spawn(move || {
-            // One request per line, each at most this long — a client
-            // streaming bytes without a newline cannot grow memory
-            // without bound.
-            const MAX_LINE_BYTES: u64 = 4 << 20;
             let mut reader = input;
             let mut line = String::new();
             loop {
@@ -96,18 +151,27 @@ where
                     Ok(0) => break,
                     Ok(_) => {
                         if line.len() as u64 > MAX_LINE_BYTES {
+                            // Resynchronize: discard the rest of the
+                            // oversized line so the *next* line parses,
+                            // and answer this one with a structured error
+                            // instead of desynchronizing the connection.
                             log::warn!(
                                 "serve: request line exceeds {MAX_LINE_BYTES} bytes, \
-                                 closing input"
+                                 skipping to the next newline"
                             );
-                            break;
+                            let resynced =
+                                line.ends_with('\n') || drain_to_newline(&mut reader);
+                            if tx.send(Incoming::Oversized).is_err() || !resynced {
+                                break;
+                            }
+                            continue;
                         }
                         let trimmed = line.trim();
                         if trimmed.is_empty() {
                             continue;
                         }
                         crate::telemetry::global().serve_bytes_in.add(line.len() as u64);
-                        if tx.send(trimmed.to_string()).is_err() {
+                        if tx.send(Incoming::Line(trimmed.to_string())).is_err() {
                             break;
                         }
                     }
@@ -138,7 +202,9 @@ where
                 }
             }
             if write_err.is_none() {
-                if let Err(e) = process_batch(engine, &lines, out, opts, &mut stats) {
+                if let Err(e) =
+                    process_batch(engine, &lines, out, opts, &mut stats, admission)
+                {
                     log::warn!("serve: output error, draining remaining input: {e}");
                     write_err = Some(e);
                 }
@@ -152,9 +218,60 @@ where
     Ok(stats)
 }
 
+/// Discard buffered input up to and including the next newline. Returns
+/// `false` on EOF or a read error (nothing left to resynchronize to).
+fn drain_to_newline<R: BufRead>(reader: &mut R) -> bool {
+    loop {
+        let consumed = match reader.fill_buf() {
+            Ok(buf) if buf.is_empty() => return false,
+            Ok(buf) => match buf.iter().position(|&b| b == b'\n') {
+                Some(p) => {
+                    reader.consume(p + 1);
+                    return true;
+                }
+                None => buf.len(),
+            },
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        };
+        reader.consume(consumed);
+    }
+}
+
+/// The process-wide graceful-shutdown flag the TCP accept loop polls.
+fn term_flag() -> &'static AtomicBool {
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    &FLAG
+}
+
+/// Install the SIGTERM handler (raw syscall shim — the offline image
+/// ships no `libc` crate, DESIGN.md §6). Storing into a static atomic is
+/// async-signal-safe. Returns the flag it sets.
+#[cfg(unix)]
+fn install_sigterm() -> &'static AtomicBool {
+    extern "C" fn on_term(_signum: i32) {
+        term_flag().store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+    }
+    term_flag()
+}
+
+#[cfg(not(unix))]
+fn install_sigterm() -> &'static AtomicBool {
+    term_flag()
+}
+
 /// Accept TCP connections and run [`serve`] per connection, concurrently,
 /// against one shared engine (connections see each other's registered
-/// networks and share the memo table).
+/// networks and share the memo table) and one shared admission gate.
+/// SIGTERM drains gracefully: stop accepting, finish live connections,
+/// write a final snapshot when `--snapshot` is set.
 pub fn serve_tcp(
     engine: &Engine,
     listener: std::net::TcpListener,
@@ -176,31 +293,58 @@ pub fn serve_tcp(
             signal(SIGPIPE, SIG_IGN);
         }
     }
+    let term = install_sigterm();
+    // Nonblocking accepts so the loop can poll the shutdown flag and the
+    // snapshot timer between connections.
+    listener.set_nonblocking(true)?;
+    let admission = Admission::new(opts.admission_max);
     let mut accepted = 0usize;
-    let live = std::sync::atomic::AtomicUsize::new(0);
+    let live = AtomicUsize::new(0);
+    let mut last_snapshot = Instant::now();
     std::thread::scope(|scope| {
-        for conn in listener.incoming() {
-            let stream = match conn {
-                Ok(s) => s,
+        loop {
+            if term.load(Ordering::SeqCst) {
+                log::info!(
+                    "serve: SIGTERM received, draining {} live connection(s)",
+                    live.load(Ordering::Acquire)
+                );
+                break;
+            }
+            let stream = match listener.accept() {
+                Ok((s, _addr)) => s,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    maybe_snapshot(engine, opts, &mut last_snapshot);
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
                 Err(e) => {
                     log::warn!("serve: accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
                     continue;
                 }
             };
-            // A scoped thread lives per connection; refuse beyond the
-            // concurrency cap instead of growing the thread count without
-            // bound. (Dropping the stream closes it.)
-            let live_now = live.load(std::sync::atomic::Ordering::Acquire);
-            if live_now >= opts.max_concurrent.max(1) {
-                log::warn!(
-                    "serve: refusing connection, {live_now} already live (cap {})",
-                    opts.max_concurrent
-                );
+            // The listener is nonblocking for the poll loop, but each
+            // connection's reader must block normally.
+            if let Err(e) = stream.set_nonblocking(false) {
+                log::warn!("serve: could not configure connection: {e}");
                 continue;
             }
-            live.fetch_add(1, std::sync::atomic::Ordering::AcqRel);
+            // A scoped thread lives per connection; shed beyond the
+            // concurrency cap with a structured `overloaded` line instead
+            // of growing the thread count without bound.
+            let live_now = live.load(Ordering::Acquire);
+            if live_now >= opts.max_concurrent.max(1) {
+                log::warn!(
+                    "serve: shedding connection, {live_now} already live (cap {})",
+                    opts.max_concurrent
+                );
+                refuse_connection(stream);
+                continue;
+            }
+            live.fetch_add(1, Ordering::AcqRel);
             let conn_opts = opts.clone();
             let live_ref = &live;
+            let admission_ref = &admission;
             scope.spawn(move || {
                 let peer = stream
                     .peer_addr()
@@ -215,7 +359,7 @@ pub fn serve_tcp(
                 };
                 if let Some(reader) = reader {
                     let mut writer = stream;
-                    match serve(engine, reader, &mut writer, &conn_opts) {
+                    match serve_gated(engine, reader, &mut writer, &conn_opts, admission_ref) {
                         Ok(stats) => {
                             let summary = connection_summary(engine, &stats);
                             log::info!("serve: {peer}: {summary}");
@@ -223,7 +367,7 @@ pub fn serve_tcp(
                         Err(e) => log::warn!("serve: {peer}: {e}"),
                     }
                 }
-                live_ref.fetch_sub(1, std::sync::atomic::Ordering::AcqRel);
+                live_ref.fetch_sub(1, Ordering::AcqRel);
             });
             accepted += 1;
             if let Some(max) = opts.max_connections {
@@ -233,20 +377,68 @@ pub fn serve_tcp(
             }
         }
     });
+    // Every connection has drained; capture their registrations in the
+    // final snapshot.
+    if let Some(path) = &opts.snapshot {
+        match engine.snapshot_to(path) {
+            Ok(()) => log::info!("serve: wrote final snapshot to {}", path.display()),
+            Err(e) => log::warn!("serve: final snapshot failed: {e}"),
+        }
+    }
     Ok(())
+}
+
+/// Write the periodic registry snapshot when one is due.
+fn maybe_snapshot(engine: &Engine, opts: &ServeOptions, last: &mut Instant) {
+    let Some(path) = &opts.snapshot else { return };
+    if last.elapsed() < Duration::from_secs(opts.snapshot_secs.max(1)) {
+        return;
+    }
+    *last = Instant::now();
+    if let Err(e) = engine.snapshot_to(path) {
+        log::warn!("serve: periodic snapshot failed: {e}");
+    }
+}
+
+/// Tell a shed connection why before closing it: one `overloaded`
+/// envelope (no id — nothing was read), then drop.
+fn refuse_connection(stream: std::net::TcpStream) {
+    let tel = crate::telemetry::global();
+    tel.requests_shed.add(1);
+    let mut stream = stream;
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let refusal = envelope(
+        None,
+        Err(ApiError::Overloaded {
+            retry_after_ms: 250,
+        }),
+    );
+    let _ = writeln!(stream, "{}", refusal.to_string_compact());
+    let _ = stream.flush();
 }
 
 /// Answer one batch of request lines, writing responses in input order.
 fn process_batch<W: Write>(
     engine: &Engine,
-    lines: &[String],
+    lines: &[Incoming],
     out: &mut W,
     opts: &ServeOptions,
     stats: &mut ServeStats,
+    admission: &Admission,
 ) -> io::Result<()> {
     let n = lines.len();
-    let parsed: Vec<(Option<Json>, Result<ApiRequest, ApiError>)> =
-        lines.iter().map(|l| ApiRequest::parse_line(l)).collect();
+    let parsed: Vec<(LineMeta, Result<ApiRequest, ApiError>)> = lines
+        .iter()
+        .map(|l| match l {
+            Incoming::Line(text) => ApiRequest::parse_line(text),
+            Incoming::Oversized => (
+                LineMeta::default(),
+                Err(ApiError::BadRequest(format!(
+                    "request line exceeds {MAX_LINE_BYTES} bytes"
+                ))),
+            ),
+        })
+        .collect();
     let mut responses: Vec<Option<Json>> = vec![None; n];
     let mut pending: Vec<usize> = Vec::new();
     for i in 0..n {
@@ -254,23 +446,31 @@ fn process_batch<W: Write>(
             // Decode failures answer immediately; nothing to compute.
             Err(e) => {
                 stats.errors += 1;
-                responses[i] = Some(envelope(parsed[i].0.clone(), Err(e.clone())));
+                responses[i] = Some(envelope(parsed[i].0.id.clone(), Err(e.clone())));
             }
-            // Registration is an ordering barrier.
-            Ok(ApiRequest::Register(r)) => {
-                flush_pending(engine, &parsed, &mut pending, &mut responses, opts, stats);
-                let res = engine
-                    .register_network_json(&r.spec)
-                    .map(|resp| resp.to_json());
+            // Registration is an ordering barrier. It runs through the
+            // dispatch guard too: an injected or genuine panic inside the
+            // spec validator must not kill the connection.
+            Ok(ApiRequest::Register(_)) => {
+                flush_pending(
+                    engine,
+                    &parsed,
+                    &mut pending,
+                    &mut responses,
+                    opts,
+                    stats,
+                    admission,
+                );
+                let res = dispatch_guarded(engine, &parsed[i], opts.threads);
                 if res.is_err() {
                     stats.errors += 1;
                 }
-                responses[i] = Some(envelope(parsed[i].0.clone(), res));
+                responses[i] = Some(envelope(parsed[i].0.id.clone(), res));
             }
             Ok(_) => pending.push(i),
         }
     }
-    flush_pending(engine, &parsed, &mut pending, &mut responses, opts, stats);
+    flush_pending(engine, &parsed, &mut pending, &mut responses, opts, stats, admission);
     let mut bytes_out = 0u64;
     for r in &responses {
         let json = r.as_ref().expect("every request answered");
@@ -288,41 +488,96 @@ fn process_batch<W: Write>(
     Ok(())
 }
 
-/// Answer the gathered non-register requests: evals through the engine's
-/// batched segmented path, the rest fanned out over the shared
-/// persistent pool.
+/// Whether a request must hold an admission permit: the compute kinds
+/// that can occupy the pool. Control-plane kinds (stats, zoo, register)
+/// always run — an operator must be able to inspect an overloaded server.
+fn needs_permit(req: &ApiRequest) -> bool {
+    !matches!(
+        req,
+        ApiRequest::Stats(_) | ApiRequest::Zoo | ApiRequest::Register(_)
+    )
+}
+
+/// Answer the gathered non-register requests: deadline-free evals through
+/// the engine's batched segmented path, everything else fanned out over
+/// the shared persistent pool through the per-request dispatch guard.
 fn flush_pending(
     engine: &Engine,
-    parsed: &[(Option<Json>, Result<ApiRequest, ApiError>)],
+    parsed: &[(LineMeta, Result<ApiRequest, ApiError>)],
     pending: &mut Vec<usize>,
     responses: &mut [Option<Json>],
     opts: &ServeOptions,
     stats: &mut ServeStats,
+    admission: &Admission,
 ) {
     if pending.is_empty() {
         return;
     }
+    // Admission control happens at batch-assembly time — all permits are
+    // taken before any dispatch and held until the whole flush finishes —
+    // so shedding is deterministic whether the fan-out below runs pooled
+    // or degenerates to the serial path (`CAMUY_THREADS=1`).
+    let mut permits = Vec::new();
+    let mut admitted: Vec<usize> = Vec::with_capacity(pending.len());
+    for &i in pending.iter() {
+        let gated = match &parsed[i].1 {
+            Ok(req) => needs_permit(req),
+            Err(_) => false,
+        };
+        if gated {
+            match admission.try_admit() {
+                Ok(permit) => permits.push(permit),
+                Err(retry_after_ms) => {
+                    stats.errors += 1;
+                    crate::telemetry::global().requests_shed.add(1);
+                    responses[i] = Some(envelope(
+                        parsed[i].0.id.clone(),
+                        Err(ApiError::Overloaded { retry_after_ms }),
+                    ));
+                    continue;
+                }
+            }
+        }
+        admitted.push(i);
+    }
     let mut eval_idx = Vec::new();
     let mut eval_reqs = Vec::new();
     let mut rest = Vec::new();
-    for &i in pending.iter() {
+    for &i in &admitted {
         match &parsed[i].1 {
-            Ok(ApiRequest::Eval(r)) => {
+            // Deadline-free evals keep the batched seeding path; an eval
+            // with a deadline needs its own token and guard, so it rides
+            // the per-request fan-out instead.
+            Ok(ApiRequest::Eval(r)) if parsed[i].0.deadline_ms.is_none() => {
                 eval_idx.push(i);
                 eval_reqs.push(r.clone());
             }
             _ => rest.push(i),
         }
     }
-    for (i, res) in eval_idx
-        .iter()
-        .copied()
-        .zip(engine.eval_batch(&eval_reqs, opts.threads))
-    {
-        if res.is_err() {
-            stats.errors += 1;
+    // The batched path shares one pool job across many requests, so a
+    // panic inside it cannot be attributed to one request the way the
+    // guarded fan-out below attributes panics. Catch it at the batch
+    // level and retry each eval individually through the guard — only
+    // the faulty request (if it reproduces) answers `internal`.
+    match catch_unwind(AssertUnwindSafe(|| engine.eval_batch(&eval_reqs, opts.threads))) {
+        Ok(results) => {
+            for (i, res) in eval_idx.iter().copied().zip(results) {
+                if res.is_err() {
+                    stats.errors += 1;
+                }
+                responses[i] =
+                    Some(envelope(parsed[i].0.id.clone(), res.map(|r| r.to_json())));
+            }
         }
-        responses[i] = Some(envelope(parsed[i].0.clone(), res.map(|r| r.to_json())));
+        Err(payload) => {
+            crate::telemetry::global().panics_caught.add(1);
+            log::error!(
+                "serve: eval batch panicked (isolated): {}; retrying individually",
+                panic_message(payload.as_ref())
+            );
+            rest.extend(eval_idx);
+        }
     }
     // Sweep/pareto/equal-pe/memory requests fan out over the shared
     // persistent pool (DESIGN.md §11). Each is also parallel *inside*
@@ -332,16 +587,72 @@ fn flush_pending(
     // saturated — dispatching them concurrently overlaps their serial
     // phases (plan builds, JSON encoding) without multiplying threads,
     // unlike the pre-§11 per-call scoped pools this loop used to avoid.
+    // The guard lives *inside* the fan-out closure: a panic or fired
+    // deadline is caught per request, so it can never poison the batch's
+    // own pool job.
     let rest_results = crate::runtime::pool::parallel_map(rest.len(), opts.threads, |j| {
-        dispatch(engine, &parsed[rest[j]].1, opts.threads)
+        dispatch_guarded(engine, &parsed[rest[j]], opts.threads)
     });
     for (&i, res) in rest.iter().zip(rest_results) {
         if res.is_err() {
             stats.errors += 1;
         }
-        responses[i] = Some(envelope(parsed[i].0.clone(), res));
+        responses[i] = Some(envelope(parsed[i].0.id.clone(), res));
     }
+    drop(permits);
     pending.clear();
+}
+
+/// Render an unwind payload for the `internal` error message: panics via
+/// `panic!("...")` carry strings; anything else gets a generic label.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "request panicked".to_string()
+    }
+}
+
+/// Route one request through the hardening guard (DESIGN.md §15): install
+/// its cancellation token when the line carried `deadline_ms`, dispatch,
+/// and catch unwinds — a [`Cancelled`] payload becomes the typed
+/// `deadline_exceeded` error with the progress count, anything else is
+/// isolated as `internal`. Either way the engine and the connection
+/// survive.
+fn dispatch_guarded(
+    engine: &Engine,
+    parsed: &(LineMeta, Result<ApiRequest, ApiError>),
+    threads: usize,
+) -> Result<Json, ApiError> {
+    let (meta, req) = parsed;
+    let token = meta.deadline_ms.map(CancelToken::with_deadline_ms);
+    let tel = crate::telemetry::global();
+    let run = || {
+        crate::faultpoint::hit("serve.dispatch");
+        match &token {
+            Some(t) => crate::robust::with_token(t, || dispatch(engine, req, threads)),
+            None => dispatch(engine, req, threads),
+        }
+    };
+    match catch_unwind(AssertUnwindSafe(run)) {
+        Ok(res) => res,
+        Err(payload) => {
+            if let Some(c) = payload.downcast_ref::<Cancelled>() {
+                tel.deadline_exceeded.add(1);
+                Err(ApiError::DeadlineExceeded {
+                    deadline_ms: c.deadline_ms.or(meta.deadline_ms).unwrap_or(0),
+                    progress: c.progress,
+                })
+            } else {
+                tel.panics_caught.add(1);
+                let msg = panic_message(payload.as_ref());
+                log::error!("serve: request panicked (isolated): {msg}");
+                Err(ApiError::Internal(msg))
+            }
+        }
+    }
 }
 
 /// Route one decoded request to the engine. `threads` is the serve
@@ -355,10 +666,6 @@ fn dispatch(
     match req {
         Err(e) => Err(e.clone()),
         Ok(ApiRequest::Eval(r)) => engine.eval(r).map(|x| x.to_json()),
-        // Never reached from the serve loop — process_batch answers
-        // registers inline as ordering barriers before anything is fanned
-        // out. Kept correct for completeness should a future caller
-        // dispatch one directly.
         Ok(ApiRequest::Register(r)) => {
             engine.register_network_json(&r.spec).map(|x| x.to_json())
         }
@@ -375,9 +682,10 @@ fn dispatch(
 
 /// One human-readable line summarizing a finished serve loop: the
 /// connection's own counters, the engine-wide request-latency quantiles,
-/// and the eval/plan cache traffic — the log-file rendering of the
-/// telemetry the `{"type": "stats"}` request exposes as JSON. Shared by
-/// the TCP per-connection log and the stdin path of `camuy serve`.
+/// the eval/plan cache traffic, and the hardening counters (DESIGN.md
+/// §15) — the log-file rendering of the telemetry the `{"type": "stats"}`
+/// request exposes as JSON. Shared by the TCP per-connection log and the
+/// stdin path of `camuy serve`.
 pub fn connection_summary(engine: &Engine, stats: &ServeStats) -> String {
     let tel = crate::telemetry::global().snapshot();
     let lat = tel.request_latency();
@@ -388,7 +696,9 @@ pub fn connection_summary(engine: &Engine, stats: &ServeStats) -> String {
          request p50/p99 {:.2}/{:.2} ms; \
          eval cache: {} entr(ies), {:.0}% hit rate; \
          plan cache: {} plan(s), {} hit(s) / {} miss(es) \
-         ({:.0}% hit rate), {} table word(s)",
+         ({:.0}% hit rate), {} table word(s); \
+         robust: {} shed, {} deadline-exceeded, {} panic(s) caught, \
+         {} snapshot write(s)",
         stats.requests,
         stats.errors,
         stats.batches,
@@ -400,7 +710,11 @@ pub fn connection_summary(engine: &Engine, stats: &ServeStats) -> String {
         ps.hits,
         ps.misses,
         100.0 * ps.hit_rate(),
-        ps.table_words
+        ps.table_words,
+        tel.robust.requests_shed,
+        tel.robust.deadline_exceeded,
+        tel.robust.panics_caught,
+        tel.robust.snapshot_writes,
     )
 }
 

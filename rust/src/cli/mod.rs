@@ -40,7 +40,8 @@ const SCHEMA: Schema = Schema {
     options: &[
         "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "min-dim",
         "threads", "artifacts", "dataflow", "seed", "energy-model", "listen", "batch-max",
-        "trace", "max-slices", "connect", "perfetto",
+        "trace", "max-slices", "connect", "perfetto", "snapshot", "restore", "snapshot-secs",
+        "admission-max",
     ],
     flags: &[
         "json", "per-layer", "smoke", "dense", "help", "quiet", "verbose", "version", "graph",
@@ -85,6 +86,13 @@ OPTIONS:
   --threads N         sweep / serve parallelism (default: cores)
   --listen ADDR       serve on a TCP address instead of stdin/stdout
   --batch-max N       serve: most requests coalesced per batch (default 64)
+  --admission-max N   serve: compute requests admitted concurrently before
+                      load shedding answers `overloaded` (default 256)
+  --snapshot FILE     serve: write the registered-network store here
+                      periodically and on graceful SIGTERM drain
+  --snapshot-secs N   serve: seconds between snapshot writes (default 30)
+  --restore FILE      serve: load a snapshot before serving (a missing
+                      file logs a warning and starts cold)
   --connect ADDR      stats: query a running `camuy serve --listen` server
   --perfetto FILE     stats: also write a Perfetto counter-trace JSON file
   --buckets           stats: include raw histogram buckets (with --json)
@@ -693,12 +701,32 @@ fn cmd_graph(engine: &Engine, args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(engine: &Engine, args: &Args) -> anyhow::Result<()> {
+    let defaults = ServeOptions::default();
     let opts = ServeOptions {
-        threads: args.opt_usize("threads", ServeOptions::default().threads)?,
-        batch_max: args.opt_usize("batch-max", 64)?,
-        ..ServeOptions::default()
+        threads: args.opt_usize("threads", defaults.threads)?,
+        batch_max: args.opt_usize("batch-max", defaults.batch_max)?,
+        admission_max: args.opt_usize("admission-max", defaults.admission_max)?,
+        snapshot: args.opt("snapshot").map(PathBuf::from),
+        snapshot_secs: args.opt_usize("snapshot-secs", defaults.snapshot_secs as usize)? as u64,
+        ..defaults
     };
     anyhow::ensure!(opts.batch_max > 0, "--batch-max must be positive");
+    anyhow::ensure!(opts.admission_max > 0, "--admission-max must be positive");
+    anyhow::ensure!(opts.snapshot_secs > 0, "--snapshot-secs must be positive");
+    // Warm restart (DESIGN.md §15): reload the registered-network store a
+    // previous `--snapshot` run wrote. A missing file is the normal first
+    // boot, not an error.
+    if let Some(path) = args.opt("restore") {
+        let path = Path::new(path);
+        if path.exists() {
+            let n = engine
+                .restore_from(path)
+                .map_err(|e| anyhow::anyhow!("--restore {}: {e}", path.display()))?;
+            log::info!("restored {n} network(s) from {}", path.display());
+        } else {
+            log::warn!("--restore {}: no such file, starting cold", path.display());
+        }
+    }
     if let Some(addr) = args.opt("listen") {
         let listener = std::net::TcpListener::bind(addr)?;
         log::info!("serving on {}", listener.local_addr()?);
@@ -709,6 +737,12 @@ fn cmd_serve(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         let stats = crate::api::serve(engine, stdin, &mut stdout.lock(), &opts)?;
         let summary = crate::api::connection_summary(engine, &stats);
         log::info!("served {summary}");
+        // The stdin path has no accept loop to snapshot periodically;
+        // write once after the session drains.
+        if let Some(path) = &opts.snapshot {
+            engine.snapshot_to(path)?;
+            log::info!("wrote snapshot to {}", path.display());
+        }
     }
     Ok(())
 }
@@ -786,6 +820,15 @@ fn cmd_stats(engine: &Engine, args: &Args) -> anyhow::Result<()> {
     println!(
         "sweep: {} cell(s) evaluated",
         num(&["sweep", "cells_evaluated"])
+    );
+    println!(
+        "robust: {} shed, {} deadline-exceeded, {} panic(s) caught, \
+         {} snapshot write(s), admission depth {}",
+        num(&["robust", "requests_shed"]),
+        num(&["robust", "deadline_exceeded"]),
+        num(&["robust", "panics_caught"]),
+        num(&["robust", "snapshot_writes"]),
+        num(&["robust", "admission_depth"])
     );
     if doc.get("eval_cache").is_some() {
         println!(

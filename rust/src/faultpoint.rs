@@ -1,0 +1,241 @@
+//! Deterministic fault injection at named sites (DESIGN.md §15).
+//!
+//! Compute cores and the serve tier call [`hit`] at the places failures
+//! matter: `"serve.dispatch"`, `"register.inner"`, `"eval.inner"`,
+//! `"sweep.unit"`, `"graph.schedule"`, `"nsga2.generation"`,
+//! `"sim.layer"`, `"snapshot.write"`. A disarmed site costs one relaxed
+//! atomic load — the production path pays nothing measurable.
+//!
+//! Tests arm sites programmatically ([`arm`]); CI and ad-hoc runs arm
+//! them through the environment:
+//!
+//! ```text
+//! CAMUY_FAULTPOINTS="sweep.unit=delay:2*100000,nsga2.generation=panic"
+//! ```
+//!
+//! Comma-separated `site=action` entries, where an action is `panic`,
+//! `delay:MS`, or `cancel`, optionally suffixed `*N` for a fire budget
+//! (default 1 — the point disarms after firing N times). `panic` unwinds
+//! with a plain string payload, so the serve tier's panic isolation
+//! answers `internal`; `cancel` fires the ambient
+//! [`CancelToken`](crate::robust::CancelToken) and checkpoints, so the
+//! deadline path answers `deadline_exceeded`; `delay` sleeps, turning a
+//! fast request into a slow one without changing its result — the
+//! hardware-independent way to test deadlines against "slow" work.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// What an armed faultpoint does when execution reaches it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Unwind with a string payload (exercises panic isolation).
+    Panic,
+    /// Sleep this long, then continue (makes fast work slow).
+    Delay(Duration),
+    /// Cancel the ambient [`CancelToken`](crate::robust::CancelToken)
+    /// and checkpoint (exercises the deadline path). A no-op beyond the
+    /// checkpoint when no token is installed.
+    Cancel,
+}
+
+#[derive(Debug)]
+struct Armed {
+    site: String,
+    action: Action,
+    remaining: usize,
+    fired: usize,
+}
+
+/// Sites currently armed with a nonzero fire budget. [`hit`]'s fast path
+/// is a single relaxed load of this.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+fn table() -> &'static Mutex<Vec<Armed>> {
+    static TABLE: OnceLock<Mutex<Vec<Armed>>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let armed = match std::env::var("CAMUY_FAULTPOINTS") {
+            Ok(spec) => match parse_spec(&spec) {
+                Ok(entries) => entries,
+                Err(e) => {
+                    log::warn!("faultpoint: ignoring CAMUY_FAULTPOINTS: {e}");
+                    Vec::new()
+                }
+            },
+            Err(_) => Vec::new(),
+        };
+        ARMED.store(armed.len(), Ordering::SeqCst);
+        Mutex::new(armed)
+    })
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<Armed>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (site, rest) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("'{entry}' is not site=action"))?;
+        let (action, count) = match rest.rsplit_once('*') {
+            Some((a, n)) => {
+                let n: usize =
+                    n.parse().map_err(|_| format!("'{entry}': bad fire count '{n}'"))?;
+                (a, n)
+            }
+            None => (rest, 1),
+        };
+        let action = if action == "panic" {
+            Action::Panic
+        } else if action == "cancel" {
+            Action::Cancel
+        } else if let Some(ms) = action.strip_prefix("delay:") {
+            let ms: u64 = ms.parse().map_err(|_| format!("'{entry}': bad delay '{ms}'"))?;
+            Action::Delay(Duration::from_millis(ms))
+        } else {
+            return Err(format!("'{entry}': unknown action '{action}' (panic|delay:MS|cancel)"));
+        };
+        if count == 0 {
+            return Err(format!("'{entry}': fire count must be positive"));
+        }
+        out.push(Armed {
+            site: site.to_string(),
+            action,
+            remaining: count,
+            fired: 0,
+        });
+    }
+    Ok(out)
+}
+
+/// The injection point: a no-op unless `site` is armed, in which case the
+/// armed action fires (outside the table lock, so an injected panic can
+/// never poison the harness itself) and its budget decrements.
+#[inline]
+pub fn hit(site: &str) {
+    let t = table(); // first call applies CAMUY_FAULTPOINTS
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    let action = {
+        let mut armed = t.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(entry) = armed.iter_mut().find(|a| a.site == site && a.remaining > 0) else {
+            return;
+        };
+        entry.remaining -= 1;
+        entry.fired += 1;
+        if entry.remaining == 0 {
+            ARMED.fetch_sub(1, Ordering::SeqCst);
+        }
+        entry.action
+    };
+    log::info!("faultpoint '{site}': injecting {action:?}");
+    match action {
+        Action::Panic => panic!("faultpoint '{site}': injected panic"),
+        Action::Delay(d) => std::thread::sleep(d),
+        Action::Cancel => {
+            if let Some(t) = crate::robust::current() {
+                t.cancel();
+            }
+            crate::robust::checkpoint();
+        }
+    }
+}
+
+/// Arm `site` to run `action` the next `count` times [`hit`] reaches it.
+/// Stacks with (rather than replaces) an existing arming of the same
+/// site; the oldest entry with budget fires first.
+pub fn arm(site: &str, action: Action, count: usize) {
+    if count == 0 {
+        return;
+    }
+    let mut armed = table().lock().unwrap_or_else(|e| e.into_inner());
+    armed.push(Armed {
+        site: site.to_string(),
+        action,
+        remaining: count,
+        fired: 0,
+    });
+    ARMED.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Disarm every site and forget fire counts.
+pub fn disarm_all() {
+    let mut armed = table().lock().unwrap_or_else(|e| e.into_inner());
+    armed.clear();
+    ARMED.store(0, Ordering::SeqCst);
+}
+
+/// How many times `site` has fired since the last [`disarm_all`] (summed
+/// across stacked armings). Test observability.
+pub fn fired(site: &str) -> usize {
+    let armed = table().lock().unwrap_or_else(|e| e.into_inner());
+    armed.iter().filter(|a| a.site == site).map(|a| a.fired).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// The table is process-global; tests that arm sites serialize here
+    /// so parallel test threads cannot see each other's armings.
+    static TABLE_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disarmed_sites_are_no_ops() {
+        let _g = lock();
+        disarm_all();
+        hit("nonexistent.site"); // must not panic or sleep
+    }
+
+    #[test]
+    fn panic_fires_exactly_count_times_then_disarms() {
+        let _g = lock();
+        disarm_all();
+        arm("t.panic", Action::Panic, 2);
+        for i in 0..2 {
+            let r = catch_unwind(AssertUnwindSafe(|| hit("t.panic")));
+            assert!(r.is_err(), "fire {i} must panic");
+        }
+        hit("t.panic"); // budget exhausted: no-op
+        assert_eq!(fired("t.panic"), 2);
+        disarm_all();
+    }
+
+    #[test]
+    fn cancel_fires_the_ambient_token() {
+        let _g = lock();
+        disarm_all();
+        arm("t.cancel", Action::Cancel, 1);
+        let token = crate::robust::CancelToken::manual();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            crate::robust::with_token(&token, || hit("t.cancel"))
+        }));
+        let payload = r.expect_err("cancel must unwind through the checkpoint");
+        assert!(payload.downcast_ref::<crate::robust::Cancelled>().is_some());
+        assert!(token.fired());
+        disarm_all();
+    }
+
+    #[test]
+    fn spec_parsing_round_trips_every_action() {
+        let entries =
+            parse_spec("a=panic, b=delay:250*3 ,c=cancel*2").expect("valid spec");
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].action, Action::Panic);
+        assert_eq!(entries[0].remaining, 1);
+        assert_eq!(entries[1].action, Action::Delay(Duration::from_millis(250)));
+        assert_eq!(entries[1].remaining, 3);
+        assert_eq!(entries[2].action, Action::Cancel);
+        assert_eq!(entries[2].remaining, 2);
+        assert!(parse_spec("a").is_err());
+        assert!(parse_spec("a=explode").is_err());
+        assert!(parse_spec("a=delay:xx").is_err());
+        assert!(parse_spec("a=panic*0").is_err());
+        assert!(parse_spec("").unwrap().is_empty());
+    }
+}

@@ -573,9 +573,15 @@ impl NetworkGraph {
         // afterwards — integer metrics, so the result is byte-identical
         // to the serial loop.
         let per_node: Vec<Option<Metrics>> =
-            crate::runtime::pool::parallel_map(n, threads, |i| match &self.nodes[i].op {
-                NodeOp::Layer(l) => Some(l.metrics_cached(&cfg.array, cache)),
-                _ => None,
+            crate::runtime::pool::parallel_map(n, threads, |i| {
+                // Cancellation granularity is one node's metrics; the
+                // faultpoint lets tests panic mid-schedule (DESIGN.md §15).
+                crate::robust::checkpoint();
+                crate::faultpoint::hit("graph.schedule");
+                match &self.nodes[i].op {
+                    NodeOp::Layer(l) => Some(l.metrics_cached(&cfg.array, cache)),
+                    _ => None,
+                }
             });
         let mut dur = vec![0u64; n];
         let mut total = Metrics::default();

@@ -223,6 +223,10 @@ fn nsga2_core(grid: &DimGrid, params: &Nsga2Params, mut eval: GenomeEval) -> Vec
     };
 
     for _gen in 0..params.generations {
+        // Cancellation granularity is one generation; the faultpoint lets
+        // tests inject a panic mid-search (DESIGN.md §15).
+        crate::robust::checkpoint();
+        crate::faultpoint::hit("nsga2.generation");
         let tournament = |rng: &mut Rng| -> usize {
             let a = rng.range_usize(0, pop.len() - 1);
             let b = rng.range_usize(0, pop.len() - 1);

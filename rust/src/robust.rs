@@ -1,0 +1,385 @@
+//! Operational hardening for the serve tier (DESIGN.md §15): per-request
+//! deadlines with cooperative cancellation, and admission control with
+//! load shedding.
+//!
+//! # Cancellation model
+//!
+//! A [`CancelToken`] is a deadline plus a shared cancelled flag. The serve
+//! loop creates one per request that carries a `"deadline_ms"` field and
+//! installs it as the *ambient* token ([`with_token`]) for the duration of
+//! the dispatch. Compute cores call the free function [`checkpoint`] at
+//! their natural work boundaries — pool chunks, sweep dispatch units,
+//! NSGA-II generations, graph/sim per-node closures — which is two
+//! thread-local loads when no token is installed (the library-caller hot
+//! path pays essentially nothing).
+//!
+//! When the ambient token has fired, `checkpoint` panics with a
+//! [`Cancelled`] payload. The panic rides the exact machinery the pool
+//! already has for job poisoning: remaining chunks are skipped and the
+//! payload is re-raised on the submitting caller ([`crate::runtime::pool`]).
+//! [`crate::runtime::pool::Pool::run`] captures the submitter's ambient
+//! token into the job so worker threads inherit it across the thread hop.
+//! The serve dispatch catches the unwind and downcasts: a `Cancelled`
+//! payload becomes a typed `ApiError::DeadlineExceeded` carrying the
+//! progress count; anything else is a real panic and becomes an
+//! `internal` error (panic isolation). Deliberate cancellation unwinds
+//! are silenced in the panic hook so deadlines don't spray backtraces to
+//! stderr.
+//!
+//! Infallible deep APIs (`figures::fig2_heatmaps_planned`, the schedule
+//! and sim entry points) need no signature change: cancellation crosses
+//! them as an unwind, and because the pool re-raises *before* the
+//! result-collection phase, the write-once slot invariants of
+//! `parallel_map`/`parallel_scatter` are never observed half-filled.
+//!
+//! # Admission control
+//!
+//! An [`Admission`] gate bounds how many compute requests are in flight
+//! at once. The serve loop takes one [`Permit`] per compute request at
+//! batch-assembly time; requests past the budget are shed immediately
+//! with a structured `overloaded` error carrying `retry_after_ms`
+//! (estimated from a latency EWMA of recently completed requests), so a
+//! client can back off instead of watching a silently dropped socket.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// The panic payload of a cooperative cancellation. The serve layer
+/// downcasts unwind payloads to this type to tell a fired deadline apart
+/// from a genuine bug.
+#[derive(Debug, Clone)]
+pub struct Cancelled {
+    /// Checkpoints the request passed before the cancellation fired — the
+    /// partial-progress figure reported in `ApiError::DeadlineExceeded`.
+    pub progress: u64,
+    /// The request's deadline, if the token carried one (a manual
+    /// [`CancelToken::cancel`] has none).
+    pub deadline_ms: Option<u64>,
+}
+
+#[derive(Debug)]
+struct TokenInner {
+    /// Absolute fire time; `None` for manually cancelled tokens.
+    deadline: Option<Instant>,
+    deadline_ms: Option<u64>,
+    cancelled: AtomicBool,
+    /// Checkpoints passed so far, across every thread sharing the token.
+    progress: AtomicU64,
+}
+
+/// A cheap cancellation handle: a deadline plus a shared flag. Clones
+/// share state; see the module docs for the propagation model.
+#[derive(Debug, Clone)]
+pub struct CancelToken {
+    inner: Arc<TokenInner>,
+}
+
+impl CancelToken {
+    /// A token that fires `ms` milliseconds from now.
+    pub fn with_deadline_ms(ms: u64) -> CancelToken {
+        quiet_cancellation_unwinds();
+        CancelToken {
+            inner: Arc::new(TokenInner {
+                deadline: Some(Instant::now() + Duration::from_millis(ms)),
+                deadline_ms: Some(ms),
+                cancelled: AtomicBool::new(false),
+                progress: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A token with no deadline; fires only on [`CancelToken::cancel`].
+    pub fn manual() -> CancelToken {
+        quiet_cancellation_unwinds();
+        CancelToken {
+            inner: Arc::new(TokenInner {
+                deadline: None,
+                deadline_ms: None,
+                cancelled: AtomicBool::new(false),
+                progress: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Fire the token now, regardless of its deadline.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the token has fired (cancelled, or past its deadline).
+    pub fn fired(&self) -> bool {
+        if self.inner.cancelled.load(Ordering::Relaxed) {
+            return true;
+        }
+        match self.inner.deadline {
+            Some(d) if Instant::now() >= d => {
+                // Latch, so later checks skip the clock read.
+                self.inner.cancelled.store(true, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Checkpoints passed so far.
+    pub fn progress(&self) -> u64 {
+        self.inner.progress.load(Ordering::Relaxed)
+    }
+
+    /// The deadline the token was built with, if any.
+    pub fn deadline_ms(&self) -> Option<u64> {
+        self.inner.deadline_ms
+    }
+
+    /// Count one unit of progress, then unwind with [`Cancelled`] if the
+    /// token has fired. Compute cores call this through the ambient free
+    /// function [`checkpoint`].
+    pub fn checkpoint(&self) {
+        let progress = self.inner.progress.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.fired() {
+            std::panic::panic_any(Cancelled {
+                progress,
+                deadline_ms: self.inner.deadline_ms,
+            });
+        }
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<CancelToken>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with `token` installed as this thread's ambient token,
+/// restoring the previous one afterwards — including on unwind, so a
+/// cancellation cannot leak the token into unrelated later work on a
+/// pool worker.
+pub fn with_token<T>(token: &CancelToken, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<CancelToken>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prior = self.0.take();
+            CURRENT.with(|c| *c.borrow_mut() = prior);
+        }
+    }
+    let prior = CURRENT.with(|c| c.borrow_mut().replace(token.clone()));
+    let _restore = Restore(prior);
+    f()
+}
+
+/// This thread's ambient token, if a deadline-carrying request is in
+/// flight on it. [`crate::runtime::pool::Pool::run`] captures this at
+/// submit so worker threads inherit the submitter's token.
+pub fn current() -> Option<CancelToken> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// The cooperative cancellation point: count progress on the ambient
+/// token and unwind with [`Cancelled`] if it has fired. With no token
+/// installed this is two thread-local reads — cheap enough for per-unit
+/// placement in the sweep dispatch and per-chunk placement in the pool.
+#[inline]
+pub fn checkpoint() {
+    let token = CURRENT.with(|c| c.borrow().clone());
+    if let Some(t) = token {
+        t.checkpoint();
+    }
+}
+
+/// Install (once) a panic-hook wrapper that suppresses the default
+/// backtrace print for [`Cancelled`] payloads: a fired deadline is
+/// control flow, not a bug, and a server shedding hundreds of deadlines
+/// must not flood stderr. Every other payload still reaches the previous
+/// hook unchanged.
+fn quiet_cancellation_unwinds() {
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<Cancelled>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Bounded admission in front of the pool: at most `capacity` compute
+/// requests hold a [`Permit`] at once; the rest are shed with a
+/// `retry_after_ms` hint derived from recently observed request latency.
+#[derive(Debug)]
+pub struct Admission {
+    capacity: usize,
+    inflight: AtomicUsize,
+    /// EWMA of completed-request wall time, nanoseconds. Racy updates are
+    /// fine — this only shapes the retry hint.
+    recent_nanos: AtomicU64,
+}
+
+/// Floor/ceiling for the shed `retry_after_ms` hint.
+const RETRY_MS_MIN: u64 = 10;
+const RETRY_MS_MAX: u64 = 5_000;
+
+impl Admission {
+    pub fn new(capacity: usize) -> Admission {
+        Admission {
+            capacity: capacity.max(1),
+            inflight: AtomicUsize::new(0),
+            recent_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit one request, or shed it: `Err(retry_after_ms)` when
+    /// `capacity` permits are already out.
+    pub fn try_admit(&self) -> Result<Permit<'_>, u64> {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.capacity {
+                return Err(self.retry_after_ms());
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        crate::telemetry::global().admission_depth.inc();
+        Ok(Permit {
+            gate: self,
+            since: Instant::now(),
+        })
+    }
+
+    /// Permits currently out.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// The backoff hint handed to shed clients: roughly one recent
+    /// request latency (time for a slot to free up), clamped to
+    /// [[`RETRY_MS_MIN`], [`RETRY_MS_MAX`]].
+    fn retry_after_ms(&self) -> u64 {
+        let ms = self.recent_nanos.load(Ordering::Relaxed) / 1_000_000;
+        ms.clamp(RETRY_MS_MIN, RETRY_MS_MAX)
+    }
+
+    fn release(&self, held_for: Duration) {
+        let sample = held_for.as_nanos().min(u64::MAX as u128) as u64;
+        let old = self.recent_nanos.load(Ordering::Relaxed);
+        let next = if old == 0 { sample } else { (3 * (old / 4)) + sample / 4 };
+        self.recent_nanos.store(next, Ordering::Relaxed);
+        crate::telemetry::global().admission_depth.dec();
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// RAII admission slot: dropping it frees the slot and feeds the held
+/// duration into the gate's latency EWMA.
+#[derive(Debug)]
+pub struct Permit<'a> {
+    gate: &'a Admission,
+    since: Instant,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.gate.release(self.since.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn manual_cancel_unwinds_with_progress() {
+        let t = CancelToken::manual();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            with_token(&t, || {
+                checkpoint();
+                checkpoint();
+                t.cancel();
+                checkpoint();
+            })
+        }));
+        let payload = r.expect_err("third checkpoint must unwind");
+        let c = payload.downcast_ref::<Cancelled>().expect("Cancelled payload");
+        assert_eq!(c.progress, 3);
+        assert_eq!(c.deadline_ms, None);
+        assert!(current().is_none(), "token must not leak past with_token");
+    }
+
+    #[test]
+    fn deadline_token_fires_after_its_deadline() {
+        let t = CancelToken::with_deadline_ms(1);
+        assert_eq!(t.deadline_ms(), Some(1));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.fired());
+        let r = catch_unwind(AssertUnwindSafe(|| t.checkpoint()));
+        let payload = r.expect_err("fired token must unwind at a checkpoint");
+        let c = payload.downcast_ref::<Cancelled>().unwrap();
+        assert_eq!(c.deadline_ms, Some(1));
+        assert!(c.progress >= 1);
+    }
+
+    #[test]
+    fn checkpoint_without_a_token_is_a_no_op() {
+        assert!(current().is_none());
+        checkpoint(); // must not panic
+    }
+
+    #[test]
+    fn with_token_restores_the_prior_token() {
+        let outer = CancelToken::with_deadline_ms(60_000);
+        let inner = CancelToken::with_deadline_ms(60_000);
+        with_token(&outer, || {
+            assert!(current().is_some());
+            with_token(&inner, || {
+                assert_eq!(current().unwrap().deadline_ms(), Some(60_000));
+            });
+            // Outer token back in place.
+            assert!(Arc::ptr_eq(&current().unwrap().inner, &outer.inner));
+        });
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn admission_sheds_past_capacity_and_frees_on_drop() {
+        let gate = Admission::new(2);
+        let a = gate.try_admit().expect("first admit");
+        let _b = gate.try_admit().expect("second admit");
+        let shed = gate.try_admit().expect_err("third must shed");
+        assert!((RETRY_MS_MIN..=RETRY_MS_MAX).contains(&shed));
+        assert_eq!(gate.inflight(), 2);
+        drop(a);
+        assert_eq!(gate.inflight(), 1);
+        let _c = gate.try_admit().expect("slot freed by drop");
+    }
+
+    #[test]
+    fn retry_hint_tracks_recent_latency_and_stays_clamped() {
+        let gate = Admission::new(1);
+        gate.release_sample(Duration::from_millis(120));
+        let _held = gate.try_admit().unwrap();
+        let hint = gate.try_admit().expect_err("full");
+        assert!(hint >= RETRY_MS_MIN && hint <= RETRY_MS_MAX);
+        assert!(hint >= 25, "EWMA of 120ms must push the hint up, got {hint}");
+        gate.release_sample(Duration::from_secs(3600));
+        let hint = gate.try_admit().expect_err("still full");
+        assert_eq!(hint, RETRY_MS_MAX);
+    }
+
+    impl Admission {
+        /// Test helper: feed a latency sample without holding a permit.
+        fn release_sample(&self, d: Duration) {
+            self.inflight.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::global().admission_depth.inc();
+            self.release(d);
+        }
+    }
+}

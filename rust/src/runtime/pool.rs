@@ -111,6 +111,12 @@ struct Job {
     complete: Mutex<bool>,
     complete_cv: Condvar,
     f: RawFn,
+    /// The submitter's ambient cancellation token (DESIGN.md §15),
+    /// captured at submit so worker threads inherit it across the thread
+    /// hop: every chunk re-installs it and checkpoints, so a fired
+    /// deadline poisons the job through the existing panic machinery and
+    /// re-raises on the submitting caller.
+    token: Option<crate::robust::CancelToken>,
 }
 
 impl Job {
@@ -157,10 +163,15 @@ impl Job {
                 // still blocked in `Pool::run`, so the closure's frame is
                 // alive (see `RawFn`).
                 let f = unsafe { &*self.f.0 };
-                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| {
+                let run_chunk = || {
+                    crate::robust::checkpoint();
                     for i in lo..hi {
                         f(i);
                     }
+                };
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| match &self.token {
+                    Some(t) => crate::robust::with_token(t, run_chunk),
+                    None => run_chunk(),
                 })) {
                     self.poisoned.store(true, Ordering::Relaxed);
                     let mut slot = self.panic.lock().expect("job panic slot");
@@ -247,7 +258,11 @@ impl Pool {
         let chunks = crate::util::ceil_div(n, chunk);
         let cap = cap.max(1).min(chunks);
         if cap <= 1 || self.workers == 0 {
+            // The serial fast path checkpoints per index so deadlines
+            // behave identically at `CAMUY_THREADS=1` (a no-op without an
+            // ambient token).
             for i in 0..n {
+                crate::robust::checkpoint();
                 f(i);
             }
             return;
@@ -271,6 +286,7 @@ impl Pool {
             complete: Mutex::new(false),
             complete_cv: Condvar::new(),
             f: raw,
+            token: crate::robust::current(),
         });
         // Telemetry (DESIGN.md §14): the job counter and latency
         // histogram cover the pooled path only — the serial fast path
@@ -401,7 +417,12 @@ pub fn parallel_map_chunked<T: Send + Sync>(
 ) -> Vec<T> {
     let cap = threads.max(1).min(n);
     if cap <= 1 || global().workers() == 0 {
-        return (0..n).map(f).collect();
+        return (0..n)
+            .map(|i| {
+                crate::robust::checkpoint();
+                f(i)
+            })
+            .collect();
     }
     let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
     global().run(n, chunk, cap, &|i| {
@@ -451,6 +472,7 @@ pub fn parallel_scatter<T: Send + Sync>(
     let cap = threads.max(1).min(units);
     if cap <= 1 || global().workers() == 0 {
         for u in 0..units {
+            crate::robust::checkpoint();
             f(u, &scatter);
         }
     } else {
@@ -587,6 +609,42 @@ mod tests {
         }));
         assert!(r.is_err(), "panic must reach the submitting caller");
         // The pool still works afterwards.
+        let sum = AtomicUsize::new(0);
+        pool.run(10, 2, 3, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn cancelled_token_poisons_the_job_and_reaches_the_caller() {
+        // Workers inherit the submitter's ambient token: once the token
+        // fires, the next chunk checkpoint unwinds with `Cancelled`, the
+        // job poisons (remaining chunks skipped), and the payload
+        // re-raises on the submitting caller — on any thread.
+        let pool = Pool::new(2);
+        let token = crate::robust::CancelToken::manual();
+        let executed = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            crate::robust::with_token(&token, || {
+                pool.run(1000, 1, 3, &|i| {
+                    if i == 5 {
+                        token.cancel();
+                    }
+                    executed.fetch_add(1, Ordering::Relaxed);
+                });
+            })
+        }));
+        let payload = r.expect_err("cancellation must reach the caller");
+        assert!(
+            payload.downcast_ref::<crate::robust::Cancelled>().is_some(),
+            "payload must be Cancelled"
+        );
+        assert!(
+            executed.load(Ordering::Relaxed) < 1000,
+            "poisoning must skip chunks after the cancel"
+        );
+        // The pool survives and the worker's ambient token was restored.
         let sum = AtomicUsize::new(0);
         pool.run(10, 2, 3, &|i| {
             sum.fetch_add(i, Ordering::Relaxed);

@@ -120,6 +120,10 @@ pub fn simulate_network(
     }
 
     let outs: Vec<LayerOut> = pool::parallel_map(net.layers.len(), threads, |i| {
+        // Cancellation granularity is one simulated layer; the faultpoint
+        // lets tests panic mid-simulation (DESIGN.md §15).
+        crate::robust::checkpoint();
+        crate::faultpoint::hit("sim.layer");
         let (gemm, groups) = net.layers[i].gemm();
         let groups = groups as u64;
         let mut sink = match opts.trace_cap {

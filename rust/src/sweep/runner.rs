@@ -295,6 +295,9 @@ fn build_routes(
     let mut built: Vec<PlanRef> = Vec::with_capacity(ws_groups.len() + 1);
     let mut ws_plan_of: HashMap<usize, usize> = HashMap::with_capacity(ws_groups.len());
     for (acc, (hs, ws)) in ws_groups {
+        // Plan builds dominate a cold sweep's serial prefix; let a
+        // deadline fire between them rather than only once cells run.
+        crate::robust::checkpoint();
         let plan = match plans {
             Some(cache) => cache.plan(workload, &hs, &ws, acc),
             None => Arc::new(SegmentedWsPlan::new(workload, &hs, &ws, acc)),
@@ -462,6 +465,11 @@ pub fn sweep_workload_planned(
     }
     append_units(&mut cells, &mut units, DIRECT, direct);
     pool::parallel_scatter(configs.len(), threads, units.len(), |u, out| {
+        // Cancellation granularity is one dispatch unit (a cache-blocked
+        // run of cells); the faultpoint lets tests make units slow or
+        // panicking deterministically (DESIGN.md §15).
+        crate::robust::checkpoint();
+        crate::faultpoint::hit("sweep.unit");
         let unit = &units[u];
         let run = &cells[unit.start..unit.end];
         // One plan dispatch per unit; `built.get(DIRECT)` is `None`, so

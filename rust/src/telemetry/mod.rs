@@ -215,8 +215,17 @@ impl ReqKind {
 
 /// The `ApiError::kind()` strings the wire-error counters track, plus a
 /// catch-all. Keep in sync with [`crate::api::ApiError::kind`].
-const ERROR_KINDS: [&str; 6] =
-    ["unknown_network", "invalid_config", "bad_json", "bad_request", "invalid_network", "other"];
+const ERROR_KINDS: [&str; 9] = [
+    "unknown_network",
+    "invalid_config",
+    "bad_json",
+    "bad_request",
+    "invalid_network",
+    "deadline_exceeded",
+    "overloaded",
+    "internal",
+    "other",
+];
 
 /// The process-global registry. Obtain it with [`global`]; every field
 /// is safe to hit from any thread without coordination.
@@ -252,6 +261,17 @@ pub struct Telemetry {
     pub pool_job_latency: Histogram,
     /// Sweep cells evaluated through the segmented production cores.
     pub sweep_cells: Counter,
+    /// Requests shed by admission control or the connection cap
+    /// (answered `overloaded`, DESIGN.md §15).
+    pub requests_shed: Counter,
+    /// Requests cancelled by their own `deadline_ms`.
+    pub deadline_exceeded: Counter,
+    /// Request panics caught and isolated by the serve dispatch guard.
+    pub panics_caught: Counter,
+    /// Registered-network snapshots written (periodic + drain).
+    pub snapshot_writes: Counter,
+    /// Compute requests currently holding an admission permit.
+    pub admission_depth: Gauge,
 }
 
 impl Telemetry {
@@ -274,6 +294,11 @@ impl Telemetry {
             pool_workers_parked: Gauge::new(),
             pool_job_latency: Histogram::new(),
             sweep_cells: Counter::new(),
+            requests_shed: Counter::new(),
+            deadline_exceeded: Counter::new(),
+            panics_caught: Counter::new(),
+            snapshot_writes: Counter::new(),
+            admission_depth: Gauge::new(),
         }
     }
 
@@ -340,6 +365,13 @@ impl Telemetry {
                 job_latency: self.pool_job_latency.snapshot(),
             },
             sweep_cells: self.sweep_cells.get(),
+            robust: RobustStats {
+                requests_shed: self.requests_shed.get(),
+                deadline_exceeded: self.deadline_exceeded.get(),
+                panics_caught: self.panics_caught.get(),
+                snapshot_writes: self.snapshot_writes.get(),
+                admission_depth: self.admission_depth.get().max(0),
+            },
             eval_cache: None,
             plan_cache: None,
             networks: None,
@@ -398,6 +430,18 @@ pub struct RequestStats {
     pub latency: HistogramSnapshot,
 }
 
+/// Operational-hardening traffic in a snapshot (DESIGN.md §15): shed,
+/// deadline-cancelled and panic-isolated requests, snapshot writes, and
+/// the live admission-queue depth (clamped at zero for display).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RobustStats {
+    pub requests_shed: u64,
+    pub deadline_exceeded: u64,
+    pub panics_caught: u64,
+    pub snapshot_writes: u64,
+    pub admission_depth: i64,
+}
+
 /// Pool health in a snapshot (gauges clamped at zero for display).
 #[derive(Debug, Clone)]
 pub struct PoolStats {
@@ -430,6 +474,7 @@ pub struct TelemetrySnapshot {
     pub errors: Vec<(&'static str, u64)>,
     pub pool: PoolStats,
     pub sweep_cells: u64,
+    pub robust: RobustStats,
     pub eval_cache: Option<EvalCacheStats>,
     pub plan_cache: Option<PlanCacheStats>,
     /// (zoo, user-registered) network-store sizes.
@@ -492,6 +537,13 @@ impl TelemetrySnapshot {
             ("job_latency", self.pool.job_latency.to_json(include_buckets)),
         ]);
         let sweep = Json::obj(vec![("cells_evaluated", Json::num(self.sweep_cells as f64))]);
+        let robust = Json::obj(vec![
+            ("requests_shed", Json::num(self.robust.requests_shed as f64)),
+            ("deadline_exceeded", Json::num(self.robust.deadline_exceeded as f64)),
+            ("panics_caught", Json::num(self.robust.panics_caught as f64)),
+            ("snapshot_writes", Json::num(self.robust.snapshot_writes as f64)),
+            ("admission_depth", Json::num(self.robust.admission_depth as f64)),
+        ]);
         let mut pairs = vec![
             ("enabled", Json::Bool(self.enabled)),
             ("uptime_seconds", Json::num(self.uptime.as_secs_f64())),
@@ -500,6 +552,7 @@ impl TelemetrySnapshot {
             ("serve", serve),
             ("pool", pool),
             ("sweep", sweep),
+            ("robust", robust),
         ];
         if let Some(ec) = &self.eval_cache {
             pairs.push(("eval_cache", eval_cache_json(ec)));
@@ -686,6 +739,16 @@ mod tests {
         assert!(merged.get("p50").is_some());
         assert!(j.get("pool").and_then(|p| p.get("queue_depth")).is_some());
         assert!(j.get("serve").and_then(|s| s.get("errors")).is_some());
+        let robust = j.get("robust").unwrap();
+        for key in [
+            "requests_shed",
+            "deadline_exceeded",
+            "panics_caught",
+            "snapshot_writes",
+            "admission_depth",
+        ] {
+            assert!(robust.get(key).and_then(Json::as_f64).is_some(), "robust.{key}");
+        }
         let ec = j.get("eval_cache").unwrap();
         assert!(ec.get("hit_rate").is_some());
         let pc = j.get("plan_cache").unwrap();

@@ -1,0 +1,503 @@
+//! Operational-hardening coverage for the serve tier (DESIGN.md §15):
+//! per-request deadlines, panic isolation, admission control, oversized
+//! line resynchronization, warm snapshot/restore, and the fault-injection
+//! harness driving all of it.
+//!
+//! The faultpoint table and the telemetry registry are process-global, so
+//! every test here serializes on [`HARNESS`] — within this test binary the
+//! counter deltas below are exact.
+
+use camuy::api::{Engine, ServeOptions};
+use camuy::faultpoint::{self, Action};
+use camuy::util::json::Json;
+use std::sync::Mutex;
+use std::time::Duration;
+
+static HARNESS: Mutex<()> = Mutex::new(());
+
+fn harness() -> std::sync::MutexGuard<'static, ()> {
+    let guard = HARNESS.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::disarm_all();
+    guard
+}
+
+/// Run the serve loop over a request string, returning parsed responses.
+fn serve_str(engine: &Engine, input: &str, opts: &ServeOptions) -> Vec<Json> {
+    let mut out: Vec<u8> = Vec::new();
+    camuy::api::serve(engine, input.as_bytes(), &mut out, opts).unwrap();
+    String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect()
+}
+
+fn error_kind(resp: &Json) -> &str {
+    resp.get("error").unwrap().get("kind").unwrap().as_str().unwrap()
+}
+
+fn error_message(resp: &Json) -> &str {
+    resp.get("error").unwrap().get("message").unwrap().as_str().unwrap()
+}
+
+fn is_ok(resp: &Json) -> bool {
+    resp.get("ok").unwrap().as_bool() == Some(true)
+}
+
+const EVAL_LINE: &str =
+    "{\"id\":9,\"type\":\"eval\",\"net\":\"alexnet\",\"config\":{\"height\":24,\"width\":16}}\n";
+
+/// A 16-point-per-axis sweep (256 cells, several dispatch units) pinned to
+/// one thread so checkpoint order is deterministic.
+const SLOW_SWEEP_LINE: &str = "{\"id\":1,\"type\":\"sweep\",\"net\":\"alexnet\",\
+     \"grid\":{\"lo\":8,\"hi\":128,\"step\":8},\"threads\":1,\"deadline_ms\":100}\n";
+
+#[test]
+fn deadline_exceeded_sweep_reports_progress_and_next_request_is_clean() {
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let deadlines_before = tel.deadline_exceeded.get();
+
+    // Each sweep dispatch unit sleeps 40 ms, so the 100 ms budget fires a
+    // few units in — hardware speed is irrelevant.
+    faultpoint::arm("sweep.unit", Action::Delay(Duration::from_millis(40)), 1000);
+    let engine = Engine::new();
+    let started = std::time::Instant::now();
+    let resps = serve_str(&engine, SLOW_SWEEP_LINE, &ServeOptions::default());
+    let elapsed = started.elapsed();
+    faultpoint::disarm_all();
+
+    assert_eq!(resps.len(), 1);
+    assert!(!is_ok(&resps[0]), "{}", resps[0].to_string_compact());
+    assert_eq!(error_kind(&resps[0]), "deadline_exceeded");
+    let err = resps[0].get("error").unwrap();
+    assert_eq!(err.get("deadline_ms").unwrap().as_usize(), Some(100));
+    assert!(err.get("progress").unwrap().as_usize().unwrap() >= 1);
+    assert!(
+        elapsed < Duration::from_secs(3),
+        "cancellation took {elapsed:?} against a 100 ms budget"
+    );
+    assert!(tel.deadline_exceeded.get() > deadlines_before);
+
+    // The engine that just cancelled mid-sweep answers the next request
+    // byte-identically to a fresh engine: no poisoned caches, no leaked
+    // token, no half-written state.
+    let after = serve_str(&engine, EVAL_LINE, &ServeOptions::default());
+    let fresh = serve_str(&Engine::new(), EVAL_LINE, &ServeOptions::default());
+    assert_eq!(
+        after[0].to_string_compact(),
+        fresh[0].to_string_compact(),
+        "post-cancellation response diverged from a fresh engine"
+    );
+}
+
+#[test]
+fn injected_panics_answer_internal_and_the_server_keeps_answering() {
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let panics_before = tel.panics_caught.get();
+    let engine = Engine::new();
+
+    // One injected panic per request kind; the engine and its caches must
+    // survive every one of them.
+    let kinds: [(&str, &str); 3] = [
+        (
+            "graph.schedule",
+            "{\"id\":1,\"type\":\"graph\",\"net\":\"resnet50\",\
+             \"config\":{\"height\":32,\"width\":32}}\n",
+        ),
+        (
+            "sweep.unit",
+            "{\"id\":1,\"type\":\"sweep\",\"net\":\"alexnet\",\"grid\":\"smoke\",\
+             \"threads\":1}\n",
+        ),
+        // A deadline-carrying eval rides the per-request guard directly.
+        (
+            "eval.inner",
+            "{\"id\":1,\"type\":\"eval\",\"net\":\"alexnet\",\"deadline_ms\":60000,\
+             \"config\":{\"height\":16,\"width\":16}}\n",
+        ),
+    ];
+    for (site, line) in kinds {
+        faultpoint::arm(site, Action::Panic, 1);
+        let broken = serve_str(&engine, line, &ServeOptions::default());
+        assert_eq!(broken.len(), 1, "{site}");
+        assert!(!is_ok(&broken[0]), "{site}: injected panic must fail the request");
+        assert_eq!(error_kind(&broken[0]), "internal", "{site}");
+        assert!(
+            error_message(&broken[0]).contains("injected panic"),
+            "{site}: panic payload must reach the message"
+        );
+        // The budget is spent; the identical request now succeeds on the
+        // same engine over the same connection machinery.
+        let healed = serve_str(&engine, line, &ServeOptions::default());
+        assert!(is_ok(&healed[0]), "{site}: {}", healed[0].to_string_compact());
+    }
+    assert_eq!(tel.panics_caught.get(), panics_before + 3);
+
+    // Caches survived the unwinds: repeat evals are memo-table hits.
+    let hits_before = engine.cache().hits();
+    let again = serve_str(&engine, EVAL_LINE, &ServeOptions::default());
+    assert!(is_ok(&again[0]));
+    serve_str(&engine, EVAL_LINE, &ServeOptions::default());
+    assert!(engine.cache().hits() > hits_before);
+}
+
+#[test]
+fn batched_eval_panic_falls_back_to_guarded_retry() {
+    let _g = harness();
+    let engine = Engine::new();
+    // Deadline-free evals ride the batched seeding path; an injected
+    // panic there is caught at the batch level and every eval is retried
+    // through the per-request guard — the fire budget is spent, so all
+    // answers come back ok and nothing is lost.
+    faultpoint::arm("eval.inner", Action::Panic, 1);
+    let input = concat!(
+        "{\"id\":1,\"type\":\"eval\",\"net\":\"alexnet\",\
+         \"config\":{\"height\":16,\"width\":16}}\n",
+        "{\"id\":2,\"type\":\"eval\",\"net\":\"alexnet\",\
+         \"config\":{\"height\":32,\"width\":16}}\n",
+    );
+    let resps = serve_str(&engine, input, &ServeOptions::default());
+    assert_eq!(faultpoint::fired("eval.inner"), 1);
+    faultpoint::disarm_all();
+    assert_eq!(resps.len(), 2);
+    for r in &resps {
+        assert!(is_ok(r), "{}", r.to_string_compact());
+    }
+}
+
+#[test]
+fn concurrent_clients_survive_injected_panics_without_losing_telemetry() {
+    let _g = harness();
+    const FIRES: usize = 4;
+    let tel = camuy::telemetry::global();
+    let panics_before = tel.panics_caught.get();
+    faultpoint::arm("eval.inner", Action::Panic, FIRES);
+    let engine = Engine::new();
+    std::thread::scope(|s| {
+        for c in 0..3usize {
+            let engine = &engine;
+            s.spawn(move || {
+                for i in 0..6usize {
+                    let line = format!(
+                        "{{\"id\":{i},\"type\":\"eval\",\"net\":\"alexnet\",\
+                         \"config\":{{\"height\":{h},\"width\":16}}}}\n",
+                        h = 16 + 8 * c + 8 * i
+                    );
+                    let resps = serve_str(engine, &line, &ServeOptions::default());
+                    // Every request gets exactly one answer. A panic on
+                    // the batched path is retried through the guard; the
+                    // retry may consume another fire and answer
+                    // `internal` — but nothing hangs and nothing is lost.
+                    assert_eq!(resps.len(), 1);
+                    assert!(
+                        is_ok(&resps[0]) || error_kind(&resps[0]) == "internal",
+                        "{}",
+                        resps[0].to_string_compact()
+                    );
+                }
+            });
+        }
+    });
+    // Every armed fire is accounted for, every panic was isolated, and
+    // the engine keeps answering after the storm.
+    assert_eq!(faultpoint::fired("eval.inner"), FIRES, "fires were lost");
+    assert!(tel.panics_caught.get() >= panics_before + 1);
+    faultpoint::disarm_all();
+    let after = serve_str(&engine, EVAL_LINE, &ServeOptions::default());
+    assert!(is_ok(&after[0]), "{}", after[0].to_string_compact());
+}
+
+#[test]
+fn admission_control_sheds_overflow_and_exempts_the_control_plane() {
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let shed_before = tel.requests_shed.get();
+    // The first request holds the only admission slot for ~300 ms (one
+    // smoke-sweep unit, delayed), so the later compute requests land in a
+    // batch together and at least one is shed.
+    faultpoint::arm("sweep.unit", Action::Delay(Duration::from_millis(300)), 1);
+    let engine = Engine::new();
+    let input = concat!(
+        "{\"id\":1,\"type\":\"sweep\",\"net\":\"alexnet\",\"grid\":\"smoke\",\"threads\":1}\n",
+        "{\"id\":2,\"type\":\"sweep\",\"net\":\"alexnet\",\"grid\":\"smoke\",\"threads\":1}\n",
+        "{\"id\":3,\"type\":\"sweep\",\"net\":\"alexnet\",\"grid\":\"smoke\",\"threads\":1}\n",
+        "{\"id\":4,\"type\":\"stats\"}\n",
+    );
+    let resps = serve_str(
+        &engine,
+        input,
+        &ServeOptions {
+            admission_max: 1,
+            threads: 2,
+            ..ServeOptions::default()
+        },
+    );
+    faultpoint::disarm_all();
+    assert_eq!(resps.len(), 4);
+    let shed: Vec<&Json> = resps.iter().filter(|r| !is_ok(r)).collect();
+    assert!(!shed.is_empty(), "no request was shed at admission_max=1");
+    for r in &shed {
+        assert_eq!(error_kind(r), "overloaded", "{}", r.to_string_compact());
+        let hint = r.get("error").unwrap().get("retry_after_ms").unwrap();
+        assert!(hint.as_usize().unwrap() >= 10);
+    }
+    // Stats is control plane: answered even under shedding.
+    let stats = resps.iter().find(|r| r.get("id").and_then(Json::as_usize) == Some(4));
+    assert!(is_ok(stats.unwrap()), "stats must bypass admission");
+    assert!(tel.requests_shed.get() > shed_before);
+}
+
+const CHAIN_SPEC: &str = r#"{
+  "name": "hardnet",
+  "layers": [
+    {"op": "conv2d", "name": "c1", "input": {"h": 16, "w": 16},
+     "c_in": 3, "c_out": 8, "kernel": 3, "stride": 1, "padding": 1},
+    {"op": "linear", "name": "fc", "in_features": 2048, "out_features": 10}
+  ]
+}"#;
+
+const GRAPH_SPEC: &str = r#"{
+  "name": "hardskip",
+  "layers": [
+    {"op": "conv2d", "name": "c1", "input": {"h": 16, "w": 16},
+     "c_in": 3, "c_out": 8, "kernel": 3, "stride": 1, "padding": 1},
+    {"op": "conv2d", "name": "c2", "input": {"h": 16, "w": 16},
+     "c_in": 8, "c_out": 8, "kernel": 3, "padding": 1},
+    {"op": "linear", "name": "fc", "in_features": 2048, "out_features": 10}
+  ],
+  "junctions": [{"name": "res", "op": "add"}],
+  "edges": [["c1", "c2"], ["c1", "res"], ["c2", "res"], ["res", "fc"]]
+}"#;
+
+#[test]
+fn snapshot_restore_round_trips_chains_and_dags_byte_identically() {
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let writes_before = tel.snapshot_writes.get();
+
+    let engine = Engine::new();
+    engine.register_network_str(CHAIN_SPEC).unwrap();
+    engine.register_network_str(GRAPH_SPEC).unwrap();
+
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("camuy-robust-snap-{}.json", std::process::id()));
+    engine.snapshot_to(&path).unwrap();
+    assert!(tel.snapshot_writes.get() > writes_before);
+
+    let doc = engine.snapshot_json();
+    assert_eq!(doc.get("version").unwrap().as_usize(), Some(camuy::api::SNAPSHOT_VERSION));
+    assert_eq!(doc.get("kind").unwrap().as_str(), Some("camuy-registry"));
+    assert_eq!(doc.get("networks").unwrap().as_arr().unwrap().len(), 2);
+
+    let restored = Engine::new();
+    assert_eq!(restored.restore_from(&path).unwrap(), 2);
+    std::fs::remove_file(&path).ok();
+
+    // Both forms answer byte-identically on the restored engine: the
+    // chain through eval, the DAG through a graph request (junctions and
+    // edges must have survived the round trip).
+    for line in [
+        "{\"id\":1,\"type\":\"eval\",\"net\":\"hardnet\",\
+         \"config\":{\"height\":16,\"width\":16}}\n",
+        "{\"id\":2,\"type\":\"graph\",\"net\":\"hardskip\",\
+         \"config\":{\"height\":16,\"width\":16}}\n",
+    ] {
+        let a = serve_str(&engine, line, &ServeOptions::default());
+        let b = serve_str(&restored, line, &ServeOptions::default());
+        assert!(is_ok(&a[0]), "{}", a[0].to_string_compact());
+        assert_eq!(a[0].to_string_compact(), b[0].to_string_compact());
+    }
+
+    // Version discipline: a snapshot from the future is refused loudly.
+    let tampered = match doc {
+        Json::Obj(mut m) => {
+            m.insert("version".to_string(), Json::num(99.0));
+            Json::Obj(m)
+        }
+        _ => unreachable!("snapshot is an object"),
+    };
+    let fresh = Engine::new();
+    let err = fresh.restore_json(&tampered).unwrap_err();
+    assert_eq!(err.kind(), "bad_request");
+    assert!(err.to_string().contains("version"));
+    // And a structurally empty document is refused, not half-restored.
+    let empty = Json::obj(vec![("version", Json::num(1.0))]);
+    assert!(fresh.restore_json(&empty).is_err());
+}
+
+#[test]
+fn oversized_lines_resynchronize_instead_of_killing_the_connection() {
+    let _g = harness();
+    let engine = Engine::new();
+    // 5 MiB of garbage (over the 4 MiB line cap), then a valid request:
+    // the garbage answers a structured error and the stream recovers.
+    let mut input = "x".repeat(5 << 20);
+    input.push('\n');
+    input.push_str(EVAL_LINE);
+    let resps = serve_str(&engine, &input, &ServeOptions::default());
+    assert_eq!(resps.len(), 2, "stream did not resynchronize");
+    assert!(!is_ok(&resps[0]));
+    assert_eq!(error_kind(&resps[0]), "bad_request");
+    assert!(error_message(&resps[0]).contains("exceeds"));
+    assert!(is_ok(&resps[1]), "{}", resps[1].to_string_compact());
+
+    // An oversized line truncated by EOF (no newline to resynchronize to)
+    // still answers and terminates cleanly.
+    let truncated = "y".repeat(5 << 20);
+    let resps = serve_str(&engine, &truncated, &ServeOptions::default());
+    assert_eq!(resps.len(), 1);
+    assert_eq!(error_kind(&resps[0]), "bad_request");
+}
+
+#[test]
+fn tcp_connection_cap_refuses_with_a_structured_overloaded_line() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let shed_before = tel.requests_shed.get();
+
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 2,
+        batch_max: 8,
+        max_connections: Some(2),
+        max_concurrent: 1,
+        ..ServeOptions::default()
+    };
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+
+        // Connection 1 occupies the only slot.
+        let mut c1 = std::net::TcpStream::connect(addr).unwrap();
+        let mut r1 = BufReader::new(c1.try_clone().unwrap());
+        c1.write_all(EVAL_LINE.as_bytes()).unwrap();
+        let mut line = String::new();
+        r1.read_line(&mut line).unwrap();
+        assert!(is_ok(&Json::parse(line.trim()).unwrap()));
+
+        // Connection 2 is over the cap: it gets one structured refusal
+        // line, then EOF — not a silent close.
+        let c2 = std::net::TcpStream::connect(addr).unwrap();
+        let mut r2 = BufReader::new(c2);
+        line.clear();
+        r2.read_line(&mut line).unwrap();
+        let refusal = Json::parse(line.trim()).unwrap();
+        assert!(!is_ok(&refusal), "{}", refusal.to_string_compact());
+        assert_eq!(error_kind(&refusal), "overloaded");
+        let hint = refusal.get("error").unwrap().get("retry_after_ms").unwrap();
+        assert!(hint.as_usize().unwrap() >= 10);
+        line.clear();
+        assert_eq!(r2.read_line(&mut line).unwrap(), 0, "refusal must close");
+
+        // Free the slot; a fresh connection is admitted (retry briefly —
+        // the slot is released a hair after the client sees EOF).
+        c1.shutdown(std::net::Shutdown::Write).unwrap();
+        line.clear();
+        while r1.read_line(&mut line).unwrap() > 0 {
+            line.clear();
+        }
+        for attempt in 0.. {
+            let mut c3 = std::net::TcpStream::connect(addr).unwrap();
+            let mut r3 = BufReader::new(c3.try_clone().unwrap());
+            c3.write_all(EVAL_LINE.as_bytes()).unwrap();
+            c3.shutdown(std::net::Shutdown::Write).unwrap();
+            line.clear();
+            r3.read_line(&mut line).unwrap();
+            let resp = Json::parse(line.trim()).unwrap();
+            if is_ok(&resp) {
+                break;
+            }
+            assert_eq!(error_kind(&resp), "overloaded");
+            assert!(attempt < 50, "slot never freed");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    });
+    assert!(tel.requests_shed.get() > shed_before);
+}
+
+#[test]
+fn periodic_and_drain_snapshots_restore_a_warm_server() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let _g = harness();
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("camuy-robust-warm-{}.json", std::process::id()));
+    std::fs::remove_file(&path).ok();
+
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 2,
+        batch_max: 8,
+        max_connections: Some(2),
+        snapshot: Some(path.clone()),
+        snapshot_secs: 1,
+        ..ServeOptions::default()
+    };
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+
+        // Register over connection 1, then let the accept loop idle past
+        // the periodic-snapshot interval.
+        let mut c1 = std::net::TcpStream::connect(addr).unwrap();
+        let mut r1 = BufReader::new(c1.try_clone().unwrap());
+        let register = format!(
+            "{{\"id\":1,\"type\":\"register\",\"network\":{}}}\n",
+            CHAIN_SPEC.replace('\n', " ")
+        );
+        c1.write_all(register.as_bytes()).unwrap();
+        let mut line = String::new();
+        r1.read_line(&mut line).unwrap();
+        assert!(is_ok(&Json::parse(line.trim()).unwrap()));
+        drop(r1);
+        drop(c1);
+        std::thread::sleep(Duration::from_millis(1600));
+        assert!(path.exists(), "periodic snapshot was never written");
+
+        // A second connection lets the server reach its connection cap
+        // and drain, writing the final snapshot on the way out.
+        let mut c2 = std::net::TcpStream::connect(addr).unwrap();
+        let mut r2 = BufReader::new(c2.try_clone().unwrap());
+        c2.write_all(b"{\"id\":2,\"type\":\"zoo\"}\n").unwrap();
+        c2.shutdown(std::net::Shutdown::Write).unwrap();
+        line.clear();
+        r2.read_line(&mut line).unwrap();
+        assert!(is_ok(&Json::parse(line.trim()).unwrap()));
+    });
+
+    // A cold binary restores the snapshot and answers for the registered
+    // network byte-identically to the original server's engine.
+    let restored = Engine::new();
+    assert_eq!(restored.restore_from(&path).unwrap(), 1);
+    std::fs::remove_file(&path).ok();
+    let line = "{\"id\":3,\"type\":\"eval\",\"net\":\"hardnet\",\
+                \"config\":{\"height\":16,\"width\":16}}\n";
+    let warm = serve_str(&engine, line, &ServeOptions::default());
+    let cold = serve_str(&restored, line, &ServeOptions::default());
+    assert!(is_ok(&warm[0]), "{}", warm[0].to_string_compact());
+    assert_eq!(warm[0].to_string_compact(), cold[0].to_string_compact());
+}
+
+#[test]
+fn stats_surface_exposes_the_robust_counters() {
+    let _g = harness();
+    let engine = Engine::new();
+    let resps = serve_str(&engine, "{\"id\":1,\"type\":\"stats\"}\n", &ServeOptions::default());
+    assert!(is_ok(&resps[0]));
+    let robust = resps[0].get("result").unwrap().get("robust").unwrap();
+    for key in [
+        "requests_shed",
+        "deadline_exceeded",
+        "panics_caught",
+        "snapshot_writes",
+        "admission_depth",
+    ] {
+        assert!(robust.get(key).is_some(), "missing robust.{key}");
+    }
+}
