@@ -7,12 +7,19 @@
 //! `BENCH_api.json` (override with `CAMUY_BENCH_API_OUT`) so the serving
 //! trajectory is tracked PR over PR alongside `BENCH_sweep.json`.
 //!
+//! On Linux the bench also stress-drives the TCP front ends: 512
+//! simultaneous connections, closed-loop, against both the epoll event
+//! loop and the `--threaded` thread-per-connection oracle (DESIGN.md
+//! §16), recording req/s plus client-observed p50/p99 latency for each.
+//!
 //! `CAMUY_BENCH_SMOKE=1` is the CI gate: the process fails (exit 1) if
 //! batched fan-out throughput on the persistent pool drops below the
 //! per-call-spawn baseline, if the telemetry-enabled memo-hot path
-//! costs more than 3% over the disabled one (DESIGN.md §14), or if the
+//! costs more than 3% over the disabled one (DESIGN.md §14), if the
 //! per-request deadline guard costs more than 3% over the bare loop
-//! (DESIGN.md §15).
+//! (DESIGN.md §15), or if the event loop falls behind the threaded
+//! front end under the 512-connection stress (`eventloop_over_threaded`
+//! must stay >= 1.0).
 
 use camuy::api::{Engine, EvalRequest, SweepRequest, SweepSpec};
 use camuy::config::ArrayConfig;
@@ -20,6 +27,127 @@ use camuy::runtime::pool;
 use camuy::sweep::runner::default_threads;
 use camuy::util::bench::{bench, throughput, BenchOpts, BenchResult};
 use camuy::util::json::Json;
+
+/// Raise the open-file soft limit to the hard limit so the 512-connection
+/// stress rung (server + client + clones ≈ 1600 fds in one process) never
+/// trips a 1024 default. Raw syscall shim — the offline image ships no
+/// `libc` crate (DESIGN.md §6).
+#[cfg(target_os = "linux")]
+fn raise_nofile_limit() {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut lim = Rlimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut lim) == 0 && lim.cur < lim.max {
+            lim.cur = lim.max;
+            if setrlimit(RLIMIT_NOFILE, &lim) != 0 {
+                eprintln!("warning: could not raise RLIMIT_NOFILE; stress rung may fail");
+            }
+        }
+    }
+}
+
+/// Connections held open simultaneously by the stress rung.
+#[cfg(target_os = "linux")]
+const STRESS_CONNS: usize = 512;
+/// Requests sent per connection (closed-loop: write, then read the line).
+#[cfg(target_os = "linux")]
+const STRESS_ROUNDS: usize = 4;
+
+/// One full stress round against the chosen TCP front end: 16 client
+/// threads open 32 connections each, rendezvous so all 512 are live at
+/// once, then drive them closed-loop — mostly memo-hot evals, with every
+/// 16th connection sending one smoke sweep so the dispatchers see mixed
+/// work. Per-request client-side latencies (nanoseconds) are appended to
+/// `samples`.
+#[cfg(target_os = "linux")]
+fn stress_round(threaded: bool, samples: &std::sync::Mutex<Vec<u64>>) -> usize {
+    use camuy::api::ServeOptions;
+    use std::io::{BufRead, BufReader, Write};
+
+    const THREADS: usize = 16;
+    const PER_THREAD: usize = STRESS_CONNS / THREADS;
+    const EVAL: &str =
+        "{\"type\":\"eval\",\"net\":\"alexnet\",\"config\":{\"height\":24,\"width\":16}}\n";
+    const SWEEP: &str =
+        "{\"type\":\"sweep\",\"net\":\"alexnet\",\"grid\":\"smoke\",\"threads\":1}\n";
+
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threaded,
+        max_connections: Some(STRESS_CONNS),
+        max_concurrent: 2 * STRESS_CONNS,
+        admission_max: 8 * STRESS_CONNS,
+        idle_secs: 30,
+        ..ServeOptions::default()
+    };
+    let barrier = std::sync::Barrier::new(THREADS);
+    let mut served = 0usize;
+    std::thread::scope(|s| {
+        let engine = &engine;
+        let opts = &opts;
+        let barrier = &barrier;
+        s.spawn(move || camuy::api::serve_tcp(engine, listener, opts).unwrap());
+        let workers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut conns = Vec::with_capacity(PER_THREAD);
+                    for _ in 0..PER_THREAD {
+                        let c = std::net::TcpStream::connect(addr).unwrap();
+                        let r = BufReader::new(c.try_clone().unwrap());
+                        conns.push((c, r));
+                    }
+                    barrier.wait(); // all 512 connections are now live
+                    let mut local = Vec::with_capacity(PER_THREAD * STRESS_ROUNDS);
+                    let mut line = String::new();
+                    for round in 0..STRESS_ROUNDS {
+                        for (i, (c, r)) in conns.iter_mut().enumerate() {
+                            let req = if round == 1 && (t * PER_THREAD + i) % 16 == 0 {
+                                SWEEP
+                            } else {
+                                EVAL
+                            };
+                            let t0 = std::time::Instant::now();
+                            c.write_all(req.as_bytes()).unwrap();
+                            line.clear();
+                            let k = r.read_line(&mut line).unwrap();
+                            assert!(k > 0, "server closed a healthy connection");
+                            local.push(t0.elapsed().as_nanos() as u64);
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        let mut merged = samples.lock().unwrap();
+        for w in workers {
+            let local = w.join().unwrap();
+            served += local.len();
+            merged.extend(local);
+        }
+    });
+    served
+}
+
+/// Exact-rank quantile of a sorted nanosecond sample set, in milliseconds.
+#[cfg(target_os = "linux")]
+fn quantile_ms(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = (((sorted.len() - 1) as f64) * q).round() as usize;
+    sorted[i] as f64 / 1e6
+}
 
 /// The pre-§11 fan-out baseline, preserved here (not in the library — it
 /// is strictly worse than the pool and must not be reachable by library
@@ -231,6 +359,51 @@ fn main() {
         sweep_engine.plans().misses(),
     );
 
+    // --- front-end stress: 512 simultaneous TCP connections driven
+    // closed-loop against the epoll event loop and against the
+    // thread-per-connection oracle it replaced (DESIGN.md §16). Same
+    // request mix, same client harness; what differs is only how the
+    // server multiplexes sockets. Client-side per-request latencies give
+    // p50/p99 alongside the wall-clock throughput.
+    #[cfg(target_os = "linux")]
+    let (stress_ev, stress_th, stress_ratio, stress_ev_lat, stress_th_lat) = {
+        raise_nofile_limit();
+        println!(
+            "\n== api: {STRESS_CONNS}-connection TCP stress, event loop vs thread-per-connection =="
+        );
+        let stress_opts = BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 3,
+        };
+        let stress_n = (STRESS_CONNS * STRESS_ROUNDS) as u64;
+        let ev_samples = std::sync::Mutex::new(Vec::new());
+        let ev = bench("api/stress_512_eventloop", &stress_opts, || {
+            stress_round(false, &ev_samples)
+        });
+        let th_samples = std::sync::Mutex::new(Vec::new());
+        let th = bench("api/stress_512_threaded", &stress_opts, || {
+            stress_round(true, &th_samples)
+        });
+        let ratio = th.seconds.min / ev.seconds.min;
+        let mut ev_lat = ev_samples.into_inner().unwrap();
+        ev_lat.sort_unstable();
+        let mut th_lat = th_samples.into_inner().unwrap();
+        th_lat.sort_unstable();
+        println!(
+            "   -> event loop: {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms across {STRESS_CONNS} live connections",
+            throughput(&ev, stress_n),
+            quantile_ms(&ev_lat, 0.50),
+            quantile_ms(&ev_lat, 0.99),
+        );
+        println!(
+            "   -> threaded:   {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms ({ratio:.2}x best-over-best, event loop's favor)",
+            throughput(&th, stress_n),
+            quantile_ms(&th_lat, 0.50),
+            quantile_ms(&th_lat, 0.99),
+        );
+        (ev, th, ratio, ev_lat, th_lat)
+    };
+
     let variant = |r: &BenchResult| -> Json {
         Json::obj(vec![
             ("seconds_mean", Json::num(r.seconds.mean)),
@@ -247,7 +420,7 @@ fn main() {
             ("sweeps_per_sec", Json::num(throughput(r, 1))),
         ])
     };
-    let doc = Json::obj(vec![
+    let mut doc_pairs = vec![
         ("bench", Json::str("api_engine_eval")),
         ("requests_per_iter", Json::num(n as f64)),
         ("network", Json::str("resnet152")),
@@ -281,7 +454,32 @@ fn main() {
                 ("misses", Json::num(sweep_engine.plans().misses() as f64)),
             ]),
         ),
-    ]);
+    ];
+    #[cfg(target_os = "linux")]
+    {
+        let stress_n = (STRESS_CONNS * STRESS_ROUNDS) as u64;
+        let stress_variant = |r: &BenchResult, lat: &[u64]| -> Json {
+            Json::obj(vec![
+                ("seconds_mean", Json::num(r.seconds.mean)),
+                ("seconds_min", Json::num(r.seconds.min)),
+                ("seconds_p95", Json::num(r.seconds.p95)),
+                ("requests_per_sec", Json::num(throughput(r, stress_n))),
+                ("latency_p50_ms", Json::num(quantile_ms(lat, 0.50))),
+                ("latency_p99_ms", Json::num(quantile_ms(lat, 0.99))),
+            ])
+        };
+        doc_pairs.push(("stress_connections", Json::num(STRESS_CONNS as f64)));
+        doc_pairs.push((
+            "stress_512_eventloop",
+            stress_variant(&stress_ev, &stress_ev_lat),
+        ));
+        doc_pairs.push((
+            "stress_512_threaded",
+            stress_variant(&stress_th, &stress_th_lat),
+        ));
+        doc_pairs.push(("eventloop_over_threaded", Json::num(stress_ratio)));
+    }
+    let doc = Json::obj(doc_pairs);
     let out =
         std::env::var("CAMUY_BENCH_API_OUT").unwrap_or_else(|_| "BENCH_api.json".to_string());
     match std::fs::write(&out, doc.to_string_pretty() + "\n") {
@@ -328,5 +526,20 @@ fn main() {
         println!(
             "smoke gate passed: deadline-guard overhead {deadline_overhead:.3}x (budget 1.03x)"
         );
+        #[cfg(target_os = "linux")]
+        {
+            if stress_ratio < 1.0 {
+                eprintln!(
+                    "FAIL: under {STRESS_CONNS} connections the event-loop front end ran at \
+                     {stress_ratio:.2}x the threaded oracle best-over-best (must be >= 1.0x — \
+                     at least as fast as the thread-per-connection path it replaced)"
+                );
+                std::process::exit(1);
+            }
+            println!(
+                "smoke gate passed: event loop sustained {STRESS_CONNS} connections at \
+                 {stress_ratio:.2}x the threaded front end (best-over-best, must be >= 1.0x)"
+            );
+        }
     }
 }

@@ -1,0 +1,793 @@
+//! The event-loop TCP front end: one poller thread owns every socket
+//! (DESIGN.md §16).
+//!
+//! `camuy serve --listen` used to dedicate two OS threads to every
+//! connection (a blocking reader plus the serve loop), so one slow or
+//! malicious client pinned a thread and the hard connection cap was the
+//! only defense. Here a single poller thread multiplexes all sockets
+//! through [`crate::runtime::netpoll`] (level-triggered epoll), driving a
+//! per-connection state machine:
+//!
+//! ```text
+//! read buffer → line framing → batch assembly → pool dispatch → write queue
+//! ```
+//!
+//! Compute never blocks I/O: assembled batches are handed over a channel
+//! to a small pool of dispatcher threads, which run the exact same
+//! [`process_batch`](super::serve::process_batch) as the threaded front
+//! end (so response streams are byte-identical) and wake the poller over
+//! an eventfd when the response bytes are ready. One batch is in flight
+//! per connection at a time, which preserves per-connection response
+//! ordering and the register-barrier semantics for free.
+//!
+//! Misbehaving clients are bounded by construction:
+//!
+//! * **Slowloris** — a connection with no read/write progress and no
+//!   batch in flight for `idle_secs` gets a structured `idle_timeout`
+//!   envelope and is closed (`connections_idle_closed`).
+//! * **Stalled readers** — responses queue up to `write_cap_bytes`; past
+//!   the cap the queue is dropped and the client gets one `overloaded`
+//!   envelope, then close (`requests_shed`). The gauge
+//!   `write_queue_bytes` tracks the total queued across connections.
+//! * **Vanished clients** — a reset/broken pipe cancels the connection's
+//!   in-flight batch through its [`CancelToken`] so the pool stops
+//!   computing answers nobody will read (`connections_aborted`).
+//! * **Floods** — reads stop once a connection has `batch_max` framed
+//!   requests waiting (TCP backpressure does the rest), each read event
+//!   has a byte budget so one firehose cannot starve its neighbors, and
+//!   connections beyond `max_concurrent` are refused with the structured
+//!   `overloaded` envelope.
+//!
+//! SIGTERM (or [`request_drain`](super::serve::request_drain)) drains
+//! gracefully: stop accepting, refuse new reads, finish every assembled
+//! request, flush, close. The faultpoint sites `serve.accept`,
+//! `conn.read` and `conn.write` make the failure paths deterministically
+//! testable without real slow clients.
+
+use super::engine::Engine;
+use super::error::ApiError;
+use super::serve::{self, Incoming, ServeOptions, ServeStats, MAX_LINE_BYTES};
+use crate::robust::{Admission, CancelToken, Cancelled};
+use crate::runtime::netpoll::{self, EpollEvent, Poller, Waker};
+use crate::telemetry::Telemetry;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Poller token of the accept socket.
+const TOKEN_LISTENER: u64 = 0;
+/// Poller token of the dispatcher-completion eventfd.
+const TOKEN_WAKER: u64 = 1;
+/// First token handed to a connection.
+const TOKEN_FIRST_CONN: u64 = 2;
+
+/// Most bytes pulled off one socket per readiness event, so a firehose
+/// client shares the poller fairly with its neighbors (level-triggered
+/// epoll re-reports the leftover immediately).
+const READ_BUDGET: usize = 256 * 1024;
+/// One `read(2)` worth of buffer.
+const READ_CHUNK: usize = 64 * 1024;
+/// Poll timeout: the cadence of idle checks, drain-flag polls and
+/// periodic snapshots when no socket is active.
+const POLL_MS: i32 = 100;
+
+/// A batch handed to the dispatcher pool.
+struct BatchJob {
+    token: u64,
+    lines: Vec<Incoming>,
+    cancel: CancelToken,
+}
+
+/// A finished batch coming back from a dispatcher.
+struct BatchDone {
+    token: u64,
+    bytes: Vec<u8>,
+    stats: ServeStats,
+    /// The connection's token fired mid-batch (client vanished): the
+    /// bytes are partial and must not be delivered.
+    aborted: bool,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    peer: String,
+    /// Raw bytes read but not yet framed into a line.
+    rbuf: Vec<u8>,
+    /// Inside an oversized line: discard until the next newline.
+    discarding: bool,
+    /// Framed requests awaiting dispatch.
+    inbox: VecDeque<Incoming>,
+    /// Response bytes awaiting the socket; `out_pos` marks how much of
+    /// the front has already been written.
+    outbox: Vec<u8>,
+    out_pos: usize,
+    /// One batch is at the dispatchers.
+    in_flight: bool,
+    /// Peer half-closed (or a drain refused further reads).
+    read_closed: bool,
+    /// Close once the outbox flushes; no further dispatches, and reads
+    /// only discard (the lingering close below).
+    closing: bool,
+    /// Our write side has been shut down (FIN sent).
+    sent_fin: bool,
+    /// Tear down now, delivering nothing further.
+    aborted: bool,
+    /// Cancels this connection's in-flight compute when it dies.
+    cancel: CancelToken,
+    stats: ServeStats,
+    last_activity: Instant,
+    /// Interest mask currently registered with the poller.
+    interest: u32,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: String) -> Conn {
+        Conn {
+            stream,
+            peer,
+            rbuf: Vec::new(),
+            discarding: false,
+            inbox: VecDeque::new(),
+            outbox: Vec::new(),
+            out_pos: 0,
+            in_flight: false,
+            read_closed: false,
+            closing: false,
+            sent_fin: false,
+            aborted: false,
+            cancel: CancelToken::manual(),
+            stats: ServeStats::default(),
+            last_activity: Instant::now(),
+            interest: netpoll::EPOLLIN | netpoll::EPOLLRDHUP,
+        }
+    }
+
+    /// Response bytes queued and not yet written.
+    fn pending_out(&self) -> usize {
+        self.outbox.len() - self.out_pos
+    }
+
+    /// The interest mask this state wants: read while we are willing to
+    /// frame more requests (or, when closing, to drain-and-discard the
+    /// peer's leftovers so closing never resets the wire), write while
+    /// responses are queued.
+    fn desired_interest(&self, batch_max: usize) -> u32 {
+        let mut mask = netpoll::EPOLLRDHUP;
+        if !self.read_closed && !self.aborted && (self.closing || self.inbox.len() < batch_max) {
+            mask |= netpoll::EPOLLIN;
+        }
+        if self.pending_out() > 0 {
+            mask |= netpoll::EPOLLOUT;
+        }
+        mask
+    }
+}
+
+/// Shared, copyable context threaded through the loop's helpers.
+#[derive(Clone, Copy)]
+struct Ctx<'a> {
+    engine: &'a Engine,
+    opts: &'a ServeOptions,
+    poller: &'a Poller,
+    job_tx: &'a mpsc::Sender<BatchJob>,
+    tel: &'static Telemetry,
+    batch_max: usize,
+}
+
+/// Run the event-loop front end until drain or the connection budget is
+/// spent. Called from [`super::serve::serve_tcp`], which has already
+/// installed the SIGPIPE/SIGTERM handlers and writes the final snapshot
+/// after this returns.
+pub(crate) fn serve_event_loop(
+    engine: &Engine,
+    listener: &TcpListener,
+    opts: &ServeOptions,
+) -> io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let poller = Poller::new()?;
+    let waker = Waker::new()?;
+    poller.add(listener.as_raw_fd(), TOKEN_LISTENER, netpoll::EPOLLIN)?;
+    poller.add(waker.fd(), TOKEN_WAKER, netpoll::EPOLLIN)?;
+    let admission = Admission::new(opts.admission_max);
+    let (job_tx, job_rx) = mpsc::channel::<BatchJob>();
+    let (done_tx, done_rx) = mpsc::channel::<BatchDone>();
+    let job_rx = Mutex::new(job_rx);
+    // Dispatchers bound how many connections' batches compute at once.
+    // At least two, so one long-running batch (a dense sweep) can never
+    // starve every other client — the CI robustness smoke depends on an
+    // eval answering while a deadline-capped sweep grinds.
+    let dispatchers = opts.threads.max(2);
+    std::thread::scope(|scope| -> io::Result<()> {
+        let admission = &admission;
+        let job_rx = &job_rx;
+        let waker_ref = &waker;
+        for _ in 0..dispatchers {
+            let done_tx = done_tx.clone();
+            scope.spawn(move || dispatcher(engine, opts, admission, job_rx, done_tx, waker_ref));
+        }
+        let ctx = Ctx {
+            engine,
+            opts,
+            poller: &poller,
+            job_tx: &job_tx,
+            tel: crate::telemetry::global(),
+            batch_max: opts.batch_max.max(1),
+        };
+        let res = event_loop(ctx, listener, &waker, &done_rx);
+        // Closing the job channel lets the dispatchers drain and exit so
+        // the scope can join them.
+        drop(job_tx);
+        res
+    })
+}
+
+/// A dispatcher thread: pull a batch, run it through the shared
+/// [`process_batch`](serve::process_batch) with the connection's token
+/// ambient (so a dead client's cancellation reaches the pool's
+/// checkpoints), hand the bytes back, wake the poller.
+fn dispatcher(
+    engine: &Engine,
+    opts: &ServeOptions,
+    admission: &Admission,
+    jobs: &Mutex<mpsc::Receiver<BatchJob>>,
+    done_tx: mpsc::Sender<BatchDone>,
+    waker: &Waker,
+) {
+    loop {
+        // Holding the lock only while waiting: the first idle dispatcher
+        // camps on `recv`, everyone else queues behind the mutex.
+        let job = {
+            let rx = match jobs.lock() {
+                Ok(guard) => guard,
+                Err(_) => return,
+            };
+            match rx.recv() {
+                Ok(job) => job,
+                Err(_) => return,
+            }
+        };
+        let mut bytes: Vec<u8> = Vec::new();
+        let mut stats = ServeStats::default();
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            crate::robust::with_token(&job.cancel, || {
+                serve::process_batch(engine, &job.lines, &mut bytes, opts, &mut stats, admission)
+            })
+        }));
+        let aborted = match run {
+            // Writes into a Vec cannot fail.
+            Ok(_) => false,
+            Err(payload) => {
+                if payload.downcast_ref::<Cancelled>().is_some() {
+                    // The connection died mid-batch; its partial answers
+                    // have no reader.
+                    true
+                } else {
+                    // Anything else escaping `process_batch`'s per-request
+                    // isolation is an infrastructure bug: let it propagate
+                    // (parity with the threaded front end, where it would
+                    // unwind the connection's scoped thread).
+                    resume_unwind(payload);
+                }
+            }
+        };
+        if aborted {
+            bytes.clear();
+        }
+        let done = BatchDone {
+            token: job.token,
+            bytes,
+            stats,
+            aborted,
+        };
+        if done_tx.send(done).is_err() {
+            return;
+        }
+        waker.wake();
+    }
+}
+
+/// The poller loop proper.
+fn event_loop(
+    ctx: Ctx<'_>,
+    listener: &TcpListener,
+    waker: &Waker,
+    done_rx: &mpsc::Receiver<BatchDone>,
+) -> io::Result<()> {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = TOKEN_FIRST_CONN;
+    let mut accepted = 0usize;
+    let mut accepting = true;
+    let mut draining = false;
+    let mut last_snapshot = Instant::now();
+    let mut events = vec![EpollEvent::zeroed(); 512];
+    loop {
+        if !draining && serve::drain_requested() {
+            draining = true;
+            log::info!(
+                "serve: drain requested, finishing {} live connection(s)",
+                conns.len()
+            );
+            if accepting {
+                accepting = false;
+                let _ = ctx.poller.delete(listener.as_raw_fd());
+            }
+            for conn in conns.values_mut() {
+                // Refuse new reads; everything already framed still runs.
+                conn.read_closed = true;
+                conn.rbuf.clear();
+                conn.discarding = false;
+            }
+        }
+        if !accepting && conns.is_empty() {
+            break;
+        }
+        let n = ctx.poller.wait(&mut events, POLL_MS)?;
+        for ev in events.iter().take(n) {
+            match ev.token() {
+                TOKEN_LISTENER => {
+                    if accepting {
+                        accept_ready(ctx, listener, &mut conns, &mut next_token, &mut accepted);
+                        if let Some(max) = ctx.opts.max_connections {
+                            if accepted >= max {
+                                accepting = false;
+                                let _ = ctx.poller.delete(listener.as_raw_fd());
+                            }
+                        }
+                    }
+                }
+                TOKEN_WAKER => waker.drain(),
+                token => {
+                    if let Some(conn) = conns.get_mut(&token) {
+                        if ev.failed() {
+                            // Error or full hangup (e.g. the peer reset):
+                            // nothing more can be delivered.
+                            conn.aborted = true;
+                        } else {
+                            if ev.readable() {
+                                do_read(conn, ctx.batch_max, ctx.tel);
+                            }
+                            if ev.writable() {
+                                do_write(conn, ctx.tel);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        while let Ok(done) = done_rx.try_recv() {
+            // A missing token is a connection already torn down; its
+            // cancelled batch finished into the void.
+            if let Some(conn) = conns.get_mut(&done.token) {
+                complete_batch(conn, done, ctx);
+            }
+        }
+        sweep(ctx, &mut conns);
+        serve::maybe_snapshot(ctx.engine, ctx.opts, &mut last_snapshot);
+    }
+    Ok(())
+}
+
+/// Accept everything pending. Connections beyond `max_concurrent` are
+/// refused with the structured `overloaded` envelope, exactly like the
+/// threaded front end, and do not count against `max_connections`.
+fn accept_ready(
+    ctx: Ctx<'_>,
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    accepted: &mut usize,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _addr)) => stream,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) => {
+                log::warn!("serve: accept failed: {e}");
+                return;
+            }
+        };
+        crate::faultpoint::hit("serve.accept");
+        if conns.len() >= ctx.opts.max_concurrent.max(1) {
+            log::warn!(
+                "serve: shedding connection, {} already live (cap {})",
+                conns.len(),
+                ctx.opts.max_concurrent
+            );
+            serve::refuse_connection(stream);
+            continue;
+        }
+        if let Err(e) = stream.set_nonblocking(true) {
+            log::warn!("serve: could not configure connection: {e}");
+            continue;
+        }
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".to_string());
+        let token = *next_token;
+        *next_token += 1;
+        let conn = Conn::new(stream, peer);
+        if let Err(e) = ctx
+            .poller
+            .add(conn.stream.as_raw_fd(), token, conn.interest)
+        {
+            log::warn!("serve: {}: could not register connection: {e}", conn.peer);
+            continue;
+        }
+        ctx.tel.serve_connections.add(1);
+        ctx.tel.connections_active.inc();
+        conns.insert(token, conn);
+        *accepted += 1;
+        if let Some(max) = ctx.opts.max_connections {
+            if *accepted >= max {
+                return;
+            }
+        }
+    }
+}
+
+/// Run a faultpoint with the connection's token ambient, so an armed
+/// `cancel` action aborts exactly this connection (and an armed `panic`
+/// is contained to it). Returns whether the connection must abort.
+fn fault_aborts(site: &'static str, cancel: &CancelToken) -> bool {
+    catch_unwind(AssertUnwindSafe(|| {
+        crate::robust::with_token(cancel, || crate::faultpoint::hit(site))
+    }))
+    .is_err()
+}
+
+/// Service a readable socket: pull bytes (within the fairness budget),
+/// frame complete lines into the inbox, stop once `batch_max` requests
+/// wait (TCP backpressure throttles the sender from there). A `closing`
+/// connection instead reads and discards — the lingering close: dropping
+/// a socket with unread input makes the kernel answer with RST, which can
+/// destroy the structured close notice before the client reads it.
+fn do_read(conn: &mut Conn, batch_max: usize, tel: &'static Telemetry) {
+    if conn.read_closed || conn.aborted {
+        return;
+    }
+    if fault_aborts("conn.read", &conn.cancel) {
+        conn.aborted = true;
+        return;
+    }
+    let mut buf = [0u8; READ_CHUNK];
+    let mut budget = READ_BUDGET;
+    loop {
+        if budget == 0 || (!conn.closing && conn.inbox.len() >= batch_max) {
+            return;
+        }
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.read_closed = true;
+                if !conn.closing {
+                    flush_trailing_line(conn, tel);
+                }
+                return;
+            }
+            Ok(k) => {
+                conn.last_activity = Instant::now();
+                budget = budget.saturating_sub(k);
+                if conn.closing {
+                    continue;
+                }
+                conn.rbuf.extend_from_slice(&buf[..k]);
+                frame_lines(conn, tel);
+                if conn.read_closed {
+                    // Invalid UTF-8 closed the input mid-buffer.
+                    return;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                log::warn!("serve: {}: read error: {e}", conn.peer);
+                conn.aborted = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Split `rbuf` into framed requests. Mirrors the blocking reader's
+/// semantics exactly — same oversized-line threshold and resync, same
+/// blank-line skip, same treat-invalid-UTF-8-as-input-close — so the two
+/// front ends stay byte-identical.
+fn frame_lines(conn: &mut Conn, tel: &'static Telemetry) {
+    loop {
+        if conn.discarding {
+            match conn.rbuf.iter().position(|&b| b == b'\n') {
+                Some(p) => {
+                    conn.rbuf.drain(..=p);
+                    conn.discarding = false;
+                }
+                None => {
+                    conn.rbuf.clear();
+                    return;
+                }
+            }
+            continue;
+        }
+        match conn.rbuf.iter().position(|&b| b == b'\n') {
+            Some(p) if p as u64 >= MAX_LINE_BYTES => {
+                log::warn!(
+                    "serve: {}: request line exceeds {MAX_LINE_BYTES} bytes, \
+                     skipping to the next newline",
+                    conn.peer
+                );
+                conn.rbuf.drain(..=p);
+                conn.inbox.push_back(Incoming::Oversized);
+            }
+            Some(p) => {
+                let line = match std::str::from_utf8(&conn.rbuf[..p]) {
+                    Ok(text) => {
+                        let trimmed = text.trim();
+                        if trimmed.is_empty() {
+                            None
+                        } else {
+                            Some(trimmed.to_string())
+                        }
+                    }
+                    Err(_) => {
+                        // The blocking reader's `read_line` fails the
+                        // whole input stream on invalid UTF-8; match it.
+                        log::warn!("serve: {}: invalid UTF-8, closing input", conn.peer);
+                        conn.read_closed = true;
+                        conn.rbuf.clear();
+                        return;
+                    }
+                };
+                if let Some(text) = line {
+                    tel.serve_bytes_in.add(p as u64 + 1);
+                    conn.inbox.push_back(Incoming::Line(text));
+                }
+                conn.rbuf.drain(..=p);
+            }
+            None => {
+                if conn.rbuf.len() as u64 > MAX_LINE_BYTES {
+                    log::warn!(
+                        "serve: {}: request line exceeds {MAX_LINE_BYTES} bytes, \
+                         skipping to the next newline",
+                        conn.peer
+                    );
+                    conn.rbuf.clear();
+                    conn.discarding = true;
+                    conn.inbox.push_back(Incoming::Oversized);
+                    continue;
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// EOF with leftover bytes: a final unterminated line is still a request
+/// (parity with `read_line`, which returns it without the newline).
+fn flush_trailing_line(conn: &mut Conn, tel: &'static Telemetry) {
+    if conn.discarding {
+        conn.discarding = false;
+        conn.rbuf.clear();
+        return;
+    }
+    if conn.rbuf.is_empty() {
+        return;
+    }
+    if let Ok(text) = std::str::from_utf8(&conn.rbuf) {
+        let trimmed = text.trim();
+        if !trimmed.is_empty() {
+            tel.serve_bytes_in.add(conn.rbuf.len() as u64);
+            conn.inbox.push_back(Incoming::Line(trimmed.to_string()));
+        }
+    }
+    conn.rbuf.clear();
+}
+
+/// Push queued response bytes into the socket until it would block.
+fn do_write(conn: &mut Conn, tel: &'static Telemetry) {
+    if conn.aborted || conn.pending_out() == 0 {
+        return;
+    }
+    if fault_aborts("conn.write", &conn.cancel) {
+        conn.aborted = true;
+        return;
+    }
+    loop {
+        if conn.out_pos >= conn.outbox.len() {
+            break;
+        }
+        match conn.stream.write(&conn.outbox[conn.out_pos..]) {
+            Ok(0) => {
+                conn.aborted = true;
+                break;
+            }
+            Ok(k) => {
+                conn.out_pos += k;
+                conn.last_activity = Instant::now();
+                tel.write_queue_bytes.add(-(k as i64));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                // Broken pipe / reset: the client is gone.
+                log::warn!("serve: {}: write error: {e}", conn.peer);
+                conn.aborted = true;
+                break;
+            }
+        }
+    }
+    if conn.out_pos == conn.outbox.len() {
+        conn.outbox.clear();
+        conn.out_pos = 0;
+    } else if conn.out_pos > READ_CHUNK {
+        // Reclaim the written prefix of a long-lived queue.
+        conn.outbox.drain(..conn.out_pos);
+        conn.out_pos = 0;
+    }
+}
+
+/// Fold a finished batch back into its connection: deliver the bytes, or
+/// shed the connection if its reader has stalled past the write cap.
+fn complete_batch(conn: &mut Conn, done: BatchDone, ctx: Ctx<'_>) {
+    conn.in_flight = false;
+    conn.last_activity = Instant::now();
+    conn.stats.requests += done.stats.requests;
+    conn.stats.errors += done.stats.errors;
+    conn.stats.batches += done.stats.batches;
+    if done.aborted {
+        conn.aborted = true;
+        return;
+    }
+    if conn.aborted || conn.closing {
+        return;
+    }
+    ctx.tel.write_queue_bytes.add(done.bytes.len() as i64);
+    conn.outbox.extend_from_slice(&done.bytes);
+    // Flush into the socket first: the cap is a judgement on the *client*
+    // (it stopped reading), so only bytes the kernel refused to take
+    // count against it — a healthy reader taking a large batch is fine.
+    do_write(conn, ctx.tel);
+    if !conn.aborted && conn.pending_out() > ctx.opts.write_cap_bytes.max(1) {
+        shed_stalled_reader(conn, ctx.tel);
+    }
+}
+
+/// The write queue blew its cap: the client stopped reading. Drop the
+/// queue, tell it why with one `overloaded` envelope, close, and cancel
+/// anything it still had queued.
+fn shed_stalled_reader(conn: &mut Conn, tel: &'static Telemetry) {
+    log::warn!(
+        "serve: {}: write queue over cap, shedding stalled reader",
+        conn.peer
+    );
+    tel.requests_shed.add(1);
+    // Drop the queue, but never mid-line: if a response was partially
+    // written, keep its tail so the client's framing stays intact and
+    // the refusal lands on its own line.
+    let keep = match conn.outbox[conn.out_pos..].iter().position(|&b| b == b'\n') {
+        Some(p) => conn.out_pos + p + 1,
+        None => conn.out_pos,
+    };
+    tel.write_queue_bytes.add(-((conn.outbox.len() - keep) as i64));
+    conn.outbox.truncate(keep);
+    let refusal = serve::envelope(
+        None,
+        Err(ApiError::Overloaded {
+            retry_after_ms: 250,
+        }),
+    )
+    .to_string_compact();
+    conn.outbox.extend_from_slice(refusal.as_bytes());
+    conn.outbox.push(b'\n');
+    tel.write_queue_bytes.add(refusal.len() as i64 + 1);
+    conn.closing = true;
+    conn.inbox.clear();
+    conn.cancel.cancel();
+}
+
+/// The per-iteration pass over every connection: dispatch ready batches,
+/// flush writes, enforce the idle timeout, close what is finished, and
+/// reconcile poller interest with the new state.
+fn sweep(ctx: Ctx<'_>, conns: &mut HashMap<u64, Conn>) {
+    let idle = Duration::from_secs(ctx.opts.idle_secs);
+    let tokens: Vec<u64> = conns.keys().copied().collect();
+    for token in tokens {
+        let conn = conns.get_mut(&token).expect("token just listed");
+        if !conn.aborted && !conn.closing {
+            // Lines can be waiting in `rbuf` because the inbox was full
+            // when they arrived; frame them now that dispatch may have
+            // drained it.
+            if !conn.rbuf.is_empty() && conn.inbox.len() < ctx.batch_max {
+                frame_lines(conn, ctx.tel);
+            }
+            if !conn.in_flight && !conn.inbox.is_empty() {
+                let take = conn.inbox.len().min(ctx.batch_max);
+                let lines: Vec<Incoming> = conn.inbox.drain(..take).collect();
+                conn.in_flight = true;
+                let job = BatchJob {
+                    token,
+                    lines,
+                    cancel: conn.cancel.clone(),
+                };
+                let _ = ctx.job_tx.send(job);
+            }
+        }
+        do_write(conn, ctx.tel);
+        // A closing connection that has flushed everything sends FIN so
+        // the client sees EOF right after the close notice, then lingers
+        // (reads discarded) until the peer closes too — tearing it down
+        // with unread input still queued would reset the wire and could
+        // destroy the notice.
+        if conn.closing && !conn.sent_fin && conn.pending_out() == 0 {
+            let _ = conn.stream.shutdown(std::net::Shutdown::Write);
+            conn.sent_fin = true;
+        }
+        if ctx.opts.idle_secs > 0 && !conn.in_flight && conn.last_activity.elapsed() >= idle {
+            if conn.closing {
+                // Second strike: it never read its close notice either.
+                conn.aborted = true;
+            } else if !conn.aborted {
+                idle_close(conn, ctx.tel);
+            }
+        }
+        let finished = conn.read_closed
+            && !conn.in_flight
+            && conn.pending_out() == 0
+            && (conn.closing || conn.inbox.is_empty());
+        if conn.aborted || finished {
+            let conn = conns.remove(&token).expect("token just listed");
+            close_conn(ctx, conn);
+            continue;
+        }
+        let want = conn.desired_interest(ctx.batch_max);
+        if want != conn.interest {
+            conn.interest = want;
+            let _ = ctx
+                .poller
+                .modify(conn.stream.as_raw_fd(), token, want);
+        }
+    }
+}
+
+/// Idle past the slowloris budget: structured `idle_timeout` envelope,
+/// then close once it flushes (or abort on the next strike).
+fn idle_close(conn: &mut Conn, tel: &'static Telemetry) {
+    log::warn!(
+        "serve: {}: idle timeout, closing (slowloris guard)",
+        conn.peer
+    );
+    tel.connections_idle_closed.add(1);
+    let idle_ms = conn.last_activity.elapsed().as_millis() as u64;
+    let notice =
+        serve::envelope(None, Err(ApiError::IdleTimeout { idle_ms })).to_string_compact();
+    conn.outbox.extend_from_slice(notice.as_bytes());
+    conn.outbox.push(b'\n');
+    tel.write_queue_bytes.add(notice.len() as i64 + 1);
+    conn.closing = true;
+    conn.inbox.clear();
+    do_write(conn, tel);
+}
+
+/// Tear a connection down: settle the gauges, cancel in-flight work on
+/// aborts, log the summary on graceful closes, deregister, drop.
+fn close_conn(ctx: Ctx<'_>, conn: Conn) {
+    ctx.tel.write_queue_bytes.add(-(conn.pending_out() as i64));
+    ctx.tel.connections_active.dec();
+    let _ = ctx.poller.delete(conn.stream.as_raw_fd());
+    if conn.aborted {
+        conn.cancel.cancel();
+        ctx.tel.connections_aborted.add(1);
+        log::warn!(
+            "serve: {}: connection aborted after {} request(s)",
+            conn.peer,
+            conn.stats.requests
+        );
+    } else {
+        let summary = serve::connection_summary(ctx.engine, &conn.stats);
+        log::info!("serve: {}: {summary}", conn.peer);
+    }
+}

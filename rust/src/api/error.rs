@@ -33,6 +33,10 @@ pub enum ApiError {
     /// The server shed the request under load (admission queue full or
     /// connection cap reached); retry after roughly `retry_after_ms`.
     Overloaded { retry_after_ms: u64 },
+    /// The connection made no read or write progress for the server's
+    /// idle budget and was closed by the slowloris guard (DESIGN.md §16).
+    /// `idle_ms` is how long it sat idle.
+    IdleTimeout { idle_ms: u64 },
     /// The request panicked and was isolated (DESIGN.md §15); the engine
     /// and the connection stay healthy. The message is the panic payload.
     Internal(String),
@@ -49,6 +53,7 @@ impl ApiError {
             ApiError::InvalidNetwork(_) => "invalid_network",
             ApiError::DeadlineExceeded { .. } => "deadline_exceeded",
             ApiError::Overloaded { .. } => "overloaded",
+            ApiError::IdleTimeout { .. } => "idle_timeout",
             ApiError::Internal(_) => "internal",
         }
     }
@@ -73,6 +78,9 @@ impl ApiError {
             }
             ApiError::Overloaded { retry_after_ms } => {
                 pairs.push(("retry_after_ms", Json::num(*retry_after_ms as f64)));
+            }
+            ApiError::IdleTimeout { idle_ms } => {
+                pairs.push(("idle_ms", Json::num(*idle_ms as f64)));
             }
             _ => {}
         }
@@ -100,6 +108,9 @@ impl fmt::Display for ApiError {
             ),
             ApiError::Overloaded { retry_after_ms } => {
                 write!(f, "server overloaded; retry after {retry_after_ms} ms")
+            }
+            ApiError::IdleTimeout { idle_ms } => {
+                write!(f, "connection idle for {idle_ms} ms, closing")
             }
             ApiError::Internal(msg) => write!(f, "internal error: {msg}"),
         }
@@ -150,6 +161,11 @@ mod tests {
         assert_eq!(e.kind(), "overloaded");
         let j = e.to_json();
         assert_eq!(j.get("retry_after_ms").and_then(Json::as_f64), Some(40.0));
+
+        let e = ApiError::IdleTimeout { idle_ms: 60_000 };
+        assert_eq!(e.kind(), "idle_timeout");
+        let j = e.to_json();
+        assert_eq!(j.get("idle_ms").and_then(Json::as_f64), Some(60_000.0));
 
         let e = ApiError::Internal("boom".into());
         assert_eq!(e.kind(), "internal");

@@ -29,6 +29,8 @@
 //! request struct, calls the engine, and formats the typed response.
 //! Request schema and wire format are documented in DESIGN.md §8.
 
+#[cfg(target_os = "linux")]
+mod conn;
 mod engine;
 mod error;
 mod request;
@@ -46,4 +48,7 @@ pub use response::{
     GraphResponse, MemoryResponse, NetworkEntry, NetworkSource, PerLayerReport, RegisterResponse,
     StatsResponse, TraceResponse,
 };
-pub use serve::{connection_summary, serve, serve_tcp, ServeOptions, ServeStats};
+pub use serve::{
+    clear_drain, connection_summary, drain_requested, request_drain, serve, serve_tcp,
+    ServeOptions, ServeStats,
+};

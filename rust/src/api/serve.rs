@@ -71,6 +71,20 @@ pub struct ServeOptions {
     pub snapshot: Option<std::path::PathBuf>,
     /// Seconds between periodic snapshot writes.
     pub snapshot_secs: u64,
+    /// TCP only: use the legacy thread-per-connection front end instead
+    /// of the event loop (DESIGN.md §16). Kept as the oracle the
+    /// event-loop replay tests compare against; also the only TCP path on
+    /// non-Linux hosts, where `runtime::netpoll` does not exist.
+    pub threaded: bool,
+    /// Event loop only: close a connection after this many seconds
+    /// without read or write progress and no batch in flight (the
+    /// slowloris guard, DESIGN.md §16). `0` disables the timeout.
+    pub idle_secs: u64,
+    /// Event loop only: most response bytes queued for one connection
+    /// whose client has stopped reading; past the cap the queue is
+    /// dropped and the connection is shed with a structured `overloaded`
+    /// close instead of growing without bound.
+    pub write_cap_bytes: usize,
 }
 
 impl Default for ServeOptions {
@@ -83,6 +97,9 @@ impl Default for ServeOptions {
             admission_max: 256,
             snapshot: None,
             snapshot_secs: 30,
+            threaded: false,
+            idle_secs: 60,
+            write_cap_bytes: 8 << 20,
         }
     }
 }
@@ -98,14 +115,14 @@ pub struct ServeStats {
 /// One unit off the reader thread: a complete request line, or the
 /// tombstone of one that blew [`MAX_LINE_BYTES`] (answered with a
 /// structured error so the client's id sequence never desynchronizes).
-enum Incoming {
+pub(crate) enum Incoming {
     Line(String),
     Oversized,
 }
 
 /// One request per line, each at most this long — a client streaming
 /// bytes without a newline cannot grow memory without bound.
-const MAX_LINE_BYTES: u64 = 4 << 20;
+pub(crate) const MAX_LINE_BYTES: u64 = 4 << 20;
 
 /// Serve JSON-lines requests from `input` until EOF, writing one response
 /// line per request to `out`. Blank lines are skipped.
@@ -205,7 +222,10 @@ where
                 if let Err(e) =
                     process_batch(engine, &lines, out, opts, &mut stats, admission)
                 {
+                    // The peer vanished mid-conversation (broken pipe /
+                    // reset): the remaining answers have no reader.
                     log::warn!("serve: output error, draining remaining input: {e}");
+                    crate::telemetry::global().connections_aborted.add(1);
                     write_err = Some(e);
                 }
             }
@@ -244,6 +264,27 @@ fn term_flag() -> &'static AtomicBool {
     &FLAG
 }
 
+/// Ask every TCP serve loop in this process to drain gracefully — the
+/// programmatic equivalent of sending the process SIGTERM: stop
+/// accepting, refuse new reads, finish in-flight requests, flush, write
+/// the final snapshot, return. Embedders (and tests) use this to stop a
+/// server they started in-process without signals.
+pub fn request_drain() {
+    term_flag().store(true, Ordering::SeqCst);
+}
+
+/// Whether a drain has been requested ([`request_drain`] or SIGTERM).
+pub fn drain_requested() -> bool {
+    term_flag().load(Ordering::SeqCst)
+}
+
+/// Re-arm after a drain, so a later [`serve_tcp`] call in the same
+/// process starts accepting again. (The flag is process-global; a server
+/// restarted in-process after a drain would otherwise exit immediately.)
+pub fn clear_drain() {
+    term_flag().store(false, Ordering::SeqCst);
+}
+
 /// Install the SIGTERM handler (raw syscall shim — the offline image
 /// ships no `libc` crate, DESIGN.md §6). Storing into a static atomic is
 /// async-signal-safe. Returns the flag it sets.
@@ -267,11 +308,16 @@ fn install_sigterm() -> &'static AtomicBool {
     term_flag()
 }
 
-/// Accept TCP connections and run [`serve`] per connection, concurrently,
-/// against one shared engine (connections see each other's registered
-/// networks and share the memo table) and one shared admission gate.
-/// SIGTERM drains gracefully: stop accepting, finish live connections,
-/// write a final snapshot when `--snapshot` is set.
+/// Accept TCP connections against one shared engine (connections see each
+/// other's registered networks and share the memo table) and one shared
+/// admission gate. On Linux the default front end is the epoll event loop
+/// (DESIGN.md §16) — one poller thread owns every socket, a small
+/// dispatcher pool runs the batches, and misbehaving clients are bounded
+/// by idle timeouts and write-queue caps; `opts.threaded` (CLI
+/// `--threaded`) selects the legacy thread-per-connection loop instead,
+/// which is also the only path off Linux. Either way SIGTERM (or
+/// [`request_drain`]) drains gracefully: stop accepting, finish live
+/// connections, write a final snapshot when `--snapshot` is set.
 pub fn serve_tcp(
     engine: &Engine,
     listener: std::net::TcpListener,
@@ -294,6 +340,29 @@ pub fn serve_tcp(
         }
     }
     let term = install_sigterm();
+    #[cfg(target_os = "linux")]
+    if !opts.threaded {
+        super::conn::serve_event_loop(engine, &listener, opts)?;
+        write_final_snapshot(engine, opts);
+        return Ok(());
+    }
+    serve_tcp_threaded(engine, listener, opts, term)?;
+    write_final_snapshot(engine, opts);
+    Ok(())
+}
+
+/// The legacy thread-per-connection TCP front end: one scoped reader +
+/// serve thread pair per live connection, blocking reads, nonblocking
+/// accepts polling the drain flag. Strictly simpler than the event loop
+/// and byte-identical to it on the same request stream — which is exactly
+/// why it survives behind `--threaded`: it is the oracle the event-loop
+/// replay tests diff against, and the fallback for non-Linux hosts.
+fn serve_tcp_threaded(
+    engine: &Engine,
+    listener: std::net::TcpListener,
+    opts: &ServeOptions,
+    term: &'static AtomicBool,
+) -> io::Result<()> {
     // Nonblocking accepts so the loop can poll the shutdown flag and the
     // snapshot timer between connections.
     listener.set_nonblocking(true)?;
@@ -323,6 +392,7 @@ pub fn serve_tcp(
                     continue;
                 }
             };
+            crate::faultpoint::hit("serve.accept");
             // The listener is nonblocking for the poll loop, but each
             // connection's reader must block normally.
             if let Err(e) = stream.set_nonblocking(false) {
@@ -342,6 +412,7 @@ pub fn serve_tcp(
                 continue;
             }
             live.fetch_add(1, Ordering::AcqRel);
+            crate::telemetry::global().connections_active.inc();
             let conn_opts = opts.clone();
             let live_ref = &live;
             let admission_ref = &admission;
@@ -368,6 +439,7 @@ pub fn serve_tcp(
                     }
                 }
                 live_ref.fetch_sub(1, Ordering::AcqRel);
+                crate::telemetry::global().connections_active.dec();
             });
             accepted += 1;
             if let Some(max) = opts.max_connections {
@@ -377,19 +449,22 @@ pub fn serve_tcp(
             }
         }
     });
-    // Every connection has drained; capture their registrations in the
-    // final snapshot.
+    Ok(())
+}
+
+/// Every connection has drained; capture their registrations in the
+/// final snapshot.
+fn write_final_snapshot(engine: &Engine, opts: &ServeOptions) {
     if let Some(path) = &opts.snapshot {
         match engine.snapshot_to(path) {
             Ok(()) => log::info!("serve: wrote final snapshot to {}", path.display()),
             Err(e) => log::warn!("serve: final snapshot failed: {e}"),
         }
     }
-    Ok(())
 }
 
 /// Write the periodic registry snapshot when one is due.
-fn maybe_snapshot(engine: &Engine, opts: &ServeOptions, last: &mut Instant) {
+pub(crate) fn maybe_snapshot(engine: &Engine, opts: &ServeOptions, last: &mut Instant) {
     let Some(path) = &opts.snapshot else { return };
     if last.elapsed() < Duration::from_secs(opts.snapshot_secs.max(1)) {
         return;
@@ -402,7 +477,7 @@ fn maybe_snapshot(engine: &Engine, opts: &ServeOptions, last: &mut Instant) {
 
 /// Tell a shed connection why before closing it: one `overloaded`
 /// envelope (no id — nothing was read), then drop.
-fn refuse_connection(stream: std::net::TcpStream) {
+pub(crate) fn refuse_connection(stream: std::net::TcpStream) {
     let tel = crate::telemetry::global();
     tel.requests_shed.add(1);
     let mut stream = stream;
@@ -418,7 +493,10 @@ fn refuse_connection(stream: std::net::TcpStream) {
 }
 
 /// Answer one batch of request lines, writing responses in input order.
-fn process_batch<W: Write>(
+/// Shared verbatim by every front end — the stdin loop, the threaded TCP
+/// loop and the event loop's dispatcher threads — which is what makes
+/// their response streams byte-identical on the same input.
+pub(crate) fn process_batch<W: Write>(
     engine: &Engine,
     lines: &[Incoming],
     out: &mut W,
@@ -571,6 +649,14 @@ fn flush_pending(
             }
         }
         Err(payload) => {
+            // A Cancelled payload here is not a request failure: the
+            // batched path only carries deadline-free evals, so the only
+            // token it can inherit is an event-loop connection token —
+            // i.e. the client is gone. Re-raise so the dispatcher can
+            // tear the whole batch down instead of mislabeling it.
+            if payload.downcast_ref::<Cancelled>().is_some() {
+                std::panic::resume_unwind(payload);
+            }
             crate::telemetry::global().panics_caught.add(1);
             log::error!(
                 "serve: eval batch panicked (isolated): {}; retrying individually",
@@ -640,6 +726,19 @@ fn dispatch_guarded(
         Ok(res) => res,
         Err(payload) => {
             if let Some(c) = payload.downcast_ref::<Cancelled>() {
+                // A deadline-less cancellation on a deadline-less request
+                // can only come from an ambient connection token — the
+                // event loop cancelling a dead client's in-flight batch.
+                // That is not this request's deadline firing: re-raise so
+                // the dispatcher aborts the batch. (The threaded path
+                // never installs an ambient token, so `current()` is
+                // `None` there and this branch is unreachable.)
+                if c.deadline_ms.is_none()
+                    && meta.deadline_ms.is_none()
+                    && crate::robust::current().is_some()
+                {
+                    std::panic::resume_unwind(payload);
+                }
                 tel.deadline_exceeded.add(1);
                 Err(ApiError::DeadlineExceeded {
                     deadline_ms: c.deadline_ms.or(meta.deadline_ms).unwrap_or(0),
@@ -720,7 +819,7 @@ pub fn connection_summary(engine: &Engine, stats: &ServeStats) -> String {
 
 /// The response envelope: the echoed id, the ok flag, and either the
 /// result document or the structured error.
-fn envelope(id: Option<Json>, result: Result<Json, ApiError>) -> Json {
+pub(crate) fn envelope(id: Option<Json>, result: Result<Json, ApiError>) -> Json {
     let mut pairs = Vec::with_capacity(3);
     if let Some(id) = id {
         pairs.push(("id", id));

@@ -41,11 +41,11 @@ const SCHEMA: Schema = Schema {
         "net", "height", "width", "acc", "batch", "arrays", "grid", "out", "budget", "min-dim",
         "threads", "artifacts", "dataflow", "seed", "energy-model", "listen", "batch-max",
         "trace", "max-slices", "connect", "perfetto", "snapshot", "restore", "snapshot-secs",
-        "admission-max",
+        "admission-max", "idle-secs", "max-conns", "write-cap-bytes",
     ],
     flags: &[
         "json", "per-layer", "smoke", "dense", "help", "quiet", "verbose", "version", "graph",
-        "buckets",
+        "buckets", "threaded",
     ],
 };
 
@@ -88,6 +88,14 @@ OPTIONS:
   --batch-max N       serve: most requests coalesced per batch (default 64)
   --admission-max N   serve: compute requests admitted concurrently before
                       load shedding answers `overloaded` (default 256)
+  --idle-secs N       serve: close a connection idle this long with a
+                      structured `idle_timeout` error (default 60; 0 = off)
+  --max-conns N       serve: stop accepting after N connections (default:
+                      serve forever; mostly for tests and benchmarks)
+  --write-cap-bytes N serve: shed a connection once this many response
+                      bytes sit unread in its write queue (default 8 MiB)
+  --threaded          serve: legacy thread-per-connection TCP front end
+                      instead of the event loop (the non-Linux default)
   --snapshot FILE     serve: write the registered-network store here
                       periodically and on graceful SIGTERM drain
   --snapshot-secs N   serve: seconds between snapshot writes (default 30)
@@ -708,11 +716,23 @@ fn cmd_serve(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         admission_max: args.opt_usize("admission-max", defaults.admission_max)?,
         snapshot: args.opt("snapshot").map(PathBuf::from),
         snapshot_secs: args.opt_usize("snapshot-secs", defaults.snapshot_secs as usize)? as u64,
+        threaded: args.flag("threaded"),
+        idle_secs: args.opt_usize("idle-secs", defaults.idle_secs as usize)? as u64,
+        max_connections: match args.opt("max-conns") {
+            Some(_) => Some(args.opt_usize("max-conns", 0)?),
+            None => defaults.max_connections,
+        },
+        write_cap_bytes: args.opt_usize("write-cap-bytes", defaults.write_cap_bytes)?,
         ..defaults
     };
     anyhow::ensure!(opts.batch_max > 0, "--batch-max must be positive");
     anyhow::ensure!(opts.admission_max > 0, "--admission-max must be positive");
     anyhow::ensure!(opts.snapshot_secs > 0, "--snapshot-secs must be positive");
+    anyhow::ensure!(
+        opts.max_connections != Some(0),
+        "--max-conns must be positive"
+    );
+    anyhow::ensure!(opts.write_cap_bytes > 0, "--write-cap-bytes must be positive");
     // Warm restart (DESIGN.md §15): reload the registered-network store a
     // previous `--snapshot` run wrote. A missing file is the normal first
     // boot, not an error.
@@ -808,6 +828,13 @@ fn cmd_stats(engine: &Engine, args: &Args) -> anyhow::Result<()> {
         num(&["serve", "batches"]),
         num(&["serve", "bytes_in"]),
         num(&["serve", "bytes_out"])
+    );
+    println!(
+        "conns: {} active, {} idle-closed, {} aborted, {} B queued",
+        num(&["serve", "connections_active"]),
+        num(&["serve", "connections_idle_closed"]),
+        num(&["serve", "connections_aborted"]),
+        num(&["serve", "write_queue_bytes"])
     );
     println!(
         "pool: {} worker(s), {} job(s), {} steal(s), queue depth {}, job p99 {:.2} ms",

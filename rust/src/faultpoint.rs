@@ -3,8 +3,13 @@
 //! Compute cores and the serve tier call [`hit`] at the places failures
 //! matter: `"serve.dispatch"`, `"register.inner"`, `"eval.inner"`,
 //! `"sweep.unit"`, `"graph.schedule"`, `"nsga2.generation"`,
-//! `"sim.layer"`, `"snapshot.write"`. A disarmed site costs one relaxed
-//! atomic load — the production path pays nothing measurable.
+//! `"sim.layer"`, `"snapshot.write"`, plus the connection lifecycle of
+//! the TCP front ends (DESIGN.md §16): `"serve.accept"` after a
+//! connection is accepted, `"conn.read"`/`"conn.write"` on the event
+//! loop's socket-service paths (where a `cancel` action aborts exactly
+//! that connection — the deterministic stand-in for a vanished client).
+//! A disarmed site costs one relaxed atomic load — the production path
+//! pays nothing measurable.
 //!
 //! Tests arm sites programmatically ([`arm`]); CI and ad-hoc runs arm
 //! them through the environment:

@@ -1,10 +1,14 @@
 //! Process-wide runtimes: the persistent work-stealing compute pool every
-//! CAMUY fan-out routes through ([`pool`], DESIGN.md §11), and the PJRT
-//! runtime that loads and executes the HLO-text artifacts produced by
-//! `python/compile/aot.py` (`make artifacts`; Python never runs here).
+//! CAMUY fan-out routes through ([`pool`], DESIGN.md §11), the epoll
+//! readiness wrapper behind the event-loop serve front end ([`netpoll`],
+//! Linux only, DESIGN.md §16), and the PJRT runtime that loads and
+//! executes the HLO-text artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`; Python never runs here).
 
 pub mod artifact;
 pub mod client;
+#[cfg(target_os = "linux")]
+pub mod netpoll;
 pub mod pool;
 
 pub use artifact::{default_artifact_dir, ArtifactEntry, Manifest};

@@ -1,0 +1,332 @@
+//! A thin readiness-notification wrapper over raw `epoll(7)` syscalls —
+//! the I/O substrate of the event-loop serve front end (DESIGN.md §16).
+//!
+//! Like every other OS touchpoint in this crate, the binding is a raw
+//! `extern "C"` shim rather than a `libc` dependency (DESIGN.md §6): the
+//! offline image ships no crates, and the four calls needed here —
+//! `epoll_create1`, `epoll_ctl`, `epoll_wait`, `eventfd` — have stable
+//! kernel ABIs. The wrapper is deliberately small: register a file
+//! descriptor under a caller-chosen `u64` token with a level-triggered
+//! interest mask, wait for readiness, read the tokens back. Everything
+//! stateful (connection tables, buffers, timers) lives in the caller.
+//!
+//! [`Waker`] wraps an `eventfd(2)`: worker threads that finish a batch
+//! call [`Waker::wake`] so the poller returns immediately instead of
+//! riding out its timeout. The eventfd is nonblocking and the counter
+//! saturates, so waking is cheap, lock-free and never blocks the waker.
+
+use std::io;
+use std::os::fd::RawFd;
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+}
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+const EFD_CLOEXEC: i32 = 0o2000000;
+const EFD_NONBLOCK: i32 = 0o4000;
+
+/// Readiness: data to read (or a listener with a pending accept).
+pub const EPOLLIN: u32 = 0x001;
+/// Readiness: the socket's send buffer has room.
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition (always reported; no need to register it).
+pub const EPOLLERR: u32 = 0x008;
+/// Hangup — both directions closed (always reported).
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its write side (half-close); must be registered.
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+/// The kernel's `struct epoll_event`. On x86 the kernel ABI packs the
+/// 12-byte struct (no padding between `events` and `data`); everywhere
+/// else it is naturally aligned — get this wrong and `epoll_wait` writes
+/// tokens into the wrong offsets.
+#[repr(C)]
+#[cfg_attr(any(target_arch = "x86_64", target_arch = "x86"), repr(packed))]
+#[derive(Debug, Clone, Copy)]
+pub struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+impl EpollEvent {
+    /// An empty slot for the wait buffer.
+    pub fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+
+    /// The token the file descriptor was registered under. (Returned by
+    /// value: the struct may be packed, so a reference to the field would
+    /// be unaligned.)
+    pub fn token(&self) -> u64 {
+        self.data
+    }
+
+    /// The raw readiness bits.
+    pub fn bits(&self) -> u32 {
+        self.events
+    }
+
+    /// Data (or a pending accept) is available, or the peer half-closed —
+    /// either way a read will not block.
+    pub fn readable(&self) -> bool {
+        self.bits() & (EPOLLIN | EPOLLRDHUP) != 0
+    }
+
+    /// The send buffer has room.
+    pub fn writable(&self) -> bool {
+        self.bits() & EPOLLOUT != 0
+    }
+
+    /// The descriptor is in an error or fully-hung-up state; the owner
+    /// should tear the connection down.
+    pub fn failed(&self) -> bool {
+        self.bits() & (EPOLLERR | EPOLLHUP) != 0
+    }
+
+    /// The peer closed its write side (half-close): drain what remains,
+    /// expect EOF.
+    pub fn peer_closed(&self) -> bool {
+        self.bits() & EPOLLRDHUP != 0
+    }
+}
+
+/// A level-triggered epoll instance. Level-triggered (the default) keeps
+/// the state machine simple: a readiness condition the owner did not
+/// fully service is simply reported again on the next wait, so partial
+/// reads and deferred writes need no re-arming bookkeeping.
+#[derive(Debug)]
+pub struct Poller {
+    epfd: RawFd,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent {
+            events: interest,
+            data: token,
+        };
+        let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest mask.
+    pub fn add(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, interest, token)
+    }
+
+    /// Change the interest mask (and token) of a registered descriptor.
+    pub fn modify(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, interest, token)
+    }
+
+    /// Deregister a descriptor. Closing the fd deregisters it too, but an
+    /// explicit delete keeps the interest table honest while the fd is
+    /// still open.
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        // Pre-2.6.9 kernels demanded a non-null event pointer for DEL;
+        // every kernel this crate can run on ignores it.
+        let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, std::ptr::null_mut()) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Block until at least one registered descriptor is ready or
+    /// `timeout_ms` elapses (`-1` = forever). Fills `events` from the
+    /// front and returns how many entries are valid. Interrupted waits
+    /// (EINTR — e.g. the SIGTERM that starts a drain) retry with the same
+    /// timeout; the caller's loop re-checks its flags every wakeup anyway.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let rc = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    events.as_mut_ptr(),
+                    events.len() as i32,
+                    timeout_ms,
+                )
+            };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+/// Cross-thread poller wakeup over an `eventfd(2)`. Register
+/// [`Waker::fd`] with the poller under a reserved token; any thread may
+/// then call [`wake`](Waker::wake) to make the next (or current)
+/// `epoll_wait` return immediately.
+#[derive(Debug)]
+pub struct Waker {
+    fd: RawFd,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { fd })
+    }
+
+    /// The descriptor to register for `EPOLLIN`.
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Make the poller's wait return. Failure modes are all benign — a
+    /// full counter (EAGAIN) means a wake is already pending — so the
+    /// result is ignored.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        unsafe {
+            write(self.fd, &one as *const u64 as *const u8, 8);
+        }
+    }
+
+    /// Consume pending wakeups so a level-triggered poller stops
+    /// reporting the waker readable.
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        unsafe {
+            read(self.fd, &mut buf as *mut u64 as *mut u8, 8);
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn listener_readiness_carries_the_registered_token() {
+        let poller = Poller::new().unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        poller.add(listener.as_raw_fd(), 7, EPOLLIN).unwrap();
+
+        let mut events = vec![EpollEvent::zeroed(); 8];
+        // Nothing pending: the wait times out empty.
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+
+        let addr = listener.local_addr().unwrap();
+        let _client = std::net::TcpStream::connect(addr).unwrap();
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token(), 7);
+        assert!(events[0].readable());
+        assert!(!events[0].failed());
+    }
+
+    #[test]
+    fn modify_switches_interest_between_read_and_write() {
+        let poller = Poller::new().unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        // An idle connected socket with write interest is immediately
+        // writable; with read interest it is quiet until bytes arrive.
+        poller.add(server.as_raw_fd(), 3, EPOLLOUT).unwrap();
+        let mut events = vec![EpollEvent::zeroed(); 8];
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert!(events[0].writable());
+
+        poller.modify(server.as_raw_fd(), 3, EPOLLIN).unwrap();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+        client.write_all(b"ping\n").unwrap();
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token(), 3);
+        assert!(events[0].readable());
+
+        poller.delete(server.as_raw_fd()).unwrap();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        poller.add(waker.fd(), 1, EPOLLIN).unwrap();
+
+        let mut events = vec![EpollEvent::zeroed(); 8];
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+
+        // Wakes coalesce: two wakes, one readable event, one drain.
+        waker.wake();
+        waker.wake();
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token(), 1);
+        waker.drain();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn waker_works_across_threads() {
+        let poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        poller.add(waker.fd(), 9, EPOLLIN).unwrap();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                waker.wake();
+            });
+            let mut events = vec![EpollEvent::zeroed(); 8];
+            let n = poller.wait(&mut events, 5000).unwrap();
+            assert_eq!(n, 1);
+            assert_eq!(events[0].token(), 9);
+            waker.drain();
+        });
+    }
+}

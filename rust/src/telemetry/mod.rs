@@ -215,7 +215,7 @@ impl ReqKind {
 
 /// The `ApiError::kind()` strings the wire-error counters track, plus a
 /// catch-all. Keep in sync with [`crate::api::ApiError::kind`].
-const ERROR_KINDS: [&str; 9] = [
+const ERROR_KINDS: [&str; 10] = [
     "unknown_network",
     "invalid_config",
     "bad_json",
@@ -223,6 +223,7 @@ const ERROR_KINDS: [&str; 9] = [
     "invalid_network",
     "deadline_exceeded",
     "overloaded",
+    "idle_timeout",
     "internal",
     "other",
 ];
@@ -243,6 +244,17 @@ pub struct Telemetry {
     pub serve_batches: Counter,
     /// TCP connections accepted.
     pub serve_connections: Counter,
+    /// TCP connections currently open (accepted and not yet closed).
+    pub connections_active: Gauge,
+    /// Connections closed by the slowloris idle timeout (DESIGN.md §16).
+    pub connections_idle_closed: Counter,
+    /// Connections torn down because the client vanished (broken pipe /
+    /// reset), cancelling any in-flight batch.
+    pub connections_aborted: Counter,
+    /// Response bytes queued for clients that have not read them yet,
+    /// summed across connections (event loop only; bounded per
+    /// connection by the write cap).
+    pub write_queue_bytes: Gauge,
     /// Requests per flushed batch.
     pub serve_batch_size: Histogram,
     wire_errors: [Counter; ERROR_KINDS.len()],
@@ -285,6 +297,10 @@ impl Telemetry {
             serve_bytes_out: Counter::new(),
             serve_batches: Counter::new(),
             serve_connections: Counter::new(),
+            connections_active: Gauge::new(),
+            connections_idle_closed: Counter::new(),
+            connections_aborted: Counter::new(),
+            write_queue_bytes: Gauge::new(),
             serve_batch_size: Histogram::new(),
             wire_errors: std::array::from_fn(|_| Counter::new()),
             pool_jobs: Counter::new(),
@@ -353,6 +369,10 @@ impl Telemetry {
             bytes_out: self.serve_bytes_out.get(),
             batches: self.serve_batches.get(),
             connections: self.serve_connections.get(),
+            connections_active: self.connections_active.get().max(0),
+            connections_idle_closed: self.connections_idle_closed.get(),
+            connections_aborted: self.connections_aborted.get(),
+            write_queue_bytes: self.write_queue_bytes.get().max(0),
             batch_size: self.serve_batch_size.snapshot(),
             errors,
             pool: PoolStats {
@@ -467,6 +487,14 @@ pub struct TelemetrySnapshot {
     pub bytes_out: u64,
     pub batches: u64,
     pub connections: u64,
+    /// Open connections right now (clamped at zero for display).
+    pub connections_active: i64,
+    /// Connections closed by the slowloris idle timeout.
+    pub connections_idle_closed: u64,
+    /// Connections torn down mid-conversation (client vanished).
+    pub connections_aborted: u64,
+    /// Undelivered response bytes queued across connections (clamped).
+    pub write_queue_bytes: i64,
     pub batch_size: HistogramSnapshot,
     /// Wire-level error counts, one per [`ApiError::kind`] string.
     ///
@@ -524,6 +552,13 @@ impl TelemetrySnapshot {
             ("bytes_out", Json::num(self.bytes_out as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("connections", Json::num(self.connections as f64)),
+            ("connections_active", Json::num(self.connections_active as f64)),
+            (
+                "connections_idle_closed",
+                Json::num(self.connections_idle_closed as f64),
+            ),
+            ("connections_aborted", Json::num(self.connections_aborted as f64)),
+            ("write_queue_bytes", Json::num(self.write_queue_bytes as f64)),
             ("batch_size", self.batch_size.to_json(include_buckets)),
             ("errors", Json::obj(errors)),
         ]);
@@ -738,7 +773,18 @@ mod tests {
         let merged = j.get("request_latency").unwrap();
         assert!(merged.get("p50").is_some());
         assert!(j.get("pool").and_then(|p| p.get("queue_depth")).is_some());
-        assert!(j.get("serve").and_then(|s| s.get("errors")).is_some());
+        let serve = j.get("serve").unwrap();
+        assert!(serve.get("errors").is_some());
+        for key in [
+            "connections_active",
+            "connections_idle_closed",
+            "connections_aborted",
+            "write_queue_bytes",
+        ] {
+            assert!(serve.get(key).and_then(Json::as_f64).is_some(), "serve.{key}");
+        }
+        let errs = serve.get("errors").unwrap();
+        assert!(errs.get("idle_timeout").is_some(), "idle_timeout error kind");
         let robust = j.get("robust").unwrap();
         for key in [
             "requests_shed",

@@ -1,0 +1,423 @@
+//! Connection-lifecycle coverage for the event-loop TCP front end
+//! (DESIGN.md §16): the slowloris idle timeout, write-queue backpressure
+//! shedding, graceful drain under many open connections, abort accounting
+//! for vanished clients, and the byte-identity property against the
+//! `--threaded` oracle.
+//!
+//! The drain flag, the faultpoint table and the telemetry registry are
+//! process-global, so every test here serializes on [`HARNESS`].
+
+#![cfg(target_os = "linux")]
+
+use camuy::api::{Engine, ServeOptions};
+use camuy::faultpoint::{self, Action};
+use camuy::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+static HARNESS: Mutex<()> = Mutex::new(());
+
+fn harness() -> std::sync::MutexGuard<'static, ()> {
+    let guard = HARNESS.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::disarm_all();
+    camuy::api::clear_drain();
+    // Counters are gated on the registry being enabled; another test
+    // binary cannot have disabled it (process-global), but a prior test
+    // in this one could — pin it on.
+    camuy::telemetry::set_enabled(true);
+    guard
+}
+
+fn error_kind(resp: &Json) -> &str {
+    resp.get("error").unwrap().get("kind").unwrap().as_str().unwrap()
+}
+
+fn is_ok(resp: &Json) -> bool {
+    resp.get("ok").unwrap().as_bool() == Some(true)
+}
+
+const EVAL_LINE: &str =
+    "{\"id\":1,\"type\":\"eval\",\"net\":\"alexnet\",\"config\":{\"height\":24,\"width\":16}}\n";
+
+#[test]
+fn slowloris_client_times_out_while_healthy_clients_keep_getting_answers() {
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let idle_before = tel.connections_idle_closed.get();
+
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 2,
+        batch_max: 8,
+        max_connections: Some(9),
+        max_concurrent: 16,
+        idle_secs: 1,
+        ..ServeOptions::default()
+    };
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+
+        // The slowloris client connects and then... nothing.
+        let slow = TcpStream::connect(addr).unwrap();
+        let mut slow_reader = BufReader::new(slow);
+
+        // Eight healthy clients are answered while it sits there.
+        for i in 0..8 {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let mut r = BufReader::new(c.try_clone().unwrap());
+            c.write_all(EVAL_LINE.as_bytes()).unwrap();
+            c.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let resp = Json::parse(line.trim()).unwrap();
+            assert!(is_ok(&resp), "healthy client {i}: {}", resp.to_string_compact());
+        }
+
+        // The idle budget fires: a structured `idle_timeout` line, then EOF
+        // — not a silent close.
+        let mut line = String::new();
+        slow_reader.read_line(&mut line).unwrap();
+        let notice = Json::parse(line.trim()).unwrap();
+        assert!(!is_ok(&notice), "{}", notice.to_string_compact());
+        assert_eq!(error_kind(&notice), "idle_timeout");
+        let idle_ms = notice.get("error").unwrap().get("idle_ms").unwrap();
+        assert!(idle_ms.as_usize().unwrap() >= 1000, "{}", notice.to_string_compact());
+        line.clear();
+        assert_eq!(slow_reader.read_line(&mut line).unwrap(), 0, "timeout must close");
+    });
+    assert!(tel.connections_idle_closed.get() > idle_before);
+}
+
+#[test]
+fn stalled_reader_hits_the_write_cap_and_is_shed_with_a_structured_close() {
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let shed_before = tel.requests_shed.get();
+
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 2,
+        batch_max: 64,
+        max_connections: Some(1),
+        idle_secs: 0,
+        write_cap_bytes: 64 * 1024,
+        ..ServeOptions::default()
+    };
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+
+        // Pipeline far more response volume than the kernel's socket
+        // buffers can hide — 2000 sweeps of a 16x16 grid, tens of MB of
+        // responses against auto-tuned TCP buffers of a few MB end to
+        // end — while reading nothing: the server's write queue must
+        // blow the 64 KiB cap, not its heap.
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut request = Vec::new();
+        for i in 0..2000 {
+            request.extend_from_slice(
+                format!(
+                    "{{\"id\":{i},\"type\":\"sweep\",\"net\":\"alexnet\",\
+                     \"grid\":{{\"lo\":8,\"hi\":128,\"step\":8}},\"threads\":1}}\n"
+                )
+                .as_bytes(),
+            );
+        }
+        c.write_all(&request).unwrap();
+        c.shutdown(std::net::Shutdown::Write).unwrap();
+
+        // Now read what the server managed to deliver: zero or more intact
+        // `ok` lines (whatever the kernel buffered before the cap fired),
+        // then exactly one structured `overloaded` refusal, then EOF.
+        let mut reader = BufReader::new(c);
+        let mut lines = Vec::new();
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap() > 0 {
+            lines.push(line.trim().to_string());
+            line.clear();
+        }
+        assert!(!lines.is_empty(), "shed must explain itself before closing");
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        assert!(!is_ok(&last), "{}", last.to_string_compact());
+        assert_eq!(error_kind(&last), "overloaded");
+        assert!(
+            last.get("error").unwrap().get("retry_after_ms").is_some(),
+            "{}",
+            last.to_string_compact()
+        );
+        for l in &lines[..lines.len() - 1] {
+            let resp = Json::parse(l).unwrap_or_else(|e| panic!("corrupt line {l:?}: {e}"));
+            assert!(is_ok(&resp), "non-final line must be an intact answer: {l}");
+        }
+        assert!(
+            lines.len() < 2000,
+            "every response was delivered — the cap never fired"
+        );
+    });
+    assert!(tel.requests_shed.get() > shed_before);
+}
+
+#[test]
+fn drain_under_a_hundred_connections_answers_in_flight_and_snapshots() {
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let bytes_before = tel.serve_bytes_in.get();
+
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("camuy-eventloop-drain-{}.json", std::process::id()));
+    std::fs::remove_file(&path).ok();
+
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 4,
+        batch_max: 16,
+        max_concurrent: 128,
+        idle_secs: 30,
+        snapshot: Some(path.clone()),
+        ..ServeOptions::default()
+    };
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+
+        // 100 open connections, one request each, none of them closed.
+        let mut clients = Vec::new();
+        let mut sent = 0u64;
+        for i in 0..100 {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let line = format!(
+                "{{\"id\":{i},\"type\":\"eval\",\"net\":\"alexnet\",\
+                 \"config\":{{\"height\":24,\"width\":16}}}}\n"
+            );
+            c.write_all(line.as_bytes()).unwrap();
+            sent += line.len() as u64;
+            clients.push(c);
+        }
+        // Wait until the server has framed every request (the bytes-in
+        // counter is bumped per framed line), so the drain arrives with
+        // all 100 requests genuinely in flight.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while tel.serve_bytes_in.get() < bytes_before + sent {
+            assert!(Instant::now() < deadline, "server never framed the requests");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        camuy::api::request_drain();
+
+        // Every client still gets its answer, then a clean EOF: drain
+        // finishes in-flight work instead of dropping it.
+        for (i, c) in clients.into_iter().enumerate() {
+            let mut r = BufReader::new(c);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let resp = Json::parse(line.trim())
+                .unwrap_or_else(|e| panic!("client {i}: bad response {line:?}: {e}"));
+            assert!(is_ok(&resp), "client {i}: {}", resp.to_string_compact());
+            line.clear();
+            assert_eq!(r.read_line(&mut line).unwrap(), 0, "client {i}: drain must close");
+        }
+    });
+    camuy::api::clear_drain();
+    assert!(path.exists(), "drain must write the final snapshot");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn aborted_connection_is_counted_and_cancels_its_in_flight_compute() {
+    let _g = harness();
+    let tel = camuy::telemetry::global();
+    let aborted_before = tel.connections_aborted.get();
+
+    // Two stacked `conn.read` armings: the first (a zero-length delay)
+    // is burned by the read that delivers the sweep request; the second
+    // — `cancel`, the deterministic stand-in for a client that vanished
+    // mid-conversation — fires on the next read event, while the sweep
+    // is mid-flight, and aborts exactly this connection.
+    faultpoint::arm("conn.read", Action::Delay(Duration::ZERO), 1);
+    faultpoint::arm("conn.read", Action::Cancel, 1);
+    // Each sweep unit sleeps, so an uncancelled sweep would hold the
+    // server for ~13 s — the fast exit below proves the abort reached
+    // the in-flight batch's checkpoints.
+    faultpoint::arm("sweep.unit", Action::Delay(Duration::from_millis(50)), 1000);
+
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 2,
+        batch_max: 1, // eval and sweep land in separate batches
+        max_connections: Some(1),
+        idle_secs: 30,
+        ..ServeOptions::default()
+    };
+    let started = Instant::now();
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+
+        let mut c = TcpStream::connect(addr).unwrap();
+        // The sweep is framed and dispatched on the first read event;
+        // the second write, sent while it grinds, triggers the read that
+        // carries the injected cancel. Aborting the connection must
+        // cancel the in-flight sweep through its token, not let it run
+        // to the end.
+        let sweep = "{\"id\":2,\"type\":\"sweep\",\"net\":\"alexnet\",\
+                     \"grid\":{\"lo\":8,\"hi\":128,\"step\":8},\"threads\":1}\n";
+        c.write_all(sweep.as_bytes()).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        c.write_all(EVAL_LINE.as_bytes()).unwrap();
+
+        // The server aborts: no full answer arrives. With the eval line
+        // still unread server-side the close can surface as a reset, so
+        // a read error is as acceptable as a clean EOF.
+        let mut rest = Vec::new();
+        let _ = c.read_to_end(&mut rest);
+    });
+    let elapsed = started.elapsed();
+    faultpoint::disarm_all();
+    assert!(tel.connections_aborted.get() > aborted_before, "abort was not counted");
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "server took {elapsed:?}; the in-flight sweep was not cancelled"
+    );
+}
+
+/// Replay one request stream through a front end, returning the raw
+/// response bytes.
+fn replay(threaded: bool, input: &[u8]) -> Vec<u8> {
+    let engine = Engine::new();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOptions {
+        threads: 2,
+        batch_max: 8,
+        max_connections: Some(1),
+        threaded,
+        idle_secs: 60,
+        ..ServeOptions::default()
+    };
+    let mut out = Vec::new();
+    std::thread::scope(|s| {
+        s.spawn(|| camuy::api::serve_tcp(&engine, listener, &opts).unwrap());
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut r = c.try_clone().unwrap();
+        let writer = s.spawn(move || {
+            c.write_all(input).unwrap();
+            c.shutdown(std::net::Shutdown::Write).unwrap();
+        });
+        r.read_to_end(&mut out).unwrap();
+        writer.join().unwrap();
+    });
+    out
+}
+
+#[test]
+fn event_loop_and_threaded_front_ends_are_byte_identical_on_replay() {
+    let _g = harness();
+
+    let spec = r#"{"name":"replaynet","layers":[
+        {"op":"conv2d","name":"c1","input":{"h":16,"w":16},
+         "c_in":3,"c_out":8,"kernel":3,"stride":1,"padding":1},
+        {"op":"linear","name":"fc","in_features":2048,"out_features":10}]}"#
+        .replace('\n', " ");
+
+    // Every framing and dispatch shape at once: ok evals, decode errors,
+    // unknown networks, a register barrier with a dependent eval, control
+    // plane, blank lines, an oversized line mid-stream (resync required),
+    // and a final request with no trailing newline (EOF framing).
+    let mut input = Vec::new();
+    input.extend_from_slice(EVAL_LINE.as_bytes());
+    input.extend_from_slice(b"this is not json\n");
+    input.extend_from_slice(
+        b"{\"id\":2,\"type\":\"eval\",\"net\":\"nonexistent\",\
+          \"config\":{\"height\":16,\"width\":16}}\n",
+    );
+    input.extend_from_slice(b"\n   \n");
+    input.extend_from_slice(
+        b"{\"id\":3,\"type\":\"eval\",\"net\":\"alexnet\",\
+          \"config\":{\"height\":0,\"width\":16}}\n",
+    );
+    input.extend_from_slice(format!("{{\"id\":4,\"type\":\"register\",\"network\":{spec}}}\n").as_bytes());
+    input.extend_from_slice(
+        b"{\"id\":5,\"type\":\"eval\",\"net\":\"replaynet\",\
+          \"config\":{\"height\":16,\"width\":16}}\n",
+    );
+    input.extend_from_slice(b"{\"id\":6,\"type\":\"zoo\"}\n");
+    let mut oversized = vec![b'x'; 5 << 20];
+    oversized.push(b'\n');
+    input.extend_from_slice(&oversized);
+    input.extend_from_slice(
+        b"{\"id\":7,\"type\":\"memory\",\"net\":\"alexnet\",\
+          \"config\":{\"height\":16,\"width\":16}}\n",
+    );
+    // Unterminated final line: still a request.
+    input.extend_from_slice(
+        b"{\"id\":8,\"type\":\"eval\",\"net\":\"alexnet\",\
+          \"config\":{\"height\":24,\"width\":16}}",
+    );
+
+    let eventloop = replay(false, &input);
+    let threaded = replay(true, &input);
+    assert!(!eventloop.is_empty());
+    assert_eq!(
+        eventloop.len(),
+        threaded.len(),
+        "front ends produced different byte counts:\n  event loop: {}\n  threaded:   {}",
+        String::from_utf8_lossy(&eventloop),
+        String::from_utf8_lossy(&threaded),
+    );
+    assert_eq!(eventloop, threaded, "front ends diverged");
+
+    // And the stream answers every request, in order, exactly once.
+    let ids: Vec<Option<usize>> = String::from_utf8(eventloop)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap().get("id").and_then(Json::as_usize))
+        .collect();
+    assert_eq!(
+        ids,
+        vec![
+            Some(1),
+            None, // bad json carries no id
+            Some(2),
+            Some(3),
+            Some(4),
+            Some(5),
+            Some(6),
+            None, // the oversized line's structured error
+            Some(7),
+            Some(8),
+        ]
+    );
+}
+
+#[test]
+fn stats_surface_exposes_the_connection_lifecycle_counters() {
+    let _g = harness();
+    let engine = Engine::new();
+    let mut out: Vec<u8> = Vec::new();
+    camuy::api::serve(
+        &engine,
+        "{\"id\":1,\"type\":\"stats\"}\n".as_bytes(),
+        &mut out,
+        &ServeOptions::default(),
+    )
+    .unwrap();
+    let resp = Json::parse(String::from_utf8(out).unwrap().trim()).unwrap();
+    assert!(is_ok(&resp));
+    let serve = resp.get("result").unwrap().get("serve").unwrap();
+    for key in [
+        "connections_active",
+        "connections_idle_closed",
+        "connections_aborted",
+        "write_queue_bytes",
+    ] {
+        assert!(serve.get(key).is_some(), "missing serve.{key}");
+    }
+    let errors = serve.get("errors").unwrap();
+    assert!(errors.get("idle_timeout").is_some(), "missing idle_timeout error kind");
+}
